@@ -1,0 +1,66 @@
+//! The paper's motivating scenario (§1, §3): a large, heterogeneous,
+//! unreliable wide-area deployment — heavy-tailed iteration times
+//! (Pareto), non-negligible churn, and stragglers — where deterministic
+//! barrier control breaks down.
+//!
+//! ```text
+//! cargo run --release --example heterogeneous_edge
+//! ```
+//!
+//! Compares all five barrier methods on the same hostile cluster and
+//! prints progress, dispersion, error and the communication bill.
+
+use actor_psp::barrier::Method;
+use actor_psp::sim::{
+    ChurnConfig, ClusterConfig, SgdConfig, Simulator, StragglerConfig, TimeDist,
+};
+use actor_psp::util::stats::Summary;
+
+fn main() {
+    let edge = ClusterConfig {
+        n_nodes: 500,
+        duration: 40.0,
+        seed: 2024,
+        mean_iter_time: 1.0,
+        speed_jitter: 0.5,
+        // heavy-tailed compute: some iterations take many times the mean
+        iter_dist: TimeDist::Pareto { shape: 2.2 },
+        stragglers: Some(StragglerConfig { fraction: 0.05, slowdown: 4.0 }),
+        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0 }),
+        net_delay_mean: 0.15, // wide-area RTTs
+        sgd: Some(SgdConfig { dim: 500, ..SgdConfig::default() }),
+        ..ClusterConfig::default()
+    };
+
+    println!(
+        "heterogeneous edge: 500 nodes, Pareto(2.2) iteration times, 5% 4x \
+         stragglers,\nchurn ~1 join + 1 leave/s, 150ms mean delay, 40 \
+         simulated seconds\n"
+    );
+    println!(
+        "{:>10} {:>8} {:>8} {:>9} {:>10} {:>12} {:>12}",
+        "method", "mean", "iqr", "nodes@end", "updates", "ctrl msgs", "final error"
+    );
+    for method in Method::paper_five(5, 4) {
+        let r = Simulator::new(edge.clone(), method).run();
+        let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+        let s = Summary::of(&steps);
+        println!(
+            "{:>10} {:>8.1} {:>8.1} {:>9} {:>10} {:>12} {:>12.4}",
+            method.to_string(),
+            s.mean,
+            s.iqr(),
+            r.final_steps.len(),
+            r.update_msgs,
+            r.control_msgs,
+            r.final_error().unwrap_or(f64::NAN),
+        );
+    }
+    println!(
+        "\nBSP/SSP progress collapses under the heavy tail + churn; ASP \
+         races ahead but pays in error;\npBSP/pSSP keep near-ASP progress \
+         with bounded dispersion — and their control traffic is O(β) per\n\
+         decision instead of the global state a BSP/SSP server must \
+         maintain."
+    );
+}

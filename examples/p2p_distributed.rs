@@ -1,0 +1,68 @@
+//! Fully-distributed barrier control (paper §4.1 case 4): the p2p engine
+//! on real OS threads — every worker holds a model replica, samples the
+//! chord-like overlay for its *own* barrier decision, and no global state
+//! exists anywhere in the system.
+//!
+//! ```text
+//! cargo run --release --example p2p_distributed
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use actor_psp::barrier::Method;
+use actor_psp::engine::p2p::{self, P2pConfig};
+use actor_psp::engine::GradFn;
+use actor_psp::model::linear::{Dataset, LinearModel};
+use actor_psp::util::rng::Rng;
+use actor_psp::util::stats::l2_dist;
+
+fn main() {
+    let dim = 64;
+    let mut rng = Rng::new(31);
+    let data = Arc::new(Dataset::synthetic(1024, dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+
+    println!(
+        "p2p engine: 12 worker threads, replicated d={dim} linear model, \
+         overlay-sampled barriers\n"
+    );
+    println!(
+        "{:>10} {:>9} {:>12} {:>12} {:>12} {:>9}",
+        "method", "steps", "updates", "ctrl msgs", "final err", "wall(s)"
+    );
+    for method in [
+        Method::Asp,
+        Method::Pbsp { sample: 3 },
+        Method::Pssp { sample: 3, staleness: 2 },
+    ] {
+        let cfg = P2pConfig {
+            n_workers: 12,
+            steps_per_worker: 30,
+            method,
+            lr: 0.01,
+            dim,
+            seed: 5,
+            ..P2pConfig::default()
+        };
+        let data = Arc::clone(&data);
+        let model = Mutex::new(LinearModel::new(dim));
+        let grad: GradFn = Arc::new(move |w, seed| {
+            model.lock().unwrap().minibatch_grad(&data, w, seed, 32).to_vec()
+        });
+        let r = p2p::run(&cfg, vec![0.0; dim], grad);
+        println!(
+            "{:>10} {:>9} {:>12} {:>12} {:>12.4} {:>9.2}",
+            method.to_string(),
+            r.steps.iter().sum::<u64>(),
+            r.update_msgs,
+            r.control_msgs,
+            l2_dist(&r.model, &w_true),
+            r.wall_secs,
+        );
+    }
+    println!(
+        "\nnote: BSP/SSP cannot run here at all — they need a global view; \
+         the engine rejects them\nat construction. That asymmetry is the \
+         paper's core systems claim."
+    );
+}

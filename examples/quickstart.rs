@@ -1,0 +1,56 @@
+//! Quickstart: compare BSP against pSSP on a small simulated cluster.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! A 64-node cluster runs SGD on a 200-parameter linear model for 60
+//! simulated seconds under both barriers; the table shows PSP's trade-off:
+//! near-ASP progress with bounded spread and better final error per
+//! update message.
+
+use actor_psp::barrier::Method;
+use actor_psp::sim::{ClusterConfig, SgdConfig, Simulator};
+use actor_psp::util::stats::Summary;
+
+fn main() {
+    let base = ClusterConfig {
+        n_nodes: 64,
+        duration: 60.0,
+        seed: 7,
+        sgd: Some(SgdConfig { dim: 200, ..SgdConfig::default() }),
+        ..ClusterConfig::default()
+    };
+
+    println!("quickstart: 64 nodes, 60 simulated seconds, linear SGD d=200\n");
+    println!(
+        "{:>10} {:>8} {:>8} {:>8} {:>10} {:>10} {:>12}",
+        "method", "mean", "iqr", "max", "updates", "control", "final error"
+    );
+    for method in [
+        Method::Bsp,
+        Method::Ssp { staleness: 4 },
+        Method::Asp,
+        Method::Pbsp { sample: 6 },
+        Method::Pssp { sample: 6, staleness: 4 },
+    ] {
+        let r = Simulator::new(base.clone(), method).run();
+        let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+        let s = Summary::of(&steps);
+        println!(
+            "{:>10} {:>8.1} {:>8.1} {:>8.0} {:>10} {:>10} {:>12.4}",
+            method.to_string(),
+            s.mean,
+            s.iqr(),
+            s.max,
+            r.update_msgs,
+            r.control_msgs,
+            r.final_error().unwrap_or(f64::NAN),
+        );
+    }
+    println!(
+        "\nreading the table: pssp iterates ~as fast as asp but keeps the \
+         step spread (iqr) bounded,\nand reaches a lower error than bsp/ssp \
+         in the same 60 seconds — the paper's Fig 1 in miniature."
+    );
+}

@@ -1,0 +1,209 @@
+"""AOT compile path: lower every L2 entry point to HLO **text** + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(``rust/src/runtime/``) loads ``artifacts/manifest.json``, compiles each
+``*.hlo.txt`` on the PJRT CPU client and executes it on the request path —
+Python never runs after this script finishes.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. Lowering goes jitted-fn -> stablehlo ->
+XlaComputation (``return_tuple=True``) -> ``as_hlo_text()``; the Rust side
+unwraps the tuple.
+
+Usage:
+    cd python && python -m compile.aot [--out-dir ../artifacts] [--full]
+
+``--full`` additionally lowers the `mid` (~10M-param) transformer set;
+the `gpt2s` (~100M-class) set is lowered only with --gpt2s (the HLO is
+cheap to produce but CPU-interpret training of it is impractically slow,
+so it is excluded from the default build).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import sgd_linear
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name
+
+
+def _spec(name: str, aval) -> dict:
+    return {
+        "name": name,
+        "shape": list(aval.shape),
+        "dtype": _dtype_name(aval.dtype),
+    }
+
+
+class ArtifactWriter:
+    """Accumulates lowered artifacts + their manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: list[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, example_args: list, arg_names: list[str],
+            output_names: list[str], kind: str, meta: dict | None = None):
+        """Lower ``fn(*example_args)`` and record a manifest entry.
+
+        ``example_args`` are ShapeDtypeStructs (or arrays); outputs are
+        described from the lowered signature so the manifest is always
+        consistent with the artifact.
+        """
+        specs = [
+            jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_args
+        ]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        flat_outs = jax.tree_util.tree_leaves(out_avals)
+        assert len(flat_outs) == len(output_names), (
+            f"{name}: {len(flat_outs)} outputs, {len(output_names)} names"
+        )
+        entry = {
+            "name": name,
+            "path": path,
+            "kind": kind,
+            "inputs": [_spec(n, a) for n, a in zip(arg_names, specs)],
+            "outputs": [_spec(n, a) for n, a in zip(output_names, flat_outs)],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "meta": meta or {},
+        }
+        self.entries.append(entry)
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(entry['inputs'])} in / {len(entry['outputs'])} out")
+
+    def finish(self):
+        manifest = {
+            "version": MANIFEST_VERSION,
+            "generated_by": "python/compile/aot.py",
+            "jax_version": jax.__version__,
+            "artifacts": self.entries,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        print(f"wrote {len(self.entries)} artifacts -> "
+              f"{self.out_dir}/manifest.json")
+
+
+def add_linear(w: ArtifactWriter, n: int, d: int):
+    """The paper's workload: fused SGD step + standalone gradient, (n, d)."""
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((n, d), f32),   # x
+        jax.ShapeDtypeStruct((d,), f32),     # w
+        jax.ShapeDtypeStruct((n,), f32),     # y
+        jax.ShapeDtypeStruct((), f32),       # lr
+    ]
+    w.add(
+        f"linear_step_n{n}_d{d}",
+        lambda x, wp, y, lr: sgd_linear.linear_sgd_step(x, wp, y, lr),
+        args, ["x", "w", "y", "lr"], ["w_new", "loss"],
+        kind="linear_step", meta={"n": n, "d": d},
+    )
+    w.add(
+        f"linear_grad_n{n}_d{d}",
+        lambda x, wp, y: sgd_linear.linear_grad(x, wp, y),
+        args[:3], ["x", "w", "y"], ["grad"],
+        kind="linear_grad", meta={"n": n, "d": d},
+    )
+
+
+def add_transformer(w: ArtifactWriter, cfg: model.TransformerConfig,
+                    batch: int):
+    """init / train_step / eval_loss artifact triple for one config."""
+    pspecs = cfg.param_specs()
+    param_args = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in pspecs
+    ]
+    param_names = [name for name, _ in pspecs]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq + 1), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    meta = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "seq": cfg.seq,
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "d_ff": cfg.d_ff, "batch": batch,
+            "param_count": cfg.param_count(),
+        }
+    }
+    w.add(
+        f"tf_{cfg.name}_init",
+        lambda s: model.init_params(cfg, s),
+        [seed], ["seed"], param_names, kind="tf_init", meta=meta,
+    )
+    w.add(
+        f"tf_{cfg.name}_step",
+        lambda *a: model.train_step(cfg, a[:-2], a[-2], a[-1]),
+        param_args + [tokens, lr],
+        param_names + ["tokens", "lr"],
+        param_names + ["loss"],
+        kind="tf_step", meta=meta,
+    )
+    w.add(
+        f"tf_{cfg.name}_loss",
+        lambda *a: model.loss_fn(cfg, a[:-1], a[-1]),
+        param_args + [tokens],
+        param_names + ["tokens"],
+        ["loss"],
+        kind="tf_loss", meta=meta,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the mid (~10M) transformer set")
+    ap.add_argument("--gpt2s", action="store_true",
+                    help="also lower the ~100M-class transformer set")
+    args = ap.parse_args()
+
+    w = ArtifactWriter(args.out_dir)
+    print("lowering linear-model artifacts (paper Section 5 workload)...")
+    add_linear(w, n=32, d=1000)     # the paper's 1000-parameter model
+    add_linear(w, n=128, d=100)     # small sweep variant
+    print("lowering transformer artifacts...")
+    add_transformer(w, model.CONFIGS["tiny"], batch=8)
+    add_transformer(w, model.CONFIGS["small"], batch=4)
+    if args.full:
+        add_transformer(w, model.CONFIGS["mid"], batch=2)
+    if args.gpt2s:
+        add_transformer(w, model.CONFIGS["gpt2s"], batch=1)
+    w.finish()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,250 @@
+"""Layer-1 Pallas kernel: blocked (flash-style) attention with custom VJP.
+
+Used by the L2 transformer (``python/compile/model.py``) so that the
+end-to-end training artifact exercises a Pallas hot-spot in both the forward
+and backward pass. The design follows the FlashAttention decomposition,
+re-thought for TPU (DESIGN.md §Hardware-Adaptation):
+
+  * forward: grid ``(batch*heads, q_blocks)``; each step holds one q tile in
+    VMEM and streams k/v tiles through an online-softmax accumulation
+    (running max ``m``, normaliser ``l``, un-normalised accumulator) —
+    the HBM<->VMEM schedule a CUDA implementation expresses with
+    threadblocks is expressed here with ``BlockSpec`` + an in-kernel loop;
+  * the forward also emits the row-wise logsumexp so the backward can
+    recompute probabilities without materialising the (s, s) score matrix
+    in HBM;
+  * backward: grid ``(batch*heads,)``; recomputes p tiles from (q, k, lse)
+    and accumulates dq/dk/dv with MXU matmuls, looping over q tiles.
+
+Causal masking is supported and is the mode the transformer uses.
+``interpret=True`` throughout (CPU PJRT cannot run Mosaic custom-calls);
+numerics are pinned to ``ref.attention_ref`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30  # large-negative instead of -inf: keeps masked softmax NaN-free
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k, seq_k, scale, causal):
+    """One (head, q-tile) program: online softmax over k tiles."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]                                   # (bq, dh)
+    bq = q.shape[0]
+    dh = q.shape[1]
+    nkb = seq_k // block_k
+
+    q_rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_tile = k_ref[0, pl.dslice(j * block_k, block_k), :]   # (bk, dh)
+        v_tile = v_ref[0, pl.dslice(j * block_k, block_k), :]
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                               # (bq, bk)
+        if causal:
+            k_cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1
+            )
+            s = jnp.where(q_rows >= k_cols, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))              # (bq,)
+        alpha = jnp.exp(m - m_new)                              # rescale old
+        p = jnp.exp(s - m_new[:, None])                         # (bq, bk)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    # Causal: tiles strictly above the diagonal band contribute nothing.
+    if causal:
+        # Tiles strictly above the causal diagonal band are all-masked: the
+        # last k tile that can intersect rows [qi*bq, (qi+1)*bq) is the one
+        # containing column (qi+1)*bq - 1.
+        upper = ((qi + 1) * bq + block_k - 1) // block_k
+    else:
+        upper = nkb
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, :, :] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0, :] = m + jnp.log(l_safe)
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref,
+    dq_ref, dk_ref, dv_ref,
+    *, block_q, scale, causal,
+):
+    """One head program: recompute p tiles from lse, accumulate dq/dk/dv."""
+    q_all = q_ref[0, :, :]                               # (s, dh)
+    k_all = k_ref[0, :, :]
+    v_all = v_ref[0, :, :]
+    o_all = o_ref[0, :, :]
+    do_all = do_ref[0, :, :]
+    lse = lse_ref[0, :]                                  # (s,)
+    seq, dh = q_all.shape
+    nqb = seq // block_q
+
+    # D_i = rowsum(dO ∘ O) — the softmax-jacobian diagonal term.
+    delta = jnp.sum(do_all * o_all, axis=1)              # (s,)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = jax.lax.dynamic_slice(q_all, (i * block_q, 0), (block_q, dh))
+        do = jax.lax.dynamic_slice(do_all, (i * block_q, 0), (block_q, dh))
+        lse_i = jax.lax.dynamic_slice(lse, (i * block_q,), (block_q,))
+        delta_i = jax.lax.dynamic_slice(delta, (i * block_q,), (block_q,))
+        s = jax.lax.dot_general(
+            q, k_all, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # (bq, s)
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, seq), 0
+            )
+            cols = jax.lax.broadcasted_iota(jnp.int32, (block_q, seq), 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        p = jnp.exp(s - lse_i[:, None])                  # (bq, s)
+        dv = dv + jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (s, dh)
+        dp = jax.lax.dot_general(
+            do, v_all, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (bq, s)
+        ds = p * (dp - delta_i[:, None]) * scale         # (bq, s)
+        dq_i = jax.lax.dot_general(
+            ds, k_all, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (bq, dh)
+        dq_ref[0, pl.dslice(i * block_q, block_q), :] = dq_i.astype(dq_ref.dtype)
+        dk = dk + jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (s, dh)
+        return dk, dv
+
+    dk0 = jnp.zeros((seq, dh), jnp.float32)
+    dv0 = jnp.zeros((seq, dh), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, nqb, body, (dk0, dv0))
+    dk_ref[0, :, :] = dk.astype(dk_ref.dtype)
+    dv_ref[0, :, :] = dv.astype(dv_ref.dtype)
+
+
+def _flatten_heads(x):
+    b, h, s, d = x.shape
+    return x.reshape(b * h, s, d)
+
+
+def _fwd_impl(q, k, v, *, causal, block_q, block_k):
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0, f"seq_q={sq} not a multiple of block_q={block_q}"
+    assert sk % block_k == 0, f"seq_k={sk} not a multiple of block_k={block_k}"
+    scale = 1.0 / (dh ** 0.5)
+    qf, kf, vf = _flatten_heads(q), _flatten_heads(k), _flatten_heads(v)
+    bh = b * h
+    nqb = sq // block_q
+    kernel = functools.partial(
+        _fwd_kernel, block_k=block_k, seq_k=sk, scale=scale, causal=causal
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(bh, nqb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bhi, qi: (bhi, qi, 0)),
+            pl.BlockSpec((1, sk, dh), lambda bhi, qi: (bhi, 0, 0)),
+            pl.BlockSpec((1, sk, dh), lambda bhi, qi: (bhi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bhi, qi: (bhi, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bhi, qi: (bhi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return o.reshape(b, h, sq, dh), lse.reshape(b, h, sq)
+
+
+def _bwd_impl(q, k, v, o, lse, do, *, causal, block_q):
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    bh = b * h
+    kernel = functools.partial(
+        _bwd_kernel, block_q=block_q, scale=scale, causal=causal
+    )
+    full = lambda s: pl.BlockSpec((1, s, dh), lambda bhi: (bhi, 0, 0))
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            full(sq), full(sk), full(sk), full(sq),
+            pl.BlockSpec((1, sq), lambda bhi: (bhi, 0)),
+            full(sq),
+        ],
+        out_specs=[full(sq), full(sk), full(sk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, sk, dh), k.dtype),
+            jax.ShapeDtypeStruct((bh, sk, dh), v.dtype),
+        ],
+        interpret=True,
+    )(
+        _flatten_heads(q), _flatten_heads(k), _flatten_heads(v),
+        _flatten_heads(o), lse.reshape(bh, sq), _flatten_heads(do),
+    )
+    rs = lambda x, s: x.reshape(b, h, s, dh)
+    return rs(dq, sq), rs(dk, sk), rs(dv, sk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Blocked attention over (batch, heads, seq, head_dim) tensors.
+
+    Differentiable: the VJP runs the Pallas backward kernel (recompute from
+    logsumexp), so the whole train step lowers to plain HLO for the Rust
+    runtime. Matches ``ref.attention_ref`` to float32 tolerance.
+    """
+    o, _ = _fwd_impl(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return o
+
+
+def _attention_fwd(q, k, v, causal, block_q, block_k):
+    o, lse = _fwd_impl(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _attention_bwd(causal, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd_impl(q, k, v, o, lse, do, causal=causal, block_q=block_q)
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

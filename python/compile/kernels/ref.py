@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package must agree with the function of the same name
+here to within float tolerance; `python/tests/test_kernels.py` sweeps shapes
+and dtypes (hypothesis) and asserts allclose. These references are also used
+directly by the L2 model tests as the ground truth for the transformer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_grad_ref(x: jax.Array, w: jax.Array, y: jax.Array) -> jax.Array:
+    """Gradient of the mean-squared-error linear model.
+
+    f(w) = 1/(2n) * ||x @ w - y||^2          (the paper's Section 5 workload)
+    grad = 1/n * x^T (x @ w - y)
+
+    Args:
+      x: (n, d) design matrix.
+      w: (d,) parameter vector.
+      y: (n,) targets.
+    Returns:
+      (d,) gradient.
+    """
+    n = x.shape[0]
+    r = x @ w - y
+    return x.T @ r / n
+
+
+def linear_loss_ref(x: jax.Array, w: jax.Array, y: jax.Array) -> jax.Array:
+    """MSE loss matching `linear_grad_ref` (scalar)."""
+    n = x.shape[0]
+    r = x @ w - y
+    return 0.5 * jnp.sum(r * r) / n
+
+
+def linear_sgd_step_ref(x, w, y, lr):
+    """One fused SGD step: returns (w - lr * grad, loss-before-step)."""
+    g = linear_grad_ref(x, w, y)
+    return w - lr * g, linear_loss_ref(x, w, y)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """Scaled dot-product attention oracle.
+
+    Args:
+      q, k, v: (batch, heads, seq, head_dim).
+      causal: apply a lower-triangular mask.
+    Returns:
+      (batch, heads, seq, head_dim) attention output.
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        seq_q, seq_k = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

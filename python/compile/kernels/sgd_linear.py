@@ -1,0 +1,182 @@
+"""Layer-1 Pallas kernel: fused linear-model SGD gradient/step.
+
+The paper's Section-5 workload is SGD on a 1000-parameter linear model; the
+per-worker compute hot-spot is the fused gradient
+
+    r = X w - y            (residual,   (n,))
+    g = X^T r / n          (gradient,   (d,))
+
+optionally followed by the parameter update ``w' = w - lr * g``. We fuse all
+of it into a single Pallas kernel so one HBM pass over X produces the new
+parameter vector — the same fusion a hand-written CUDA kernel would do, but
+expressed as a TPU HBM<->VMEM schedule via ``BlockSpec``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid over row-blocks of X; each step stages an ``(bn, d)`` tile of X into
+    VMEM and issues two MXU matmuls (``x_blk @ w`` and ``x_blk^T @ r_blk``);
+  * the gradient accumulator lives in the output VMEM block across grid
+    steps (TPU grids execute sequentially, so read-modify-write of the same
+    output block across steps is the canonical accumulation pattern);
+  * the final grid step applies the SGD update, so ``w'`` never round-trips
+    through HBM in a separate kernel.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which the Rust runtime
+(xla crate) runs. Correctness vs ``ref.py`` is asserted by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size: one (BLOCK_N, d) tile of X in VMEM per grid step. With
+# d = 1000 (f32) a 128-row tile is 128*1000*4 B = 500 KiB — comfortably
+# inside the ~16 MiB VMEM budget together with w, r and the accumulator.
+BLOCK_N = 128
+
+
+def _grad_kernel(x_ref, w_ref, y_ref, g_ref, *, nblocks: int, n_total: int):
+    """Grid step i: accumulate x_blk^T (x_blk @ w - y_blk) into g_ref.
+
+    g_ref maps to the same (d, 1) output block for every grid step; step 0
+    initialises it, the last step scales by 1/n.
+    """
+    i = pl.program_id(0)
+    x_blk = x_ref[...]                      # (BLOCK_N, d)   VMEM tile
+    w = w_ref[...]                          # (d, 1)
+    y_blk = y_ref[...]                      # (BLOCK_N, 1)
+    # MXU matmul 1: residual of this row block.
+    r_blk = jnp.dot(x_blk, w, preferred_element_type=jnp.float32) - y_blk
+    # MXU matmul 2: partial gradient contribution.
+    g_part = jnp.dot(x_blk.T, r_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    g_ref[...] += g_part
+
+    @pl.when(i == nblocks - 1)
+    def _finalise():
+        g_ref[...] = g_ref[...] / n_total
+
+
+def _pad_rows(x: jax.Array, y: jax.Array, block_n: int):
+    """Zero-pad rows to a multiple of block_n (zero rows contribute 0 to g)."""
+    n = x.shape[0]
+    rem = (-n) % block_n
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem, x.shape[1]), x.dtype)], axis=0)
+        y = jnp.concatenate([y, jnp.zeros((rem,), y.dtype)], axis=0)
+    return x, y
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def linear_grad(
+    x: jax.Array, w: jax.Array, y: jax.Array, *, block_n: int = BLOCK_N
+) -> jax.Array:
+    """Fused MSE gradient ``x^T (x w - y) / n`` as a Pallas kernel.
+
+    Args:
+      x: (n, d) f32 design matrix.
+      w: (d,) f32 parameters.
+      y: (n,) f32 targets.
+      block_n: rows of X staged into VMEM per grid step.
+    Returns:
+      (d,) f32 gradient, numerically matching ``ref.linear_grad_ref``.
+    """
+    n, d = x.shape
+    xp, yp = _pad_rows(x, y, block_n)
+    nblocks = xp.shape[0] // block_n
+    kernel = functools.partial(_grad_kernel, nblocks=nblocks, n_total=n)
+    g = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # X row tile
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),          # w (resident)
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),    # y row tile
+        ],
+        out_specs=pl.BlockSpec((d, 1), lambda i: (0, 0)),    # g accumulator
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=True,
+    )(xp, w.reshape(d, 1), yp.reshape(-1, 1))
+    return g.reshape(d)
+
+
+def _step_kernel(
+    x_ref, w_ref, y_ref, lr_ref, w_out_ref, loss_ref, g_ref,
+    *, nblocks: int, n_total: int,
+):
+    """Fused grad + loss + SGD update.
+
+    The gradient accumulates in the ``g_ref`` output block (resident in VMEM
+    across sequential grid steps); the final step applies the update into
+    ``w_out_ref`` so X is read from HBM exactly once per step.
+    """
+    i = pl.program_id(0)
+    x_blk = x_ref[...]
+    w = w_ref[...]
+    y_blk = y_ref[...]
+    r_blk = jnp.dot(x_blk, w, preferred_element_type=jnp.float32) - y_blk
+    g_part = jnp.dot(x_blk.T, r_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    g_ref[...] += g_part / n_total
+    # 0.5 * sum(r^2) / n accumulated blockwise (padded rows contribute 0).
+    loss_ref[...] += 0.5 * jnp.sum(r_blk * r_blk).reshape(1, 1) / n_total
+
+    @pl.when(i == nblocks - 1)
+    def _update():
+        w_out_ref[...] = w - lr_ref[0, 0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def linear_sgd_step(
+    x: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    lr: jax.Array,
+    *,
+    block_n: int = BLOCK_N,
+):
+    """One fused SGD step on the linear model.
+
+    Returns ``(w - lr * grad, loss_before_step)`` in a single Pallas kernel —
+    one HBM pass over X. This is the executable the Rust workers call via
+    PJRT on the paper's own workload (see artifacts manifest).
+    """
+    n, d = x.shape
+    xp, yp = _pad_rows(x, y, block_n)
+    nblocks = xp.shape[0] // block_n
+    kernel = functools.partial(_step_kernel, nblocks=nblocks, n_total=n)
+    w_new, loss, _g = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # lr scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),          # g accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, w.reshape(d, 1), yp.reshape(-1, 1), lr.reshape(1, 1))
+    return w_new.reshape(d), loss.reshape(())

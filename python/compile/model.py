@@ -1,0 +1,201 @@
+"""Layer-2 JAX model definitions (build-time only; never on the request path).
+
+Two workloads, both calling the Layer-1 Pallas kernels:
+
+  * the paper's Section-5 workload — SGD on a d-parameter linear model —
+    via ``kernels.sgd_linear.linear_sgd_step`` (fused grad+loss+update);
+  * a decoder-only transformer LM for the end-to-end example, whose
+    attention (forward *and* backward) is ``kernels.attention.attention``.
+
+Everything here is pure-functional over explicit parameter lists so that
+``aot.py`` can lower each entry point to a single HLO-text artifact with a
+flat, manifest-described signature the Rust runtime can drive via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_kernel
+from compile.kernels import sgd_linear
+
+
+# --------------------------------------------------------------------------
+# Linear model (the paper's evaluation workload)
+# --------------------------------------------------------------------------
+
+def linear_grad(x, w, y):
+    """MSE gradient via the fused Pallas kernel (see kernels/sgd_linear.py)."""
+    return sgd_linear.linear_grad(x, w, y)
+
+
+def linear_sgd_step(x, w, y, lr):
+    """Fused SGD step: (w', loss) in one HBM pass over x."""
+    return sgd_linear.linear_sgd_step(x, w, y, lr)
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (end-to-end example workload)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Decoder-only transformer hyper-parameters.
+
+    ``name`` keys the artifact set in the manifest. ``block_q``/``block_k``
+    are the Pallas attention tile sizes (must divide ``seq``).
+    """
+
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    block_q: int = 64
+    block_k: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Flat, ordered (name, shape) list — the AOT interchange contract."""
+        specs: list[tuple[str, tuple[int, ...]]] = [
+            ("embed", (self.vocab, self.d_model)),
+            ("pos_embed", (self.seq, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            specs += [
+                (p + "ln1_scale", (self.d_model,)),
+                (p + "ln1_bias", (self.d_model,)),
+                (p + "wqkv", (self.d_model, 3 * self.d_model)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "ln2_scale", (self.d_model,)),
+                (p + "ln2_bias", (self.d_model,)),
+                (p + "w1", (self.d_model, self.d_ff)),
+                (p + "b1", (self.d_ff,)),
+                (p + "w2", (self.d_ff, self.d_model)),
+                (p + "b2", (self.d_model,)),
+            ]
+        specs += [
+            ("lnf_scale", (self.d_model,)),
+            ("lnf_bias", (self.d_model,)),
+        ]
+        return specs
+
+    def param_count(self) -> int:
+        total = 0
+        for _, shape in self.param_specs():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+
+# Named configurations. `tiny` is the default e2e run (CPU interpret-mode
+# wall-clock); `mid` ~10M params; `gpt2s` is the ~100M-class config — same
+# code path, lowered on demand (aot.py --full).
+CONFIGS: dict[str, TransformerConfig] = {
+    c.name: c
+    for c in [
+        TransformerConfig("tiny", vocab=256, seq=64, d_model=64, n_heads=4,
+                          n_layers=2, d_ff=256, block_q=32, block_k=32),
+        TransformerConfig("small", vocab=256, seq=128, d_model=128, n_heads=4,
+                          n_layers=4, d_ff=512, block_q=64, block_k=64),
+        TransformerConfig("mid", vocab=1024, seq=128, d_model=256, n_heads=8,
+                          n_layers=12, d_ff=1024, block_q=64, block_k=64),
+        TransformerConfig("gpt2s", vocab=32768, seq=256, d_model=768,
+                          n_heads=12, n_layers=12, d_ff=3072,
+                          block_q=64, block_k=64),
+    ]
+}
+
+
+def init_params(cfg: TransformerConfig, seed: jax.Array) -> tuple[jax.Array, ...]:
+    """Initialise the flat parameter tuple from an int32 seed (lowerable)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.endswith("_scale"):
+            p = jnp.ones(shape, jnp.float32)
+        elif base.endswith("_bias") or base.startswith("b"):
+            p = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = 0.02 if base in ("embed", "pos_embed") else fan_in ** -0.5
+            p = jax.random.normal(sub, shape, jnp.float32) * std
+        params.append(p)
+    return tuple(params)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _unflatten(cfg: TransformerConfig, params: Sequence[jax.Array]):
+    return {name: p for (name, _), p in zip(cfg.param_specs(), params)}
+
+
+def forward(
+    cfg: TransformerConfig, params: Sequence[jax.Array], tokens: jax.Array
+) -> jax.Array:
+    """Logits for ``tokens`` (batch, seq) int32 → (batch, seq, vocab)."""
+    p = _unflatten(cfg, params)
+    b, s = tokens.shape
+    h = p["embed"][tokens] + p["pos_embed"][None, :s, :]
+    for i in range(cfg.n_layers):
+        lp = lambda k: p[f"layer{i}.{k}"]
+        x = _layer_norm(h, lp("ln1_scale"), lp("ln1_bias"))
+        qkv = x @ lp("wqkv")                              # (b, s, 3d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        def heads(t):
+            return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        # Layer-1 Pallas kernel: causal blocked attention, custom VJP.
+        o = attn_kernel.attention(
+            heads(q), heads(k), heads(v), True, cfg.block_q, cfg.block_k
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + o @ lp("wo")
+        x = _layer_norm(h, lp("ln2_scale"), lp("ln2_bias"))
+        x = jax.nn.gelu(x @ lp("w1") + lp("b1"))
+        h = h + x @ lp("w2") + lp("b2")
+    h = _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+    return h @ p["embed"].T                               # tied embedding
+
+
+def loss_fn(
+    cfg: TransformerConfig, params: Sequence[jax.Array], tokens: jax.Array
+) -> jax.Array:
+    """Next-token cross-entropy. ``tokens``: (batch, seq+1) int32."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(
+    cfg: TransformerConfig,
+    params: Sequence[jax.Array],
+    tokens: jax.Array,
+    lr: jax.Array,
+) -> tuple[tuple[jax.Array, ...], jax.Array]:
+    """One SGD step: returns (new flat params, loss before the step)."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens))(
+        tuple(params)
+    )
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params, loss

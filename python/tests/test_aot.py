@@ -1,0 +1,85 @@
+"""AOT pipeline tests: HLO-text interchange + manifest schema."""
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_trivial_fn():
+    """The interchange path itself: jit -> stablehlo -> HLO text."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4]" in text
+
+
+def test_to_hlo_text_is_text_not_proto():
+    lowered = jax.jit(lambda x: (x + 1,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    # must be parseable ascii, not serialized proto bytes
+    text.encode("ascii")
+    assert "ENTRY" in text
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_schema(manifest):
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert len(manifest["artifacts"]) >= 10
+    for e in manifest["artifacts"]:
+        for key in ("name", "path", "kind", "inputs", "outputs", "sha256"):
+            assert key in e, e.get("name")
+        for io in e["inputs"] + e["outputs"]:
+            assert set(io) == {"name", "shape", "dtype"}
+            assert io["dtype"] in ("float32", "int32")
+
+
+def test_artifact_files_exist_and_hash(manifest):
+    for e in manifest["artifacts"]:
+        p = os.path.join(ART_DIR, e["path"])
+        assert os.path.exists(p), e["name"]
+        text = open(p).read()
+        assert text.startswith("HloModule"), e["name"]
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+
+
+def test_linear_step_artifact_signature(manifest):
+    [e] = [a for a in manifest["artifacts"] if a["name"] == "linear_step_n32_d1000"]
+    assert [i["name"] for i in e["inputs"]] == ["x", "w", "y", "lr"]
+    assert e["inputs"][0]["shape"] == [32, 1000]
+    assert e["inputs"][1]["shape"] == [1000]     # the paper's 1000 parameters
+    assert [o["name"] for o in e["outputs"]] == ["w_new", "loss"]
+
+
+def test_tf_step_artifact_signature(manifest):
+    [e] = [a for a in manifest["artifacts"] if a["name"] == "tf_tiny_step"]
+    cfg = model.CONFIGS["tiny"]
+    n_params = len(cfg.param_specs())
+    assert len(e["inputs"]) == n_params + 2          # params + tokens + lr
+    assert len(e["outputs"]) == n_params + 1         # params' + loss
+    assert e["inputs"][-2]["dtype"] == "int32"       # tokens
+    assert e["meta"]["config"]["param_count"] == cfg.param_count()
+    # init outputs must exactly mirror step param inputs
+    [init] = [a for a in manifest["artifacts"] if a["name"] == "tf_tiny_init"]
+    assert [o["shape"] for o in init["outputs"]] == [
+        i["shape"] for i in e["inputs"][:n_params]
+    ]

@@ -1,0 +1,187 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (and attention masking modes) and pins the Pallas
+kernels to the pure-jnp oracles in ``compile/kernels/ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn
+from compile.kernels import ref, sgd_linear
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- linear --
+
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=192),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_linear_grad_matches_ref(n, d, seed):
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w, y = _rand(kx, (n, d)), _rand(kw, (d,)), _rand(ky, (n,))
+    got = sgd_linear.linear_grad(x, w, y)
+    want = ref.linear_grad_ref(x, w, y)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=192),
+    lr=st.floats(min_value=1e-4, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_linear_step_matches_ref(n, d, lr, seed):
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w, y = _rand(kx, (n, d)), _rand(kw, (d,)), _rand(ky, (n,))
+    w_new, loss = sgd_linear.linear_sgd_step(x, w, y, jnp.float32(lr))
+    w_ref, loss_ref = ref.linear_sgd_step_ref(x, w, y, lr)
+    np.testing.assert_allclose(w_new, w_ref, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(loss, loss_ref, rtol=3e-4)
+
+
+def test_linear_grad_block_boundary():
+    """n exactly at / just above / just below the VMEM tile boundary."""
+    d = 64
+    for n in (
+        sgd_linear.BLOCK_N - 1,
+        sgd_linear.BLOCK_N,
+        sgd_linear.BLOCK_N + 1,
+        2 * sgd_linear.BLOCK_N,
+    ):
+        kx, kw, ky = jax.random.split(jax.random.PRNGKey(n), 3)
+        x, w, y = _rand(kx, (n, d)), _rand(kw, (d,)), _rand(ky, (n,))
+        np.testing.assert_allclose(
+            sgd_linear.linear_grad(x, w, y),
+            ref.linear_grad_ref(x, w, y),
+            rtol=3e-4, atol=3e-5,
+        )
+
+
+def test_linear_grad_paper_shape():
+    """The paper's exact workload: 1000-parameter linear model."""
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(42), 3)
+    x, w, y = _rand(kx, (32, 1000)), _rand(kw, (1000,)), _rand(ky, (32,))
+    np.testing.assert_allclose(
+        sgd_linear.linear_grad(x, w, y),
+        ref.linear_grad_ref(x, w, y),
+        rtol=3e-4, atol=3e-5,
+    )
+
+
+def test_linear_grad_zero_residual():
+    """Exact fit => zero gradient (no catastrophic cancellation)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x, w = _rand(kx, (64, 32)), _rand(kw, (32,))
+    y = x @ w
+    g = sgd_linear.linear_grad(x, w, y)
+    np.testing.assert_allclose(g, np.zeros(32), atol=1e-4)
+
+
+def test_linear_step_custom_block_n():
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(3), 3)
+    x, w, y = _rand(kx, (96, 48)), _rand(kw, (48,)), _rand(ky, (96,))
+    for bn in (16, 32, 64):
+        got = sgd_linear.linear_grad(x, w, y, block_n=bn)
+        np.testing.assert_allclose(
+            got, ref.linear_grad_ref(x, w, y), rtol=3e-4, atol=3e-5
+        )
+
+
+# ------------------------------------------------------------- attention --
+
+ATTN_CASES = [
+    # (batch, heads, seq, head_dim, causal, block_q, block_k)
+    (1, 1, 32, 16, True, 16, 16),
+    (1, 2, 64, 32, True, 32, 32),
+    (2, 2, 64, 16, True, 64, 64),
+    (1, 1, 64, 8, False, 16, 32),
+    (2, 4, 128, 16, True, 64, 64),
+    (1, 2, 96, 16, True, 32, 32),   # blocks not dividing each other's count
+]
+
+
+@pytest.mark.parametrize("b,h,s,dh,causal,bq,bk", ATTN_CASES)
+def test_attention_forward_matches_ref(b, h, s, dh, causal, bq, bk):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(s * dh + b), 3)
+    q, k, v = _rand(kq, (b, h, s, dh)), _rand(kk, (b, h, s, dh)), _rand(kv, (b, h, s, dh))
+    got = attn.attention(q, k, v, causal, bq, bk)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,h,s,dh,causal,bq,bk", ATTN_CASES[:4])
+def test_attention_grads_match_ref(b, h, s, dh, causal, bq, bk):
+    keys = jax.random.split(jax.random.PRNGKey(1000 + s + dh), 4)
+    q, k, v = (_rand(keys[i], (b, h, s, dh)) for i in range(3))
+    do = _rand(keys[3], (b, h, s, dh))
+
+    def f(q, k, v):
+        return jnp.sum(attn.attention(q, k, v, causal, bq, bk) * do)
+
+    def fr(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=causal) * do)
+
+    got = jax.grad(f, (0, 1, 2))(q, k, v)
+    want = jax.grad(fr, (0, 1, 2))(q, k, v)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=5e-3, atol=5e-4)
+
+
+@given(
+    seq_pow=st.integers(min_value=5, max_value=7),     # seq in {32, 64, 128}
+    dh=st.sampled_from([8, 16, 32]),
+    heads=st.integers(min_value=1, max_value=3),
+    causal=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=12, deadline=None)
+def test_attention_forward_hypothesis(seq_pow, dh, heads, causal, seed):
+    s = 2 ** seq_pow
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(kq, (1, heads, s, dh))
+    k = _rand(kk, (1, heads, s, dh))
+    v = _rand(kv, (1, heads, s, dh))
+    got = attn.attention(q, k, v, causal, 32, 32)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+def test_attention_causal_first_row_is_v0():
+    """Causal row 0 can only attend to position 0 => output row 0 == v[0]."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(5), 3)
+    q, k, v = (_rand(x, (1, 1, 32, 16)) for x in (kq, kk, kv))
+    out = attn.attention(q, k, v, True, 16, 16)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-6)
+
+
+def test_attention_uniform_v_invariance():
+    """If all v rows are identical, output equals that row regardless of p."""
+    kq, kk = jax.random.split(jax.random.PRNGKey(6))
+    q, k = _rand(kq, (1, 2, 64, 16)), _rand(kk, (1, 2, 64, 16))
+    row = jnp.arange(16, dtype=jnp.float32)
+    v = jnp.broadcast_to(row, (1, 2, 64, 16))
+    out = attn.attention(q, k, v, True, 32, 32)
+    np.testing.assert_allclose(
+        out, jnp.broadcast_to(row, out.shape), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_attention_rejects_misaligned_blocks():
+    q = jnp.zeros((1, 1, 48, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        attn.attention(q, q, q, True, 32, 32)

@@ -1,0 +1,111 @@
+"""L2 model tests: transformer shapes, loss behaviour, SGD progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+# A micro config so interpret-mode tests stay fast.
+MICRO = model.TransformerConfig(
+    "micro", vocab=61, seq=32, d_model=32, n_heads=2, n_layers=1, d_ff=64,
+    block_q=16, block_k=16,
+)
+
+
+@pytest.fixture(scope="module")
+def micro_params():
+    return model.init_params(MICRO, jnp.int32(0))
+
+
+def _batch(key, cfg, batch=4):
+    return jax.random.randint(key, (batch, cfg.seq + 1), 0, cfg.vocab)
+
+
+def test_param_specs_match_init(micro_params):
+    specs = MICRO.param_specs()
+    assert len(specs) == len(micro_params)
+    for (name, shape), p in zip(specs, micro_params):
+        assert tuple(shape) == p.shape, name
+        assert p.dtype == jnp.float32, name
+
+
+def test_param_count_matches_arrays(micro_params):
+    total = sum(int(np.prod(p.shape)) for p in micro_params)
+    assert total == MICRO.param_count()
+
+
+def test_configs_registry_consistent():
+    for name, cfg in model.CONFIGS.items():
+        assert cfg.name == name
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.seq % cfg.block_q == 0
+        assert cfg.seq % cfg.block_k == 0
+    # the ~100M-class config really is ~100M
+    assert 80e6 < model.CONFIGS["gpt2s"].param_count() < 200e6
+
+
+def test_forward_shapes(micro_params):
+    tokens = _batch(jax.random.PRNGKey(1), MICRO)[:, :-1]
+    logits = model.forward(MICRO, micro_params, tokens)
+    assert logits.shape == (4, MICRO.seq, MICRO.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(micro_params):
+    """Fresh init => loss ~= ln(vocab)."""
+    tokens = _batch(jax.random.PRNGKey(2), MICRO)
+    loss = model.loss_fn(MICRO, micro_params, tokens)
+    assert abs(float(loss) - np.log(MICRO.vocab)) < 0.5
+
+
+def test_train_step_reduces_loss(micro_params):
+    """A few SGD steps on a fixed batch must reduce the loss (memorise)."""
+    tokens = _batch(jax.random.PRNGKey(3), MICRO)
+    params = micro_params
+    losses = []
+    for _ in range(8):
+        params, loss = model.train_step(MICRO, params, tokens, jnp.float32(0.5))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_train_step_param_shapes_preserved(micro_params):
+    tokens = _batch(jax.random.PRNGKey(4), MICRO)
+    new_params, _ = model.train_step(MICRO, micro_params, tokens, jnp.float32(0.1))
+    assert len(new_params) == len(micro_params)
+    for old, new in zip(micro_params, new_params):
+        assert old.shape == new.shape
+        assert old.dtype == new.dtype
+
+
+def test_train_step_zero_lr_is_identity(micro_params):
+    tokens = _batch(jax.random.PRNGKey(5), MICRO)
+    new_params, _ = model.train_step(MICRO, micro_params, tokens, jnp.float32(0.0))
+    for old, new in zip(micro_params, new_params):
+        np.testing.assert_allclose(old, new)
+
+
+def test_loss_is_permutation_sensitive(micro_params):
+    """Causal LM: shuffling target order must change the loss."""
+    key = jax.random.PRNGKey(6)
+    tokens = _batch(key, MICRO)
+    loss_a = float(model.loss_fn(MICRO, micro_params, tokens))
+    shuffled = tokens[:, ::-1]
+    loss_b = float(model.loss_fn(MICRO, micro_params, shuffled))
+    assert loss_a != pytest.approx(loss_b, abs=1e-9)
+
+
+def test_init_deterministic():
+    a = model.init_params(MICRO, jnp.int32(7))
+    b = model.init_params(MICRO, jnp.int32(7))
+    c = model.init_params(MICRO, jnp.int32(8))
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    assert any(
+        not np.array_equal(pa, pc) for pa, pc in zip(a, c)
+    ), "different seeds must differ"

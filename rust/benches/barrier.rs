@@ -1,0 +1,84 @@
+//! Hot-path microbenches: the barrier decision and the sampling primitive.
+//!
+//! The paper's scalability argument is quantitative: a PSP decision costs
+//! O(β) regardless of system size, while global methods need O(P) state.
+//! These benches measure exactly that (and feed EXPERIMENTS.md §Perf).
+
+use std::time::Duration;
+
+use actor_psp::barrier::{decide_with_oracle, BarrierControl, Bsp, Method, Probabilistic, Ssp};
+use actor_psp::overlay::Ring;
+use actor_psp::sampling::StepTracker;
+use actor_psp::util::bench::bench;
+use actor_psp::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    println!("barrier decision + sampling primitive microbenches");
+    println!("{}", "-".repeat(110));
+
+    // A realistic mid-training step table: 10k nodes spread over 20 steps.
+    let mut rng = Rng::new(1);
+    for &n in &[1_000usize, 10_000] {
+        let mut tracker = StepTracker::new(n);
+        for _ in 0..(n * 10) {
+            let node = rng.next_below(n as u64) as usize;
+            if tracker.step_of(node) < tracker.min_step() + 20 {
+                tracker.advance(node);
+            }
+        }
+        let steps = tracker.all_steps();
+        let mut scratch = Vec::new();
+
+        // Global predicates: O(P) over the raw view, O(1) via the tracker.
+        let bsp = Bsp;
+        bench(&format!("bsp predicate, raw view P={n}"), budget, || {
+            std::hint::black_box(bsp.can_advance(10, &steps));
+        });
+        bench(&format!("bsp predicate via tracker min P={n}"), budget, || {
+            std::hint::black_box(tracker.min_step() + 0 >= 10);
+        });
+
+        // The sampling primitive at the paper's β=10.
+        for &beta in &[1usize, 10, 100] {
+            bench(
+                &format!("sample_min β={beta} P={n} (PSP decision)"),
+                budget,
+                || {
+                    std::hint::black_box(tracker.sample_min(
+                        0,
+                        beta,
+                        &mut rng,
+                        &mut scratch,
+                    ));
+                },
+            );
+        }
+
+        // Full composed decisions through the trait object.
+        let pssp = Probabilistic::new(Ssp::new(4), 10);
+        bench(&format!("pssp(10,4) decide_with_oracle P={n}"), budget, || {
+            std::hint::black_box(decide_with_oracle(
+                &pssp,
+                10,
+                &steps,
+                &mut rng,
+                &mut scratch,
+            ));
+        });
+    }
+
+    // Overlay-based distributed sampling (routing + window + acceptance).
+    for &n in &[100usize, 1_000] {
+        let ring = Ring::with_nodes(n, 7);
+        bench(&format!("overlay sample_nodes β=10 n={n}"), budget, || {
+            std::hint::black_box(ring.sample_nodes(0, 10, &mut rng));
+        });
+    }
+
+    // Method construction (config path, not hot, for completeness).
+    bench("Method::parse + build", budget, || {
+        let m = Method::parse("pssp:10:4").unwrap();
+        std::hint::black_box(m.build().staleness());
+    });
+}

@@ -1,0 +1,38 @@
+//! End-to-end figure regeneration benches: one timed run per paper
+//! table/figure (the harness DESIGN.md §5 maps). Validates that the full
+//! reproduction sweep stays cheap enough to iterate on, and IS the code
+//! path that regenerates every figure (same as `actor exp <id>`).
+//!
+//! Pass `--full` for paper-scale (1000 nodes, 40 s); default is the quick
+//! profile so `cargo bench` completes in minutes.
+
+use actor_psp::exp::{self, ExpOpts};
+use actor_psp::util::bench::bench_once;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let opts = ExpOpts {
+        quick: !full,
+        nodes: if full { 1000 } else { 200 },
+        duration: if full { 40.0 } else { 15.0 },
+        sample: if full { 10 } else { 5 },
+        out_dir: Some(std::path::PathBuf::from("results")),
+        ..ExpOpts::default()
+    };
+    println!(
+        "figure regeneration ({} profile) — tables land in results/",
+        if full { "paper-scale" } else { "quick" }
+    );
+    println!("{}", "-".repeat(110));
+    let mut total = 0.0;
+    for id in exp::ALL {
+        let (res, secs) = bench_once(&format!("exp {id}"), || exp::run(id, &opts));
+        if let Err(e) = res {
+            eprintln!("  exp {id} FAILED: {e:#}");
+            std::process::exit(1);
+        }
+        total += secs;
+    }
+    println!("{}", "-".repeat(110));
+    println!("all {} experiments regenerated in {total:.1}s", exp::ALL.len());
+}

@@ -1,0 +1,96 @@
+//! PJRT runtime benches: artifact compile latency, per-call execute
+//! latency for the Pallas-kernel linear artifacts, and fused transformer
+//! step throughput — the L1/L2-via-L3 numbers in EXPERIMENTS.md §Perf.
+//!
+//! Requires `make artifacts`.
+
+use std::time::{Duration, Instant};
+
+use actor_psp::runtime::{Manifest, Runtime, Tensor};
+use actor_psp::train::{Corpus, TransformerTrainer};
+use actor_psp::util::bench::bench;
+use actor_psp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    println!("PJRT runtime benches (CPU plugin)");
+    println!("{}", "-".repeat(110));
+
+    // Compile latency (cold) per artifact.
+    let rt = Runtime::new()?;
+    for name in ["linear_grad_n128_d100", "linear_step_n32_d1000", "tf_tiny_step"] {
+        let t0 = Instant::now();
+        rt.prepare(name)?;
+        println!(
+            "{:<44} {:>12}        once  {:.3}s (compile)",
+            name,
+            "",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // Execute latency: the paper-shaped linear gradient and fused step.
+    let mut rng = Rng::new(5);
+    let budget = Duration::from_secs(2);
+    {
+        let (n, d) = (128usize, 100usize);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        bench("execute linear_grad n=128 d=100", budget, || {
+            std::hint::black_box(
+                rt.execute(
+                    "linear_grad_n128_d100",
+                    &[
+                        Tensor::F32(x.clone()),
+                        Tensor::F32(w.clone()),
+                        Tensor::F32(y.clone()),
+                    ],
+                )
+                .unwrap(),
+            );
+        });
+    }
+    {
+        let (n, d) = (32usize, 1000usize);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = vec![0.0; d];
+        let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        bench("execute linear_step n=32 d=1000 (paper)", budget, || {
+            std::hint::black_box(
+                rt.execute(
+                    "linear_step_n32_d1000",
+                    &[
+                        Tensor::F32(x.clone()),
+                        Tensor::F32(w.clone()),
+                        Tensor::F32(y.clone()),
+                        Tensor::F32(vec![0.005]),
+                    ],
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    // Fused transformer train step throughput (the e2e driver's hot path).
+    let rt2 = Runtime::new()?;
+    let mut trainer = TransformerTrainer::new(rt2, "tiny", 1)?;
+    let corpus = Corpus::synthetic(1 << 14, trainer.meta.vocab, 9);
+    let mut brng = Rng::new(11);
+    let batch = corpus.next_batch(trainer.meta.batch, trainer.meta.seq, &mut brng);
+    let t0 = Instant::now();
+    let mut steps = 0u32;
+    while t0.elapsed() < Duration::from_secs(5) {
+        trainer.train_step(&batch, 0.05)?;
+        steps += 1;
+    }
+    let sps = steps as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>12} steps        {:.2} steps/s ({} params, fused fwd+bwd+sgd)",
+        "tf_tiny_step throughput", steps, sps, trainer.meta.param_count
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Simulator throughput benches (L3 hot loop): events/s per barrier
+//! method, with and without the real-SGD workload, plus the pure
+//! minibatch-gradient kernel the SGD mode spends its time in.
+
+use std::time::Duration;
+
+use actor_psp::barrier::Method;
+use actor_psp::model::linear::{Dataset, LinearModel};
+use actor_psp::sim::{ClusterConfig, SgdConfig, Simulator};
+use actor_psp::util::bench::{bench, bench_once};
+use actor_psp::util::rng::Rng;
+
+fn main() {
+    println!("simulator throughput (events/s is the L3 perf headline)");
+    println!("{}", "-".repeat(110));
+
+    // Pure barrier-dynamics simulation, paper scale.
+    for method in Method::paper_five(10, 4) {
+        let cfg = ClusterConfig {
+            n_nodes: 1000,
+            duration: 40.0,
+            seed: 42,
+            ..ClusterConfig::default()
+        };
+        let (r, secs) = bench_once(
+            &format!("sim 1000x40s {method} (no sgd)"),
+            || Simulator::new(cfg, method).run(),
+        );
+        println!(
+            "    -> {} events, {:.2}M events/s, {} advances",
+            r.events,
+            r.events as f64 / secs / 1e6,
+            r.total_advances
+        );
+    }
+
+    // With the real-SGD workload (d=1000): gradient math dominates.
+    let cfg = ClusterConfig {
+        n_nodes: 1000,
+        duration: 40.0,
+        seed: 42,
+        sgd: Some(SgdConfig::default()),
+        ..ClusterConfig::default()
+    };
+    let (r, secs) = bench_once("sim 1000x40s pssp:10:4 + sgd d=1000", || {
+        Simulator::new(cfg, Method::Pssp { sample: 10, staleness: 4 }).run()
+    });
+    println!(
+        "    -> {} updates applied, {:.1}k updates/s",
+        r.update_msgs,
+        r.update_msgs as f64 / secs / 1e3
+    );
+
+    // The inner gradient kernel on its own.
+    let mut rng = Rng::new(3);
+    let data = Dataset::synthetic(4096, 1000, 0.1, &mut rng);
+    let w = vec![0.1f32; 1000];
+    let mut model = LinearModel::new(1000);
+    let mut seed = 0u64;
+    bench(
+        "minibatch_grad d=1000 b=32 (pure rust)",
+        Duration::from_millis(500),
+        || {
+            seed += 1;
+            std::hint::black_box(model.minibatch_grad(&data, &w, seed, 32));
+        },
+    );
+
+    // Scaling in system size at fixed horizon.
+    for &n in &[100usize, 1_000, 10_000] {
+        let cfg = ClusterConfig {
+            n_nodes: n,
+            duration: 20.0,
+            seed: 1,
+            ..ClusterConfig::default()
+        };
+        let (r, secs) = bench_once(&format!("sim n={n} 20s pbsp:10"), || {
+            Simulator::new(cfg, Method::Pbsp { sample: 10 }).run()
+        });
+        println!(
+            "    -> {:.2}M events/s",
+            r.events as f64 / secs / 1e6
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimal actor runtime (offline substitute for tokio): named actors on
+//! OS threads with typed mailboxes, used by the live engines
+//! ([`crate::engine`]) — the framework the paper calls "Actor".
+//!
+//! Design choices:
+//! * one thread per actor, `std::sync::mpsc` mailboxes — the engines run
+//!   dozens of workers, not thousands (the thousand-node experiments run
+//!   on the discrete-event simulator instead);
+//! * [`Address`] is a cheap clonable handle; sends never block (unbounded
+//!   channel) and return `false` once the actor is gone, which is how
+//!   engines tolerate worker shutdown races;
+//! * a global send counter per system feeds the communication-cost
+//!   metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Handle for sending messages to an actor.
+pub struct Address<M> {
+    tx: Sender<M>,
+    sent: Arc<AtomicU64>,
+}
+
+impl<M> Clone for Address<M> {
+    fn clone(&self) -> Self {
+        Address { tx: self.tx.clone(), sent: Arc::clone(&self.sent) }
+    }
+}
+
+impl<M> Address<M> {
+    /// Send a message. Returns false if the actor has terminated.
+    pub fn send(&self, msg: M) -> bool {
+        let ok = self.tx.send(msg).is_ok();
+        if ok {
+            self.sent.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+}
+
+/// The receiving side owned by the actor body.
+pub struct Mailbox<M> {
+    rx: Receiver<M>,
+}
+
+impl<M> Mailbox<M> {
+    /// Block for the next message; `None` when all addresses are dropped.
+    pub fn recv(&self) -> Option<M> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<M> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Receive with a timeout.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<M> {
+        self.rx.recv_timeout(dur).ok()
+    }
+}
+
+/// A running actor: its address plus the join handle of its thread.
+pub struct Actor<M, T = ()> {
+    pub addr: Address<M>,
+    handle: JoinHandle<T>,
+    pub name: String,
+}
+
+impl<M, T> Actor<M, T> {
+    /// Wait for the actor to finish and return its result.
+    ///
+    /// Note: the actor's mailbox stays open while `self.addr` exists; drop
+    /// clones (or send an explicit stop message) before joining.
+    pub fn join(self) -> T {
+        let name = self.name;
+        self.handle
+            .join()
+            .unwrap_or_else(|_| panic!("actor '{name}' panicked"))
+    }
+
+    /// Split into (address, join handle) when the owner wants to keep
+    /// messaging while a supervisor joins.
+    pub fn into_parts(self) -> (Address<M>, JoinHandle<T>) {
+        (self.addr, self.handle)
+    }
+}
+
+/// An actor system: spawns actors and aggregates message metrics.
+#[derive(Default)]
+pub struct System {
+    sent: Arc<AtomicU64>,
+}
+
+impl System {
+    pub fn new() -> System {
+        System { sent: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Total messages sent through this system's addresses.
+    pub fn messages_sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+
+    /// Spawn a named actor. The body receives its mailbox and runs to
+    /// completion; the returned [`Actor`] carries its address.
+    pub fn spawn<M, T, F>(&self, name: &str, body: F) -> Actor<M, T>
+    where
+        M: Send + 'static,
+        T: Send + 'static,
+        F: FnOnce(Mailbox<M>) -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let addr = Address { tx, sent: Arc::clone(&self.sent) };
+        let name_owned = name.to_string();
+        let handle = std::thread::Builder::new()
+            .name(name_owned.clone())
+            .spawn(move || body(Mailbox { rx }))
+            .expect("spawn actor thread");
+        Actor { addr, handle, name: name_owned }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn ping_pong() {
+        let sys = System::new();
+        let echo = sys.spawn::<(u32, Sender<u32>), _, _>("echo", |mb| {
+            let mut count = 0;
+            while let Some((x, reply)) = mb.recv() {
+                let _ = reply.send(x + 1);
+                count += 1;
+            }
+            count
+        });
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            assert!(echo.addr.send((i, tx.clone())));
+            assert_eq!(rx.recv().unwrap(), i + 1);
+        }
+        let (addr, handle) = echo.into_parts();
+        drop(addr);
+        drop(tx);
+        assert_eq!(handle.join().unwrap(), 10);
+    }
+
+    #[test]
+    fn send_to_dead_actor_returns_false() {
+        let sys = System::new();
+        let a = sys.spawn::<u32, _, _>("dies", |_mb| ());
+        let (addr, handle) = a.into_parts();
+        handle.join().unwrap();
+        assert!(!addr.send(1));
+    }
+
+    #[test]
+    fn message_counter_counts() {
+        let sys = System::new();
+        let sink = sys.spawn::<u32, _, _>("sink", |mb| {
+            while mb.recv().is_some() {}
+        });
+        for i in 0..25 {
+            sink.addr.send(i);
+        }
+        assert_eq!(sys.messages_sent(), 25);
+        let (addr, handle) = sink.into_parts();
+        drop(addr);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn many_actors_parallel() {
+        let sys = System::new();
+        let actors: Vec<_> = (0..16)
+            .map(|i| {
+                sys.spawn::<u64, _, _>(&format!("w{i}"), move |mb| {
+                    let mut acc = 0u64;
+                    while let Some(x) = mb.recv() {
+                        acc += x;
+                    }
+                    acc
+                })
+            })
+            .collect();
+        for a in &actors {
+            for x in 1..=10u64 {
+                a.addr.send(x);
+            }
+        }
+        let total: u64 = actors
+            .into_iter()
+            .map(|a| {
+                let (addr, handle) = a.into_parts();
+                drop(addr);
+                handle.join().unwrap()
+            })
+            .sum();
+        assert_eq!(total, 16 * 55);
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let sys = System::new();
+        let probe = sys.spawn::<u32, _, _>("probe", |mb| {
+            mb.recv_timeout(Duration::from_millis(20)).is_none()
+        });
+        let (addr, handle) = probe.into_parts();
+        drop(addr);
+        assert!(handle.join().unwrap());
+    }
+}

@@ -1,0 +1,44 @@
+//! Asynchronous Parallel — paper eq. (3): no synchronisation at all.
+
+use super::{BarrierControl, ViewRequirement};
+
+/// ASP: always advance (`⊤`). Fastest iteration rate, no consistency — the
+/// noisy end of the paper's trade-off spectrum (highest error sensitivity
+/// to stragglers, Fig 2b).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Asp;
+
+impl BarrierControl for Asp {
+    fn name(&self) -> &'static str {
+        "asp"
+    }
+
+    fn view(&self) -> ViewRequirement {
+        ViewRequirement::None
+    }
+
+    fn can_advance(&self, _my_step: u64, _view: &[u64]) -> bool {
+        true
+    }
+
+    fn staleness(&self) -> u64 {
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_blocks() {
+        assert!(Asp.can_advance(0, &[]));
+        assert!(Asp.can_advance(5, &[0, 0, 0]));
+        assert!(Asp.can_advance(u64::MAX, &[0]));
+    }
+
+    #[test]
+    fn requires_no_view() {
+        assert_eq!(Asp.view(), ViewRequirement::None);
+    }
+}

@@ -1,0 +1,49 @@
+//! Bulk Synchronous Parallel (Valiant 1990) — paper Algorithm 1 / eq. (1).
+
+use super::{BarrierControl, ViewRequirement};
+
+/// BSP: a worker may advance past step `s` only when **every** observed
+/// peer has reached `s` (`∀j: sⱼ ≥ s`, i.e. lockstep supersteps).
+///
+/// Deterministic and serialisable, but progress is gated on the slowest
+/// worker — see Fig 2 experiments for the straggler collapse.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bsp;
+
+impl BarrierControl for Bsp {
+    fn name(&self) -> &'static str {
+        "bsp"
+    }
+
+    fn view(&self) -> ViewRequirement {
+        ViewRequirement::Global
+    }
+
+    fn can_advance(&self, my_step: u64, view: &[u64]) -> bool {
+        view.iter().all(|&s| s >= my_step)
+    }
+
+    fn staleness(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lockstep_semantics() {
+        assert!(Bsp.can_advance(2, &[2, 2, 2]));
+        assert!(Bsp.can_advance(2, &[2, 3, 7])); // others ahead is fine
+        assert!(!Bsp.can_advance(2, &[1, 2, 3]));
+        assert!(!Bsp.can_advance(u64::MAX, &[u64::MAX - 1]));
+    }
+
+    #[test]
+    fn single_node_system_never_blocks() {
+        // A system of one worker observes an empty peer view.
+        assert!(Bsp.can_advance(0, &[]));
+        assert!(Bsp.can_advance(1_000_000, &[]));
+    }
+}

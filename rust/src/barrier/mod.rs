@@ -1,0 +1,364 @@
+//! Barrier control — the paper's core subject.
+//!
+//! A *barrier control method* decides whether a worker that has finished
+//! computing step `s` may advance to step `s+1`, given a **view** of peer
+//! steps. The five methods of the paper (§6.1):
+//!
+//! | method | predicate over the view | view |
+//! |--------|--------------------------|------|
+//! | BSP    | ∀j: sⱼ ≥ s               | global |
+//! | SSP(θ) | ∀j: s − sⱼ ≤ θ           | global |
+//! | ASP    | ⊤                        | none  |
+//! | pBSP(β)   | ∀j∈S: sⱼ ≥ s          | sample of β |
+//! | pSSP(β,θ) | ∀j∈S: s − sⱼ ≤ θ      | sample of β |
+//!
+//! All five reduce to one predicate — `min(view) + staleness ≥ s` — so the
+//! probabilistic variants are literally the classic ones composed with the
+//! **sampling primitive** ([`crate::sampling`]): `pX = X ∘ sample(β)`.
+//! That composition is expressed by [`Probabilistic`], mirroring the
+//! paper's claim that sampling composes with *any* existing barrier.
+//!
+//! The generalisation lattice (paper §6.1) is tested as properties in
+//! `barrier::tests` and `rust/tests/barrier_properties.rs`:
+//!
+//! * `pBSP(β≥P) = BSP`, `pBSP(0) = ASP`
+//! * `pSSP(β, 0) = pBSP(β)`, `SSP(0) = BSP`, `SSP(∞) = ASP`
+//! * `pSSP(β≥P, θ) = SSP(θ)`
+
+mod asp;
+mod bsp;
+mod probabilistic;
+mod quorum;
+mod ssp;
+
+pub use asp::Asp;
+pub use bsp::Bsp;
+pub use probabilistic::Probabilistic;
+pub use quorum::PQuorum;
+pub use ssp::Ssp;
+
+use crate::util::rng::Rng;
+
+/// How much of the system a method must observe to decide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViewRequirement {
+    /// The full set of peer steps (requires global state — BSP/SSP).
+    Global,
+    /// A uniform random sample of β peers (PSP family).
+    Sample(usize),
+    /// No view at all (ASP).
+    None,
+}
+
+/// A barrier control method: a pure decision function over a step view.
+///
+/// Implementations must be `Send + Sync` — in the distributed engines every
+/// worker thread evaluates its own barrier.
+pub trait BarrierControl: Send + Sync {
+    /// Human-readable name, used in reports ("bsp", "pssp", ...).
+    fn name(&self) -> &'static str;
+
+    /// The view this method needs ([`ViewRequirement::Global`] methods are
+    /// the ones that cannot be fully distributed — the paper's key
+    /// systems argument).
+    fn view(&self) -> ViewRequirement;
+
+    /// May a worker at `my_step` advance, given `view` (peer steps)?
+    ///
+    /// `view` contains the steps of exactly the peers the method asked to
+    /// observe; for [`ViewRequirement::None`] it is empty.
+    fn can_advance(&self, my_step: u64, view: &[u64]) -> bool;
+
+    /// The staleness bound this method enforces over its view (0 for
+    /// BSP-like, θ for SSP-like, `u64::MAX` for ASP). Used by the
+    /// simulator's incremental release index.
+    fn staleness(&self) -> u64;
+
+    /// True when the predicate depends only on the minimum of the view
+    /// (all ∀-window methods). Lets hot paths stream `min` instead of
+    /// materialising the sample; quorum-style methods return false.
+    fn min_view_sufficient(&self) -> bool {
+        true
+    }
+}
+
+/// Barrier method selector — config/CLI-facing description of a method.
+///
+/// `build()` turns it into the executable trait object; `Display`/`parse`
+/// round-trip for config files (e.g. `pssp:10:4` = β=10, θ=4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Bsp,
+    Ssp { staleness: u64 },
+    Asp,
+    Pbsp { sample: usize },
+    Pssp { sample: usize, staleness: u64 },
+    /// Quorum-PSP extension (§3.2): advance when ≥ quorum_pct% of the
+    /// sample is within the staleness window. 100% == pSSP.
+    Pquorum { sample: usize, staleness: u64, quorum_pct: u8 },
+}
+
+impl Method {
+    /// Instantiate the method.
+    pub fn build(self) -> Box<dyn BarrierControl> {
+        match self {
+            Method::Bsp => Box::new(Bsp),
+            Method::Ssp { staleness } => Box::new(Ssp::new(staleness)),
+            Method::Asp => Box::new(Asp),
+            Method::Pbsp { sample } => Box::new(Probabilistic::new(Bsp, sample)),
+            Method::Pssp { sample, staleness } => {
+                Box::new(Probabilistic::new(Ssp::new(staleness), sample))
+            }
+            Method::Pquorum { sample, staleness, quorum_pct } => Box::new(
+                PQuorum::new(sample, staleness, quorum_pct as f64 / 100.0),
+            ),
+        }
+    }
+
+    /// Parse `bsp | ssp:θ | asp | pbsp:β | pssp:β:θ`.
+    pub fn parse(s: &str) -> Option<Method> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["bsp"] => Some(Method::Bsp),
+            ["asp"] => Some(Method::Asp),
+            ["ssp", t] => Some(Method::Ssp { staleness: t.parse().ok()? }),
+            ["ssp"] => Some(Method::Ssp { staleness: 4 }),
+            ["pbsp", b] => Some(Method::Pbsp { sample: b.parse().ok()? }),
+            ["pbsp"] => Some(Method::Pbsp { sample: 10 }),
+            ["pssp", b, t] => Some(Method::Pssp {
+                sample: b.parse().ok()?,
+                staleness: t.parse().ok()?,
+            }),
+            ["pssp"] => Some(Method::Pssp { sample: 10, staleness: 4 }),
+            ["pquorum", b, t, q] => Some(Method::Pquorum {
+                sample: b.parse().ok()?,
+                staleness: t.parse().ok()?,
+                quorum_pct: q.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The five standard configurations the paper's figures compare,
+    /// with its defaults (θ=4, β = 1% of 1000 nodes = 10).
+    pub fn paper_five(sample: usize, staleness: u64) -> Vec<Method> {
+        vec![
+            Method::Bsp,
+            Method::Ssp { staleness },
+            Method::Asp,
+            Method::Pbsp { sample },
+            Method::Pssp { sample, staleness },
+        ]
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Method::Bsp => write!(f, "bsp"),
+            Method::Ssp { staleness } => write!(f, "ssp:{staleness}"),
+            Method::Asp => write!(f, "asp"),
+            Method::Pbsp { sample } => write!(f, "pbsp:{sample}"),
+            Method::Pssp { sample, staleness } => write!(f, "pssp:{sample}:{staleness}"),
+            Method::Pquorum { sample, staleness, quorum_pct } => {
+                write!(f, "pquorum:{sample}:{staleness}:{quorum_pct}")
+            }
+        }
+    }
+}
+
+/// Decide with an explicitly-provided sampler: draws the view the method
+/// requires from `all_steps` (the oracle's table) and evaluates it.
+///
+/// This is the *centralised* PSP scenario (§5: "the central server applies
+/// sampling primitive and PSP is as trivial as a counting process"); the
+/// distributed scenario draws the view from the overlay instead
+/// ([`crate::sampling::OverlaySampler`]).
+pub fn decide_with_oracle(
+    method: &dyn BarrierControl,
+    my_step: u64,
+    all_steps: &[u64],
+    rng: &mut Rng,
+    scratch: &mut Vec<usize>,
+) -> bool {
+    match method.view() {
+        ViewRequirement::None => method.can_advance(my_step, &[]),
+        ViewRequirement::Global => method.can_advance(my_step, all_steps),
+        ViewRequirement::Sample(beta) => {
+            rng.sample_into(all_steps.len(), beta, scratch);
+            if scratch.is_empty() {
+                method.can_advance(my_step, &[])
+            } else if method.min_view_sufficient() {
+                // Evaluate without materialising the sampled steps: the
+                // predicate is min-based, so stream it.
+                let mut min = u64::MAX;
+                for &i in scratch.iter() {
+                    min = min.min(all_steps[i]);
+                }
+                method.can_advance(my_step, std::slice::from_ref(&min))
+            } else {
+                let view: Vec<u64> =
+                    scratch.iter().map(|&i| all_steps[i]).collect();
+                method.can_advance(my_step, &view)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    fn adv(m: Method, my: u64, view: &[u64]) -> bool {
+        m.build().can_advance(my, view)
+    }
+
+    #[test]
+    fn bsp_blocks_until_everyone_reaches_my_step() {
+        assert!(adv(Method::Bsp, 3, &[3, 3, 4]));
+        assert!(!adv(Method::Bsp, 3, &[2, 3, 4]));
+        assert!(adv(Method::Bsp, 0, &[0, 0]));
+    }
+
+    #[test]
+    fn ssp_allows_bounded_staleness() {
+        let m = Method::Ssp { staleness: 4 };
+        assert!(adv(m, 5, &[1, 5, 9]));   // lag 4 == θ: ok
+        assert!(!adv(m, 6, &[1, 5, 9]));  // lag 5 > θ: block
+        assert!(adv(m, 0, &[100]));       // being behind never blocks
+    }
+
+    #[test]
+    fn asp_always_advances() {
+        assert!(adv(Method::Asp, 42, &[]));
+        assert!(adv(Method::Asp, 42, &[0, 0, 0]));
+    }
+
+    #[test]
+    fn empty_view_always_advances() {
+        // A sample of size 0 is ASP (paper: S = ∅ ⇒ ASP).
+        for m in [Method::Bsp, Method::Ssp { staleness: 2 }] {
+            assert!(adv(m, 10, &[]));
+        }
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Bsp,
+            Method::Asp,
+            Method::Ssp { staleness: 7 },
+            Method::Pbsp { sample: 16 },
+            Method::Pssp { sample: 10, staleness: 4 },
+            Method::Pquorum { sample: 8, staleness: 3, quorum_pct: 75 },
+        ] {
+            assert_eq!(Method::parse(&m.to_string()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(Method::parse("ssp"), Some(Method::Ssp { staleness: 4 }));
+    }
+
+    #[test]
+    fn paper_five_has_expected_methods() {
+        let five = Method::paper_five(10, 4);
+        assert_eq!(five.len(), 5);
+        assert_eq!(five[0], Method::Bsp);
+        assert_eq!(five[2], Method::Asp);
+    }
+
+    #[test]
+    fn view_requirements() {
+        assert_eq!(Method::Bsp.build().view(), ViewRequirement::Global);
+        assert_eq!(Method::Asp.build().view(), ViewRequirement::None);
+        assert_eq!(
+            Method::Pbsp { sample: 5 }.build().view(),
+            ViewRequirement::Sample(5)
+        );
+    }
+
+    #[test]
+    fn prop_pbsp_full_sample_equals_bsp() {
+        property("pBSP(P) == BSP", 200, |g| {
+            let n = g.usize_in(1, 64);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 20)).collect();
+            let my = g.u64_in(0, 20);
+            let bsp = Bsp;
+            let pbsp = Probabilistic::new(Bsp, n);
+            let mut rng = g.rng();
+            let mut scratch = Vec::new();
+            let a = decide_with_oracle(&bsp, my, &steps, &mut rng, &mut scratch);
+            let b = decide_with_oracle(&pbsp, my, &steps, &mut rng, &mut scratch);
+            assert_eq!(a, b, "steps={steps:?} my={my}");
+        });
+    }
+
+    #[test]
+    fn prop_pbsp_zero_sample_equals_asp() {
+        property("pBSP(0) == ASP", 100, |g| {
+            let n = g.usize_in(1, 64);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 20)).collect();
+            let my = g.u64_in(0, 20);
+            let pbsp = Probabilistic::new(Bsp, 0);
+            let mut rng = g.rng();
+            let mut scratch = Vec::new();
+            assert!(decide_with_oracle(&pbsp, my, &steps, &mut rng, &mut scratch));
+        });
+    }
+
+    #[test]
+    fn prop_pssp_zero_staleness_equals_pbsp() {
+        property("pSSP(β,0) == pBSP(β)", 200, |g| {
+            let n = g.usize_in(1, 64);
+            let beta = g.usize_in(0, n);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 10)).collect();
+            let my = g.u64_in(0, 10);
+            let pssp = Probabilistic::new(Ssp::new(0), beta);
+            let pbsp = Probabilistic::new(Bsp, beta);
+            // same sample must be drawn: use identical rng seeds
+            let mut r1 = g.rng();
+            let mut r2 = r1.clone();
+            let mut s1 = Vec::new();
+            let mut s2 = Vec::new();
+            assert_eq!(
+                decide_with_oracle(&pssp, my, &steps, &mut r1, &mut s1),
+                decide_with_oracle(&pbsp, my, &steps, &mut r2, &mut s2),
+            );
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_staleness() {
+        // If SSP(θ) lets you through, SSP(θ'>θ) must too.
+        property("SSP monotone in staleness", 200, |g| {
+            let n = g.usize_in(1, 32);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 30)).collect();
+            let my = g.u64_in(0, 30);
+            let t1 = g.u64_in(0, 10);
+            let t2 = t1 + g.u64_in(0, 10);
+            let a = Ssp::new(t1).can_advance(my, &steps);
+            let b = Ssp::new(t2).can_advance(my, &steps);
+            assert!(!a || b, "θ={t1} passed but θ={t2} blocked");
+        });
+    }
+
+    #[test]
+    fn prop_sampled_view_never_stricter_than_global() {
+        // If the *global* predicate passes, any sampled subset passes too
+        // (min over subset ≥ min over all).
+        property("sample ⊆ global ⇒ no stricter", 300, |g| {
+            let n = g.usize_in(1, 64);
+            let beta = g.usize_in(0, n);
+            let staleness = g.u64_in(0, 5);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 15)).collect();
+            let my = g.u64_in(0, 15);
+            let global = Ssp::new(staleness).can_advance(my, &steps);
+            if global {
+                let p = Probabilistic::new(Ssp::new(staleness), beta);
+                let mut rng = g.rng();
+                let mut scratch = Vec::new();
+                assert!(decide_with_oracle(&p, my, &steps, &mut rng, &mut scratch));
+            }
+        });
+    }
+}

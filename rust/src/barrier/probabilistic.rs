@@ -1,0 +1,103 @@
+//! The PSP composition: `pX = X ∘ sample(β)` — paper §4.2 / §6.1.
+//!
+//! [`Probabilistic`] wraps *any* [`BarrierControl`] and changes only its
+//! view requirement from Global to Sample(β). The decision predicate is
+//! untouched — exactly the paper's claim that "almost nothing needs to be
+//! changed in the aforementioned algorithms except that only the sampled
+//! states instead of the global states are passed into the barrier
+//! function".
+
+use super::{BarrierControl, ViewRequirement};
+
+/// A barrier method composed with the sampling primitive.
+///
+/// `Probabilistic::new(Bsp, β)` is pBSP(β); `Probabilistic::new(Ssp::new(θ), β)`
+/// is pSSP(β, θ). Any future barrier composes the same way.
+#[derive(Debug, Clone, Copy)]
+pub struct Probabilistic<B> {
+    inner: B,
+    sample_size: usize,
+}
+
+impl<B: BarrierControl> Probabilistic<B> {
+    pub fn new(inner: B, sample_size: usize) -> Self {
+        Probabilistic { inner, sample_size }
+    }
+
+    pub fn sample_size(&self) -> usize {
+        self.sample_size
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+impl<B: BarrierControl> BarrierControl for Probabilistic<B> {
+    fn name(&self) -> &'static str {
+        // Fixed names for the two standard compositions; anything else is
+        // reported generically.
+        match self.inner.name() {
+            "bsp" => "pbsp",
+            "ssp" => "pssp",
+            _ => "psp",
+        }
+    }
+
+    fn view(&self) -> ViewRequirement {
+        if self.sample_size == 0 {
+            // S = ∅ reduces to ASP (paper §6.1): no view needed at all.
+            ViewRequirement::None
+        } else {
+            ViewRequirement::Sample(self.sample_size)
+        }
+    }
+
+    fn can_advance(&self, my_step: u64, view: &[u64]) -> bool {
+        // Same predicate, sampled view. An empty sample (β=0 or a 1-node
+        // system) always passes — the inner predicates are ∀-quantified.
+        self.inner.can_advance(my_step, view)
+    }
+
+    fn staleness(&self) -> u64 {
+        self.inner.staleness()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::barrier::{Bsp, Ssp};
+
+    #[test]
+    fn names_follow_composition() {
+        assert_eq!(Probabilistic::new(Bsp, 4).name(), "pbsp");
+        assert_eq!(Probabilistic::new(Ssp::new(2), 4).name(), "pssp");
+    }
+
+    #[test]
+    fn zero_sample_requires_no_view() {
+        assert_eq!(Probabilistic::new(Bsp, 0).view(), ViewRequirement::None);
+        assert_eq!(
+            Probabilistic::new(Bsp, 7).view(),
+            ViewRequirement::Sample(7)
+        );
+    }
+
+    #[test]
+    fn predicate_matches_inner_on_same_view() {
+        let view = [3u64, 5, 2];
+        for my in 0..8 {
+            assert_eq!(
+                Probabilistic::new(Ssp::new(2), 3).can_advance(my, &view),
+                Ssp::new(2).can_advance(my, &view),
+            );
+        }
+    }
+
+    #[test]
+    fn staleness_passthrough() {
+        assert_eq!(Probabilistic::new(Ssp::new(9), 3).staleness(), 9);
+        assert_eq!(Probabilistic::new(Bsp, 3).staleness(), 0);
+    }
+}

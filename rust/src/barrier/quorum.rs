@@ -1,0 +1,132 @@
+//! Quorum-PSP — the §3.2 generalisation the paper sketches but does not
+//! evaluate: *“a node can choose to either pass the barrier by advancing
+//! its local step if a given threshold has been reached”*.
+//!
+//! Instead of requiring **every** sampled peer to be within the staleness
+//! window (pSSP's ∀-quantifier), `PQuorum(β, θ, q)` advances when at
+//! least a fraction `q` of the sampled peers are within θ:
+//!
+//! * q = 1.0 → exactly pSSP(β, θ);
+//! * q = 0.0 → ASP;
+//! * intermediate q trades straggler-tail tolerance against update noise
+//!   one knob finer than the β/θ pair alone.
+//!
+//! Evaluated by the `ablation` experiment (`actor exp abl_quorum`).
+
+use super::{BarrierControl, ViewRequirement};
+
+/// Quorum-threshold probabilistic barrier.
+#[derive(Debug, Clone, Copy)]
+pub struct PQuorum {
+    sample_size: usize,
+    staleness: u64,
+    /// Required fraction of the sample within the window, in [0, 1].
+    quorum: f64,
+}
+
+impl PQuorum {
+    pub fn new(sample_size: usize, staleness: u64, quorum: f64) -> PQuorum {
+        assert!((0.0..=1.0).contains(&quorum), "quorum must be in [0,1]");
+        PQuorum { sample_size, staleness, quorum }
+    }
+
+    pub fn quorum(&self) -> f64 {
+        self.quorum
+    }
+}
+
+impl BarrierControl for PQuorum {
+    fn name(&self) -> &'static str {
+        "pquorum"
+    }
+
+    fn view(&self) -> ViewRequirement {
+        if self.sample_size == 0 || self.quorum == 0.0 {
+            ViewRequirement::None
+        } else {
+            ViewRequirement::Sample(self.sample_size)
+        }
+    }
+
+    fn can_advance(&self, my_step: u64, view: &[u64]) -> bool {
+        if view.is_empty() {
+            return true;
+        }
+        let within = view
+            .iter()
+            .filter(|&&s| my_step.saturating_sub(s) <= self.staleness)
+            .count();
+        (within as f64) >= self.quorum * view.len() as f64 - 1e-12
+    }
+
+    fn staleness(&self) -> u64 {
+        // For the simulator's release index the *guaranteed* bound only
+        // exists at q = 1; weaker quorums behave like a looser window.
+        self.staleness
+    }
+
+    fn min_view_sufficient(&self) -> bool {
+        false // needs the count within the window, not just the minimum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::barrier::Ssp;
+    use crate::testing::property;
+
+    #[test]
+    fn quorum_one_equals_pssp_predicate() {
+        property("PQuorum(q=1) == SSP predicate", 200, |g| {
+            let n = g.usize_in(1, 32);
+            let staleness = g.u64_in(0, 5);
+            let view: Vec<u64> = (0..n).map(|_| g.u64_in(0, 15)).collect();
+            let my = g.u64_in(0, 15);
+            let q = PQuorum::new(n, staleness, 1.0);
+            let ssp = Ssp::new(staleness);
+            assert_eq!(q.can_advance(my, &view), ssp.can_advance(my, &view));
+        });
+    }
+
+    #[test]
+    fn quorum_zero_is_asp() {
+        let q = PQuorum::new(5, 0, 0.0);
+        assert_eq!(q.view(), ViewRequirement::None);
+        assert!(q.can_advance(100, &[0, 0, 0]));
+    }
+
+    #[test]
+    fn half_quorum_tolerates_half_the_stragglers() {
+        let q = PQuorum::new(4, 0, 0.5);
+        // 2 of 4 peers at my step: exactly quorum
+        assert!(q.can_advance(5, &[5, 5, 0, 0]));
+        // 1 of 4: below quorum
+        assert!(!q.can_advance(5, &[5, 0, 0, 0]));
+    }
+
+    #[test]
+    fn prop_monotone_in_quorum() {
+        property("stricter quorum never unblocks", 200, |g| {
+            let n = g.usize_in(1, 20);
+            let staleness = g.u64_in(0, 4);
+            let view: Vec<u64> = (0..n).map(|_| g.u64_in(0, 10)).collect();
+            let my = g.u64_in(0, 10);
+            let q1 = g.f64_in(0.0, 1.0);
+            let q2 = (q1 + g.f64_in(0.0, 1.0 - q1)).min(1.0);
+            let loose = PQuorum::new(n, staleness, q1);
+            let strict = PQuorum::new(n, staleness, q2);
+            if strict.can_advance(my, &view) {
+                assert!(
+                    loose.can_advance(my, &view),
+                    "q={q2} passed but q={q1} blocked"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn empty_view_always_passes() {
+        assert!(PQuorum::new(3, 2, 0.9).can_advance(7, &[]));
+    }
+}

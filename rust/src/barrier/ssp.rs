@@ -1,0 +1,83 @@
+//! Stale Synchronous Parallel (Ho et al. 2013) — paper Algorithm 2 / eq. (2).
+
+use super::{BarrierControl, ViewRequirement};
+
+/// SSP(θ): a worker may advance while no observed peer lags more than θ
+/// steps behind it (`∀j: s − sⱼ ≤ θ`).
+///
+/// θ = 0 is exactly [`super::Bsp`]; θ = ∞ (`u64::MAX`) is [`super::Asp`] —
+/// the generalisation the paper's §6.1 lattice describes, and which the
+/// property tests assert.
+#[derive(Debug, Clone, Copy)]
+pub struct Ssp {
+    staleness: u64,
+}
+
+impl Ssp {
+    pub fn new(staleness: u64) -> Ssp {
+        Ssp { staleness }
+    }
+}
+
+impl BarrierControl for Ssp {
+    fn name(&self) -> &'static str {
+        "ssp"
+    }
+
+    fn view(&self) -> ViewRequirement {
+        ViewRequirement::Global
+    }
+
+    fn can_advance(&self, my_step: u64, view: &[u64]) -> bool {
+        view.iter()
+            .all(|&s| my_step.saturating_sub(s) <= self.staleness)
+    }
+
+    fn staleness(&self) -> u64 {
+        self.staleness
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::barrier::Bsp;
+    use crate::testing::property;
+
+    #[test]
+    fn staleness_window() {
+        let s = Ssp::new(3);
+        assert!(s.can_advance(3, &[0]));   // lag exactly 3
+        assert!(!s.can_advance(4, &[0]));  // lag 4
+        assert!(s.can_advance(0, &[10]));  // behind, never blocked
+    }
+
+    #[test]
+    fn zero_staleness_is_bsp() {
+        property("SSP(0) == BSP", 200, |g| {
+            let n = g.usize_in(0, 32);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 12)).collect();
+            let my = g.u64_in(0, 12);
+            assert_eq!(
+                Ssp::new(0).can_advance(my, &steps),
+                Bsp.can_advance(my, &steps)
+            );
+        });
+    }
+
+    #[test]
+    fn infinite_staleness_is_asp() {
+        property("SSP(inf) == ASP", 100, |g| {
+            let n = g.usize_in(0, 32);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, u64::MAX / 2)).collect();
+            let my = g.u64_in(0, u64::MAX / 2);
+            assert!(Ssp::new(u64::MAX).can_advance(my, &steps));
+        });
+    }
+
+    #[test]
+    fn no_underflow_on_behind_workers() {
+        // my_step < peer step must not underflow the lag computation.
+        assert!(Ssp::new(0).can_advance(0, &[u64::MAX]));
+    }
+}

@@ -1,0 +1,162 @@
+//! Command-line argument parsing (offline substitute for `clap`).
+//!
+//! Grammar: `actor <subcommand> [positional] [--flag value | --switch]`.
+//! Each subcommand declares its flags; unknown flags are errors with a
+//! usage dump.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: a subcommand, positionals, and `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `switch_names` lists the valueless flags.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        switch_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), val);
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = arg;
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_flag<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn flag_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.parse_flag(name)?.unwrap_or(default))
+    }
+
+    /// Error on flags not in the allowed set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+actor — Probabilistic Synchronous Parallel (Actor framework reproduction)
+
+USAGE:
+  actor exp <id|all> [--nodes N] [--duration S] [--seed N] [--sample B]
+            [--staleness T] [--out DIR] [--quick]
+      Regenerate a paper table/figure. ids: table1 fig1a..fig1e fig2a..fig2c
+      fig3 fig4 fig5, or 'all'.
+
+  actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
+            [--config FILE]
+      One simulated cluster run; prints the progress/error/message summary.
+      M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]]
+
+  actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
+              [--workers N] [--method M] [--artifacts DIR]
+      End-to-end LM training through the PJRT artifacts (L1+L2+L3).
+
+  actor bounds [--beta B] [--staleness R] [--t T]
+      Print the Theorem-3 convergence bounds for one configuration.
+
+  actor info [--artifacts DIR]
+      Show platform, manifest and artifact inventory.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["quick", "sgd"]).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_positionals_flags() {
+        let a = args("exp fig1a --nodes 500 --quick");
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positionals, vec!["fig1a"]);
+        assert_eq!(a.get("nodes"), Some("500"));
+        assert!(a.switch("quick"));
+        assert!(!a.switch("sgd"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = args("sim --method pssp:10:4 --duration 12.5");
+        assert_eq!(a.flag_or::<f64>("duration", 40.0).unwrap(), 12.5);
+        assert_eq!(a.flag_or::<u64>("seed", 42).unwrap(), 42);
+        assert!(a.flag_or::<u64>("duration", 1).is_err()); // 12.5 not u64
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(
+            ["exp".to_string(), "--nodes".to_string()].into_iter(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_flags_caught() {
+        let a = args("exp --nodes 5");
+        assert!(a.check_known(&["nodes"]).is_ok());
+        assert!(a.check_known(&["seed"]).is_err());
+    }
+}

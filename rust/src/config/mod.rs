@@ -1,0 +1,333 @@
+//! Config system: a TOML-subset loader + typed experiment configuration.
+//!
+//! Launch files look like:
+//!
+//! ```toml
+//! # examples/configs/edge.toml
+//! [cluster]
+//! nodes = 500
+//! duration = 40.0
+//! seed = 42
+//! mean_iter_time = 1.0
+//! speed_jitter = 0.3
+//! iter_dist = "exponential"     # exponential | normal:<cv> | pareto:<shape>
+//!
+//! [barrier]
+//! method = "pssp:10:4"
+//!
+//! [stragglers]
+//! fraction = 0.05
+//! slowdown = 4.0
+//!
+//! [sgd]
+//! dim = 1000
+//! batch = 32
+//! lr = 0.01
+//! ```
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string /
+//! float / int / bool values, `#` comments. (Offline environment — no
+//! `toml` crate; this subset covers everything the launcher needs.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::barrier::Method;
+use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|f| *f >= 0.0 && f.fract() == 0.0).map(|f| f as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Sectioned key-value config.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let value = Self::parse_value(value.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    fn parse_value(s: &str) -> Result<Value> {
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(q) = s.strip_prefix('"') {
+            let inner = q
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow!("unterminated string {s}"))?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        s.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| anyhow!("cannot parse value '{s}'"))
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow!("[{section}] {key} must be a number")),
+        }
+    }
+
+    fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("[{section}] {key} must be a non-negative integer")),
+        }
+    }
+
+    /// The barrier method (`[barrier] method = "..."`).
+    pub fn barrier_method(&self) -> Result<Method> {
+        match self.get("barrier", "method") {
+            None => Ok(Method::Pssp { sample: 10, staleness: 4 }),
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("[barrier] method must be a string"))?;
+                Method::parse(s).ok_or_else(|| anyhow!("bad barrier method '{s}'"))
+            }
+        }
+    }
+
+    /// Build the simulator configuration from `[cluster]`, `[stragglers]`,
+    /// `[churn]` and `[sgd]` sections (all optional; defaults = paper).
+    pub fn cluster_config(&self) -> Result<ClusterConfig> {
+        let d = ClusterConfig::default();
+        let iter_dist = match self.get("cluster", "iter_dist").map(|v| v.as_str()) {
+            None => d.iter_dist,
+            Some(Some(s)) => parse_time_dist(s)?,
+            Some(None) => bail!("[cluster] iter_dist must be a string"),
+        };
+        let stragglers = if self.has_section("stragglers") {
+            Some(StragglerConfig {
+                fraction: self.f64_or("stragglers", "fraction", 0.05)?,
+                slowdown: self.f64_or("stragglers", "slowdown", 4.0)?,
+            })
+        } else {
+            None
+        };
+        let churn = if self.has_section("churn") {
+            Some(ChurnConfig {
+                join_rate: self.f64_or("churn", "join_rate", 0.0)?,
+                leave_rate: self.f64_or("churn", "leave_rate", 0.0)?,
+            })
+        } else {
+            None
+        };
+        let sgd = if self.has_section("sgd") {
+            Some(SgdConfig {
+                dim: self.usize_or("sgd", "dim", 1000)?,
+                batch: self.usize_or("sgd", "batch", 32)?,
+                pool: self.usize_or("sgd", "pool", 4096)?,
+                lr: self.f64_or("sgd", "lr", 0.01)? as f32,
+                noise: self.f64_or("sgd", "noise", 0.1)? as f32,
+            })
+        } else {
+            None
+        };
+        Ok(ClusterConfig {
+            n_nodes: self.usize_or("cluster", "nodes", d.n_nodes)?,
+            seed: self.f64_or("cluster", "seed", d.seed as f64)? as u64,
+            duration: self.f64_or("cluster", "duration", d.duration)?,
+            mean_iter_time: self.f64_or("cluster", "mean_iter_time", d.mean_iter_time)?,
+            speed_jitter: self.f64_or("cluster", "speed_jitter", d.speed_jitter)?,
+            iter_dist,
+            stragglers,
+            net_delay_mean: self.f64_or("cluster", "net_delay_mean", d.net_delay_mean)?,
+            loss_rate: self.f64_or("cluster", "loss_rate", d.loss_rate)?,
+            recheck_interval: self
+                .f64_or("cluster", "recheck_interval", d.recheck_interval)?,
+            churn,
+            sample_interval: self.f64_or("cluster", "sample_interval", d.sample_interval)?,
+            sgd,
+        })
+    }
+}
+
+/// Parse `exponential | normal:<cv> | pareto:<shape>`.
+pub fn parse_time_dist(s: &str) -> Result<TimeDist> {
+    let parts: Vec<&str> = s.split(':').collect();
+    match parts.as_slice() {
+        ["exponential"] | ["exp"] => Ok(TimeDist::Exponential),
+        ["normal", cv] => Ok(TimeDist::Normal { cv: cv.parse()? }),
+        ["normal"] => Ok(TimeDist::Normal { cv: 0.2 }),
+        ["pareto", shape] => Ok(TimeDist::Pareto { shape: shape.parse()? }),
+        ["pareto"] => Ok(TimeDist::Pareto { shape: 2.0 }),
+        _ => bail!("unknown iter_dist '{s}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a launch file
+[cluster]
+nodes = 500
+duration = 20.0        # seconds
+iter_dist = "pareto:2.5"
+
+[barrier]
+method = "pbsp:16"
+
+[stragglers]
+fraction = 0.1
+slowdown = 4.0
+
+[sgd]
+dim = 100
+lr = 0.02
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("cluster", "nodes"), Some(&Value::Num(500.0)));
+        assert_eq!(
+            c.get("cluster", "iter_dist").unwrap().as_str(),
+            Some("pareto:2.5")
+        );
+        assert!(c.has_section("stragglers"));
+        assert!(!c.has_section("churn"));
+    }
+
+    #[test]
+    fn typed_cluster_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert_eq!(cc.n_nodes, 500);
+        assert_eq!(cc.duration, 20.0);
+        assert!(matches!(cc.iter_dist, TimeDist::Pareto { shape } if shape == 2.5));
+        let st = cc.stragglers.unwrap();
+        assert_eq!(st.fraction, 0.1);
+        let sgd = cc.sgd.unwrap();
+        assert_eq!(sgd.dim, 100);
+        assert_eq!(sgd.lr, 0.02);
+        assert_eq!(sgd.batch, 32); // default
+        assert_eq!(
+            c.barrier_method().unwrap(),
+            Method::Pbsp { sample: 16 }
+        );
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let c = Config::parse("").unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert_eq!(cc.n_nodes, 1000);
+        assert!(cc.sgd.is_none());
+        assert!(cc.stragglers.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Config::parse("[cluster\nnodes = 5").is_err());
+        assert!(Config::parse("nodes 5").is_err());
+        assert!(Config::parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn bool_values() {
+        let c = Config::parse("[a]\nflag = true\noff = false").unwrap();
+        assert_eq!(c.get("a", "flag").unwrap().as_bool(), Some(true));
+        assert_eq!(c.get("a", "off").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn time_dist_parse() {
+        assert!(matches!(parse_time_dist("exp").unwrap(), TimeDist::Exponential));
+        assert!(matches!(
+            parse_time_dist("normal:0.5").unwrap(),
+            TimeDist::Normal { cv } if cv == 0.5
+        ));
+        assert!(parse_time_dist("weibull").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let c = Config::parse("[cluster]\nnodes = \"many\"").unwrap();
+        let err = c.cluster_config().unwrap_err().to_string();
+        assert!(err.contains("nodes"), "{err}");
+    }
+}

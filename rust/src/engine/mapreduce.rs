@@ -1,0 +1,258 @@
+//! Map-reduce engine — BSP supersteps over worker actors (paper §4,
+//! Table 1 row "MapReduce": *requires map to complete before reducing*).
+//!
+//! A generic `map → shuffle → reduce` round with an explicit BSP barrier
+//! between phases (the master collects *all* map outputs before any
+//! reduce starts), plus an iterative driver ([`iterate`]) used by the
+//! examples for barrier-per-round computations.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::actor::System;
+
+/// One map-reduce round over `inputs`, split across `n_workers` map tasks.
+///
+/// `map(input) -> [(k, v)]`, `reduce(k, values) -> v'`. Values for equal
+/// keys are combined by `reduce` after the BSP barrier.
+pub fn map_reduce<I, K, V, M, R>(
+    inputs: Vec<I>,
+    n_workers: usize,
+    map: M,
+    reduce: R,
+) -> BTreeMap<K, V>
+where
+    I: Send + 'static,
+    K: Ord + Send + Clone + 'static,
+    V: Send + 'static,
+    M: Fn(I) -> Vec<(K, V)> + Send + Sync + 'static,
+    R: Fn(&K, Vec<V>) -> V,
+{
+    let sys = System::new();
+    let map = Arc::new(map);
+    let n_workers = n_workers.max(1);
+
+    // Partition inputs round-robin into n_workers shards.
+    let mut shards: Vec<Vec<I>> = (0..n_workers).map(|_| Vec::new()).collect();
+    for (i, input) in inputs.into_iter().enumerate() {
+        shards[i % n_workers].push(input);
+    }
+
+    // Map phase: one actor per shard.
+    let tasks: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| {
+            let map = Arc::clone(&map);
+            sys.spawn::<(), Vec<(K, V)>, _>(&format!("map-{i}"), move |_mb| {
+                let mut out = Vec::new();
+                for input in shard {
+                    out.extend(map(input));
+                }
+                out
+            })
+        })
+        .collect();
+
+    // BSP barrier: join ALL mappers before reducing (the superstep edge).
+    let mut grouped: BTreeMap<K, Vec<V>> = BTreeMap::new();
+    for t in tasks {
+        let (addr, handle) = t.into_parts();
+        drop(addr);
+        for (k, v) in handle.join().expect("mapper panicked") {
+            grouped.entry(k).or_default().push(v);
+        }
+    }
+
+    // Reduce phase.
+    grouped
+        .into_iter()
+        .map(|(k, vs)| {
+            let r = reduce(&k, vs);
+            (k, r)
+        })
+        .collect()
+}
+
+/// `collect`: gather distributed per-worker values at the master (the
+/// paper's map-reduce API, §4). A degenerate map-reduce round with the
+/// identity key.
+pub fn collect<I, M, V>(inputs: Vec<I>, n_workers: usize, f: M) -> Vec<V>
+where
+    I: Send + 'static,
+    V: Send + 'static,
+    M: Fn(I) -> V + Send + Sync + 'static,
+{
+    let mut grouped = map_reduce(
+        inputs.into_iter().enumerate().collect::<Vec<_>>(),
+        n_workers,
+        move |(i, x): (usize, I)| vec![(i, f(x))],
+        |_k, mut vs| vs.pop().unwrap(),
+    );
+    // BTreeMap keyed by input index => original order restored.
+    let mut out = Vec::with_capacity(grouped.len());
+    while let Some((_, v)) = grouped.pop_first() {
+        out.push(v);
+    }
+    out
+}
+
+/// `join`: co-group two keyed datasets (the paper's map-reduce API, §4):
+/// returns, per key present in both sides, the pair of value lists.
+pub fn join<K, A, B>(
+    left: Vec<(K, A)>,
+    right: Vec<(K, B)>,
+    n_workers: usize,
+) -> BTreeMap<K, (Vec<A>, Vec<B>)>
+where
+    K: Ord + Clone + Send + 'static,
+    A: Send + 'static,
+    B: Send + 'static,
+{
+    enum Side<A, B> {
+        L(A),
+        R(B),
+    }
+    let tagged: Vec<(K, Side<A, B>)> = left
+        .into_iter()
+        .map(|(k, a)| (k, Side::L(a)))
+        .chain(right.into_iter().map(|(k, b)| (k, Side::R(b))))
+        .collect();
+    let grouped = map_reduce(
+        tagged,
+        n_workers,
+        |(k, side): (K, Side<A, B>)| vec![(k, vec![side])],
+        |_k, vs| vs.into_iter().flatten().collect(),
+    );
+    grouped
+        .into_iter()
+        .filter_map(|(k, sides)| {
+            let mut ls = Vec::new();
+            let mut rs = Vec::new();
+            for s in sides {
+                match s {
+                    Side::L(a) => ls.push(a),
+                    Side::R(b) => rs.push(b),
+                }
+            }
+            (!ls.is_empty() && !rs.is_empty()).then_some((k, (ls, rs)))
+        })
+        .collect()
+}
+
+/// Iterative map-reduce: run `rounds` rounds, threading a state through.
+/// Each round is a full BSP superstep; `step` receives the previous state
+/// and the round index and produces the round's inputs; `fold` combines
+/// the reduced output back into the state.
+pub fn iterate<S, I, K, V, M, R, G, F>(
+    mut state: S,
+    rounds: usize,
+    n_workers: usize,
+    gen_inputs: G,
+    map: M,
+    reduce: R,
+    fold: F,
+) -> S
+where
+    I: Send + 'static,
+    K: Ord + Send + Clone + 'static,
+    V: Send + 'static,
+    M: Fn(I) -> Vec<(K, V)> + Send + Sync + Clone + 'static,
+    R: Fn(&K, Vec<V>) -> V,
+    G: Fn(&S, usize) -> Vec<I>,
+    F: Fn(S, BTreeMap<K, V>) -> S,
+{
+    for round in 0..rounds {
+        let inputs = gen_inputs(&state, round);
+        let reduced = map_reduce(inputs, n_workers, map.clone(), &reduce);
+        state = fold(state, reduced);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_count() {
+        let docs = vec![
+            "the quick brown fox".to_string(),
+            "the lazy dog".to_string(),
+            "the fox".to_string(),
+        ];
+        let counts = map_reduce(
+            docs,
+            2,
+            |doc: String| {
+                doc.split_whitespace()
+                    .map(|w| (w.to_string(), 1usize))
+                    .collect()
+            },
+            |_k, vs| vs.into_iter().sum(),
+        );
+        assert_eq!(counts["the"], 3);
+        assert_eq!(counts["fox"], 2);
+        assert_eq!(counts["dog"], 1);
+    }
+
+    #[test]
+    fn single_worker_equals_many_workers() {
+        let mk = || (0..100u64).collect::<Vec<_>>();
+        let run = |workers| {
+            map_reduce(
+                mk(),
+                workers,
+                |x: u64| vec![(x % 7, x)],
+                |_k, vs| vs.into_iter().sum::<u64>(),
+            )
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let out: BTreeMap<u32, u32> =
+            map_reduce(Vec::<u32>::new(), 4, |x| vec![(x, x)], |_k, vs| vs[0]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn collect_preserves_order() {
+        let out = collect((0..50u32).collect(), 4, |x| x * 2);
+        assert_eq!(out, (0..50u32).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_cogroups_matching_keys() {
+        let left = vec![("a", 1), ("b", 2), ("a", 3)];
+        let right = vec![("a", 10.0), ("c", 30.0)];
+        let j = join(left, right, 2);
+        assert_eq!(j.len(), 1); // only "a" is on both sides
+        let (ls, rs) = &j["a"];
+        assert_eq!(ls, &vec![1, 3]);
+        assert_eq!(rs, &vec![10.0]);
+    }
+
+    #[test]
+    fn join_empty_side_is_empty() {
+        let j = join::<u8, u8, u8>(vec![(1, 1)], vec![], 2);
+        assert!(j.is_empty());
+    }
+
+    #[test]
+    fn iterative_rounds_thread_state() {
+        // distributed sum-of-squares accumulation over 3 rounds
+        let final_state = iterate(
+            0u64,
+            3,
+            4,
+            |_state, round| (0..10u64).map(|i| i + round as u64 * 10).collect(),
+            |x: u64| vec![((), x * x)],
+            |_k, vs| vs.into_iter().sum::<u64>(),
+            |state, reduced| state + reduced.get(&()).copied().unwrap_or(0),
+        );
+        let expect: u64 = (0..30u64).map(|x| x * x).sum();
+        assert_eq!(final_state, expect);
+    }
+}

@@ -1,0 +1,52 @@
+//! The Actor framework's computation engines (paper §4).
+//!
+//! Three engines share one worker-facing API — `schedule / pull / push /
+//! barrier` — and differ in where the *model* and the *nodes' states*
+//! live (paper §4.1 design combinations):
+//!
+//! | engine | model | states | barriers supported |
+//! |---|---|---|---|
+//! | [`mapreduce`]   | central | central | BSP (supersteps) |
+//! | [`paramserver`] | central | central | BSP, SSP, ASP, pBSP, pSSP |
+//! | [`p2p`]         | replicated | distributed | ASP, pBSP, pSSP |
+//!
+//! The parameter-server engine is the paper's *centralised PSP* scenario
+//! (the server samples its own step table — "as trivial as a counting
+//! process"); the p2p engine is the *fully distributed* scenario: every
+//! worker holds a model replica and runs its own barrier decision over a
+//! sample drawn from the structured overlay, with **no global state
+//! anywhere** — the composition the paper argues only ASP and PSP can
+//! support (global-view barriers are rejected at construction).
+//!
+//! These engines run real OS threads via [`crate::actor`] and compute real
+//! gradients — either the pure-Rust linear model or the PJRT-backed AOT
+//! artifact ([`crate::runtime`]); the gradient source is a plugged-in
+//! closure ([`GradFn`]) so examples can choose.
+
+pub mod mapreduce;
+pub mod p2p;
+pub mod paramserver;
+
+use std::sync::Arc;
+
+/// A worker's gradient oracle: `(model snapshot, step seed) -> gradient`.
+///
+/// Implementations: [`crate::model::linear`] minibatch gradients (pure
+/// Rust) or [`crate::runtime::LinearStepFn`] (PJRT executing the Pallas
+/// kernel artifact).
+pub type GradFn = Arc<dyn Fn(&[f32], u64) -> Vec<f32> + Send + Sync>;
+
+/// Statistics every engine reports.
+#[derive(Debug, Clone, Default)]
+pub struct EngineReport {
+    /// Final per-worker step counts.
+    pub steps: Vec<u64>,
+    /// Update (model-plane) messages.
+    pub update_msgs: u64,
+    /// Control (barrier/sampling-plane) messages.
+    pub control_msgs: u64,
+    /// Wall-clock seconds.
+    pub wall_secs: f64,
+    /// Final model (engine-dependent: server copy or worker-0 replica).
+    pub model: Vec<f32>,
+}

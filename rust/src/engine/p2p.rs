@@ -1,0 +1,292 @@
+//! Peer-to-peer engine — distributed model, distributed states (paper
+//! §4.1 cases 2/4): **no global state anywhere**.
+//!
+//! Every worker holds a model replica and runs its own barrier decision
+//! over a β-sample drawn from the structured overlay ([`crate::overlay`]).
+//! Only ASP and the PSP family compose with this engine — global-view
+//! methods (BSP/SSP) are rejected at construction, which *is* the paper's
+//! systems argument: sampling turns barrier control into something each
+//! node can execute independently.
+//!
+//! Mechanics:
+//! * model plane: each step a worker computes a gradient against its
+//!   replica, applies it locally, and **pushes the delta to every peer**
+//!   (update messages counted);
+//! * control plane: workers publish their step in a shared atomic table —
+//!   the moral equivalent of answering `StepQuery` RPCs instantly — and a
+//!   blocked worker re-samples the overlay each poll. Control messages
+//!   are accounted as 2 per sampled peer plus overlay routing hops, which
+//!   is what the real RPCs would cost.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::actor::System;
+use crate::barrier::{Method, ViewRequirement};
+use crate::engine::{EngineReport, GradFn};
+use crate::overlay::Ring;
+use crate::util::rng::Rng;
+
+/// Messages between peer workers (model plane).
+pub enum PeerMsg {
+    /// A model delta from a peer: apply `w += delta`.
+    Delta { delta: Vec<f32> },
+    /// Finish up: no more deltas will arrive from `from`.
+    Done { from: u32 },
+}
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct P2pConfig {
+    pub n_workers: usize,
+    pub steps_per_worker: u64,
+    /// Must be ASP or a PSP method (no global view available).
+    pub method: Method,
+    pub lr: f32,
+    pub dim: usize,
+    pub seed: u64,
+    pub poll: Duration,
+}
+
+impl Default for P2pConfig {
+    fn default() -> Self {
+        P2pConfig {
+            n_workers: 8,
+            steps_per_worker: 15,
+            method: Method::Pssp { sample: 3, staleness: 2 },
+            lr: 0.05,
+            dim: 32,
+            seed: 2,
+            poll: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Run the p2p engine. Panics if the method needs a global view.
+pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
+    let barrier = cfg.method.build();
+    assert!(
+        !matches!(barrier.view(), ViewRequirement::Global),
+        "p2p engine cannot host global-view barrier {} — use the \
+         parameter-server engine (paper §4.1: only ASP/PSP work in case 4)",
+        barrier.name()
+    );
+    let staleness = barrier.staleness();
+    let start = Instant::now();
+    let sys = System::new();
+    let n = cfg.n_workers;
+
+    // Published step table (the control plane each node exposes).
+    let steps: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    // The structured overlay used for sampling.
+    let ring = Arc::new(Ring::with_nodes(n, cfg.seed));
+
+    // Build the mesh of addresses first (two-phase: spawn, then wire).
+    let mut mailboxes = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel::<PeerMsg>();
+        // Raw channel here: actor::Address requires a running body; we
+        // need all endpoints before any worker starts.
+        mailboxes.push(rx);
+        addrs.push(tx);
+        let _ = i;
+    }
+    let addrs = Arc::new(addrs);
+
+    let workers: Vec<_> = mailboxes
+        .into_iter()
+        .enumerate()
+        .map(|(i, rx)| {
+            let grad_fn = grad_fn.clone();
+            let steps = Arc::clone(&steps);
+            let ring = Arc::clone(&ring);
+            let addrs = Arc::clone(&addrs);
+            let mut w = init_w.clone();
+            let cfg = cfg.clone();
+            let view = cfg.method.build().view();
+            sys.spawn::<(), _, _>(&format!("p2p-{i}"), move |_mb| {
+                let mut rng = Rng::new(cfg.seed ^ (i as u64).wrapping_mul(0xABCD_EF01));
+                let mut control_msgs = 0u64;
+                let mut update_msgs = 0u64;
+                let mut done_peers = 0usize;
+                let drain = |w: &mut Vec<f32>, done_peers: &mut usize| {
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            PeerMsg::Delta { delta } => {
+                                for (wi, di) in w.iter_mut().zip(&delta) {
+                                    *wi += di;
+                                }
+                            }
+                            PeerMsg::Done { .. } => *done_peers += 1,
+                        }
+                    }
+                };
+                for step in 0..cfg.steps_per_worker {
+                    drain(&mut w, &mut done_peers);
+                    // compute locally, apply locally
+                    let g = grad_fn(&w, rng.next_u64());
+                    let delta: Vec<f32> = g.iter().map(|x| -cfg.lr * x).collect();
+                    for (wi, di) in w.iter_mut().zip(&delta) {
+                        *wi += di;
+                    }
+                    // push the delta to all peers (model plane)
+                    for (j, addr) in addrs.iter().enumerate() {
+                        if j != i {
+                            update_msgs += 1;
+                            let _ = addr.send(PeerMsg::Delta { delta: delta.clone() });
+                        }
+                    }
+                    steps[i].store(step + 1, Ordering::Release);
+                    if step + 1 == cfg.steps_per_worker {
+                        break;
+                    }
+                    // fully-distributed barrier: sample the overlay
+                    loop {
+                        let pass = match view {
+                            ViewRequirement::None => true,
+                            ViewRequirement::Sample(beta) => {
+                                let (peers, hops) = ring.sample_nodes(i, beta, &mut rng);
+                                control_msgs += hops + 2 * peers.len() as u64;
+                                peers.iter().all(|&p| {
+                                    let sp = steps[p].load(Ordering::Acquire);
+                                    (step + 1).saturating_sub(sp) <= staleness
+                                })
+                            }
+                            ViewRequirement::Global => unreachable!(),
+                        };
+                        if pass {
+                            break;
+                        }
+                        drain(&mut w, &mut done_peers);
+                        std::thread::sleep(cfg.poll);
+                    }
+                }
+                // signal completion, then drain until all peers are done so
+                // late deltas are not lost
+                for (j, addr) in addrs.iter().enumerate() {
+                    if j != i {
+                        let _ = addr.send(PeerMsg::Done { from: i as u32 });
+                    }
+                }
+                let deadline = Instant::now() + Duration::from_secs(5);
+                while done_peers < addrs.len() - 1 && Instant::now() < deadline {
+                    match rx.recv_timeout(Duration::from_millis(5)) {
+                        Ok(PeerMsg::Delta { delta }) => {
+                            for (wi, di) in w.iter_mut().zip(&delta) {
+                                *wi += di;
+                            }
+                        }
+                        Ok(PeerMsg::Done { .. }) => done_peers += 1,
+                        Err(_) => {}
+                    }
+                }
+                (w, control_msgs, update_msgs)
+            })
+        })
+        .collect();
+
+    let mut control_msgs = 0;
+    let mut update_msgs = 0;
+    let results: Vec<Vec<f32>> = workers
+        .into_iter()
+        .map(|wk| {
+            let (addr, handle) = wk.into_parts();
+            drop(addr);
+            let (w, c, u) = handle.join().expect("p2p worker panicked");
+            control_msgs += c;
+            update_msgs += u;
+            w
+        })
+        .collect();
+
+    EngineReport {
+        steps: steps.iter().map(|s| s.load(Ordering::Acquire)).collect(),
+        update_msgs,
+        control_msgs,
+        wall_secs: start.elapsed().as_secs_f64(),
+        model: results.into_iter().next().unwrap_or_default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::linear::{Dataset, LinearModel};
+    use crate::util::stats::l2_dist;
+    use std::sync::Mutex;
+
+    fn linear_grad_fn(dim: usize, seed: u64) -> (GradFn, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let data = Dataset::synthetic(512, dim, 0.05, &mut rng);
+        let w_true = data.w_true.clone();
+        let model = Mutex::new(LinearModel::new(dim));
+        let f: GradFn = Arc::new(move |w, s| {
+            model.lock().unwrap().minibatch_grad(&data, w, s, 32).to_vec()
+        });
+        (f, w_true)
+    }
+
+    #[test]
+    fn pssp_converges_fully_distributed() {
+        let cfg = P2pConfig {
+            n_workers: 6,
+            steps_per_worker: 12,
+            method: Method::Pssp { sample: 2, staleness: 2 },
+            dim: 24,
+            lr: 0.02,
+            seed: 11,
+            ..P2pConfig::default()
+        };
+        let (grad, w_true) = linear_grad_fn(cfg.dim, 13);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        assert!(r.steps.iter().all(|&s| s == 12));
+        let init = l2_dist(&vec![0.0; 24], &w_true);
+        let err = l2_dist(&r.model, &w_true);
+        assert!(err < init, "p2p did not reduce error: {init} -> {err}");
+        assert!(r.control_msgs > 0, "no sampling traffic recorded");
+        // every worker pushed every delta to every peer
+        assert_eq!(r.update_msgs, 6 * 12 * 5);
+    }
+
+    #[test]
+    fn asp_works_with_zero_control_traffic() {
+        let cfg = P2pConfig {
+            n_workers: 4,
+            steps_per_worker: 8,
+            method: Method::Asp,
+            dim: 16,
+            seed: 17,
+            ..P2pConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(16, 19);
+        let r = run(&cfg, vec![0.0; 16], grad);
+        assert_eq!(r.control_msgs, 0);
+        assert_eq!(r.update_msgs, 4 * 8 * 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "p2p engine cannot host global-view barrier")]
+    fn bsp_rejected() {
+        let cfg = P2pConfig { method: Method::Bsp, ..P2pConfig::default() };
+        let (grad, _) = linear_grad_fn(cfg.dim, 1);
+        run(&cfg, vec![0.0; cfg.dim], grad);
+    }
+
+    #[test]
+    fn pbsp_zero_sample_is_asp() {
+        let cfg = P2pConfig {
+            n_workers: 4,
+            steps_per_worker: 5,
+            method: Method::Pbsp { sample: 0 },
+            dim: 8,
+            seed: 23,
+            ..P2pConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(8, 29);
+        let r = run(&cfg, vec![0.0; 8], grad);
+        assert_eq!(r.control_msgs, 0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Parameter-server engine — centralised model, centralised states
+//! (paper §4.1 case 1; supports all five barrier methods).
+//!
+//! One server actor owns the model vector and the [`StepTracker`]; worker
+//! threads run the `pull → compute → push → barrier` loop. For global
+//! methods the server answers barrier checks from its tracker; for PSP
+//! methods the server *samples* its tracker (the centralised sampling
+//! scenario of §5) — workers never see global state either way.
+
+use std::sync::mpsc::{channel, Sender};
+use std::time::{Duration, Instant};
+
+use crate::actor::System;
+use crate::barrier::{Method, ViewRequirement};
+use crate::engine::{EngineReport, GradFn};
+use crate::sampling::StepTracker;
+use crate::util::rng::Rng;
+
+/// Messages understood by the server actor.
+pub enum ServerMsg {
+    /// Worker pushes a gradient; server applies `w -= lr * g`.
+    Push { grad: Vec<f32> },
+    /// Worker pulls the current model.
+    Pull { reply: Sender<Vec<f32>> },
+    /// Worker reports that it advanced to `step`.
+    Report { node: u32, step: u64 },
+    /// Global-view barrier check: may `node` (at `step`) advance?
+    Barrier { step: u64, reply: Sender<bool> },
+    /// Centralised sampling primitive: min step over β sampled peers.
+    SampleMin { node: u32, beta: usize, reply: Sender<Option<u64>> },
+    /// Shut down and report stats.
+    Stop { reply: Sender<(Vec<f32>, u64)> },
+}
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct PsConfig {
+    pub n_workers: usize,
+    /// Steps each worker performs.
+    pub steps_per_worker: u64,
+    pub method: Method,
+    pub lr: f32,
+    pub dim: usize,
+    pub seed: u64,
+    /// Poll interval while blocked at the barrier.
+    pub poll: Duration,
+    /// Artificial per-step compute slowdown for designated stragglers:
+    /// (worker index, extra sleep) pairs.
+    pub stragglers: Vec<(usize, Duration)>,
+    /// The paper's `schedule` API (§4): when `Some(nblocks)`, the model is
+    /// partitioned into `nblocks` contiguous blocks and worker `i` at step
+    /// `s` is scheduled to update only block `(i + s) mod nblocks` — the
+    /// model-parallel pattern where each update touches a disjoint
+    /// parameter shard. `None` = data-parallel (full-vector updates).
+    pub schedule_blocks: Option<usize>,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig {
+            n_workers: 8,
+            steps_per_worker: 20,
+            method: Method::Pssp { sample: 3, staleness: 2 },
+            lr: 0.05,
+            dim: 64,
+            seed: 1,
+            poll: Duration::from_micros(200),
+            stragglers: Vec::new(),
+            schedule_blocks: None,
+        }
+    }
+}
+
+/// The `schedule` decision: which parameter range worker `node` updates
+/// at `step` (paper §4: "decide what model parameters should be computed
+/// to update in this step"). Exposed for tests and custom engines.
+pub fn scheduled_range(
+    dim: usize,
+    nblocks: usize,
+    node: usize,
+    step: u64,
+) -> std::ops::Range<usize> {
+    let nblocks = nblocks.clamp(1, dim);
+    let block = (node + step as usize) % nblocks;
+    let size = dim.div_ceil(nblocks);
+    let lo = block * size;
+    lo.min(dim)..((block + 1) * size).min(dim)
+}
+
+/// Run the engine to completion: every worker performs its step budget.
+///
+/// `grad_fn` supplies gradients (pure-Rust model or PJRT artifact);
+/// `init_w` is the initial model.
+pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
+    assert_eq!(init_w.len(), cfg.dim);
+    let start = Instant::now();
+    let sys = System::new();
+    let method = cfg.method;
+    let barrier = method.build();
+    let staleness = barrier.staleness();
+    let lr = cfg.lr;
+    let n = cfg.n_workers;
+    let seed = cfg.seed;
+
+    // ---- server actor ----
+    let server = sys.spawn::<ServerMsg, _, _>("ps-server", move |mb| {
+        let mut w = init_w;
+        let mut tracker = StepTracker::new(n);
+        let mut rng = Rng::new(seed ^ SERVER_SEED_SALT);
+        let mut scratch = Vec::new();
+        let mut updates: u64 = 0;
+        while let Some(msg) = mb.recv() {
+            match msg {
+                ServerMsg::Push { grad } => {
+                    updates += 1;
+                    for (wi, gi) in w.iter_mut().zip(&grad) {
+                        *wi -= lr * gi;
+                    }
+                }
+                ServerMsg::Pull { reply } => {
+                    let _ = reply.send(w.clone());
+                }
+                ServerMsg::Report { node, step } => {
+                    debug_assert_eq!(tracker.step_of(node as usize) + 1, step);
+                    tracker.advance(node as usize);
+                }
+                ServerMsg::Barrier { step, reply } => {
+                    let pass = tracker.min_step() + staleness >= step;
+                    let _ = reply.send(pass);
+                }
+                ServerMsg::SampleMin { node, beta, reply } => {
+                    let m =
+                        tracker.sample_min(node as usize, beta, &mut rng, &mut scratch);
+                    let _ = reply.send(m);
+                }
+                ServerMsg::Stop { reply } => {
+                    let _ = reply.send((w, updates));
+                    break;
+                }
+            }
+        }
+    });
+
+    // ---- workers ----
+    let view = method.build().view();
+    let workers: Vec<_> = (0..n)
+        .map(|i| {
+            let server_addr = server.addr.clone();
+            let grad_fn = grad_fn.clone();
+            let poll = cfg.poll;
+            let steps = cfg.steps_per_worker;
+            let slow = cfg
+                .stragglers
+                .iter()
+                .find(|&&(idx, _)| idx == i)
+                .map(|&(_, d)| d);
+            let wseed = cfg.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ i as u64;
+            let schedule_blocks = cfg.schedule_blocks;
+            sys.spawn::<(), (u64, u64), _>(&format!("ps-worker-{i}"), move |_mb| {
+                let mut rng = Rng::new(wseed);
+                let mut control_msgs = 0u64;
+                let mut update_msgs = 0u64;
+                for step in 0..steps {
+                    // pull
+                    let (tx, rx) = channel();
+                    if !server_addr.send(ServerMsg::Pull { reply: tx }) {
+                        break;
+                    }
+                    let Ok(w) = rx.recv() else { break };
+                    // compute (stragglers sleep extra)
+                    if let Some(d) = slow {
+                        std::thread::sleep(d);
+                    }
+                    let mut g = grad_fn(&w, rng.next_u64());
+                    // schedule: restrict the update to this worker's block
+                    if let Some(nblocks) = schedule_blocks {
+                        let range = scheduled_range(g.len(), nblocks, i, step);
+                        for (j, gj) in g.iter_mut().enumerate() {
+                            if !range.contains(&j) {
+                                *gj = 0.0;
+                            }
+                        }
+                    }
+                    // push
+                    update_msgs += 1;
+                    server_addr.send(ServerMsg::Push { grad: g });
+                    // report new step
+                    control_msgs += 1;
+                    server_addr.send(ServerMsg::Report {
+                        node: i as u32,
+                        step: step + 1,
+                    });
+                    // barrier (not after the final step)
+                    if step + 1 == steps {
+                        break;
+                    }
+                    loop {
+                        let pass = match view {
+                            ViewRequirement::None => true,
+                            ViewRequirement::Global => {
+                                let (tx, rx) = channel();
+                                control_msgs += 2;
+                                if !server_addr
+                                    .send(ServerMsg::Barrier { step: step + 1, reply: tx })
+                                {
+                                    return (control_msgs, update_msgs);
+                                }
+                                rx.recv().unwrap_or(true)
+                            }
+                            ViewRequirement::Sample(beta) => {
+                                let (tx, rx) = channel();
+                                control_msgs += 2 * beta as u64;
+                                if !server_addr.send(ServerMsg::SampleMin {
+                                    node: i as u32,
+                                    beta,
+                                    reply: tx,
+                                }) {
+                                    return (control_msgs, update_msgs);
+                                }
+                                match rx.recv() {
+                                    Ok(Some(min)) => min + staleness >= step + 1,
+                                    _ => true,
+                                }
+                            }
+                        };
+                        if pass {
+                            break;
+                        }
+                        std::thread::sleep(poll);
+                    }
+                }
+                (control_msgs, update_msgs)
+            })
+        })
+        .collect();
+
+    // ---- join ----
+    let mut control_msgs = 0;
+    let mut update_msgs = 0;
+    for wkr in workers {
+        let (addr, handle) = wkr.into_parts();
+        drop(addr);
+        let (c, u) = handle.join().expect("worker panicked");
+        control_msgs += c;
+        update_msgs += u;
+    }
+    let (tx, rx) = channel();
+    server.addr.send(ServerMsg::Stop { reply: tx });
+    let (model, server_updates) = rx.recv().expect("server stats");
+    let (saddr, shandle) = server.into_parts();
+    drop(saddr);
+    shandle.join().expect("server panicked");
+    assert_eq!(server_updates, update_msgs);
+
+    EngineReport {
+        steps: vec![cfg.steps_per_worker; n],
+        update_msgs,
+        control_msgs,
+        wall_secs: start.elapsed().as_secs_f64(),
+        model,
+    }
+}
+
+/// Salt separating the server's sampling RNG stream from worker streams.
+const SERVER_SEED_SALT: u64 = 0x5EA5_1DE5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::linear::{Dataset, LinearModel};
+    use crate::util::stats::l2_dist;
+    use std::sync::Arc;
+    use std::sync::Mutex;
+
+    fn linear_grad_fn(dim: usize, seed: u64) -> (GradFn, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let data = Dataset::synthetic(512, dim, 0.05, &mut rng);
+        let w_true = data.w_true.clone();
+        let model = Mutex::new(LinearModel::new(dim));
+        let f: GradFn = Arc::new(move |w, batch_seed| {
+            model
+                .lock()
+                .unwrap()
+                .minibatch_grad(&data, w, batch_seed, 32)
+                .to_vec()
+        });
+        (f, w_true)
+    }
+
+    fn run_method(method: Method) -> (EngineReport, Vec<f32>) {
+        let cfg = PsConfig {
+            n_workers: 6,
+            steps_per_worker: 15,
+            method,
+            dim: 32,
+            lr: 0.05,
+            seed: 3,
+            ..PsConfig::default()
+        };
+        let (grad, w_true) = linear_grad_fn(cfg.dim, 7);
+        let report = run(&cfg, vec![0.0; cfg.dim], grad);
+        (report, w_true)
+    }
+
+    #[test]
+    fn all_methods_complete_and_learn() {
+        for method in Method::paper_five(2, 2) {
+            let (report, w_true) = run_method(method);
+            assert_eq!(report.update_msgs, 6 * 15, "{method}");
+            let err = l2_dist(&report.model, &w_true);
+            let init = l2_dist(&vec![0.0; 32], &w_true);
+            assert!(err < init * 0.8, "{method}: {init} -> {err}");
+        }
+    }
+
+    #[test]
+    fn sampled_methods_send_sampling_traffic() {
+        let (pbsp, _) = run_method(Method::Pbsp { sample: 2 });
+        assert!(pbsp.control_msgs > 6 * 15); // reports + sampling
+        let (asp, _) = run_method(Method::Asp);
+        assert_eq!(asp.control_msgs, 6 * 15); // step reports only
+    }
+
+    #[test]
+    fn scheduled_range_partitions_dim() {
+        // union of all blocks at a fixed step covers [0, dim) disjointly
+        let (dim, nblocks) = (103, 7);
+        let mut covered = vec![false; dim];
+        for node in 0..nblocks {
+            for j in scheduled_range(dim, nblocks, node, 0) {
+                assert!(!covered[j], "overlap at {j}");
+                covered[j] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        // rotation: the same worker touches different blocks across steps
+        assert_ne!(
+            scheduled_range(dim, nblocks, 0, 0),
+            scheduled_range(dim, nblocks, 0, 1)
+        );
+    }
+
+    #[test]
+    fn model_parallel_schedule_converges() {
+        let cfg = PsConfig {
+            n_workers: 4,
+            steps_per_worker: 30,
+            method: Method::Pssp { sample: 2, staleness: 2 },
+            dim: 32,
+            lr: 0.1,
+            seed: 9,
+            schedule_blocks: Some(4),
+            ..PsConfig::default()
+        };
+        let (grad, w_true) = linear_grad_fn(cfg.dim, 7);
+        let report = run(&cfg, vec![0.0; cfg.dim], grad);
+        let err = l2_dist(&report.model, &w_true);
+        let init = l2_dist(&vec![0.0; 32], &w_true);
+        assert!(err < init * 0.7, "block-scheduled SGD: {init} -> {err}");
+    }
+
+    #[test]
+    fn straggler_does_not_deadlock_bsp() {
+        let cfg = PsConfig {
+            n_workers: 4,
+            steps_per_worker: 6,
+            method: Method::Bsp,
+            dim: 16,
+            seed: 5,
+            stragglers: vec![(0, Duration::from_millis(3))],
+            ..PsConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(16, 9);
+        let report = run(&cfg, vec![0.0; 16], grad);
+        assert_eq!(report.update_msgs, 24);
+    }
+}

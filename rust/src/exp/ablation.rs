@@ -1,0 +1,229 @@
+//! Ablations + extension experiments beyond the paper's figures.
+//!
+//! * `abl_beta_error` — error/progress/communication as a function of β
+//!   (the design knob DESIGN.md calls out: what does one more sampled
+//!   peer buy?).
+//! * `abl_quorum` — the §3.2 quorum generalisation swept from ASP-like
+//!   (q=0) to pSSP (q=100%).
+//! * `abl_recheck` — sensitivity to the blocked-worker re-sample backoff
+//!   (implementation parameter the paper leaves unspecified).
+//! * `ext_churn` — progress and error under increasing node churn, the
+//!   §3 motivation the paper's evaluation doesn't quantify.
+//! * `ext_loss` — robustness to lossy wide-area links.
+
+use crate::barrier::Method;
+use crate::exp::{Cell, ExpOpts, Report};
+use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, Simulator};
+use crate::util::stats::Summary;
+
+fn sgd_cluster(opts: &ExpOpts) -> ClusterConfig {
+    ClusterConfig {
+        n_nodes: opts.eff_nodes(),
+        duration: opts.eff_duration(),
+        seed: opts.seed,
+        sgd: Some(SgdConfig {
+            dim: if opts.quick { 200 } else { 1000 },
+            ..SgdConfig::default()
+        }),
+        ..ClusterConfig::default()
+    }
+}
+
+/// β sweep: one more sampled peer buys how much?
+pub fn abl_beta_error(opts: &ExpOpts) -> Report {
+    let betas: &[usize] = if opts.quick {
+        &[0, 1, 4, 16]
+    } else {
+        &[0, 1, 2, 4, 8, 16, 32, 64]
+    };
+    let mut rep = Report::new(
+        "abl_beta_error",
+        "pSSP(β,4): progress, dispersion, error and control cost vs β",
+        &["beta", "mean_steps", "iqr", "final_error", "ctrl_msgs", "ctrl_per_step"],
+    );
+    for &beta in betas {
+        let m = Method::Pssp { sample: beta, staleness: opts.staleness };
+        let r = Simulator::new(sgd_cluster(opts), m).run();
+        let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+        let s = Summary::of(&steps);
+        rep.row(vec![
+            beta.into(),
+            s.mean.into(),
+            s.iqr().into(),
+            r.final_error().unwrap_or(f64::NAN).into(),
+            r.control_msgs.into(),
+            (r.control_msgs as f64 / r.total_advances.max(1) as f64).into(),
+        ]);
+    }
+    rep.note("expected: diminishing returns after small β — the theory's \
+              'small sample suffices' claim, measured");
+    rep
+}
+
+/// Quorum sweep at fixed β, θ.
+pub fn abl_quorum(opts: &ExpOpts) -> Report {
+    let mut rep = Report::new(
+        "abl_quorum",
+        "PQuorum(β,4,q): quorum fraction swept ASP->pSSP (paper §3.2 idea)",
+        &["quorum_pct", "mean_steps", "iqr", "final_error"],
+    );
+    for quorum_pct in [0u8, 25, 50, 75, 90, 100] {
+        let m = Method::Pquorum {
+            sample: opts.eff_sample(),
+            staleness: opts.staleness,
+            quorum_pct,
+        };
+        let r = Simulator::new(sgd_cluster(opts), m).run();
+        let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+        let s = Summary::of(&steps);
+        rep.row(vec![
+            (quorum_pct as u64).into(),
+            s.mean.into(),
+            s.iqr().into(),
+            r.final_error().unwrap_or(f64::NAN).into(),
+        ]);
+    }
+    rep.note("q=0 reproduces ASP; q=100 reproduces pSSP; intermediate q \
+              trades tail tolerance against dispersion");
+    rep
+}
+
+/// Re-sample backoff sweep (implementation parameter).
+pub fn abl_recheck(opts: &ExpOpts) -> Report {
+    let mut rep = Report::new(
+        "abl_recheck",
+        "pBSP(β): blocked-worker re-sample backoff sensitivity",
+        &["recheck_s", "mean_steps", "ctrl_msgs", "ctrl_per_step"],
+    );
+    for recheck in [0.05, 0.1, 0.25, 0.5, 1.0] {
+        let cfg = ClusterConfig {
+            recheck_interval: recheck,
+            ..sgd_cluster(opts)
+        };
+        let m = Method::Pbsp { sample: opts.eff_sample() };
+        let r = Simulator::new(cfg, m).run();
+        rep.row(vec![
+            recheck.into(),
+            r.mean_progress().into(),
+            r.control_msgs.into(),
+            (r.control_msgs as f64 / r.total_advances.max(1) as f64).into(),
+        ]);
+    }
+    rep.note("faster polling buys little progress but multiplies control \
+              traffic — 0.25x mean-iter is the default");
+    rep
+}
+
+/// Churn sweep (the §3 motivation, quantified).
+pub fn ext_churn(opts: &ExpOpts) -> Report {
+    let methods = Method::paper_five(opts.eff_sample(), opts.staleness);
+    let mut columns = vec!["churn_rate".to_string()];
+    columns.extend(methods.iter().map(|m| m.to_string()));
+    let mut rep = Report::new(
+        "ext_churn",
+        "mean progress vs churn rate (joins=leaves, nodes/s)",
+        &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let rates: &[f64] = if opts.quick { &[0.0, 2.0] } else { &[0.0, 0.5, 1.0, 2.0, 5.0] };
+    for &rate in rates {
+        let mut row: Vec<Cell> = vec![rate.into()];
+        for &m in &methods {
+            let cfg = ClusterConfig {
+                churn: (rate > 0.0)
+                    .then_some(ChurnConfig { join_rate: rate, leave_rate: rate }),
+                ..sgd_cluster(opts)
+            };
+            let r = Simulator::new(cfg, m).run();
+            row.push(r.mean_progress().into());
+        }
+        rep.row(row);
+    }
+    rep.note("expected: BSP suffers most (any departing/joining straggler \
+              gates everyone); sampled barriers degrade smoothly");
+    rep
+}
+
+/// Link-loss sweep.
+pub fn ext_loss(opts: &ExpOpts) -> Report {
+    let methods = Method::paper_five(opts.eff_sample(), opts.staleness);
+    let mut columns = vec!["loss_rate".to_string()];
+    columns.extend(methods.iter().flat_map(|m| {
+        [format!("{m}_err"), format!("{m}_lost")]
+    }));
+    let mut rep = Report::new(
+        "ext_loss",
+        "final error and lost updates vs link loss rate",
+        &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let rates: &[f64] = if opts.quick { &[0.0, 0.2] } else { &[0.0, 0.05, 0.1, 0.2, 0.4] };
+    for &rate in rates {
+        let mut row: Vec<Cell> = vec![rate.into()];
+        for &m in &methods {
+            let cfg = ClusterConfig { loss_rate: rate, ..sgd_cluster(opts) };
+            let r = Simulator::new(cfg, m).run();
+            row.push(r.final_error().unwrap_or(f64::NAN).into());
+            row.push(r.lost_msgs.into());
+        }
+        rep.row(row);
+    }
+    rep.note("SGD tolerates lost updates gracefully (they are just absent \
+              gradient terms); error rises smoothly with loss for all methods");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpOpts {
+        ExpOpts { quick: true, nodes: 80, duration: 10.0, sample: 4, ..ExpOpts::default() }
+    }
+
+    fn num(c: &Cell) -> f64 {
+        match c {
+            Cell::Num(n) => *n,
+            Cell::Int(i) => *i as f64,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn beta_zero_matches_asp_and_costs_nothing() {
+        let rep = abl_beta_error(&quick());
+        assert_eq!(num(&rep.rows[0][4]), 0.0, "β=0 must send no control msgs");
+        // larger β costs more control traffic
+        let last = rep.rows.last().unwrap();
+        assert!(num(&last[4]) > 0.0);
+    }
+
+    #[test]
+    fn quorum_monotone_progress() {
+        let rep = abl_quorum(&quick());
+        let first = num(&rep.rows[0][1]); // q=0 (ASP-like)
+        let last = num(&rep.rows.last().unwrap()[1]); // q=100 (pSSP)
+        assert!(
+            first >= last * 0.95,
+            "q=0 should progress at least as fast as q=100: {first} vs {last}"
+        );
+    }
+
+    #[test]
+    fn recheck_controls_traffic() {
+        let rep = abl_recheck(&quick());
+        let fast = num(&rep.rows[0][3]);
+        let slow = num(&rep.rows.last().unwrap()[3]);
+        assert!(
+            fast >= slow,
+            "faster polling should cost >= control msgs/step ({fast} vs {slow})"
+        );
+    }
+
+    #[test]
+    fn loss_counts_scale_with_rate() {
+        let rep = ext_loss(&quick());
+        // col 2 = bsp_lost at loss 0.0 -> must be 0
+        assert_eq!(num(&rep.rows[0][2]), 0.0);
+        let lossy = &rep.rows[1];
+        assert!(num(&lossy[2]) > 0.0, "lost messages should be counted");
+    }
+}

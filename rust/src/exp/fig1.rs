@@ -1,0 +1,246 @@
+//! Figure 1 — the core five-way comparison (paper §5.1/§5.2): 1000 nodes,
+//! 40 simulated seconds, SGD on a 1000-parameter linear model under BSP,
+//! SSP(4), ASP, pBSP(10), pSSP(10, 4).
+
+use crate::barrier::Method;
+use crate::exp::{Cell, ExpOpts, Report};
+use crate::sim::{ClusterConfig, SgdConfig, SimResult, Simulator};
+use crate::util::stats::{ecdf_at, Summary};
+
+/// Base cluster for Fig 1 (no stragglers, no churn).
+fn cluster(opts: &ExpOpts, sgd: bool) -> ClusterConfig {
+    ClusterConfig {
+        n_nodes: opts.eff_nodes(),
+        duration: opts.eff_duration(),
+        seed: opts.seed,
+        sgd: sgd.then(|| SgdConfig {
+            dim: if opts.quick { 200 } else { 1000 },
+            ..SgdConfig::default()
+        }),
+        ..ClusterConfig::default()
+    }
+}
+
+pub(crate) fn run_five(opts: &ExpOpts, sgd: bool) -> Vec<SimResult> {
+    Method::paper_five(opts.eff_sample(), opts.staleness)
+        .into_iter()
+        .map(|m| Simulator::new(cluster(opts, sgd), m).run())
+        .collect()
+}
+
+/// Fig 1a: distribution of node progress (steps) at the horizon.
+pub fn fig1a(opts: &ExpOpts) -> Report {
+    let mut rep = Report::new(
+        "fig1a",
+        "progress in steps at t=40s, five barrier strategies (paper Fig 1a)",
+        &["method", "mean", "std", "min", "p25", "p50", "p75", "max", "iqr"],
+    );
+    for r in run_five(opts, false) {
+        let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+        let s = Summary::of(&steps);
+        rep.row(vec![
+            r.method.to_string().into(),
+            s.mean.into(),
+            s.std.into(),
+            s.min.into(),
+            s.p25.into(),
+            s.p50.into(),
+            s.p75.into(),
+            s.max.into(),
+            s.iqr().into(),
+        ]);
+    }
+    rep.note("expected shape: BSP slowest/tightest; ASP fastest/widest; \
+              SSP between; pBSP/pSSP fast with bounded spread");
+    rep
+}
+
+/// Fig 1b: CDF of node progress for the five strategies.
+pub fn fig1b(opts: &ExpOpts) -> Report {
+    let results = run_five(opts, false);
+    // evaluate every method's ECDF on a common step grid
+    let max_step = results
+        .iter()
+        .flat_map(|r| r.final_steps.iter().copied())
+        .max()
+        .unwrap_or(0);
+    let mut columns = vec!["step".to_string()];
+    columns.extend(results.iter().map(|r| r.method.to_string()));
+    let mut rep = Report::new(
+        "fig1b",
+        "CDF of nodes vs progress, five strategies (paper Fig 1b)",
+        &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let grid = step_grid(max_step, 16);
+    for g in grid {
+        let mut row: Vec<Cell> = vec![(g as u64).into()];
+        for r in &results {
+            let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+            row.push(ecdf_at(&steps, g).into());
+        }
+        rep.row(row);
+    }
+    rep.note("each column is one curve of the paper's CDF plot");
+    rep
+}
+
+/// Fig 1c: pBSP CDFs parameterised by sample size 0..64.
+pub fn fig1c(opts: &ExpOpts) -> Report {
+    let betas: &[usize] = &[0, 1, 2, 4, 8, 16, 32, 64];
+    let results: Vec<SimResult> = betas
+        .iter()
+        .map(|&b| Simulator::new(cluster(opts, false), Method::Pbsp { sample: b }).run())
+        .collect();
+    let max_step = results
+        .iter()
+        .flat_map(|r| r.final_steps.iter().copied())
+        .max()
+        .unwrap_or(0);
+    let mut columns = vec!["step".to_string()];
+    columns.extend(betas.iter().map(|b| format!("beta={b}")));
+    let mut rep = Report::new(
+        "fig1c",
+        "pBSP CDFs, sample size 0..64 (paper Fig 1c)",
+        &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let grid = step_grid(max_step, 16);
+    for g in grid {
+        let mut row: Vec<Cell> = vec![(g as u64).into()];
+        for r in &results {
+            let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+            row.push(ecdf_at(&steps, g).into());
+        }
+        rep.row(row);
+    }
+    rep.note("expected: increasing beta shifts curves left (slower) and \
+              tightens the spread — beta=0 equals ASP, large beta approaches BSP");
+    rep
+}
+
+/// Fig 1d: normalised model error over time (5 s ticks) with real SGD.
+pub fn fig1d(opts: &ExpOpts) -> Report {
+    let results = run_five(opts, true);
+    let mut columns = vec!["t".to_string()];
+    columns.extend(results.iter().map(|r| r.method.to_string()));
+    let mut rep = Report::new(
+        "fig1d",
+        "normalised L2 model error vs time, real SGD d=1000 (paper Fig 1d)",
+        &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let ticks = results[0].error_timeline.len();
+    for i in 0..ticks {
+        let mut row: Vec<Cell> = vec![results[0].error_timeline[i].0.into()];
+        for r in &results {
+            row.push(
+                r.error_timeline
+                    .get(i)
+                    .map(|&(_, e)| e)
+                    .unwrap_or(f64::NAN)
+                    .into(),
+            );
+        }
+        rep.row(row);
+    }
+    rep.note("expected: ASP drops fastest early but noisier; BSP cleanest \
+              but slowest; pBSP/pSSP reach the lowest error at the horizon");
+    rep
+}
+
+/// Fig 1e: cumulative updates received by the server over time.
+pub fn fig1e(opts: &ExpOpts) -> Report {
+    let results = run_five(opts, false);
+    let mut columns = vec!["t".to_string()];
+    columns.extend(results.iter().map(|r| r.method.to_string()));
+    let mut rep = Report::new(
+        "fig1e",
+        "cumulative updates received by the server (paper Fig 1e)",
+        &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let ticks = results[0].updates_timeline.len();
+    for i in 0..ticks {
+        let mut row: Vec<Cell> = vec![results[0].updates_timeline[i].0.into()];
+        for r in &results {
+            row.push(
+                r.updates_timeline
+                    .get(i)
+                    .map(|&(_, u)| u)
+                    .unwrap_or(0)
+                    .into(),
+            );
+        }
+        rep.row(row);
+    }
+    // the 10x headline from the paper text
+    let bsp = results[0].update_msgs as f64;
+    let asp = results[2].update_msgs as f64;
+    rep.note(format!(
+        "ASP/BSP total update ratio = {:.1}x (paper reports ~10x)",
+        asp / bsp.max(1.0)
+    ));
+    rep
+}
+
+/// A ~`points`-point grid over [0, max_step].
+fn step_grid(max_step: u64, points: usize) -> Vec<f64> {
+    let max = max_step.max(1) as f64;
+    let stride = (max / points as f64).max(1.0);
+    let mut g = Vec::new();
+    let mut x = 0.0;
+    while x <= max {
+        g.push(x.round());
+        x += stride;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpOpts {
+        ExpOpts { quick: true, nodes: 120, duration: 15.0, sample: 5, ..ExpOpts::default() }
+    }
+
+    #[test]
+    fn fig1a_shape_holds() {
+        let rep = fig1a(&quick());
+        assert_eq!(rep.rows.len(), 5);
+        let mean = |i: usize| match rep.rows[i][1] {
+            Cell::Num(n) => n,
+            _ => panic!(),
+        };
+        let (bsp, ssp, asp) = (mean(0), mean(1), mean(2));
+        assert!(asp > ssp && ssp > bsp, "bsp={bsp} ssp={ssp} asp={asp}");
+    }
+
+    #[test]
+    fn fig1b_cdfs_monotone() {
+        let rep = fig1b(&quick());
+        for col in 1..rep.columns.len() {
+            let mut last = 0.0;
+            for row in &rep.rows {
+                if let Cell::Num(v) = row[col] {
+                    assert!(v >= last - 1e-12);
+                    last = v;
+                }
+            }
+            assert!(last > 0.99, "CDF column {col} should end at 1");
+        }
+    }
+
+    #[test]
+    fn fig1e_has_ratio_note() {
+        let rep = fig1e(&quick());
+        assert!(rep.notes[0].contains("ratio"));
+    }
+
+    #[test]
+    fn step_grid_covers_range() {
+        let g = step_grid(100, 16);
+        assert!(g.len() >= 16);
+        assert_eq!(g[0], 0.0);
+        assert!(*g.last().unwrap() >= 95.0);
+        // degenerate
+        assert!(!step_grid(0, 4).is_empty());
+    }
+}

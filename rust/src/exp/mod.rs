@@ -1,0 +1,344 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (Section 5) and analysis (Section 6 / Figs 4–5).
+//!
+//! Each experiment produces a [`Report`] — the same series the paper
+//! plots, as rows — printed as an aligned text table and optionally
+//! written to `results/<id>.json`. Run via the CLI:
+//!
+//! ```text
+//! actor exp fig1a            # one experiment
+//! actor exp all --quick      # everything, scaled down
+//! actor exp fig2a --nodes 1000 --seed 7 --out results/
+//! ```
+//!
+//! The experiment ↔ module ↔ paper-figure mapping lives in DESIGN.md §5;
+//! expected *shapes* (who wins, by how much) are asserted loosely by
+//! `rust/tests/figures.rs`, and EXPERIMENTS.md records one full run.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig45;
+pub mod table1;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub nodes: usize,
+    pub duration: f64,
+    pub seed: u64,
+    /// Sample size β for the PSP methods (paper: 1% of 1000 = 10).
+    pub sample: usize,
+    /// Staleness θ for SSP/pSSP (paper: 4).
+    pub staleness: u64,
+    /// Scale everything down for CI / smoke runs.
+    pub quick: bool,
+    /// Write JSON reports here if set.
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            nodes: 1000,
+            duration: 40.0,
+            seed: 42,
+            sample: 10,
+            staleness: 4,
+            quick: false,
+            out_dir: None,
+        }
+    }
+}
+
+impl ExpOpts {
+    /// Effective node count / duration under `--quick`.
+    pub fn eff_nodes(&self) -> usize {
+        if self.quick {
+            self.nodes.min(200)
+        } else {
+            self.nodes
+        }
+    }
+
+    pub fn eff_duration(&self) -> f64 {
+        if self.quick {
+            self.duration.min(20.0)
+        } else {
+            self.duration
+        }
+    }
+
+    /// β scaled the way the paper does (1% of system size) when the node
+    /// count is overridden, unless an explicit sample was requested.
+    pub fn eff_sample(&self) -> usize {
+        self.sample.max(1)
+    }
+}
+
+/// One column-oriented result table.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Experiment id, e.g. "fig1a".
+    pub id: String,
+    /// Paper reference + what the series mean.
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+    /// Free-form notes (expected shape, caveats).
+    pub notes: Vec<String>,
+}
+
+/// Table cell.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Str(String),
+    Num(f64),
+    Int(i64),
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(i) => i.to_string(),
+            Cell::Num(n) => {
+                if n.is_nan() {
+                    "-".to_string()
+                } else if n.abs() >= 1000.0 || (*n != 0.0 && n.abs() < 0.01) {
+                    format!("{n:.3e}")
+                } else {
+                    format!("{n:.3}")
+                }
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Cell::Str(s) => Json::Str(s.clone()),
+            Cell::Num(n) => Json::Num(*n),
+            Cell::Int(i) => Json::Num(*i as f64),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Cell {
+        Cell::Str(s.to_string())
+    }
+}
+
+impl From<String> for Cell {
+    fn from(s: String) -> Cell {
+        Cell::Str(s)
+    }
+}
+
+impl From<f64> for Cell {
+    fn from(n: f64) -> Cell {
+        Cell::Num(n)
+    }
+}
+
+impl From<u64> for Cell {
+    fn from(n: u64) -> Cell {
+        Cell::Int(n as i64)
+    }
+}
+
+impl From<usize> for Cell {
+    fn from(n: usize) -> Cell {
+        Cell::Int(n as i64)
+    }
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity in {}", self.id);
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {}\n", self.id, self.title));
+        let rendered: Vec<Vec<String>> = std::iter::once(
+            self.columns.iter().map(|c| c.to_string()).collect::<Vec<_>>(),
+        )
+        .chain(self.rows.iter().map(|r| r.iter().map(Cell::render).collect()))
+        .collect();
+        let widths: Vec<usize> = (0..self.columns.len())
+            .map(|i| rendered.iter().map(|r| r[i].len()).max().unwrap_or(0))
+            .collect();
+        for (ri, row) in rendered.iter().enumerate() {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            out.push_str(&format!("  {}\n", line.join("  ")));
+            if ri == 0 {
+                let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+                out.push_str(&format!("  {}\n", "-".repeat(total)));
+            }
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// Serialise for `results/<id>.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(Cell::to_json).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Print and (if configured) persist.
+    pub fn emit(&self, opts: &ExpOpts) -> Result<()> {
+        print!("{}", self.render());
+        if let Some(dir) = &opts.out_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(format!("{}.json", self.id));
+            std::fs::write(&path, self.to_json().to_pretty())?;
+            println!("  written: {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// All paper experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig1a", "fig1b", "fig1c", "fig1d", "fig1e",
+    "fig2a", "fig2b", "fig2c", "fig3", "fig4", "fig5",
+];
+
+/// Ablations + extensions beyond the paper (run via `actor exp ext`).
+pub const EXTENSIONS: &[&str] = &[
+    "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
+    let reports = match id {
+        "table1" => vec![table1::run()],
+        "fig1a" => vec![fig1::fig1a(opts)],
+        "fig1b" => vec![fig1::fig1b(opts)],
+        "fig1c" => vec![fig1::fig1c(opts)],
+        "fig1d" => vec![fig1::fig1d(opts)],
+        "fig1e" => vec![fig1::fig1e(opts)],
+        "fig2a" => vec![fig2::fig2a(opts)],
+        "fig2b" => vec![fig2::fig2b(opts)],
+        "fig2c" => vec![fig2::fig2c(opts)],
+        "fig3" => vec![fig3::fig3(opts)],
+        "fig4" => vec![fig45::fig4(opts)],
+        "fig5" => vec![fig45::fig5(opts)],
+        "abl_beta_error" => vec![ablation::abl_beta_error(opts)],
+        "abl_quorum" => vec![ablation::abl_quorum(opts)],
+        "abl_recheck" => vec![ablation::abl_recheck(opts)],
+        "ext_churn" => vec![ablation::ext_churn(opts)],
+        "ext_loss" => vec![ablation::ext_loss(opts)],
+        "all" => {
+            let mut all = Vec::new();
+            for id in ALL {
+                all.extend(run(id, opts)?);
+            }
+            return Ok(all);
+        }
+        "ext" => {
+            let mut all = Vec::new();
+            for id in EXTENSIONS {
+                all.extend(run(id, opts)?);
+            }
+            return Ok(all);
+        }
+        other => bail!(
+            "unknown experiment '{other}' (have: {}, {})",
+            ALL.join(", "),
+            EXTENSIONS.join(", ")
+        ),
+    };
+    for r in &reports {
+        r.emit(opts)?;
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_render_aligns() {
+        let mut r = Report::new("t", "test", &["method", "value"]);
+        r.row(vec!["bsp".into(), 1.5.into()]);
+        r.row(vec!["pssp".into(), 123456.0.into()]);
+        let s = r.render();
+        assert!(s.contains("method"));
+        assert!(s.contains("1.235e5") || s.contains("123456"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn report_rejects_wrong_arity() {
+        let mut r = Report::new("t", "test", &["a", "b"]);
+        r.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let mut r = Report::new("x", "y", &["a"]);
+        r.row(vec![Cell::Num(2.5)]);
+        r.note("hello");
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.req_str("id").unwrap(), "x");
+        assert_eq!(parsed.req_arr("rows").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("fig99", &ExpOpts::default()).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Table 1 — classification of the synchronisation methods used by
+//! different systems (paper §2), extended with this implementation's row.
+
+use crate::exp::Report;
+
+pub fn run() -> Report {
+    let mut rep = Report::new(
+        "table1",
+        "classification of synchronisation methods (paper Table 1)",
+        &["system", "synchronisation", "barrier methods"],
+    );
+    let rows: [(&str, &str, &str); 8] = [
+        ("MapReduce", "map completes before reduce", "BSP"),
+        ("Spark", "aggregate updates after task completion", "BSP"),
+        ("Pregel", "superstep model", "BSP"),
+        ("Hogwild!", "ASP with system-level delay bounds", "ASP, SSP"),
+        ("Parameter Server", "swappable synchronisation", "BSP, ASP, SSP"),
+        ("Cyclic Delay", "updates delayed up to N-1 steps", "SSP"),
+        ("Yahoo! LDA", "checkpoints", "SSP, ASP"),
+        ("Owl+Actor (this repo)", "swappable synchronisation", "BSP, ASP, SSP, PSP"),
+    ];
+    for (sys, sync, methods) in rows {
+        rep.row(vec![sys.into(), sync.into(), methods.into()]);
+    }
+    rep.note("this repo's engines: mapreduce=BSP; paramserver=all five; \
+              p2p=ASP/pBSP/pSSP (fully distributed)");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_renders_eight_systems() {
+        let rep = super::run();
+        assert_eq!(rep.rows.len(), 8);
+        assert!(rep.render().contains("PSP"));
+    }
+}

@@ -1,0 +1,44 @@
+//! # Actor/PSP — Probabilistic Synchronous Parallel
+//!
+//! A Rust + JAX + Pallas reproduction of *Probabilistic Synchronous
+//! Parallel* (Wang, Catterall & Mortier, 2017): a distributed learning
+//! framework ("Actor") whose barrier control is built on a **sampling
+//! primitive**, decoupling synchronisation from model consistency.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — barrier control (BSP/SSP/ASP/pBSP/pSSP), the
+//!   sampling primitive, a chord-like structured overlay, map-reduce /
+//!   parameter-server / p2p engines on an in-repo actor runtime, a
+//!   deterministic discrete-event cluster simulator, the convergence-bound
+//!   calculator of the paper's Section 6, and the experiment harness that
+//!   regenerates every figure of Section 5.
+//! * **L2** — JAX model definitions (`python/compile/model.py`), AOT-lowered
+//!   to HLO text artifacts at build time.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the per-worker
+//!   compute hot-spots (fused linear SGD step; blocked attention).
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
+//! crate) so the training hot path never touches Python.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod actor;
+pub mod barrier;
+pub mod cli;
+pub mod config;
+pub mod engine;
+pub mod exp;
+pub mod model;
+pub mod overlay;
+pub mod runtime;
+pub mod sampling;
+pub mod sim;
+pub mod testing;
+pub mod theory;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

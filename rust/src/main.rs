@@ -1,0 +1,226 @@
+//! `actor` — the leader entrypoint of the Actor/PSP framework.
+//!
+//! See `actor --help` (or [`actor_psp::cli::USAGE`]) for subcommands.
+
+use anyhow::{bail, Result};
+
+use actor_psp::barrier::Method;
+use actor_psp::cli::{Args, USAGE};
+use actor_psp::config::Config;
+use actor_psp::exp::{self, ExpOpts};
+use actor_psp::runtime::{Manifest, Runtime};
+use actor_psp::sim::{ClusterConfig, SgdConfig, Simulator};
+use actor_psp::theory::{mean_bound, variance_bound, BoundParams};
+use actor_psp::train::{psp_train_lm, train_lm, Corpus, TransformerTrainer};
+use actor_psp::util::stats::Summary;
+
+fn main() {
+    actor_psp::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let args = match Args::parse(argv, &["quick", "sgd"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "exp" => cmd_exp(args),
+        "sim" => cmd_sim(args),
+        "train" => cmd_train(args),
+        "bounds" => cmd_bounds(args),
+        "info" => cmd_info(args),
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "nodes", "duration", "seed", "sample", "staleness", "out", "quick",
+    ])?;
+    let id = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = ExpOpts {
+        nodes: args.flag_or("nodes", 1000)?,
+        duration: args.flag_or("duration", 40.0)?,
+        seed: args.flag_or("seed", 42)?,
+        sample: args.flag_or("sample", 10)?,
+        staleness: args.flag_or("staleness", 4)?,
+        quick: args.switch("quick"),
+        out_dir: args.get("out").map(Into::into),
+    };
+    exp::run(id, &opts)?;
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "method", "nodes", "duration", "seed", "sgd", "config", "quick",
+    ])?;
+    // config file first, CLI flags override
+    let mut cluster = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.cluster_config()?,
+        None => ClusterConfig::default(),
+    };
+    let method = match args.get("method") {
+        Some(m) => Method::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?,
+        None => match args.get("config") {
+            Some(path) => {
+                Config::load(std::path::Path::new(path))?.barrier_method()?
+            }
+            None => Method::Pssp { sample: 10, staleness: 4 },
+        },
+    };
+    if let Some(n) = args.parse_flag::<usize>("nodes")? {
+        cluster.n_nodes = n;
+    }
+    if let Some(d) = args.parse_flag::<f64>("duration")? {
+        cluster.duration = d;
+    }
+    if let Some(s) = args.parse_flag::<u64>("seed")? {
+        cluster.seed = s;
+    }
+    if args.switch("sgd") && cluster.sgd.is_none() {
+        cluster.sgd = Some(SgdConfig::default());
+    }
+
+    println!(
+        "simulating {} nodes for {:.0}s under {method} (seed {})",
+        cluster.n_nodes, cluster.duration, cluster.seed
+    );
+    let r = Simulator::new(cluster, method).run();
+    let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
+    let s = Summary::of(&steps);
+    println!(
+        "progress: mean {:.2}  p50 {:.0}  spread [{:.0}, {:.0}]  iqr {:.1}",
+        s.mean,
+        s.p50,
+        s.min,
+        s.max,
+        s.iqr()
+    );
+    println!(
+        "messages: {} updates, {} control; advances {}; events {} \
+         ({:.2}M events/s host)",
+        r.update_msgs,
+        r.control_msgs,
+        r.total_advances,
+        r.events,
+        r.events as f64 / r.wall_secs.max(1e-9) / 1e6,
+    );
+    if let Some(e) = r.final_error() {
+        println!("final normalised model error: {e:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "steps", "lr", "seed", "workers", "method", "artifacts",
+    ])?;
+    let cfg = args.get_or("config", "tiny");
+    let steps: u64 = args.flag_or("steps", 200)?;
+    let lr: f32 = args.flag_or("lr", 0.1)?;
+    let seed: u64 = args.flag_or("seed", 42)?;
+    let workers: usize = args.flag_or("workers", 1)?;
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(Manifest::default_dir);
+
+    let rt = Runtime::with_dir(&dir)?;
+    println!("platform: {}", rt.platform());
+    let mut trainer = TransformerTrainer::new(rt, &cfg, seed as i32)?;
+    println!(
+        "model '{}': {} params ({} tensors), vocab {}, seq {}, batch {}; \
+         uniform-loss baseline {:.3}",
+        cfg,
+        trainer.meta.param_count,
+        trainer.meta.n_params,
+        trainer.meta.vocab,
+        trainer.meta.seq,
+        trainer.meta.batch,
+        trainer.uniform_loss(),
+    );
+    let corpus = Corpus::synthetic(1 << 16, trainer.meta.vocab, seed ^ 0xC0);
+    let log = if workers <= 1 {
+        train_lm(&mut trainer, &corpus, steps, lr, seed)?
+    } else {
+        let method = match args.get("method") {
+            Some(m) => Method::parse(m)
+                .ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?,
+            None => Method::Pssp { sample: 3, staleness: 2 },
+        };
+        println!("PSP-paced data-parallel: {workers} workers under {method}");
+        psp_train_lm(&mut trainer, &corpus, method, workers, steps, lr, seed, None)?
+    };
+    for (step, loss) in log
+        .losses
+        .iter()
+        .step_by((steps as usize / 20).max(1))
+        .chain(log.losses.last())
+    {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!(
+        "trained {} steps in {:.1}s ({:.2} steps/s); loss {:.3} -> {:.3} \
+         (tail mean {:.3})",
+        log.losses.len(),
+        log.wall_secs,
+        log.steps_per_sec,
+        log.first_loss(),
+        log.last_loss(),
+        log.tail_mean(20),
+    );
+    Ok(())
+}
+
+fn cmd_bounds(args: &Args) -> Result<()> {
+    args.check_known(&["beta", "staleness", "t", "fr"])?;
+    let beta: usize = args.flag_or("beta", 10)?;
+    let r: u64 = args.flag_or("staleness", 4)?;
+    let t: u64 = args.flag_or("t", 10_000)?;
+    let f_r: f64 = args.flag_or("fr", 0.9)?;
+    let bp = BoundParams { beta, r, t, f_r };
+    println!("PSP convergence bounds (Theorem 3): beta={beta} r={r} T={t} F(r)={f_r}");
+    println!("  a = F(r)^beta        = {:.6}", bp.a());
+    println!("  avg lag mean bound   = {:.6}", mean_bound(&bp));
+    println!("  avg lag var bound    = {:.6}", variance_bound(&bp));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts"])?;
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(Manifest::default_dir);
+    let rt = Runtime::with_dir(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts ({}):", dir.display());
+    for a in &rt.manifest().artifacts {
+        println!(
+            "  {:28} {:12} {:>2} in / {:>2} out",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,265 @@
+//! Pure-Rust linear model + synthetic dataset (paper §5 workload).
+//!
+//! `f(w) = 1/(2n)·‖Xw − y‖²`, `∇f = Xᵀ(Xw − y)/n` — identical math to the
+//! L1 Pallas kernel `python/compile/kernels/sgd_linear.py`; the Rust
+//! version exists so that 1000-node simulator sweeps don't pay PJRT
+//! call overhead per simulated gradient, and the integration tests pin
+//! the two implementations against each other.
+
+use crate::util::rng::Rng;
+
+/// A shared synthetic regression dataset, generated from a ground-truth
+/// parameter vector: `y = X·w_true + ε`, `X ~ N(0,1)`, `ε ~ N(0, noise²)`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major (rows × dim).
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub w_true: Vec<f32>,
+    pub rows: usize,
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn synthetic(rows: usize, dim: usize, noise: f32, rng: &mut Rng) -> Dataset {
+        let w_true: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let mut x = vec![0.0f32; rows * dim];
+        for v in x.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let mut y = vec![0.0f32; rows];
+        for (r, yv) in y.iter_mut().enumerate() {
+            let row = &x[r * dim..(r + 1) * dim];
+            let dot: f32 = row.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+            *yv = dot + noise * rng.normal() as f32;
+        }
+        Dataset { x, y, w_true, rows, dim }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.x[r * self.dim..(r + 1) * self.dim]
+    }
+}
+
+/// Linear MSE model operations (allocation-conscious; the minibatch
+/// gradient is the simulator's compute hot-spot — see benches/sgd.rs).
+#[derive(Debug, Clone)]
+pub struct LinearModel {
+    pub dim: usize,
+    /// Reusable gradient buffer.
+    grad_buf: Vec<f32>,
+}
+
+impl LinearModel {
+    pub fn new(dim: usize) -> LinearModel {
+        LinearModel { dim, grad_buf: vec![0.0; dim] }
+    }
+
+    /// Full-batch loss `1/(2n)·‖Xw − y‖²`.
+    pub fn loss(&self, data: &Dataset, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.dim);
+        let mut acc = 0.0f64;
+        for r in 0..data.rows {
+            let e = (dot(data.row(r), w) - data.y[r]) as f64;
+            acc += e * e;
+        }
+        acc / (2.0 * data.rows as f64)
+    }
+
+    /// Gradient over a seeded random minibatch of `batch` rows:
+    /// `g = 1/b · Σ_r x_r (x_r·w − y_r)`.
+    ///
+    /// The batch is drawn deterministically from `batch_seed`, so a
+    /// simulated worker's gradient is a pure function of (snapshot, seed) —
+    /// reproducibility across runs and across barrier methods.
+    ///
+    /// This is the simulator's compute hot-spot (fig1d/2b sweeps run it
+    /// tens of thousands of times); the dot/axpy inner loops are written
+    /// over 8-wide chunks with independent partial accumulators so LLVM
+    /// vectorises them (≈5x over the naive zip on this host — see
+    /// EXPERIMENTS.md §Perf).
+    pub fn minibatch_grad(
+        &mut self,
+        data: &Dataset,
+        w: &[f32],
+        batch_seed: u64,
+        batch: usize,
+    ) -> &[f32] {
+        assert_eq!(w.len(), self.dim);
+        let mut rng = Rng::new(batch_seed);
+        let g = &mut self.grad_buf;
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let b = batch.max(1);
+        for _ in 0..b {
+            let r = rng.next_below(data.rows as u64) as usize;
+            let row = data.row(r);
+            let resid = dot(row, w) - data.y[r];
+            axpy(resid, row, g);
+        }
+        let inv = 1.0 / b as f32;
+        g.iter_mut().for_each(|v| *v *= inv);
+        g
+    }
+
+    /// Full-batch gradient (reference for tests and the PJRT cross-check).
+    pub fn full_grad(&mut self, data: &Dataset, w: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.dim];
+        for r in 0..data.rows {
+            let row = data.row(r);
+            let resid = dot(row, w) - data.y[r];
+            axpy(resid, row, &mut g);
+        }
+        let inv = 1.0 / data.rows as f32;
+        g.iter_mut().for_each(|v| *v *= inv);
+        g
+    }
+}
+
+/// 8-lane dot product over `chunks_exact` (bounds-check-free, independent
+/// accumulators => LLVM emits packed FMAs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x` over `chunks_exact` (bounds-check-free).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let cx = x.chunks_exact(8);
+    let rx = cx.remainder();
+    let mut cy = y.chunks_exact_mut(8);
+    for (xs, ys) in cx.zip(&mut cy) {
+        for l in 0..8 {
+            ys[l] += alpha * xs[l];
+        }
+    }
+    for (xi, yi) in rx.iter().zip(cy.into_remainder()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+    use crate::util::stats::l2_dist;
+
+    #[test]
+    fn dot_axpy_match_naive() {
+        property("dot/axpy equal naive", 100, |g| {
+            let n = g.usize_in(0, 70);
+            let mut rng = g.rng();
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3 + naive.abs() * 1e-4);
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            axpy(0.7, &a, &mut y1);
+            for (yi, xi) in y2.iter_mut().zip(&a) {
+                *yi += 0.7 * xi;
+            }
+            for (u, v) in y1.iter().zip(&y2) {
+                assert!((u - v).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn synthetic_data_shapes() {
+        let mut rng = Rng::new(1);
+        let d = Dataset::synthetic(100, 10, 0.1, &mut rng);
+        assert_eq!(d.x.len(), 1000);
+        assert_eq!(d.y.len(), 100);
+        assert_eq!(d.w_true.len(), 10);
+        assert_eq!(d.row(99).len(), 10);
+    }
+
+    #[test]
+    fn loss_zero_at_truth_without_noise() {
+        let mut rng = Rng::new(2);
+        let d = Dataset::synthetic(50, 8, 0.0, &mut rng);
+        let m = LinearModel::new(8);
+        assert!(m.loss(&d, &d.w_true) < 1e-10);
+    }
+
+    #[test]
+    fn full_grad_zero_at_truth_without_noise() {
+        let mut rng = Rng::new(3);
+        let d = Dataset::synthetic(50, 8, 0.0, &mut rng);
+        let mut m = LinearModel::new(8);
+        let g = m.full_grad(&d, &d.w_true);
+        assert!(g.iter().all(|&x| x.abs() < 1e-4), "{g:?}");
+    }
+
+    #[test]
+    fn minibatch_grad_deterministic_in_seed() {
+        let mut rng = Rng::new(4);
+        let d = Dataset::synthetic(64, 16, 0.1, &mut rng);
+        let w = vec![0.1f32; 16];
+        let mut m1 = LinearModel::new(16);
+        let mut m2 = LinearModel::new(16);
+        let g1 = m1.minibatch_grad(&d, &w, 99, 8).to_vec();
+        let g2 = m2.minibatch_grad(&d, &w, 99, 8).to_vec();
+        let g3 = m2.minibatch_grad(&d, &w, 100, 8).to_vec();
+        assert_eq!(g1, g2);
+        assert_ne!(g1, g3);
+    }
+
+    #[test]
+    fn sgd_converges_toward_truth() {
+        let mut rng = Rng::new(5);
+        let d = Dataset::synthetic(256, 32, 0.01, &mut rng);
+        let mut m = LinearModel::new(32);
+        let mut w = vec![0.0f32; 32];
+        let e0 = l2_dist(&w, &d.w_true);
+        for step in 0..500u64 {
+            let g = m.minibatch_grad(&d, &w, step * 31 + 7, 16).to_vec();
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.05 * gi;
+            }
+        }
+        let e1 = l2_dist(&w, &d.w_true);
+        assert!(e1 < e0 * 0.1, "error {e0} -> {e1}");
+    }
+
+    #[test]
+    fn prop_minibatch_grad_is_average_of_row_grads() {
+        property("minibatch grad averages row grads", 50, |g| {
+            let dim = g.usize_in(1, 12);
+            let rows = g.usize_in(1, 20);
+            let mut rng = g.rng();
+            let d = Dataset::synthetic(rows, dim, 0.1, &mut rng);
+            let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            // batch of 1: the gradient must equal a single row's gradient
+            let mut m = LinearModel::new(dim);
+            let seed = rng.next_u64();
+            let gb = m.minibatch_grad(&d, &w, seed, 1).to_vec();
+            // recompute the drawn row
+            let mut r2 = Rng::new(seed);
+            let r = r2.next_below(d.rows as u64) as usize;
+            let row = d.row(r);
+            let pred: f32 = row.iter().zip(&w).map(|(a, b)| a * b).sum();
+            let resid = pred - d.y[r];
+            for (i, xi) in row.iter().enumerate() {
+                assert!((gb[i] - resid * xi).abs() < 1e-4);
+            }
+        });
+    }
+}

@@ -1,0 +1,9 @@
+//! Model substrates owned by the coordinator.
+//!
+//! * [`linear`] — the paper's evaluation workload (d-parameter linear
+//!   regression) in pure Rust, used by the 1000-node simulator sweeps.
+//!   The PJRT-backed path (`crate::runtime` + the `linear_step_*`
+//!   artifacts) computes the *same* math through the L1 Pallas kernel;
+//!   `rust/tests/runtime_integration.rs` asserts they agree.
+
+pub mod linear;

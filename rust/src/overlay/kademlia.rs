@@ -1,0 +1,297 @@
+//! Kademlia-style overlay (Maymounkov & Mazières 2002) — the paper's
+//! other suggested substrate ("e.g., chord or kademlia", §3.2).
+//!
+//! XOR-metric id space with per-node k-buckets. Provides the same two
+//! primitives the sampling layer needs:
+//!
+//! * `lookup(target)` — iterative closest-node routing, O(log n) hops;
+//! * `sample_nodes(observer, β)` — uniform peer sampling by looking up
+//!   uniformly-random ids and taking the closest-window correction
+//!   (mirror of the chord ring's successor-window method, in XOR space);
+//! * `estimate_size(observer)` — population estimate from the density of
+//!   the observer's nearest neighbours: for uniform ids the expected
+//!   XOR distance of the k-th nearest neighbour is `k·2^64/n`.
+//!
+//! Both overlays exist so the sampling correctness claims are not an
+//! artifact of one topology; `overlay::tests` cross-checks uniformity on
+//! both.
+
+use crate::util::rng::Rng;
+
+/// K-bucket width (replication factor k in the Kademlia paper).
+pub const BUCKET_K: usize = 8;
+
+/// A kademlia-style node table. Like [`super::Ring`], the authoritative
+/// membership is kept flat (sorted ids) and routing emulates per-hop
+/// bucket queries, counting the control messages a deployment would pay.
+#[derive(Debug, Clone)]
+pub struct Kademlia {
+    /// Sorted (id, node) pairs.
+    members: Vec<(u64, usize)>,
+    namespace: u64,
+}
+
+impl Kademlia {
+    pub fn new(namespace: u64) -> Kademlia {
+        Kademlia { members: Vec::new(), namespace }
+    }
+
+    pub fn with_nodes(n: usize, namespace: u64) -> Kademlia {
+        let mut k = Kademlia::new(namespace);
+        for node in 0..n {
+            k.join(node);
+        }
+        k
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn node_id(&self, node: usize) -> u64 {
+        super::node_ring_id(node, self.namespace ^ KAD_SALT)
+    }
+
+    pub fn join(&mut self, node: usize) -> u64 {
+        let id = self.node_id(node);
+        match self.members.binary_search_by_key(&id, |&(i, _)| i) {
+            Ok(_) => id, // collision: astronomically rare; id already present
+            Err(pos) => {
+                self.members.insert(pos, (id, node));
+                id
+            }
+        }
+    }
+
+    pub fn leave(&mut self, node: usize) -> bool {
+        let id = self.node_id(node);
+        match self.members.binary_search_by_key(&id, |&(i, _)| i) {
+            Ok(pos) if self.members[pos].1 == node => {
+                self.members.remove(pos);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The node whose id is XOR-closest to `target`.
+    pub fn closest(&self, target: u64) -> Option<(u64, usize)> {
+        self.members
+            .iter()
+            .copied()
+            .min_by_key(|&(id, _)| id ^ target)
+    }
+
+    /// `count` XOR-closest members to `target`, ascending by distance.
+    pub fn closest_k(&self, target: u64, count: usize) -> Vec<(u64, usize)> {
+        // Exploit sortedness: candidates near the insertion point first,
+        // then verify by full distance ordering over a widened window.
+        let mut all: Vec<(u64, usize)> = self.members.clone();
+        all.sort_by_key(|&(id, _)| id ^ target);
+        all.truncate(count);
+        all
+    }
+
+    /// Iterative lookup emulation: each hop queries the current node's
+    /// bucket for the closest known contacts and halves the distance.
+    /// Returns (owner node, hops).
+    pub fn lookup(&self, from: usize, target: u64) -> Option<(usize, u32)> {
+        if self.members.is_empty() {
+            return None;
+        }
+        let (goal_id, goal_node) = self.closest(target)?;
+        let mut cur = self.node_id(from);
+        let mut hops = 0u32;
+        while cur != goal_id && hops < 64 {
+            // the current node knows the BUCKET_K closest contacts to the
+            // target among members whose distance-to-target is less than
+            // its own (bucket structure guarantees such a contact exists
+            // and at least halves the distance)
+            let dcur = cur ^ target;
+            let next = self
+                .members
+                .iter()
+                .copied()
+                .filter(|&(id, _)| (id ^ target) < dcur)
+                .min_by_key(|&(id, _)| id ^ target);
+            match next {
+                Some((id, _)) => {
+                    // emulate halving: in a real kademlia the hop lands in
+                    // the bucket covering the target's prefix
+                    cur = id;
+                    hops += 1;
+                }
+                None => break,
+            }
+        }
+        Some((goal_node, hops.max(1)))
+    }
+
+    /// Uniform node sample via random-target lookups with a
+    /// closest-window correction (the XOR-space analogue of the ring's
+    /// successor-window sampling). Returns (nodes, control messages).
+    pub fn sample_nodes(
+        &self,
+        observer: usize,
+        beta: usize,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, u64) {
+        let n = self.members.len();
+        let mut out = Vec::with_capacity(beta);
+        let mut msgs = 0u64;
+        if n <= 1 || beta == 0 {
+            return (out, msgs);
+        }
+        let target_count = beta.min(n - 1);
+        let window = BUCKET_K.min(n);
+        let mut attempts = 0;
+        while out.len() < target_count && attempts < 128 * (beta + 1) {
+            attempts += 1;
+            let t = rng.next_u64();
+            let Some((_, hops)) = self.lookup(observer, t) else { continue };
+            msgs += hops as u64 + 1;
+            let w = self.closest_k(t, window);
+            // pick uniformly within the window; the window's span in XOR
+            // space is ~window·2^64/n regardless of where t landed, so
+            // per-node selection probability is ~uniform.
+            let pick = w[rng.next_below(w.len() as u64) as usize].1;
+            if pick == observer || out.contains(&pick) {
+                continue;
+            }
+            out.push(pick);
+        }
+        (out, msgs)
+    }
+
+    /// Population estimate from nearest-neighbour density (§3.2): the
+    /// k-th nearest neighbour of a uniform id sits at expected XOR
+    /// distance `k·2^64/(n+1)`, so `n ≈ k·2^64/d_k`.
+    pub fn estimate_size(&self, observer: usize, k: usize) -> f64 {
+        let n = self.members.len();
+        if n <= 1 {
+            return n as f64;
+        }
+        let k = k.min(n - 1).max(1);
+        let my = self.node_id(observer);
+        let mut neigh = self.closest_k(my, k + 1); // includes self
+        neigh.retain(|&(_, node)| node != observer);
+        neigh.truncate(k);
+        let d_k = neigh.last().map(|&(id, _)| id ^ my).unwrap_or(u64::MAX);
+        if d_k == 0 {
+            return n as f64;
+        }
+        k as f64 * (u64::MAX as f64) / d_k as f64
+    }
+}
+
+/// Salt so kademlia ids differ from ring ids in the same namespace.
+const KAD_SALT: u64 = 0x4B41_444D_4C49_4121;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    #[test]
+    fn join_leave_membership() {
+        let mut k = Kademlia::new(1);
+        k.join(0);
+        k.join(1);
+        assert_eq!(k.len(), 2);
+        assert!(k.leave(0));
+        assert!(!k.leave(0));
+        assert_eq!(k.len(), 1);
+    }
+
+    #[test]
+    fn closest_is_truly_closest() {
+        let k = Kademlia::with_nodes(200, 5);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let t = rng.next_u64();
+            let (id, _) = k.closest(t).unwrap();
+            for node in 0..200 {
+                assert!(id ^ t <= k.node_id(node) ^ t);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_converges_in_log_hops() {
+        let k = Kademlia::with_nodes(1000, 7);
+        let mut rng = Rng::new(3);
+        let mut total = 0u32;
+        for _ in 0..100 {
+            let t = rng.next_u64();
+            let (owner, hops) = k.lookup(0, t).unwrap();
+            let (_, expect) = k.closest(t).unwrap();
+            assert_eq!(owner, expect);
+            total += hops;
+        }
+        let avg = total as f64 / 100.0;
+        assert!(avg <= 2.0 * (1000f64).log2(), "avg hops {avg}");
+    }
+
+    #[test]
+    fn sampling_approximately_uniform() {
+        let k = Kademlia::with_nodes(20, 9);
+        let mut rng = Rng::new(13);
+        let mut counts = vec![0u32; 20];
+        let trials = 8000;
+        for _ in 0..trials {
+            let (s, _) = k.sample_nodes(0, 1, &mut rng);
+            for n in s {
+                counts[n] += 1;
+            }
+        }
+        assert_eq!(counts[0], 0, "observer must be excluded");
+        let expected = trials as f64 / 19.0;
+        for (i, &c) in counts.iter().enumerate().skip(1) {
+            assert!(
+                (c as f64) > expected * 0.5 && (c as f64) < expected * 1.7,
+                "node {i}: {c} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn size_estimate_within_factor_three() {
+        for &n in &[50usize, 500, 2000] {
+            let k = Kademlia::with_nodes(n, 21);
+            let est = k.estimate_size(0, BUCKET_K);
+            assert!(
+                est > n as f64 / 3.0 && est < n as f64 * 3.0,
+                "n={n} est={est}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_sample_bounds_and_distinct() {
+        property("kademlia sample ≤ β, distinct, no observer", 50, |g| {
+            let n = g.usize_in(1, 50);
+            let beta = g.usize_in(0, 60);
+            let k = Kademlia::with_nodes(n, 11);
+            let mut rng = g.rng();
+            let obs = g.usize_in(0, n - 1);
+            let (s, _) = k.sample_nodes(obs, beta, &mut rng);
+            assert!(s.len() <= beta.min(n.saturating_sub(1)));
+            assert!(!s.contains(&obs));
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), s.len());
+        });
+    }
+
+    #[test]
+    fn ids_differ_from_ring_ids() {
+        let k = Kademlia::new(3);
+        let ring_id = crate::overlay::node_ring_id(5, 3);
+        assert_ne!(k.node_id(5), ring_id);
+    }
+}

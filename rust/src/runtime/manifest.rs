@@ -1,0 +1,197 @@
+//! Typed view of `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//!
+//! The manifest is the only contract between the Python build path and the
+//! Rust request path: artifact names, HLO file paths, and the exact
+//! input/output signatures (names, shapes, dtypes) of each executable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in an artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.req_str("name")?.to_string();
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape in '{name}'")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.req_str("dtype")?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+    /// "linear_step" | "linear_grad" | "tf_init" | "tf_step" | "tf_loss".
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: u64,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&src).context("parsing manifest.json")?;
+        let version = j
+            .req("version")?
+            .as_i64()
+            .ok_or_else(|| anyhow!("bad version"))? as u64;
+        let artifacts = j
+            .req_arr("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.req_str("name")?.to_string(),
+                    path: PathBuf::from(a.req_str("path")?),
+                    kind: a.req_str("kind")?.to_string(),
+                    inputs: a
+                        .req_arr("inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .req_arr("outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), version, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+
+    /// The default artifacts directory: `$ACTOR_ARTIFACTS` or
+    /// `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ACTOR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        assert!(m.version >= 2);
+        let step = m.find("linear_step_n32_d1000").unwrap();
+        assert_eq!(step.inputs.len(), 4);
+        assert_eq!(step.inputs[0].shape, vec![32, 1000]);
+        assert_eq!(step.inputs[0].elements(), 32_000);
+        assert_eq!(step.outputs[0].name, "w_new");
+        assert!(m.hlo_path(step).exists());
+        assert!(m.find("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn tf_signature_round_trip() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let init = m.find("tf_tiny_init").unwrap();
+        let step = m.find("tf_tiny_step").unwrap();
+        // init outputs must match step param inputs exactly
+        let n_params = init.outputs.len();
+        for (o, i) in init.outputs.iter().zip(&step.inputs[..n_params]) {
+            assert_eq!(o.shape, i.shape, "{}", o.name);
+            assert_eq!(o.dtype, i.dtype);
+        }
+        // token input is int32
+        assert_eq!(step.inputs[n_params].dtype, Dtype::I32);
+    }
+}

@@ -1,0 +1,452 @@
+//! PJRT runtime — loads the AOT artifacts and executes them on the
+//! request path. **Python never runs here**: the HLO text under
+//! `artifacts/` was produced once at build time by `make artifacts`.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API, CPU plugin):
+//!
+//! ```text
+//! HLO text ── HloModuleProto::from_text_file ──► XlaComputation
+//!          ── PjRtClient::compile ──► PjRtLoadedExecutable ── execute ──►
+//! ```
+//!
+//! Interchange is HLO *text* because jax ≥ 0.5 serialises protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! Executables are compiled once and cached ([`Runtime::prepare`]); the
+//! L2 functions were lowered with `return_tuple=True`, so each execution
+//! returns one tuple literal that [`Runtime::execute`] unpacks.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// A typed host-side tensor, matched against [`TensorSpec`] at call time.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            Tensor::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Build the PJRT literal for this tensor with the given shape.
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.len() != spec.elements() {
+            bail!(
+                "input '{}': {} elements, spec wants {:?} = {}",
+                spec.name,
+                self.len(),
+                spec.shape,
+                spec.elements()
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("input '{}': dtype mismatch", spec.name);
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        // Scalars and vectors already have rank ≤ 1; reshape handles rank>1
+        // and the rank-0 scalar case.
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        let t = match spec.dtype {
+            Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+            Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+        };
+        if t.len() != spec.elements() {
+            bail!(
+                "output '{}': got {} elements, expected {}",
+                spec.name,
+                t.len(),
+                spec.elements()
+            );
+        }
+        Ok(t)
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+    /// Cumulative host-side execute calls (perf accounting).
+    calls: u64,
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, Compiled>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(&Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact. Idempotent.
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        cache.insert(name.to_string(), Compiled { exe, spec, calls: 0 });
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; returns the output tensors
+    /// in manifest order. Validates shapes/dtypes both ways.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.prepare(name)?;
+        let mut cache = self.compiled.lock().unwrap();
+        let c = cache.get_mut(name).expect("prepared above");
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "artifact '{name}': {} inputs given, {} expected",
+                inputs.len(),
+                c.spec.inputs.len()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .zip(&c.spec.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<Vec<_>>>()?;
+        c.calls += 1;
+        let result = c.exe.execute::<xla::Literal>(&literals)?;
+        // Lowered with return_tuple=True: a single tuple output buffer.
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "artifact '{name}': {} outputs, expected {}",
+                parts.len(),
+                c.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&c.spec.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s))
+            .collect()
+    }
+
+    /// How many times an artifact has been executed (perf accounting).
+    pub fn call_count(&self, name: &str) -> u64 {
+        self.compiled
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.calls)
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// RuntimeService: thread-owned runtime behind channels.
+//
+// The xla crate's PJRT handles are Rc-based (!Send), so a Runtime cannot
+// be shared across worker threads directly. The service dedicates one
+// thread to PJRT execution (the CPU plugin executes serially anyway) and
+// exposes a Send + Sync facade the engines' GradFn closures can capture.
+// ---------------------------------------------------------------------
+
+enum ServiceReq {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: std::sync::mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Stop,
+}
+
+/// Send+Sync facade over a thread-owned [`Runtime`].
+pub struct RuntimeService {
+    tx: Mutex<std::sync::mpsc::Sender<ServiceReq>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl RuntimeService {
+    /// Spawn the service over the default artifacts directory.
+    pub fn spawn() -> Result<RuntimeService> {
+        Self::spawn_with_dir(Manifest::default_dir())
+    }
+
+    pub fn spawn_with_dir(dir: std::path::PathBuf) -> Result<RuntimeService> {
+        let (tx, rx) = std::sync::mpsc::channel::<ServiceReq>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let rt = match Runtime::with_dir(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        ServiceReq::Execute { name, inputs, reply } => {
+                            let _ = reply.send(rt.execute(&name, &inputs));
+                        }
+                        ServiceReq::Stop => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt service");
+        ready_rx.recv().context("pjrt service died during init")??;
+        Ok(RuntimeService { tx: Mutex::new(tx), handle: Mutex::new(Some(handle)) })
+    }
+
+    /// Execute an artifact (blocking; requests are serialised).
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(ServiceReq::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("pjrt service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("pjrt service dropped reply"))?
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(ServiceReq::Stop);
+        }
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Convenience: a [`crate::engine::GradFn`] backed by a `linear_grad_*`
+/// artifact — the three layers composing on the paper's own workload.
+/// The returned closure regenerates the worker's minibatch from the seed
+/// (same scheme as the pure-Rust path) and calls the Pallas-kernel HLO
+/// through the [`RuntimeService`].
+pub fn linear_grad_fn(
+    svc: std::sync::Arc<RuntimeService>,
+    artifact: &str,
+    data: std::sync::Arc<crate::model::linear::Dataset>,
+    batch_rows: usize,
+) -> Result<crate::engine::GradFn> {
+    let n = batch_rows;
+    let d = data.dim;
+    let name = artifact.to_string();
+    // Validate once up front with a dry run of shapes via a real call at
+    // first use; artifact existence is checked lazily by the service.
+    Ok(std::sync::Arc::new(move |w: &[f32], seed: u64| {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let r = rng.next_below(data.rows as u64) as usize;
+            x.extend_from_slice(data.row(r));
+            y.push(data.y[r]);
+        }
+        let out = svc
+            .execute(
+                &name,
+                vec![Tensor::F32(x), Tensor::F32(w.to_vec()), Tensor::F32(y)],
+            )
+            .expect("PJRT linear_grad execution failed");
+        out.into_iter()
+            .next()
+            .unwrap()
+            .into_f32()
+            .expect("grad output is f32")
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new().expect("runtime"))
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: Dtype::F32,
+        };
+        assert!(Tensor::F32(vec![0.0; 6]).to_literal(&spec).is_ok());
+        assert!(Tensor::F32(vec![0.0; 5]).to_literal(&spec).is_err());
+        assert!(Tensor::I32(vec![0; 6]).to_literal(&spec).is_err());
+    }
+
+    #[test]
+    fn linear_grad_artifact_matches_rust_model() {
+        let Some(rt) = runtime() else { return };
+        let (n, d) = (128, 100);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let data = crate::model::linear::Dataset::synthetic(n, d, 0.1, &mut rng);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        // PJRT path (Pallas kernel artifact)
+        let out = rt
+            .execute(
+                "linear_grad_n128_d100",
+                &[
+                    Tensor::F32(data.x.clone()),
+                    Tensor::F32(w.clone()),
+                    Tensor::F32(data.y.clone()),
+                ],
+            )
+            .unwrap();
+        let g_pjrt = out[0].as_f32().unwrap();
+        // pure-Rust path
+        let mut m = crate::model::linear::LinearModel::new(d);
+        let g_rust = m.full_grad(&data, &w);
+        for (a, b) in g_pjrt.iter().zip(&g_rust) {
+            assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear_step_updates_weights() {
+        let Some(rt) = runtime() else { return };
+        let (n, d) = (32, 1000);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let data = crate::model::linear::Dataset::synthetic(n, d, 0.0, &mut rng);
+        let w = vec![0.0f32; d];
+        let out = rt
+            .execute(
+                "linear_step_n32_d1000",
+                &[
+                    Tensor::F32(data.x.clone()),
+                    Tensor::F32(w),
+                    Tensor::F32(data.y.clone()),
+                    Tensor::F32(vec![0.005]),
+                ],
+            )
+            .unwrap();
+        let w_new = out[0].as_f32().unwrap();
+        let loss = out[1].as_f32().unwrap()[0];
+        assert!(loss > 0.0);
+        assert!(w_new.iter().any(|&x| x != 0.0));
+        // one more step must reduce the loss
+        let out2 = rt
+            .execute(
+                "linear_step_n32_d1000",
+                &[
+                    Tensor::F32(data.x.clone()),
+                    Tensor::F32(w_new.to_vec()),
+                    Tensor::F32(data.y.clone()),
+                    Tensor::F32(vec![0.005]),
+                ],
+            )
+            .unwrap();
+        let loss2 = out2[1].as_f32().unwrap()[0];
+        assert!(loss2 < loss, "{loss} -> {loss2}");
+    }
+
+    #[test]
+    fn call_count_tracks() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.call_count("linear_grad_n128_d100"), 0);
+        let (n, d) = (128, 100);
+        let x = vec![0.0f32; n * d];
+        let w = vec![0.0f32; d];
+        let y = vec![0.0f32; n];
+        rt.execute(
+            "linear_grad_n128_d100",
+            &[Tensor::F32(x), Tensor::F32(w), Tensor::F32(y)],
+        )
+        .unwrap();
+        assert_eq!(rt.call_count("linear_grad_n128_d100"), 1);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.execute("linear_grad_n128_d100", &[]).unwrap_err();
+        assert!(err.to_string().contains("inputs"));
+    }
+}

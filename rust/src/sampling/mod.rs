@@ -1,0 +1,467 @@
+//! The **sampling primitive** — the paper's proposed system primitive.
+//!
+//! Two pieces of information are needed to estimate "what fraction of the
+//! system has passed step s" (paper §3.1):
+//!
+//!  1. an estimate of the total number of nodes;
+//!  2. an estimate of the distribution of the nodes' current steps.
+//!
+//! Both are answered by *sampling*, decoupling barrier control from model
+//! consistency:
+//!
+//! * [`StepTracker`] — the oracle view: a central server's step table with
+//!   O(1) global-min maintenance (the centralised PSP scenario where "PSP
+//!   is as trivial as a counting process").
+//! * [`StepDistribution`] — the estimator a node builds from a sample: the
+//!   empirical CDF of observed steps plus the derived quantities used by
+//!   barrier decisions and by the Section-6 analysis (lag CDF `F(r)`).
+//! * [`OverlaySampler`] (in [`crate::overlay`]) — the fully-distributed
+//!   view provider, drawing uniform node samples from a structured
+//!   overlay without any global state.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Rng;
+
+/// Central step table with incremental min/histogram maintenance.
+///
+/// Supports churn (join/leave) and O(β) sampling from the *active* set.
+/// All engines and the simulator use this as the single source of truth
+/// for node progress; distributed scenarios restrict themselves to the
+/// sampled API.
+#[derive(Debug, Clone)]
+pub struct StepTracker {
+    /// Step of every node ever seen (dense by NodeId).
+    steps: Vec<u64>,
+    /// Whether the node is currently part of the system.
+    active: Vec<bool>,
+    /// Dense list of active node ids (for O(1) uniform sampling).
+    active_ids: Vec<u32>,
+    /// Position of each node id in `active_ids` (usize::MAX = not active).
+    pos: Vec<usize>,
+    /// step -> number of active nodes at that step.
+    hist: BTreeMap<u64, usize>,
+}
+
+impl StepTracker {
+    /// Create a tracker with `n` nodes, all active at step 0.
+    pub fn new(n: usize) -> StepTracker {
+        let mut hist = BTreeMap::new();
+        if n > 0 {
+            hist.insert(0, n);
+        }
+        StepTracker {
+            steps: vec![0; n],
+            active: vec![true; n],
+            active_ids: (0..n as u32).collect(),
+            pos: (0..n).collect(),
+            hist,
+        }
+    }
+
+    /// Number of active nodes.
+    pub fn len(&self) -> usize {
+        self.active_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active_ids.is_empty()
+    }
+
+    /// Total nodes ever registered (dense id space).
+    pub fn capacity(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn step_of(&self, node: usize) -> u64 {
+        self.steps[node]
+    }
+
+    pub fn is_active(&self, node: usize) -> bool {
+        self.active[node]
+    }
+
+    /// Minimum step over active nodes (the BSP/SSP release frontier).
+    pub fn min_step(&self) -> u64 {
+        self.hist.keys().next().copied().unwrap_or(0)
+    }
+
+    /// Maximum step over active nodes.
+    pub fn max_step(&self) -> u64 {
+        self.hist.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Advance a node's step by one; returns the new global min if it
+    /// changed (the simulator uses this to release blocked workers).
+    pub fn advance(&mut self, node: usize) -> Option<u64> {
+        assert!(self.active[node], "advance on inactive node {node}");
+        let old = self.steps[node];
+        let old_min = self.min_step();
+        self.steps[node] = old + 1;
+        self.dec_hist(old);
+        *self.hist.entry(old + 1).or_insert(0) += 1;
+        let new_min = self.min_step();
+        (new_min != old_min).then_some(new_min)
+    }
+
+    /// Register a new node joining at the current minimum step (a fresh
+    /// replica starts from the latest checkpointed frontier). Returns its id.
+    pub fn join(&mut self) -> usize {
+        let id = self.steps.len();
+        let step = self.min_step();
+        self.steps.push(step);
+        self.active.push(true);
+        self.pos.push(self.active_ids.len());
+        self.active_ids.push(id as u32);
+        *self.hist.entry(step).or_insert(0) += 1;
+        id
+    }
+
+    /// Remove a node (churn). Returns the new global min if it changed —
+    /// a departing straggler can release a BSP barrier.
+    pub fn leave(&mut self, node: usize) -> Option<u64> {
+        if !self.active[node] {
+            return None;
+        }
+        let old_min = self.min_step();
+        self.active[node] = false;
+        let p = self.pos[node];
+        let last = *self.active_ids.last().unwrap() as usize;
+        self.active_ids.swap_remove(p);
+        if p < self.active_ids.len() {
+            self.pos[last] = p;
+        }
+        self.pos[node] = usize::MAX;
+        self.dec_hist(self.steps[node]);
+        let new_min = self.min_step();
+        (!self.is_empty() && new_min != old_min).then_some(new_min)
+    }
+
+    fn dec_hist(&mut self, step: u64) {
+        let c = self.hist.get_mut(&step).expect("hist underflow");
+        *c -= 1;
+        if *c == 0 {
+            self.hist.remove(&step);
+        }
+    }
+
+    /// Steps of all active nodes (allocates; global-view engines only).
+    pub fn all_steps(&self) -> Vec<u64> {
+        self.active_ids.iter().map(|&i| self.steps[i as usize]).collect()
+    }
+
+    /// The sampling primitive against the oracle: draw β active nodes
+    /// (excluding `observer` if active) and return the **minimum** step
+    /// observed — sufficient statistic for every barrier in this crate.
+    ///
+    /// Allocation-free given the scratch buffer. Cost model: 2β control
+    /// messages in the distributed setting (query + reply).
+    pub fn sample_min(
+        &self,
+        observer: usize,
+        beta: usize,
+        rng: &mut Rng,
+        scratch: &mut Vec<usize>,
+    ) -> Option<u64> {
+        let n = self.active_ids.len();
+        if n == 0 || beta == 0 {
+            return None;
+        }
+        // Exclude the observer by sampling from n-1 virtual slots and
+        // remapping: slot i >= observer_pos maps to i+1.
+        let obs_pos = if observer < self.pos.len() && self.active[observer] {
+            self.pos[observer]
+        } else {
+            usize::MAX
+        };
+        let pool = if obs_pos != usize::MAX { n - 1 } else { n };
+        if pool == 0 {
+            return None;
+        }
+        rng.sample_into(pool, beta.min(pool), scratch);
+        let mut min = u64::MAX;
+        for &slot in scratch.iter() {
+            let idx = if obs_pos != usize::MAX && slot >= obs_pos {
+                slot + 1
+            } else {
+                slot
+            };
+            let node = self.active_ids[idx] as usize;
+            min = min.min(self.steps[node]);
+        }
+        Some(min)
+    }
+
+    /// Full sampled view (steps, not just min) — used by the estimator.
+    pub fn sample_steps(
+        &self,
+        observer: usize,
+        beta: usize,
+        rng: &mut Rng,
+    ) -> Vec<u64> {
+        let mut scratch = Vec::new();
+        let n = self.active_ids.len();
+        if n == 0 || beta == 0 {
+            return Vec::new();
+        }
+        let obs_pos = if observer < self.pos.len() && self.active[observer] {
+            self.pos[observer]
+        } else {
+            usize::MAX
+        };
+        let pool = if obs_pos != usize::MAX { n - 1 } else { n };
+        if pool == 0 {
+            return Vec::new();
+        }
+        rng.sample_into(pool, beta.min(pool), &mut scratch);
+        scratch
+            .iter()
+            .map(|&slot| {
+                let idx = if obs_pos != usize::MAX && slot >= obs_pos {
+                    slot + 1
+                } else {
+                    slot
+                };
+                self.steps[self.active_ids[idx] as usize]
+            })
+            .collect()
+    }
+}
+
+/// Empirical step/lag distribution built from a sample — the estimator of
+/// paper §3.2 ("investigate the distribution of these observed steps to
+/// derive an estimate of the percentage of nodes which have passed a given
+/// step").
+#[derive(Debug, Clone)]
+pub struct StepDistribution {
+    sorted: Vec<u64>,
+}
+
+impl StepDistribution {
+    pub fn from_sample(mut sample: Vec<u64>) -> StepDistribution {
+        sample.sort_unstable();
+        StepDistribution { sorted: sample }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Estimated fraction of the system with step ≥ `s`.
+    pub fn frac_passed(&self, s: u64) -> f64 {
+        if self.sorted.is_empty() {
+            return 1.0; // no evidence: optimistic (ASP behaviour)
+        }
+        let idx = self.sorted.partition_point(|&x| x < s);
+        (self.sorted.len() - idx) as f64 / self.sorted.len() as f64
+    }
+
+    /// Empirical lag CDF `F(r)` relative to `my_step`: fraction of sampled
+    /// peers lagging at most `r` steps behind — the quantity the Section-6
+    /// bounds are written in.
+    pub fn lag_cdf(&self, my_step: u64, r: u64) -> f64 {
+        if self.sorted.is_empty() {
+            return 1.0;
+        }
+        let passing = self
+            .sorted
+            .iter()
+            .filter(|&&s| my_step.saturating_sub(s) <= r)
+            .count();
+        passing as f64 / self.sorted.len() as f64
+    }
+
+    /// Threshold-style decision (paper §3.2): advance if at least
+    /// `quorum` fraction of the sample has passed `my_step - staleness`.
+    /// With quorum = 1.0 this is exactly pSSP; lower quorums give the
+    /// "percentage barrier" generalisation discussed in §3.1.
+    pub fn quorum_advance(&self, my_step: u64, staleness: u64, quorum: f64) -> bool {
+        self.lag_cdf(my_step, staleness) >= quorum
+    }
+}
+
+/// Estimate the total system size from observed id density in a hash ring
+/// (paper §3.2: "the total number of nodes can be estimated by the density
+/// of each zone"). Given the `k` nearest ids within a zone spanning
+/// `zone_frac` of the ring, the MLE of the population is `k / zone_frac`.
+pub fn estimate_system_size(ids_in_zone: usize, zone_frac: f64) -> f64 {
+    assert!(zone_frac > 0.0 && zone_frac <= 1.0);
+    ids_in_zone as f64 / zone_frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    #[test]
+    fn tracker_basic_advance_and_min() {
+        let mut t = StepTracker::new(3);
+        assert_eq!(t.min_step(), 0);
+        assert_eq!(t.advance(0), None); // min still 0 (nodes 1,2 at 0)
+        assert_eq!(t.advance(1), None);
+        assert_eq!(t.advance(2), Some(1)); // all at 1 now
+        assert_eq!(t.min_step(), 1);
+        assert_eq!(t.max_step(), 1);
+    }
+
+    #[test]
+    fn tracker_join_starts_at_frontier() {
+        let mut t = StepTracker::new(2);
+        t.advance(0);
+        t.advance(1);
+        t.advance(0);
+        let id = t.join();
+        assert_eq!(t.step_of(id), 1); // joins at min
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn tracker_leave_releases_min() {
+        let mut t = StepTracker::new(3);
+        t.advance(0);
+        t.advance(1);
+        // node 2 is the straggler at step 0
+        assert_eq!(t.min_step(), 0);
+        assert_eq!(t.leave(2), Some(1));
+        assert_eq!(t.min_step(), 1);
+        assert_eq!(t.len(), 2);
+        // leaving twice is a no-op
+        assert_eq!(t.leave(2), None);
+    }
+
+    #[test]
+    fn tracker_sample_excludes_observer() {
+        let mut t = StepTracker::new(5);
+        for _ in 0..7 {
+            t.advance(0); // node 0 races ahead
+        }
+        let mut rng = Rng::new(1);
+        let mut scratch = Vec::new();
+        // Node 0 samples everyone else; their steps are all 0.
+        for _ in 0..50 {
+            let m = t.sample_min(0, 4, &mut rng, &mut scratch).unwrap();
+            assert_eq!(m, 0);
+        }
+        // Another node sampling 4-of-4 peers must see node 0's step 7.
+        let mut seen7 = false;
+        for _ in 0..50 {
+            let v = t.sample_steps(1, 4, &mut rng);
+            assert_eq!(v.len(), 4);
+            seen7 |= v.contains(&7);
+        }
+        assert!(seen7);
+    }
+
+    #[test]
+    fn tracker_sample_beta_zero_is_none() {
+        let t = StepTracker::new(4);
+        let mut rng = Rng::new(2);
+        let mut s = Vec::new();
+        assert_eq!(t.sample_min(0, 0, &mut rng, &mut s), None);
+    }
+
+    #[test]
+    fn tracker_single_node_sample_is_none() {
+        let t = StepTracker::new(1);
+        let mut rng = Rng::new(3);
+        let mut s = Vec::new();
+        assert_eq!(t.sample_min(0, 5, &mut rng, &mut s), None);
+    }
+
+    #[test]
+    fn prop_hist_matches_steps() {
+        property("tracker histogram consistent", 100, |g| {
+            let n = g.usize_in(1, 40);
+            let ops = g.usize_in(0, 200);
+            let mut t = StepTracker::new(n);
+            let mut rng = g.rng();
+            for _ in 0..ops {
+                let node = rng.next_below(t.capacity() as u64) as usize;
+                match rng.next_below(10) {
+                    0 => {
+                        t.leave(node);
+                    }
+                    1 => {
+                        t.join();
+                    }
+                    _ => {
+                        if t.is_active(node) {
+                            t.advance(node);
+                        }
+                    }
+                }
+            }
+            if !t.is_empty() {
+                let steps = t.all_steps();
+                assert_eq!(
+                    t.min_step(),
+                    *steps.iter().min().unwrap(),
+                    "min mismatch"
+                );
+                assert_eq!(
+                    t.max_step(),
+                    *steps.iter().max().unwrap(),
+                    "max mismatch"
+                );
+                assert_eq!(t.len(), steps.len());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sample_min_ge_global_min() {
+        property("sampled min ≥ global min", 100, |g| {
+            let n = g.usize_in(2, 50);
+            let beta = g.usize_in(1, n);
+            let mut t = StepTracker::new(n);
+            let mut rng = g.rng();
+            for _ in 0..g.usize_in(0, 100) {
+                let node = rng.next_below(n as u64) as usize;
+                t.advance(node);
+            }
+            let mut scratch = Vec::new();
+            if let Some(m) = t.sample_min(0, beta, &mut rng, &mut scratch) {
+                assert!(m >= t.min_step());
+            }
+        });
+    }
+
+    #[test]
+    fn distribution_frac_passed() {
+        let d = StepDistribution::from_sample(vec![1, 2, 2, 3, 10]);
+        assert_eq!(d.frac_passed(0), 1.0);
+        assert_eq!(d.frac_passed(2), 0.8);
+        assert_eq!(d.frac_passed(3), 0.4);
+        assert_eq!(d.frac_passed(11), 0.0);
+    }
+
+    #[test]
+    fn distribution_lag_cdf() {
+        let d = StepDistribution::from_sample(vec![5, 7, 9]);
+        assert_eq!(d.lag_cdf(9, 0), 1.0 / 3.0);
+        assert_eq!(d.lag_cdf(9, 2), 2.0 / 3.0);
+        assert_eq!(d.lag_cdf(9, 4), 1.0);
+        // quorum: pSSP is quorum=1.0
+        assert!(d.quorum_advance(9, 4, 1.0));
+        assert!(!d.quorum_advance(9, 2, 1.0));
+        assert!(d.quorum_advance(9, 2, 0.5));
+    }
+
+    #[test]
+    fn empty_distribution_is_optimistic() {
+        let d = StepDistribution::from_sample(vec![]);
+        assert_eq!(d.frac_passed(100), 1.0);
+        assert!(d.quorum_advance(100, 0, 1.0)); // β=0 == ASP
+    }
+
+    #[test]
+    fn system_size_estimator() {
+        // 10 ids observed in 1% of the ring => ~1000 nodes.
+        assert_eq!(estimate_system_size(10, 0.01), 1000.0);
+    }
+}

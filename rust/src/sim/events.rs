@@ -1,0 +1,150 @@
+//! Event queue for the discrete-event simulator.
+//!
+//! A binary heap keyed by (time, sequence). The sequence number breaks
+//! ties deterministically (FIFO among simultaneous events), which makes
+//! whole simulations bit-reproducible from their seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A worker finished computing its current step.
+    ComputeDone { node: usize },
+    /// A blocked sampled-barrier worker re-samples its view.
+    /// `step` guards against stale rechecks after the node advanced.
+    Recheck { node: usize, step: u64 },
+    /// A worker's pushed update reaches the server.
+    UpdateArrive { node: usize },
+    /// A globally-blocked worker is released by a rising minimum.
+    Release { node: usize },
+    /// Periodic timeline sampling tick.
+    SampleTimeline,
+    /// Churn: a new node joins.
+    Join,
+    /// Churn: a random node leaves.
+    Leave,
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so the earliest event pops first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of events with deterministic tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(1024), seq: 0 }
+    }
+
+    /// Schedule `kind` at absolute time `time` (seconds).
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::SampleTimeline);
+        q.push(1.0, EventKind::Join);
+        q.push(2.0, EventKind::Leave);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Join);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Leave);
+        assert_eq!(q.pop().unwrap().kind, EventKind::SampleTimeline);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for node in 0..10 {
+            q.push(1.0, EventKind::ComputeDone { node });
+        }
+        for node in 0..10 {
+            assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone { node });
+        }
+    }
+
+    #[test]
+    fn prop_monotone_pop_order() {
+        property("event queue pops monotone times", 100, |g| {
+            let mut q = EventQueue::new();
+            let n = g.usize_in(0, 200);
+            for _ in 0..n {
+                q.push(g.f64_in(0.0, 100.0), EventKind::SampleTimeline);
+            }
+            let mut last = -1.0;
+            while let Some(e) = q.pop() {
+                assert!(e.time >= last);
+                last = e.time;
+            }
+        });
+    }
+
+    #[test]
+    fn len_tracks_push_pop() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, EventKind::Join);
+        q.push(2.0, EventKind::Leave);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

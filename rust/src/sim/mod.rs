@@ -1,0 +1,781 @@
+//! Deterministic discrete-event simulator of the paper's evaluation
+//! cluster (Section 5): N heterogeneous workers running distributed SGD
+//! under a configurable barrier control method, with stragglers, churn
+//! and network delays.
+//!
+//! The *same barrier code* ([`crate::barrier`]) drives both this simulator
+//! and the live thread-based engines ([`crate::engine`]); the simulator
+//! exists so that the 100–1000-node sweeps behind every figure are exact,
+//! fast and reproducible from a seed.
+//!
+//! ## Worker lifecycle
+//!
+//! ```text
+//!   pull model snapshot ──► compute for D ~ iter-time dist ──► push update
+//!        ▲                                                        │
+//!        └──────────── barrier decision (may wait) ◄──────────────┘
+//! ```
+//!
+//! * Global-view methods (BSP/SSP) block until the tracked global minimum
+//!   step reaches `my_step − θ`; releases are event-driven via the
+//!   [`StepTracker`] incremental minimum (no polling).
+//! * Sampled methods (pBSP/pSSP) draw a fresh β-sample per attempt; a
+//!   failed attempt schedules a re-check after `recheck_interval`
+//!   (a real node would poll its sampled peers the same way). Each
+//!   attempt costs 2β control messages.
+//! * ASP never blocks.
+//!
+//! ## Optional real SGD (`SgdConfig`)
+//!
+//! With SGD enabled each worker holds the model snapshot it pulled when
+//! its iteration started and, on completion, pushes the *actual* MSE
+//! gradient of a minibatch drawn from a shared synthetic dataset
+//! (generated from a ground-truth parameter vector). The server applies
+//! updates on arrival. This reproduces the paper's Fig 1d/2b error
+//! metric: `‖w_server − w_true‖₂` normalised by its initial value.
+
+mod events;
+
+pub use events::{Event, EventKind, EventQueue};
+
+use crate::barrier::{BarrierControl, Method, ViewRequirement};
+use crate::model::linear::{Dataset, LinearModel};
+use crate::sampling::StepTracker;
+use crate::util::rng::Rng;
+
+/// Iteration-time distribution family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TimeDist {
+    /// Exponential with the node's mean (heavy spread — default; matches
+    /// the wide ASP dispersion in Fig 1a).
+    Exponential,
+    /// Normal with coefficient of variation `cv`, truncated at mean/10.
+    Normal { cv: f64 },
+    /// Pareto with given shape (>1), scaled to the node's mean
+    /// (heavy-tailed stragglers "in distribution" rather than injected).
+    Pareto { shape: f64 },
+}
+
+impl TimeDist {
+    fn sample(self, mean: f64, rng: &mut Rng) -> f64 {
+        match self {
+            TimeDist::Exponential => rng.exponential(mean),
+            TimeDist::Normal { cv } => {
+                rng.normal_with(mean, mean * cv).max(mean / 10.0)
+            }
+            TimeDist::Pareto { shape } => {
+                // scale so that E[X] = mean: E = scale*shape/(shape-1)
+                let scale = mean * (shape - 1.0) / shape;
+                rng.pareto(scale, shape)
+            }
+        }
+    }
+}
+
+/// Churn model: Poisson join/leave processes.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnConfig {
+    /// Mean joins per simulated second.
+    pub join_rate: f64,
+    /// Mean leaves per simulated second.
+    pub leave_rate: f64,
+}
+
+/// Straggler injection (paper Fig 2): a fraction of nodes run `slowdown`×
+/// slower on average.
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerConfig {
+    pub fraction: f64,
+    pub slowdown: f64,
+}
+
+/// Real-SGD workload attached to the simulation (Fig 1d/1e/2b).
+#[derive(Debug, Clone)]
+pub struct SgdConfig {
+    /// Model dimension (paper: 1000).
+    pub dim: usize,
+    /// Minibatch rows per worker iteration.
+    pub batch: usize,
+    /// Shared synthetic dataset rows.
+    pub pool: usize,
+    /// Per-*round* cluster learning rate: each individual worker update
+    /// applies `lr / P`. This is the standard data-parallel scaling —
+    /// under BSP all P workers push gradients computed at the same
+    /// snapshot, so an unscaled per-update rate would multiply the
+    /// effective step by P and diverge for large clusters.
+    pub lr: f32,
+    /// Observation noise in the synthetic data.
+    pub noise: f32,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { dim: 1000, batch: 32, pool: 4096, lr: 0.5, noise: 0.1 }
+    }
+}
+
+/// Full cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub n_nodes: usize,
+    pub seed: u64,
+    /// Simulated horizon in seconds (paper: 40).
+    pub duration: f64,
+    /// Base mean iteration time (seconds).
+    pub mean_iter_time: f64,
+    /// Per-node speed heterogeneity: node base mean is drawn uniformly
+    /// from `mean_iter_time * [1-jitter, 1+jitter]`.
+    pub speed_jitter: f64,
+    pub iter_dist: TimeDist,
+    pub stragglers: Option<StragglerConfig>,
+    /// Mean one-way network delay for update messages (exponential).
+    pub net_delay_mean: f64,
+    /// Probability an update message is lost in transit (unreliable
+    /// wide-area links, §3). Lost updates are counted separately; barrier
+    /// progress is unaffected (control plane has its own retries).
+    pub loss_rate: f64,
+    /// Back-off before a blocked sampled-barrier worker re-samples.
+    pub recheck_interval: f64,
+    pub churn: Option<ChurnConfig>,
+    /// Record timelines every this many simulated seconds.
+    pub sample_interval: f64,
+    pub sgd: Option<SgdConfig>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_nodes: 1000,
+            seed: 42,
+            duration: 40.0,
+            mean_iter_time: 1.0,
+            speed_jitter: 0.3,
+            iter_dist: TimeDist::Exponential,
+            stragglers: None,
+            net_delay_mean: 0.05,
+            loss_rate: 0.0,
+            recheck_interval: 0.25,
+            churn: None,
+            sample_interval: 5.0,
+            sgd: None,
+        }
+    }
+}
+
+/// Everything the experiment harness needs from one run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Barrier method simulated.
+    pub method: Method,
+    /// Final step of every node active at the end.
+    pub final_steps: Vec<u64>,
+    /// (time, cumulative update messages received by the server).
+    pub updates_timeline: Vec<(f64, u64)>,
+    /// (time, normalised model error) — only when SGD is enabled.
+    pub error_timeline: Vec<(f64, f64)>,
+    /// Total update messages received by the server.
+    pub update_msgs: u64,
+    /// Update messages lost in transit (loss_rate > 0).
+    pub lost_msgs: u64,
+    /// Total control messages (barrier state reports + sampling traffic).
+    pub control_msgs: u64,
+    /// Total barrier crossings (sum over nodes of steps taken).
+    pub total_advances: u64,
+    /// Discrete events processed (simulator throughput metric).
+    pub events: u64,
+    /// Host wall-clock seconds spent simulating (perf metric).
+    pub wall_secs: f64,
+}
+
+impl SimResult {
+    pub fn mean_progress(&self) -> f64 {
+        crate::util::stats::mean(
+            &self.final_steps.iter().map(|&s| s as f64).collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn final_error(&self) -> Option<f64> {
+        self.error_timeline.last().map(|&(_, e)| e)
+    }
+}
+
+/// Node runtime status.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Status {
+    /// Computing; will finish at the stored time.
+    Computing,
+    /// Finished compute, blocked at the barrier.
+    Blocked,
+    /// Departed (churn).
+    Gone,
+}
+
+struct NodeState {
+    status: Status,
+    /// Mean iteration time for this node (includes straggler slowdown).
+    mean_iter: f64,
+    /// Model snapshot pulled at iteration start (SGD mode only).
+    snapshot: Vec<f32>,
+    /// Minibatch seed for the in-flight iteration.
+    batch_seed: u64,
+}
+
+/// The simulator. Construct with [`Simulator::new`], run with
+/// [`Simulator::run`]; one instance per (config, method) pair.
+pub struct Simulator {
+    cfg: ClusterConfig,
+    method: Method,
+    barrier: Box<dyn BarrierControl>,
+}
+
+impl Simulator {
+    pub fn new(cfg: ClusterConfig, method: Method) -> Simulator {
+        Simulator { barrier: method.build(), cfg, method }
+    }
+
+    /// Run the simulation to the configured horizon.
+    pub fn run(&self) -> SimResult {
+        let start = std::time::Instant::now();
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed);
+        let mut queue = EventQueue::new();
+        let mut tracker = StepTracker::new(cfg.n_nodes);
+        let mut scratch: Vec<usize> = Vec::new();
+
+        // SGD state (optional).
+        let mut sgd = cfg
+            .sgd
+            .as_ref()
+            .map(|s| SgdState::new(s, cfg.n_nodes, &mut rng));
+
+        // Per-node state.
+        let mut nodes: Vec<NodeState> = (0..cfg.n_nodes)
+            .map(|i| {
+                let mut mean = cfg.mean_iter_time
+                    * rng.uniform(1.0 - cfg.speed_jitter, 1.0 + cfg.speed_jitter);
+                if let Some(st) = cfg.stragglers {
+                    // First ⌊fraction·n⌋ nodes are the stragglers; the seeded
+                    // uniform speed draw above keeps them otherwise typical.
+                    if (i as f64) < st.fraction * cfg.n_nodes as f64 {
+                        mean *= st.slowdown;
+                    }
+                }
+                NodeState {
+                    status: Status::Computing,
+                    mean_iter: mean,
+                    snapshot: Vec::new(),
+                    batch_seed: 0,
+                }
+            })
+            .collect();
+
+        // Kick off: every node starts computing step 0 at t=0.
+        for (i, node) in nodes.iter_mut().enumerate() {
+            if let Some(s) = sgd.as_mut() {
+                node.snapshot = s.server_w.clone();
+                node.batch_seed = rng.next_u64();
+            }
+            let d = cfg.iter_dist.sample(node.mean_iter, &mut rng);
+            queue.push(d, EventKind::ComputeDone { node: i });
+        }
+        // Timeline sampling ticks.
+        let mut tick = cfg.sample_interval;
+        while tick <= cfg.duration + 1e-9 {
+            queue.push(tick, EventKind::SampleTimeline);
+            tick += cfg.sample_interval;
+        }
+        // Churn processes.
+        if let Some(churn) = cfg.churn {
+            if churn.join_rate > 0.0 {
+                queue.push(rng.exponential(1.0 / churn.join_rate), EventKind::Join);
+            }
+            if churn.leave_rate > 0.0 {
+                queue.push(rng.exponential(1.0 / churn.leave_rate), EventKind::Leave);
+            }
+        }
+
+        // Blocked bookkeeping.
+        // Global methods: required-min-step -> blocked node list.
+        let mut blocked_global: std::collections::BTreeMap<u64, Vec<u32>> =
+            std::collections::BTreeMap::new();
+
+        let mut update_msgs: u64 = 0;
+        let mut lost_msgs: u64 = 0;
+        let mut control_msgs: u64 = 0;
+        let mut total_advances: u64 = 0;
+        let mut events: u64 = 0;
+        let mut updates_timeline = Vec::new();
+        let mut error_timeline = Vec::new();
+
+        let staleness = self.barrier.staleness();
+        let is_global = matches!(self.barrier.view(), ViewRequirement::Global);
+
+        while let Some(ev) = queue.pop() {
+            if ev.time > cfg.duration {
+                break;
+            }
+            events += 1;
+            let t = ev.time;
+            match ev.kind {
+                EventKind::ComputeDone { node } => {
+                    if nodes[node].status == Status::Gone {
+                        continue;
+                    }
+                    // Push the update for the just-finished step; lossy
+                    // links may drop it (the server never sees it).
+                    if cfg.loss_rate > 0.0 && rng.bernoulli(cfg.loss_rate) {
+                        lost_msgs += 1;
+                    } else {
+                        update_msgs += 1;
+                        let delay = rng.exponential(cfg.net_delay_mean);
+                        queue.push(t + delay, EventKind::UpdateArrive { node });
+                    }
+                    // Global methods: one step-report control message.
+                    if is_global {
+                        control_msgs += 1;
+                    }
+                    // Barrier decision.
+                    self.try_advance(
+                        node, t, &mut nodes, &mut tracker, &mut rng, &mut scratch,
+                        &mut queue, &mut blocked_global, &mut control_msgs,
+                        &mut total_advances, &mut sgd, staleness,
+                    );
+                }
+                EventKind::Recheck { node, step } => {
+                    if nodes[node].status != Status::Blocked
+                        || tracker.step_of(node) != step
+                    {
+                        continue; // stale recheck
+                    }
+                    self.try_advance(
+                        node, t, &mut nodes, &mut tracker, &mut rng, &mut scratch,
+                        &mut queue, &mut blocked_global, &mut control_msgs,
+                        &mut total_advances, &mut sgd, staleness,
+                    );
+                }
+                EventKind::UpdateArrive { node } => {
+                    if let Some(s) = sgd.as_mut() {
+                        s.apply_update(node, &nodes);
+                    }
+                }
+                EventKind::SampleTimeline => {
+                    updates_timeline.push((t, update_msgs));
+                    if let Some(s) = sgd.as_ref() {
+                        error_timeline.push((t, s.normalised_error()));
+                    }
+                }
+                EventKind::Join => {
+                    let id = tracker.join();
+                    nodes.push(NodeState {
+                        status: Status::Computing,
+                        mean_iter: cfg.mean_iter_time
+                            * rng.uniform(
+                                1.0 - cfg.speed_jitter,
+                                1.0 + cfg.speed_jitter,
+                            ),
+                        snapshot: sgd
+                            .as_ref()
+                            .map(|s| s.server_w.clone())
+                            .unwrap_or_default(),
+                        batch_seed: rng.next_u64(),
+                    });
+                    let d = cfg.iter_dist.sample(nodes[id].mean_iter, &mut rng);
+                    queue.push(t + d, EventKind::ComputeDone { node: id });
+                    if let Some(churn) = cfg.churn {
+                        queue.push(
+                            t + rng.exponential(1.0 / churn.join_rate),
+                            EventKind::Join,
+                        );
+                    }
+                }
+                EventKind::Leave => {
+                    // Pick a random active victim.
+                    if tracker.len() > 1 {
+                        let victims = tracker.len();
+                        let k = rng.next_below(victims as u64) as usize;
+                        // map k-th active -> node id
+                        let victim = (0..nodes.len())
+                            .filter(|&i| tracker.is_active(i))
+                            .nth(k)
+                            .unwrap();
+                        nodes[victim].status = Status::Gone;
+                        if let Some(new_min) = tracker.leave(victim) {
+                            release_blocked(
+                                new_min, t, &mut blocked_global, &mut queue,
+                            );
+                        }
+                    }
+                    if let Some(churn) = cfg.churn {
+                        queue.push(
+                            t + rng.exponential(1.0 / churn.leave_rate),
+                            EventKind::Leave,
+                        );
+                    }
+                }
+                EventKind::Release { node } => {
+                    if nodes[node].status != Status::Blocked {
+                        continue;
+                    }
+                    self.advance_now(
+                        node, t, &mut nodes, &mut tracker, &mut rng, &mut queue,
+                        &mut blocked_global, &mut total_advances, &mut sgd,
+                        &mut control_msgs,
+                    );
+                }
+            }
+        }
+
+        let final_steps = (0..nodes.len())
+            .filter(|&i| tracker.is_active(i))
+            .map(|i| tracker.step_of(i))
+            .collect();
+        SimResult {
+            method: self.method,
+            final_steps,
+            updates_timeline,
+            error_timeline,
+            update_msgs,
+            lost_msgs,
+            control_msgs,
+            total_advances,
+            events,
+            wall_secs: start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Evaluate the barrier for `node` (at barrier after finishing its
+    /// step) and either advance it or park it (blocked map / recheck).
+    #[allow(clippy::too_many_arguments)]
+    fn try_advance(
+        &self,
+        node: usize,
+        t: f64,
+        nodes: &mut [NodeState],
+        tracker: &mut StepTracker,
+        rng: &mut Rng,
+        scratch: &mut Vec<usize>,
+        queue: &mut EventQueue,
+        blocked_global: &mut std::collections::BTreeMap<u64, Vec<u32>>,
+        control_msgs: &mut u64,
+        total_advances: &mut u64,
+        sgd: &mut Option<SgdState>,
+        staleness: u64,
+    ) {
+        let my_step = tracker.step_of(node);
+        let pass = match self.barrier.view() {
+            ViewRequirement::None => true,
+            ViewRequirement::Global => tracker.min_step() + staleness >= my_step,
+            ViewRequirement::Sample(beta) => {
+                *control_msgs += 2 * beta as u64; // query + reply per peer
+                if self.barrier.min_view_sufficient() {
+                    match tracker.sample_min(node, beta, rng, scratch) {
+                        None => true, // no peers observable => ASP semantics
+                        Some(min) => min + staleness >= my_step,
+                    }
+                } else {
+                    // quorum-style predicates need the full sampled view
+                    let view = tracker.sample_steps(node, beta, rng);
+                    self.barrier.can_advance(my_step, &view)
+                }
+            }
+        };
+        if pass {
+            self.advance_now(
+                node, t, nodes, tracker, rng, queue, blocked_global,
+                total_advances, sgd, control_msgs,
+            );
+        } else {
+            nodes[node].status = Status::Blocked;
+            match self.barrier.view() {
+                ViewRequirement::Global => {
+                    // Release when global min reaches my_step - θ.
+                    let threshold = my_step.saturating_sub(staleness);
+                    blocked_global.entry(threshold).or_default().push(node as u32);
+                }
+                ViewRequirement::Sample(_) => {
+                    // Re-sample after a back-off (with ±50% jitter so
+                    // blocked nodes don't re-check in lockstep).
+                    let back = self.cfg.recheck_interval * rng.uniform(0.5, 1.5);
+                    queue.push(t + back, EventKind::Recheck { node, step: my_step });
+                }
+                ViewRequirement::None => unreachable!("ASP never blocks"),
+            }
+        }
+    }
+
+    /// Cross the barrier: advance the step, start the next iteration, and
+    /// release any globally-blocked nodes the new minimum unblocks.
+    #[allow(clippy::too_many_arguments)]
+    fn advance_now(
+        &self,
+        node: usize,
+        t: f64,
+        nodes: &mut [NodeState],
+        tracker: &mut StepTracker,
+        rng: &mut Rng,
+        queue: &mut EventQueue,
+        blocked_global: &mut std::collections::BTreeMap<u64, Vec<u32>>,
+        total_advances: &mut u64,
+        sgd: &mut Option<SgdState>,
+        control_msgs: &mut u64,
+    ) {
+        *total_advances += 1;
+        nodes[node].status = Status::Computing;
+        // Pull a fresh snapshot for the next iteration.
+        if let Some(s) = sgd.as_mut() {
+            nodes[node].snapshot.clone_from(&s.server_w);
+            nodes[node].batch_seed = rng.next_u64();
+        }
+        let d = self.cfg.iter_dist.sample(nodes[node].mean_iter, rng);
+        queue.push(t + d, EventKind::ComputeDone { node });
+        if let Some(new_min) = tracker.advance(node) {
+            // A rising minimum is broadcast to blocked nodes; count one
+            // control message per released node (the release notification).
+            let released = release_blocked(new_min, t, blocked_global, queue);
+            *control_msgs += released;
+        }
+    }
+}
+
+/// Move all globally-blocked nodes whose threshold the new minimum
+/// satisfies onto the event queue (Release events at the current time).
+/// Returns how many were released.
+fn release_blocked(
+    new_min: u64,
+    t: f64,
+    blocked_global: &mut std::collections::BTreeMap<u64, Vec<u32>>,
+    queue: &mut EventQueue,
+) -> u64 {
+    let mut released = 0;
+    loop {
+        let Some((&thr, _)) = blocked_global.iter().next() else { break };
+        if thr > new_min {
+            break;
+        }
+        let list = blocked_global.remove(&thr).unwrap();
+        for node in list {
+            queue.push(t, EventKind::Release { node: node as usize });
+            released += 1;
+        }
+    }
+    released
+}
+
+/// Server-side SGD state over the shared synthetic dataset.
+struct SgdState {
+    model: LinearModel,
+    data: Dataset,
+    server_w: Vec<f32>,
+    w_true: Vec<f32>,
+    init_error: f64,
+    lr: f32,
+    batch: usize,
+}
+
+impl SgdState {
+    fn new(cfg: &SgdConfig, n_nodes: usize, rng: &mut Rng) -> SgdState {
+        let data = Dataset::synthetic(cfg.pool, cfg.dim, cfg.noise, rng);
+        let server_w = vec![0.0f32; cfg.dim];
+        let init_error = crate::util::stats::l2_dist(&server_w, &data.w_true);
+        SgdState {
+            model: LinearModel::new(cfg.dim),
+            w_true: data.w_true.clone(),
+            data,
+            server_w,
+            init_error,
+            // per-update rate = per-round rate / P (see SgdConfig::lr)
+            lr: cfg.lr / n_nodes.max(1) as f32,
+            batch: cfg.batch,
+        }
+    }
+
+    /// Apply the update node `node` computed against its snapshot.
+    fn apply_update(&mut self, node: usize, nodes: &[NodeState]) {
+        let st = &nodes[node];
+        if st.snapshot.is_empty() {
+            return;
+        }
+        let grad = self.model.minibatch_grad(
+            &self.data,
+            &st.snapshot,
+            st.batch_seed,
+            self.batch,
+        );
+        for (w, g) in self.server_w.iter_mut().zip(grad) {
+            *w -= self.lr * g;
+        }
+    }
+
+    fn normalised_error(&self) -> f64 {
+        crate::util::stats::l2_dist(&self.server_w, &self.w_true) / self.init_error
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(n: usize, seed: u64) -> ClusterConfig {
+        ClusterConfig {
+            n_nodes: n,
+            seed,
+            duration: 20.0,
+            mean_iter_time: 1.0,
+            ..ClusterConfig::default()
+        }
+    }
+
+    fn run(cfg: ClusterConfig, m: Method) -> SimResult {
+        Simulator::new(cfg, m).run()
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(tiny_cfg(50, 7), Method::Pssp { sample: 5, staleness: 2 });
+        let b = run(tiny_cfg(50, 7), Method::Pssp { sample: 5, staleness: 2 });
+        assert_eq!(a.final_steps, b.final_steps);
+        assert_eq!(a.update_msgs, b.update_msgs);
+        assert_eq!(a.control_msgs, b.control_msgs);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = run(tiny_cfg(50, 1), Method::Asp);
+        let b = run(tiny_cfg(50, 2), Method::Asp);
+        assert_ne!(a.final_steps, b.final_steps);
+    }
+
+    #[test]
+    fn bsp_is_lockstep() {
+        let r = run(tiny_cfg(40, 3), Method::Bsp);
+        let min = *r.final_steps.iter().min().unwrap();
+        let max = *r.final_steps.iter().max().unwrap();
+        assert!(max - min <= 1, "BSP spread {min}..{max}");
+    }
+
+    #[test]
+    fn ssp_respects_staleness_bound() {
+        for staleness in [0u64, 2, 4, 8] {
+            let r = run(tiny_cfg(40, 4), Method::Ssp { staleness });
+            let min = *r.final_steps.iter().min().unwrap();
+            let max = *r.final_steps.iter().max().unwrap();
+            assert!(
+                max - min <= staleness + 1,
+                "SSP(θ={staleness}) spread {min}..{max}"
+            );
+        }
+    }
+
+    #[test]
+    fn asp_fastest_bsp_slowest() {
+        let bsp = run(tiny_cfg(60, 5), Method::Bsp);
+        let ssp = run(tiny_cfg(60, 5), Method::Ssp { staleness: 4 });
+        let asp = run(tiny_cfg(60, 5), Method::Asp);
+        assert!(asp.mean_progress() > ssp.mean_progress());
+        assert!(ssp.mean_progress() > bsp.mean_progress());
+    }
+
+    #[test]
+    fn pbsp_between_asp_and_bsp() {
+        let bsp = run(tiny_cfg(60, 6), Method::Bsp);
+        let asp = run(tiny_cfg(60, 6), Method::Asp);
+        let pbsp = run(tiny_cfg(60, 6), Method::Pbsp { sample: 5 });
+        assert!(pbsp.mean_progress() >= bsp.mean_progress());
+        assert!(pbsp.mean_progress() <= asp.mean_progress());
+    }
+
+    #[test]
+    fn pbsp_sample_zero_equals_asp_progress() {
+        let asp = run(tiny_cfg(40, 8), Method::Asp);
+        let p0 = run(tiny_cfg(40, 8), Method::Pbsp { sample: 0 });
+        // identical rng consumption => identical trajectories
+        assert_eq!(asp.final_steps, p0.final_steps);
+    }
+
+    #[test]
+    fn update_messages_counted() {
+        let r = run(tiny_cfg(30, 9), Method::Asp);
+        assert_eq!(r.update_msgs, r.total_advances + pending_updates(&r));
+        assert!(r.update_msgs > 0);
+        // timeline is monotone
+        for w in r.updates_timeline.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    /// updates pushed == advances + nodes that pushed but stayed blocked/
+    /// in-flight at the horizon; bound the difference by node count.
+    fn pending_updates(r: &SimResult) -> u64 {
+        r.update_msgs - r.total_advances
+    }
+
+    #[test]
+    fn sampled_methods_cost_control_messages() {
+        let pbsp = run(tiny_cfg(40, 10), Method::Pbsp { sample: 8 });
+        assert!(pbsp.control_msgs >= 16 * pbsp.total_advances / 2);
+        let asp = run(tiny_cfg(40, 10), Method::Asp);
+        assert_eq!(asp.control_msgs, 0);
+    }
+
+    #[test]
+    fn stragglers_slow_bsp_more_than_asp() {
+        let mk = |st| ClusterConfig {
+            stragglers: st,
+            ..tiny_cfg(60, 11)
+        };
+        let some = Some(StragglerConfig { fraction: 0.1, slowdown: 4.0 });
+        let bsp_clean = run(mk(None), Method::Bsp).mean_progress();
+        let bsp_slow = run(mk(some), Method::Bsp).mean_progress();
+        let asp_clean = run(mk(None), Method::Asp).mean_progress();
+        let asp_slow = run(mk(some), Method::Asp).mean_progress();
+        let bsp_ratio = bsp_slow / bsp_clean;
+        let asp_ratio = asp_slow / asp_clean;
+        assert!(
+            bsp_ratio < asp_ratio,
+            "BSP ratio {bsp_ratio} should drop below ASP ratio {asp_ratio}"
+        );
+    }
+
+    #[test]
+    fn sgd_error_decreases() {
+        let cfg = ClusterConfig {
+            sgd: Some(SgdConfig { dim: 100, ..SgdConfig::default() }),
+            ..tiny_cfg(30, 12)
+        };
+        let r = run(cfg, Method::Pssp { sample: 5, staleness: 4 });
+        let first = r.error_timeline.first().unwrap().1;
+        let last = r.error_timeline.last().unwrap().1;
+        assert!(last < first, "error should decrease: {first} -> {last}");
+        assert!(last < 0.9, "normalised error {last}");
+    }
+
+    #[test]
+    fn churn_keeps_running() {
+        let cfg = ClusterConfig {
+            churn: Some(ChurnConfig { join_rate: 0.5, leave_rate: 0.5 }),
+            ..tiny_cfg(30, 13)
+        };
+        for m in Method::paper_five(5, 4) {
+            let r = run(cfg.clone(), m);
+            assert!(!r.final_steps.is_empty());
+            assert!(r.total_advances > 0, "{m}: no progress under churn");
+        }
+    }
+
+    #[test]
+    fn single_node_cluster_progresses_under_all_methods() {
+        for m in Method::paper_five(5, 4) {
+            let r = run(tiny_cfg(1, 14), m);
+            assert!(r.final_steps[0] > 0, "{m}");
+        }
+    }
+
+    #[test]
+    fn zero_duration_produces_no_events() {
+        let cfg = ClusterConfig { duration: 0.0, ..tiny_cfg(10, 15) };
+        let r = run(cfg, Method::Asp);
+        assert_eq!(r.total_advances, 0);
+        assert!(r.final_steps.iter().all(|&s| s == 0));
+    }
+}

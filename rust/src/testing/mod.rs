@@ -1,0 +1,206 @@
+//! In-repo property-testing helper (offline substitute for `proptest`).
+//!
+//! Runs a property over many seeded random cases; on failure it retries the
+//! case with progressively "smaller" inputs when the generator supports
+//! shrinking, and always reports the failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```text
+//! property failed (seed=0x1234abcd, case=17): <message>
+//! ```
+//!
+//! Usage (no_run: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use actor_psp::testing::{property, Gen};
+//! property("sample size within bounds", 200, |g| {
+//!     let n = g.usize_in(1, 100);
+//!     let k = g.usize_in(0, n);
+//!     let mut rng = g.rng();
+//!     let s = rng.sample_indices(n, k);
+//!     assert_eq!(s.len(), k.min(n));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handle: draws sized random inputs from the case seed.
+pub struct Gen {
+    rng: Rng,
+    seed: u64,
+    /// Shrink level 0 = full-size inputs; higher levels shrink ranges.
+    shrink: u32,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink: u32) -> Gen {
+        Gen { rng: Rng::new(seed), seed, shrink }
+    }
+
+    /// The case seed (for logging in assertions).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// A fresh RNG derived from the case seed (for driving the SUT).
+    pub fn rng(&mut self) -> Rng {
+        self.rng.fork(0xC0FFEE)
+    }
+
+    /// usize in [lo, hi], range shrinks toward lo on failure retries.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let hi_eff = if self.shrink == 0 {
+            hi
+        } else {
+            let span = (hi - lo) >> self.shrink;
+            lo + span
+        };
+        lo + self.rng.next_below((hi_eff - lo + 1) as u64) as usize
+    }
+
+    /// u64 in [lo, hi].
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let hi_eff = if self.shrink == 0 {
+            hi
+        } else {
+            lo + ((hi - lo) >> self.shrink)
+        };
+        self.rng.next_range(lo, hi_eff)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Vector of f64s with length in [0, max_len].
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Choose uniformly from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` over `cases` seeded cases. Panics (with seed) on first failure
+/// after attempting shrink retries. The base seed can be overridden with
+/// `ACTOR_PROP_SEED` for replay; case count with `ACTOR_PROP_CASES`.
+pub fn property<F>(name: &str, cases: u32, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let base_seed = std::env::var("ACTOR_PROP_SEED")
+        .ok()
+        .and_then(|s| parse_seed(&s))
+        .unwrap_or(0x5EED_0000);
+    let cases = std::env::var("ACTOR_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let outcome = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 0);
+            prop(&mut g);
+        });
+        if let Err(err) = outcome {
+            // Try shrunk variants of the same seed to find a smaller repro.
+            let mut smallest: Option<u32> = None;
+            for shrink in (1..=4).rev() {
+                let retry = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, shrink);
+                    prop(&mut g);
+                });
+                if retry.is_err() {
+                    smallest = Some(shrink);
+                    break;
+                }
+            }
+            let msg = panic_message(&err);
+            match smallest {
+                Some(s) => panic!(
+                    "property '{name}' failed (seed={seed:#018x}, case={case}, \
+                     also fails at shrink level {s}): {msg}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (seed={seed:#018x}, case={case}): {msg}"
+                ),
+            }
+        }
+    }
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+fn panic_message(err: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = err.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = err.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU32::new(0);
+        property("always true", 50, |g| {
+            let _ = g.usize_in(0, 10);
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            property("always false", 10, |_g| {
+                panic!("intentional");
+            });
+        });
+        let msg = panic_message(&result.unwrap_err());
+        assert!(msg.contains("seed="), "{msg}");
+        assert!(msg.contains("intentional"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        property("gen ranges", 100, |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+            let y = g.u64_in(100, 200);
+            assert!((100..=200).contains(&y));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(99, 0);
+        let mut b = Gen::new(99, 0);
+        assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        assert_eq!(a.bool(), b.bool());
+    }
+}

@@ -1,0 +1,148 @@
+//! Micro-benchmark harness (offline substitute for `criterion`).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this
+//! module: warmup, then timed batches until a time budget is spent,
+//! reporting mean / p50 / p99 per iteration and derived throughput.
+//! Output format is one aligned line per benchmark, stable enough to
+//! diff across the perf-pass iterations recorded in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns.max(1e-9)
+    }
+
+    /// One aligned report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  ({:>14}/s)",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_count(self.per_sec()),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+fn fmt_count(c: f64) -> String {
+    if c >= 1e6 {
+        format!("{:.2}M", c / 1e6)
+    } else if c >= 1e3 {
+        format!("{:.2}k", c / 1e3)
+    } else {
+        format!("{c:.1}")
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after ~10% warmup); prints and
+/// returns the result. `f` should include per-iteration work only —
+/// hoist setup outside.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup.
+    let warm_until = Instant::now() + budget.mul_f64(0.1);
+    while Instant::now() < warm_until {
+        f();
+    }
+    // Timed samples: batch iterations so per-sample overhead is amortised
+    // for nanosecond-scale bodies, but keep batches small enough for
+    // meaningful percentiles.
+    let mut samples: Vec<f64> = Vec::new();
+    let mut iters: u64 = 0;
+    let t0 = Instant::now();
+    // calibrate batch size to ~100µs per sample
+    let probe = Instant::now();
+    f();
+    let one = probe.elapsed().as_nanos().max(1) as f64;
+    let batch = ((100_000.0 / one).ceil() as u64).clamp(1, 1_000_000);
+    while t0.elapsed() < budget {
+        let s = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let per_iter = s.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(per_iter);
+        iters += batch;
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    let pick = |q: f64| {
+        if samples.is_empty() {
+            0.0
+        } else {
+            samples[((samples.len() - 1) as f64 * q) as usize]
+        }
+    };
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pick(0.5),
+        p99_ns: pick(0.99),
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Time a single long-running closure (end-to-end benches).
+pub fn bench_once<F: FnOnce() -> R, R>(name: &str, f: F) -> (R, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {:>12}        once  {secs:.3}s", "");
+    (out, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(30), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters > 1000);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, secs) = bench_once("quick", || 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_count(2.5e6).contains('M'));
+    }
+}

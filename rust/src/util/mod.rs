@@ -1,0 +1,11 @@
+//! Shared substrates: PRNG + distributions, statistics, JSON, logging.
+//!
+//! This environment is offline, so the usual crates (`rand`, `serde_json`,
+//! `tracing`) are unavailable; these modules are small, deterministic,
+//! fully-tested replacements tuned for what the coordinator needs.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

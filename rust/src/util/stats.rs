@@ -1,0 +1,236 @@
+//! Statistics helpers: summaries, percentiles, CDFs, histograms.
+//!
+//! The paper's figures are distributions (Fig 1a–c, 2c), ratios (Fig 2a,
+//! 3) and time series (Fig 1d–e); this module produces all of them from
+//! raw per-node measurements.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns a zeroed summary for an empty slice.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                count: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0,
+                p25: 0.0, p50: 0.0, p75: 0.0, p95: 0.0, p99: 0.0,
+            };
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = mean(xs);
+        Summary {
+            count: xs.len(),
+            mean,
+            std: std_dev(xs, mean),
+            min: sorted[0],
+            max: sorted[sorted.len() - 1],
+            p25: percentile_sorted(&sorted, 25.0),
+            p50: percentile_sorted(&sorted, 50.0),
+            p75: percentile_sorted(&sorted, 75.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+
+    /// Spread of the middle mass — the "tightness" the paper eyeballs in
+    /// Fig 1a/1c (BSP tight, ASP spread).
+    pub fn iqr(&self) -> f64 {
+        self.p75 - self.p25
+    }
+}
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation around a given mean.
+pub fn std_dev(xs: &[f64], mean: f64) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile over pre-sorted data, q in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Empirical CDF: returns (value, fraction ≤ value) points, one per
+/// distinct value. This is exactly what Fig 1b/1c plot.
+pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (i, &v) in sorted.iter().enumerate() {
+        let frac = (i + 1) as f64 / n;
+        match out.last_mut() {
+            Some(last) if last.0 == v => last.1 = frac,
+            _ => out.push((v, frac)),
+        }
+    }
+    out
+}
+
+/// Evaluate an ECDF at a point (fraction of xs ≤ x).
+pub fn ecdf_at(xs: &[f64], x: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&v| v <= x).count() as f64 / xs.len() as f64
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; values outside
+/// the range clamp to the edge buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64)
+            .floor()
+            .clamp(0.0, (bins - 1) as f64) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Bucket midpoints, for reporting.
+    pub fn midpoints(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+/// L2 norm of a vector.
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// L2 distance between two equal-length vectors — the paper's Fig 1d
+/// "normalized error" metric is `l2_dist(w, w_true)` (optionally scaled).
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 4.0);
+        assert!((percentile_sorted(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_monotone_and_ends_at_one() {
+        let xs = vec![3.0, 1.0, 2.0, 2.0, 5.0];
+        let cdf = ecdf(&xs);
+        assert_eq!(cdf.last().unwrap().1, 1.0);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(ecdf_at(&xs, 2.0), 0.6);
+        assert_eq!(ecdf_at(&xs, 0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.9, -5.0, 50.0] {
+            h.add(x);
+        }
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.counts[0], 2); // 0.5 and clamped -5.0
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 2); // 9.9 and clamped 50.0
+        assert_eq!(h.midpoints()[0], 0.5);
+    }
+
+    #[test]
+    fn l2_helpers() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(l2_dist(&[1.0, 1.0], &[4.0, 5.0]), 5.0);
+    }
+
+    #[test]
+    fn std_dev_constant_is_zero() {
+        let xs = vec![2.0; 50];
+        assert_eq!(std_dev(&xs, 2.0), 0.0);
+    }
+}

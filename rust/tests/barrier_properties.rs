@@ -1,0 +1,153 @@
+//! Cross-module property tests: the §6.1 generalisation lattice and the
+//! barrier invariants, asserted over whole simulated *trajectories* (not
+//! just single decisions).
+
+use actor_psp::barrier::Method;
+use actor_psp::sim::{ClusterConfig, Simulator, TimeDist};
+use actor_psp::testing::property;
+
+fn cfg(n: usize, seed: u64, duration: f64) -> ClusterConfig {
+    ClusterConfig { n_nodes: n, seed, duration, ..ClusterConfig::default() }
+}
+
+#[test]
+fn prop_ssp_staleness_never_violated_at_horizon() {
+    property("SSP spread ≤ θ+1 on trajectories", 25, |g| {
+        let n = g.usize_in(2, 80);
+        let staleness = g.u64_in(0, 6);
+        let seed = g.seed();
+        let r = Simulator::new(cfg(n, seed, 15.0), Method::Ssp { staleness }).run();
+        let min = *r.final_steps.iter().min().unwrap();
+        let max = *r.final_steps.iter().max().unwrap();
+        // a worker may be one step past the barrier check (it checks
+        // before STARTING a step), hence θ+1
+        assert!(
+            max - min <= staleness + 1,
+            "n={n} θ={staleness}: spread {min}..{max}"
+        );
+    });
+}
+
+#[test]
+fn prop_pbsp_full_population_sample_behaves_like_bsp() {
+    property("pBSP(n) trajectory ≈ BSP trajectory spread", 10, |g| {
+        let n = g.usize_in(2, 40);
+        let seed = g.seed();
+        let p = Simulator::new(cfg(n, seed, 12.0), Method::Pbsp { sample: n }).run();
+        let min = *p.final_steps.iter().min().unwrap();
+        let max = *p.final_steps.iter().max().unwrap();
+        // full-sample pBSP enforces the BSP invariant exactly
+        assert!(max - min <= 1, "pBSP(P) spread {min}..{max}");
+    });
+}
+
+#[test]
+fn prop_progress_monotone_in_staleness() {
+    property("mean progress non-decreasing in θ", 8, |g| {
+        let n = g.usize_in(10, 60);
+        let seed = g.seed();
+        let t1 = g.u64_in(0, 3);
+        let t2 = t1 + g.u64_in(1, 6);
+        let r1 = Simulator::new(cfg(n, seed, 15.0), Method::Ssp { staleness: t1 }).run();
+        let r2 = Simulator::new(cfg(n, seed, 15.0), Method::Ssp { staleness: t2 }).run();
+        assert!(
+            r2.mean_progress() >= r1.mean_progress() * 0.95,
+            "θ {t1}->{t2}: progress {} -> {}",
+            r1.mean_progress(),
+            r2.mean_progress()
+        );
+    });
+}
+
+#[test]
+fn prop_asp_progress_dominates_all_methods() {
+    property("ASP mean progress is maximal", 8, |g| {
+        let n = g.usize_in(10, 60);
+        let seed = g.seed();
+        let asp = Simulator::new(cfg(n, seed, 12.0), Method::Asp).run();
+        let m = *g.choose(&[
+            Method::Bsp,
+            Method::Ssp { staleness: 4 },
+            Method::Pbsp { sample: 5 },
+            Method::Pssp { sample: 5, staleness: 4 },
+        ]);
+        let other = Simulator::new(cfg(n, seed, 12.0), m).run();
+        assert!(
+            asp.mean_progress() >= other.mean_progress() * 0.98,
+            "{m} progressed past ASP: {} vs {}",
+            other.mean_progress(),
+            asp.mean_progress()
+        );
+    });
+}
+
+#[test]
+fn prop_update_and_control_accounting_consistent() {
+    property("message accounting invariants", 12, |g| {
+        let n = g.usize_in(2, 50);
+        let seed = g.seed();
+        let beta = g.usize_in(1, 8);
+        let r = Simulator::new(
+            cfg(n, seed, 10.0),
+            Method::Pbsp { sample: beta },
+        )
+        .run();
+        // every advance was preceded by >= 1 sampling attempt of cost 2β
+        assert!(
+            r.control_msgs >= 2 * beta as u64 * r.total_advances / (n as u64).max(1),
+            "control messages too low"
+        );
+        // updates pushed >= advances (a node pushes, then may block)
+        assert!(r.update_msgs >= r.total_advances);
+        // and can exceed advances by at most the population (one in-flight
+        // push per node)
+        assert!(r.update_msgs <= r.total_advances + n as u64);
+    });
+}
+
+#[test]
+fn prop_determinism_across_time_dists() {
+    property("simulator determinism for all time distributions", 9, |g| {
+        let dist = *g.choose(&[
+            TimeDist::Exponential,
+            TimeDist::Normal { cv: 0.3 },
+            TimeDist::Pareto { shape: 2.5 },
+        ]);
+        let n = g.usize_in(5, 40);
+        let seed = g.seed();
+        let mk = || ClusterConfig {
+            n_nodes: n,
+            seed,
+            duration: 8.0,
+            iter_dist: dist,
+            ..ClusterConfig::default()
+        };
+        let a = Simulator::new(mk(), Method::Pssp { sample: 3, staleness: 2 }).run();
+        let b = Simulator::new(mk(), Method::Pssp { sample: 3, staleness: 2 }).run();
+        assert_eq!(a.final_steps, b.final_steps);
+        assert_eq!(a.control_msgs, b.control_msgs);
+        assert_eq!(a.events, b.events);
+    });
+}
+
+#[test]
+fn prop_churn_preserves_invariants() {
+    property("churn: active set consistent, progress continues", 10, |g| {
+        let n = g.usize_in(5, 40);
+        let seed = g.seed();
+        let churn = actor_psp::sim::ChurnConfig {
+            join_rate: g.f64_in(0.1, 2.0),
+            leave_rate: g.f64_in(0.1, 2.0),
+        };
+        let c = ClusterConfig {
+            n_nodes: n,
+            seed,
+            duration: 10.0,
+            churn: Some(churn),
+            ..ClusterConfig::default()
+        };
+        let r = Simulator::new(c, Method::Pssp { sample: 3, staleness: 2 }).run();
+        assert!(!r.final_steps.is_empty(), "cluster died out entirely");
+        assert!(r.total_advances > 0);
+    });
+}

@@ -1,0 +1,174 @@
+//! Integration over the full three-layer stack (needs `make artifacts`):
+//! PJRT-backed engines, cross-validation of the Pallas-kernel artifacts
+//! against the pure-Rust model, and a short end-to-end transformer run.
+//!
+//! Tests skip (with a note) when artifacts are absent so `cargo test`
+//! stays runnable before the first `make artifacts`.
+
+use std::sync::Arc;
+
+use actor_psp::barrier::Method;
+use actor_psp::engine::paramserver::{self, PsConfig};
+use actor_psp::model::linear::{Dataset, LinearModel};
+use actor_psp::runtime::{linear_grad_fn, Manifest, Runtime, RuntimeService, Tensor};
+use actor_psp::train::{psp_train_lm, train_lm, Corpus, TransformerTrainer};
+use actor_psp::util::rng::Rng;
+use actor_psp::util::stats::l2_dist;
+
+fn have_artifacts() -> bool {
+    let ok = Manifest::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn pjrt_linear_step_matches_rust_sgd_trajectory() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let (n, d) = (32usize, 1000usize);
+    let mut rng = Rng::new(9);
+    let data = Dataset::synthetic(n, d, 0.05, &mut rng);
+    let lr = 0.002f32;
+
+    // PJRT trajectory: 5 fused steps through the Pallas kernel artifact.
+    let mut w_pjrt = vec![0.0f32; d];
+    for _ in 0..5 {
+        let out = rt
+            .execute(
+                "linear_step_n32_d1000",
+                &[
+                    Tensor::F32(data.x.clone()),
+                    Tensor::F32(w_pjrt.clone()),
+                    Tensor::F32(data.y.clone()),
+                    Tensor::F32(vec![lr]),
+                ],
+            )
+            .unwrap();
+        w_pjrt = out[0].as_f32().unwrap().to_vec();
+    }
+
+    // Pure-Rust trajectory: full-batch gradient + manual update.
+    let mut model = LinearModel::new(d);
+    let mut w_rust = vec![0.0f32; d];
+    for _ in 0..5 {
+        let g = model.full_grad(&data, &w_rust);
+        for (wi, gi) in w_rust.iter_mut().zip(&g) {
+            *wi -= lr * gi;
+        }
+    }
+
+    let dist = l2_dist(&w_pjrt, &w_rust);
+    assert!(dist < 1e-2, "trajectories diverged: L2 {dist}");
+}
+
+#[test]
+fn paramserver_engine_over_pjrt_all_methods() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = Arc::new(RuntimeService::spawn().unwrap());
+    let mut rng = Rng::new(21);
+    let data = Arc::new(Dataset::synthetic(1024, 100, 0.05, &mut rng));
+    for method in Method::paper_five(2, 2) {
+        let grad = linear_grad_fn(
+            Arc::clone(&svc),
+            "linear_grad_n128_d100",
+            Arc::clone(&data),
+            128,
+        )
+        .unwrap();
+        let cfg = PsConfig {
+            n_workers: 3,
+            steps_per_worker: 4,
+            method,
+            lr: 0.05,
+            dim: 100,
+            seed: 5,
+            ..PsConfig::default()
+        };
+        let r = paramserver::run(&cfg, vec![0.0; 100], grad);
+        assert_eq!(r.update_msgs, 12, "{method}");
+        let err = l2_dist(&r.model, &data.w_true);
+        let init = l2_dist(&vec![0.0; 100], &data.w_true);
+        assert!(err < init, "{method}: no learning ({init} -> {err})");
+    }
+}
+
+#[test]
+fn transformer_learns_above_chance_quickly() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let mut trainer = TransformerTrainer::new(rt, "tiny", 7).unwrap();
+    let uniform = trainer.uniform_loss();
+    let corpus = Corpus::synthetic(1 << 14, trainer.meta.vocab, 3);
+    let log = train_lm(&mut trainer, &corpus, 25, 0.25, 11).unwrap();
+    assert!(
+        (log.first_loss() - uniform).abs() < 0.6,
+        "fresh model should start near ln(vocab)={uniform}: {}",
+        log.first_loss()
+    );
+    assert!(
+        log.last_loss() < log.first_loss() * 0.8,
+        "loss should fall >20% in 25 steps: {} -> {}",
+        log.first_loss(),
+        log.last_loss()
+    );
+    assert!(log.losses.iter().all(|(_, l)| l.is_finite()));
+}
+
+#[test]
+fn psp_paced_training_differentiates_methods() {
+    if !have_artifacts() {
+        return;
+    }
+    let steps = 16u64;
+    let run = |method| {
+        let rt = Runtime::new().unwrap();
+        let mut trainer = TransformerTrainer::new(rt, "tiny", 7).unwrap();
+        let corpus = Corpus::synthetic(1 << 14, trainer.meta.vocab, 3);
+        psp_train_lm(
+            &mut trainer, &corpus, method, 4, steps, 0.25, 13,
+            Some((0.25, 4.0)),
+        )
+        .unwrap()
+    };
+    let bsp = run(Method::Bsp);
+    let asp = run(Method::Asp);
+    // BSP pacing keeps workers in lockstep even with a straggler
+    let bmin = bsp.worker_steps.iter().min().unwrap();
+    let bmax = bsp.worker_steps.iter().max().unwrap();
+    assert!(bmax - bmin <= 1, "BSP spread {bmin}..{bmax}");
+    // ASP lets fast workers run ahead
+    let amin = asp.worker_steps.iter().min().unwrap();
+    let amax = asp.worker_steps.iter().max().unwrap();
+    assert!(amax - amin >= 1, "ASP should spread: {:?}", asp.worker_steps);
+    // both actually trained
+    assert_eq!(bsp.losses.len() as u64, steps);
+    assert_eq!(asp.losses.len() as u64, steps);
+}
+
+#[test]
+fn tf_loss_artifact_agrees_with_step_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    // loss(params, batch) from the eval artifact must equal the
+    // loss-before-step returned by the step artifact on the same batch.
+    let rt = Runtime::new().unwrap();
+    let mut trainer = TransformerTrainer::new(rt, "tiny", 3).unwrap();
+    let corpus = Corpus::synthetic(1 << 13, trainer.meta.vocab, 5);
+    let mut rng = Rng::new(8);
+    let batch = corpus.next_batch(trainer.meta.batch, trainer.meta.seq, &mut rng);
+    let eval = trainer.eval_loss(&batch).unwrap();
+    let step_loss = trainer.train_step(&batch, 0.0).unwrap();
+    assert!(
+        (eval - step_loss).abs() < 1e-4,
+        "eval {eval} vs step-before-loss {step_loss}"
+    );
+}

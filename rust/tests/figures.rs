@@ -1,0 +1,171 @@
+//! Integration: the experiment harness reproduces the *shapes* the paper
+//! reports (quick profile). These are the acceptance tests of the
+//! reproduction — who wins, in which direction, roughly by how much.
+
+use actor_psp::exp::{self, Cell, ExpOpts};
+
+fn quick() -> ExpOpts {
+    ExpOpts {
+        quick: true,
+        nodes: 150,
+        duration: 15.0,
+        sample: 5,
+        staleness: 4,
+        ..ExpOpts::default()
+    }
+}
+
+fn num(c: &Cell) -> f64 {
+    match c {
+        Cell::Num(n) => *n,
+        Cell::Int(i) => *i as f64,
+        Cell::Str(_) => panic!("expected numeric cell"),
+    }
+}
+
+/// Column index of a method in reports whose col 0 is the x value.
+const BSP: usize = 1;
+const SSP: usize = 2;
+const ASP: usize = 3;
+const PBSP: usize = 4;
+const PSSP: usize = 5;
+
+#[test]
+fn fig1a_progress_ordering() {
+    let rep = &exp::run("fig1a", &quick()).unwrap()[0];
+    // rows: bsp, ssp, asp, pbsp, pssp; col 1 = mean progress
+    let mean = |i: usize| num(&rep.rows[i][1]);
+    let iqr = |i: usize| num(&rep.rows[i][8]);
+    assert!(mean(2) > mean(1) && mean(1) > mean(0), "ASP > SSP > BSP progress");
+    // probabilistic methods sit above their deterministic counterparts
+    assert!(mean(3) >= mean(0), "pBSP >= BSP");
+    assert!(mean(4) >= mean(1) * 0.9, "pSSP ~>= SSP");
+    // dispersion: ASP widest, BSP tightest
+    assert!(iqr(2) >= iqr(0), "ASP iqr >= BSP iqr");
+}
+
+#[test]
+fn fig1c_sample_size_morphs_asp_to_bsp() {
+    let rep = &exp::run("fig1c", &quick()).unwrap()[0];
+    // Larger beta => more mass at low steps => higher CDF value at the
+    // median grid point.
+    let mid = rep.rows.len() / 2;
+    let row = &rep.rows[mid];
+    let beta0 = num(&row[1]);
+    let beta64 = num(&row[row.len() - 1]);
+    assert!(
+        beta64 >= beta0 - 1e-9,
+        "beta=64 CDF ({beta64}) should dominate beta=0 ({beta0}) at mid-grid"
+    );
+}
+
+#[test]
+fn fig1d_errors_decrease_for_all_methods() {
+    let rep = &exp::run("fig1d", &quick()).unwrap()[0];
+    let first = &rep.rows[0];
+    let last = rep.rows.last().unwrap();
+    for col in 1..first.len() {
+        let (e0, e1) = (num(&first[col]), num(&last[col]));
+        assert!(
+            e1 < e0,
+            "method col {col}: error should decrease ({e0} -> {e1})"
+        );
+    }
+}
+
+#[test]
+fn fig1e_asp_sends_most_updates() {
+    let rep = &exp::run("fig1e", &quick()).unwrap()[0];
+    let last = rep.rows.last().unwrap();
+    let (bsp, asp) = (num(&last[BSP]), num(&last[ASP]));
+    assert!(
+        asp > 2.0 * bsp,
+        "ASP updates ({asp}) should be several times BSP's ({bsp}); \
+         the paper reports ~10x at 1000 nodes"
+    );
+    let (pbsp, pssp) = (num(&last[PBSP]), num(&last[PSSP]));
+    assert!(pbsp < asp && pssp < asp, "probabilistic methods sit below ASP");
+}
+
+#[test]
+fn fig2a_straggler_robustness_grouping() {
+    let rep = &exp::run("fig2a", &quick()).unwrap()[0];
+    let last = rep.rows.last().unwrap(); // 30% stragglers
+    let (bsp, ssp, asp, pbsp, pssp) = (
+        num(&last[BSP]),
+        num(&last[SSP]),
+        num(&last[ASP]),
+        num(&last[PBSP]),
+        num(&last[PSSP]),
+    );
+    // deterministic group collapses harder than the sampling group
+    assert!(bsp < asp && ssp < asp, "BSP/SSP below ASP under stragglers");
+    assert!(
+        pbsp > bsp && pssp > ssp * 0.9,
+        "probabilistic variants retain more progress: pbsp={pbsp} bsp={bsp}"
+    );
+}
+
+#[test]
+fn fig2c_two_groups_emerge_with_slowness() {
+    let rep = &exp::run("fig2c", &quick()).unwrap()[0];
+    let last = rep.rows.last().unwrap(); // 16x slowness
+    let (bsp, asp, pbsp) = (num(&last[BSP]), num(&last[ASP]), num(&last[PBSP]));
+    assert!(
+        asp > 2.0 * bsp,
+        "at 16x slowness ASP ({asp}) >> BSP ({bsp})"
+    );
+    assert!(
+        pbsp > 1.5 * bsp,
+        "pBSP ({pbsp}) should sit in the robust group, far above BSP ({bsp})"
+    );
+}
+
+#[test]
+fn fig3_scalability_direction() {
+    let rep = &exp::run("fig3", &quick()).unwrap()[0];
+    let last = rep.rows.last().unwrap();
+    let (bsp, asp) = (num(&last[BSP]), num(&last[ASP]));
+    // growing the system hurts BSP far more than ASP
+    assert!(
+        bsp <= asp + 5.0,
+        "BSP Δ={bsp}% should be below ASP Δ={asp}%"
+    );
+}
+
+#[test]
+fn fig4_fig5_bounds_generated() {
+    let f4 = &exp::run("fig4", &quick()).unwrap()[0];
+    let f5 = &exp::run("fig5", &quick()).unwrap()[0];
+    assert_eq!(f4.rows.len(), 19);
+    assert_eq!(f5.rows.len(), 19);
+    // variance bounds dominate mean bounds pointwise (integer lags)
+    for (r4, r5) in f4.rows.iter().zip(&f5.rows) {
+        for c in 1..4 {
+            assert!(num(&r5[c]) >= num(&r4[c]) * 0.99);
+        }
+    }
+}
+
+#[test]
+fn all_experiments_run_and_emit_json() {
+    let dir = std::env::temp_dir().join(format!("psp-exp-{}", std::process::id()));
+    let opts = ExpOpts {
+        quick: true,
+        nodes: 60,
+        duration: 8.0,
+        sample: 3,
+        out_dir: Some(dir.clone()),
+        ..ExpOpts::default()
+    };
+    let reports = exp::run("all", &opts).unwrap();
+    assert_eq!(reports.len(), exp::ALL.len());
+    for id in exp::ALL {
+        let path = dir.join(format!("{id}.json"));
+        assert!(path.exists(), "{id}.json missing");
+        let src = std::fs::read_to_string(&path).unwrap();
+        let j = actor_psp::util::json::Json::parse(&src).unwrap();
+        assert_eq!(j.req_str("id").unwrap(), *id);
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
