@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             0.25,
             seed,
             Some((0.1, 4.0)),
+            1,
         )?;
         for (s, l) in log.losses.iter().step_by((steps as usize / 10).max(1)) {
             println!("   step {s:>5}  train loss {l:.4}");

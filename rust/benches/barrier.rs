@@ -1,15 +1,22 @@
-//! Hot-path microbenches: the barrier decision and the sampling primitive.
+//! Hot-path microbenches: the barrier decision, the sampling primitive,
+//! and the sharded parameter-server push path.
 //!
 //! The paper's scalability argument is quantitative: a PSP decision costs
 //! O(β) regardless of system size, while global methods need O(P) state.
-//! These benches measure exactly that (and feed EXPERIMENTS.md §Perf).
+//! These benches measure exactly that (and feed EXPERIMENTS.md §Perf),
+//! plus the engine-level consequence: splitting the model plane across
+//! shard actors multiplies push throughput because nothing in the barrier
+//! path ever serialised through the model queue.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use actor_psp::barrier::{decide_with_oracle, BarrierControl, Bsp, Method, Probabilistic, Ssp};
+use actor_psp::engine::paramserver::{self, PsConfig};
+use actor_psp::engine::GradFn;
 use actor_psp::overlay::Ring;
 use actor_psp::sampling::StepTracker;
-use actor_psp::util::bench::bench;
+use actor_psp::util::bench::{bench, bench_once};
 use actor_psp::util::rng::Rng;
 
 fn main() {
@@ -36,7 +43,7 @@ fn main() {
             std::hint::black_box(bsp.can_advance(10, &steps));
         });
         bench(&format!("bsp predicate via tracker min P={n}"), budget, || {
-            std::hint::black_box(tracker.min_step() + 0 >= 10);
+            std::hint::black_box(tracker.min_step() >= 10);
         });
 
         // The sampling primitive at the paper's β=10.
@@ -81,4 +88,79 @@ fn main() {
         let m = Method::parse("pssp:10:4").unwrap();
         std::hint::black_box(m.build().staleness());
     });
+
+    // ---- sharded parameter-server push throughput ----
+    //
+    // 16 workers hammer the model plane with cheap (precomputed) gradients
+    // so the server side is the bottleneck: one shard must apply + serve
+    // the full d-dimensional vector per worker-step, K shards split both
+    // the arithmetic and the mailbox contention. The PR's acceptance bar
+    // is >= 1.5x worker-step throughput at 4 shards vs 1.
+    println!();
+    println!("sharded parameter-server push path (16 workers, d=8192, ASP)");
+    let dim = 8192usize;
+    let fixed: Arc<Vec<f32>> =
+        Arc::new((0..dim).map(|j| (j as f32).sin() * 1e-4).collect());
+    let grad: GradFn = {
+        let fixed = Arc::clone(&fixed);
+        Arc::new(move |_w, _seed| fixed.as_ref().clone())
+    };
+    let mut baseline = 0.0f64;
+    for &shards in &[1usize, 2, 4, 8] {
+        let cfg = PsConfig {
+            n_workers: 16,
+            steps_per_worker: 120,
+            method: Method::Asp,
+            lr: 1e-6,
+            dim,
+            seed: 1,
+            n_shards: shards,
+            ..PsConfig::default()
+        };
+        let grad = grad.clone();
+        let (r, _) = bench_once(&format!("ps push 16w x 120 steps, {shards} shard(s)"), || {
+            paramserver::run(&cfg, vec![0.0; dim], grad)
+        });
+        let steps: u64 = r.steps.iter().sum();
+        let rate = steps as f64 / r.wall_secs.max(1e-9);
+        if shards == 1 {
+            baseline = rate;
+        }
+        println!(
+            "    -> {:.1}k worker-steps/s, {} push msgs{}",
+            rate / 1e3,
+            r.update_msgs,
+            if shards == 1 {
+                String::new()
+            } else {
+                format!("  ({:.2}x vs 1 shard)", rate / baseline.max(1e-9))
+            },
+        );
+    }
+    // Batched pushes on top of sharding: fewer, fatter scatter messages.
+    for &(shards, push_batch) in &[(4usize, 4usize), (4, 8)] {
+        let cfg = PsConfig {
+            n_workers: 16,
+            steps_per_worker: 120,
+            method: Method::Asp,
+            lr: 1e-6,
+            dim,
+            seed: 1,
+            n_shards: shards,
+            push_batch,
+            ..PsConfig::default()
+        };
+        let grad = grad.clone();
+        let (r, _) = bench_once(
+            &format!("ps push 16w x 120 steps, {shards} shards, batch {push_batch}"),
+            || paramserver::run(&cfg, vec![0.0; dim], grad),
+        );
+        let steps: u64 = r.steps.iter().sum();
+        println!(
+            "    -> {:.1}k worker-steps/s, {} push msgs ({:.2}x vs 1 shard unbatched)",
+            steps as f64 / r.wall_secs.max(1e-9) / 1e3,
+            r.update_msgs,
+            steps as f64 / r.wall_secs.max(1e-9) / baseline.max(1e-9),
+        );
+    }
 }

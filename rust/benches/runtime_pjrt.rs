@@ -12,6 +12,10 @@ use actor_psp::util::bench::bench;
 use actor_psp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("built without the `pjrt` feature — nothing to bench");
+        return Ok(());
+    }
     if !Manifest::default_dir().join("manifest.json").exists() {
         eprintln!("artifacts not built — run `make artifacts` first");
         return Ok(());

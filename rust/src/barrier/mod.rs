@@ -115,7 +115,11 @@ impl Method {
         }
     }
 
-    /// Parse `bsp | ssp:θ | asp | pbsp:β | pssp:β:θ`.
+    /// Parse `bsp | ssp:θ | asp | pbsp:β | pssp:β:θ | pquorum:β:θ:q%`.
+    ///
+    /// Round-trips with `Display` for every variant; malformed strings
+    /// (unknown names, missing/extra fields, non-numeric or out-of-range
+    /// values such as a quorum above 100%) return `None`.
     pub fn parse(s: &str) -> Option<Method> {
         let parts: Vec<&str> = s.split(':').collect();
         match parts.as_slice() {
@@ -130,11 +134,17 @@ impl Method {
                 staleness: t.parse().ok()?,
             }),
             ["pssp"] => Some(Method::Pssp { sample: 10, staleness: 4 }),
-            ["pquorum", b, t, q] => Some(Method::Pquorum {
-                sample: b.parse().ok()?,
-                staleness: t.parse().ok()?,
-                quorum_pct: q.parse().ok()?,
-            }),
+            ["pquorum", b, t, q] => {
+                let quorum_pct: u8 = q.parse().ok()?;
+                if quorum_pct > 100 {
+                    return None; // PQuorum::new would reject q > 1.0
+                }
+                Some(Method::Pquorum {
+                    sample: b.parse().ok()?,
+                    staleness: t.parse().ok()?,
+                    quorum_pct,
+                })
+            }
             _ => None,
         }
     }
@@ -244,19 +254,63 @@ mod tests {
     }
 
     #[test]
-    fn method_parse_roundtrip() {
+    fn method_parse_roundtrip_all_six_variants() {
+        // every variant, including boundary parameter values
         for m in [
             Method::Bsp,
             Method::Asp,
+            Method::Ssp { staleness: 0 },
             Method::Ssp { staleness: 7 },
+            Method::Pbsp { sample: 0 },
             Method::Pbsp { sample: 16 },
             Method::Pssp { sample: 10, staleness: 4 },
+            Method::Pssp { sample: 1, staleness: 0 },
             Method::Pquorum { sample: 8, staleness: 3, quorum_pct: 75 },
+            Method::Pquorum { sample: 10, staleness: 4, quorum_pct: 80 },
+            Method::Pquorum { sample: 10, staleness: 4, quorum_pct: 0 },
+            Method::Pquorum { sample: 10, staleness: 4, quorum_pct: 100 },
         ] {
-            assert_eq!(Method::parse(&m.to_string()), Some(m));
+            let rendered = m.to_string();
+            assert_eq!(Method::parse(&rendered), Some(m), "{rendered}");
         }
-        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn method_parse_defaults_without_parameters() {
         assert_eq!(Method::parse("ssp"), Some(Method::Ssp { staleness: 4 }));
+        assert_eq!(Method::parse("pbsp"), Some(Method::Pbsp { sample: 10 }));
+        assert_eq!(
+            Method::parse("pssp"),
+            Some(Method::Pssp { sample: 10, staleness: 4 })
+        );
+    }
+
+    #[test]
+    fn method_parse_rejects_malformed_strings() {
+        for bad in [
+            "",
+            "nope",
+            "bsp:1",          // bsp takes no parameters
+            "asp:0",
+            "ssp:",           // missing value
+            "ssp:abc",        // non-numeric
+            "ssp:-3",         // negative staleness
+            "ssp:4:4",        // extra field
+            "pbsp:",
+            "pbsp:ten",
+            "pssp:10",        // θ missing when β given
+            "pssp:10:",
+            "pssp:x:4",
+            "pssp:10:4:1",    // extra field
+            "pquorum",        // pquorum has no default form
+            "pquorum:10:4",   // quorum missing
+            "pquorum:10:4:101", // quorum over 100%
+            "pquorum:10:4:-1",
+            "pquorum:10:4:80:9", // extra field
+            "PSSP:10:4",      // case-sensitive
+        ] {
+            assert_eq!(Method::parse(bad), None, "'{bad}' should be rejected");
+        }
     }
 
     #[test]

@@ -105,10 +105,17 @@ USAGE:
   actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
             [--config FILE]
       One simulated cluster run; prints the progress/error/message summary.
-      M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]]
+      M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q
+
+  actor ps [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
+           [--seed N] [--shards K] [--push-batch B] [--schedule-blocks NB]
+           [--config FILE]
+      Run the live sharded parameter-server engine (real threads, pure-Rust
+      linear SGD): K model shards, gradients accumulated for B steps and
+      scattered as one batched push per touched shard.
 
   actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
-              [--workers N] [--method M] [--artifacts DIR]
+              [--workers N] [--method M] [--accum B] [--artifacts DIR]
       End-to-end LM training through the PJRT artifacts (L1+L2+L3).
 
   actor bounds [--beta B] [--staleness R] [--t T]

@@ -34,6 +34,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::barrier::Method;
+use crate::engine::paramserver::PsConfig;
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
 
 /// A parsed config value.
@@ -169,6 +170,44 @@ impl Config {
         }
     }
 
+    /// Build the live sharded parameter-server engine configuration from
+    /// the `[ps]` section (all keys optional) plus `[barrier] method`:
+    ///
+    /// ```toml
+    /// [ps]
+    /// workers = 16
+    /// steps = 50
+    /// shards = 4          # model shards (server actors)
+    /// push_batch = 2      # steps accumulated per scattered push
+    /// dim = 1024
+    /// lr = 0.05
+    /// seed = 7
+    /// schedule_blocks = 4 # optional model-parallel schedule
+    /// ```
+    pub fn ps_config(&self) -> Result<PsConfig> {
+        let d = PsConfig::default();
+        let schedule_blocks = match self.get("ps", "schedule_blocks") {
+            None => d.schedule_blocks,
+            Some(v) => Some(v.as_usize().ok_or_else(|| {
+                anyhow!("[ps] schedule_blocks must be a non-negative integer")
+            })?),
+        };
+        Ok(PsConfig {
+            n_workers: self.usize_or("ps", "workers", d.n_workers)?,
+            steps_per_worker: self
+                .usize_or("ps", "steps", d.steps_per_worker as usize)?
+                as u64,
+            method: self.barrier_method()?,
+            lr: self.f64_or("ps", "lr", d.lr as f64)? as f32,
+            dim: self.usize_or("ps", "dim", d.dim)?,
+            seed: self.f64_or("ps", "seed", d.seed as f64)? as u64,
+            n_shards: self.usize_or("ps", "shards", d.n_shards)?.max(1),
+            push_batch: self.usize_or("ps", "push_batch", d.push_batch)?.max(1),
+            schedule_blocks,
+            ..d
+        })
+    }
+
     /// Build the simulator configuration from `[cluster]`, `[stragglers]`,
     /// `[churn]` and `[sgd]` sections (all optional; defaults = paper).
     pub fn cluster_config(&self) -> Result<ClusterConfig> {
@@ -298,6 +337,52 @@ lr = 0.02
         assert_eq!(cc.n_nodes, 1000);
         assert!(cc.sgd.is_none());
         assert!(cc.stragglers.is_none());
+    }
+
+    #[test]
+    fn ps_section_builds_engine_config() {
+        let src = r#"
+[barrier]
+method = "pquorum:10:4:80"
+
+[ps]
+workers = 16
+steps = 50
+shards = 4
+push_batch = 2
+dim = 1024
+lr = 0.05
+schedule_blocks = 4
+"#;
+        let c = Config::parse(src).unwrap();
+        let ps = c.ps_config().unwrap();
+        assert_eq!(ps.n_workers, 16);
+        assert_eq!(ps.steps_per_worker, 50);
+        assert_eq!(ps.n_shards, 4);
+        assert_eq!(ps.push_batch, 2);
+        assert_eq!(ps.dim, 1024);
+        assert_eq!(ps.lr, 0.05);
+        assert_eq!(ps.schedule_blocks, Some(4));
+        assert_eq!(
+            ps.method,
+            Method::Pquorum { sample: 10, staleness: 4, quorum_pct: 80 }
+        );
+    }
+
+    #[test]
+    fn ps_section_defaults_and_errors() {
+        let ps = Config::parse("").unwrap().ps_config().unwrap();
+        let d = PsConfig::default();
+        assert_eq!(ps.n_workers, d.n_workers);
+        assert_eq!(ps.n_shards, 1);
+        assert_eq!(ps.push_batch, 1);
+        assert_eq!(ps.schedule_blocks, None);
+        // bad barrier strings propagate as errors
+        let c = Config::parse("[barrier]\nmethod = \"pquorum:10:4:101\"").unwrap();
+        assert!(c.ps_config().is_err());
+        // zero shards clamps to one rather than spawning nothing
+        let c = Config::parse("[ps]\nshards = 0").unwrap();
+        assert_eq!(c.ps_config().unwrap().n_shards, 1);
     }
 
     #[test]

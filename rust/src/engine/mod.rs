@@ -7,12 +7,17 @@
 //! | engine | model | states | barriers supported |
 //! |---|---|---|---|
 //! | [`mapreduce`]   | central | central | BSP (supersteps) |
-//! | [`paramserver`] | central | central | BSP, SSP, ASP, pBSP, pSSP |
+//! | [`paramserver`] | sharded central | central | BSP, SSP, ASP, pBSP, pSSP |
 //! | [`p2p`]         | replicated | distributed | ASP, pBSP, pSSP |
 //!
 //! The parameter-server engine is the paper's *centralised PSP* scenario
 //! (the server samples its own step table — "as trivial as a counting
-//! process"); the p2p engine is the *fully distributed* scenario: every
+//! process"), scaled out: the model vector is partitioned across
+//! `n_shards` shard actors and workers scatter batched per-shard pushes,
+//! while barrier state stays in one coordinator actor — sampling-based
+//! barriers compose unchanged with a distributed server because they
+//! never needed the model actor's state in the first place. The p2p
+//! engine is the *fully distributed* scenario: every
 //! worker holds a model replica and runs its own barrier decision over a
 //! sample drawn from the structured overlay, with **no global state
 //! anywhere** — the composition the paper argues only ASP and PSP can

@@ -1,12 +1,31 @@
 //! Parameter-server engine — centralised model, centralised states
-//! (paper §4.1 case 1; supports all five barrier methods).
+//! (paper §4.1 case 1; supports all five barrier methods plus pQuorum).
 //!
-//! One server actor owns the model vector and the [`StepTracker`]; worker
-//! threads run the `pull → compute → push → barrier` loop. For global
-//! methods the server answers barrier checks from its tracker; for PSP
-//! methods the server *samples* its tracker (the centralised sampling
-//! scenario of §5) — workers never see global state either way.
+//! The model vector is partitioned into `n_shards` contiguous blocks, each
+//! owned by its own **shard actor** with its own mailbox; barrier state
+//! (the [`StepTracker`]) lives in a dedicated **coordinator actor**, so
+//! model-plane traffic (pushes/pulls) and control-plane traffic (reports,
+//! barrier checks, sampling) never serialise through one queue. Workers
+//! run the `pull → compute → push → barrier` loop, accumulating gradients
+//! locally for `push_batch` steps and then scattering **one batched
+//! message per touched shard**.
+//!
+//! Pushes are **acknowledged**: a worker reports its new step to the
+//! coordinator only after every touched shard has applied its batch, so
+//! the single-server invariant "a reported step's updates are visible"
+//! survives the split — a BSP/SSP barrier pass still implies the model
+//! contains every update of the steps it waited for. `n_shards = 1,
+//! push_batch = 1` reproduces the paper's single-server scenario exactly
+//! (one mailbox, atomic pulls). With more shards, each *block* is
+//! individually consistent but a pull assembles blocks while concurrent
+//! pushes land — the standard sharded-parameter-server consistency
+//! model. For global methods the coordinator answers barrier checks from
+//! its tracker; for PSP methods it *samples* the tracker (the
+//! centralised sampling scenario of §5) — workers never see global state
+//! either way, which is why the sharding is invisible to barrier
+//! semantics: sampled decisions never needed the model actor at all.
 
+use std::ops::Range;
 use std::sync::mpsc::{channel, Sender};
 use std::time::{Duration, Instant};
 
@@ -16,20 +35,29 @@ use crate::engine::{EngineReport, GradFn};
 use crate::sampling::StepTracker;
 use crate::util::rng::Rng;
 
-/// Messages understood by the server actor.
-pub enum ServerMsg {
-    /// Worker pushes a gradient; server applies `w -= lr * g`.
-    Push { grad: Vec<f32> },
-    /// Worker pulls the current model.
-    Pull { reply: Sender<Vec<f32>> },
+/// Messages understood by a shard actor (model plane).
+pub enum ShardMsg {
+    /// Batched gradient slice for this shard's block; the shard applies
+    /// `w[j] -= lr * grad[j]` elementwise, then acknowledges so the
+    /// worker can report the step as visible.
+    Push { grad: Vec<f32>, ack: Sender<()> },
+    /// Pull this shard's block: replies `(shard index, block)` so a
+    /// worker can gather all shards through one channel.
+    Pull { reply: Sender<(usize, Vec<f32>)> },
+    /// Shut down and report `(block, pushes applied)`.
+    Stop { reply: Sender<(Vec<f32>, u64)> },
+}
+
+/// Messages understood by the barrier coordinator (control plane).
+pub enum CoordMsg {
     /// Worker reports that it advanced to `step`.
     Report { node: u32, step: u64 },
-    /// Global-view barrier check: may `node` (at `step`) advance?
+    /// Global-view barrier check: may a worker at `step` advance?
     Barrier { step: u64, reply: Sender<bool> },
     /// Centralised sampling primitive: min step over β sampled peers.
     SampleMin { node: u32, beta: usize, reply: Sender<Option<u64>> },
-    /// Shut down and report stats.
-    Stop { reply: Sender<(Vec<f32>, u64)> },
+    /// Shut down and report the number of step reports handled.
+    Stop { reply: Sender<u64> },
 }
 
 /// Engine configuration.
@@ -53,6 +81,15 @@ pub struct PsConfig {
     /// model-parallel pattern where each update touches a disjoint
     /// parameter shard. `None` = data-parallel (full-vector updates).
     pub schedule_blocks: Option<usize>,
+    /// Number of model shards (server actors). 1 = the paper's single
+    /// central server; more shards split both the model state and the
+    /// push/pull queues.
+    pub n_shards: usize,
+    /// Steps a worker accumulates gradients locally before scattering one
+    /// batched push per touched shard. 1 = push every step (paper). The
+    /// trade-off is standard gradient accumulation: the server view lags
+    /// a worker's local progress by up to `push_batch - 1` updates.
+    pub push_batch: usize,
 }
 
 impl Default for PsConfig {
@@ -67,6 +104,8 @@ impl Default for PsConfig {
             poll: Duration::from_micros(200),
             stragglers: Vec::new(),
             schedule_blocks: None,
+            n_shards: 1,
+            push_batch: 1,
         }
     }
 }
@@ -79,12 +118,23 @@ pub fn scheduled_range(
     nblocks: usize,
     node: usize,
     step: u64,
-) -> std::ops::Range<usize> {
+) -> Range<usize> {
     let nblocks = nblocks.clamp(1, dim);
     let block = (node + step as usize) % nblocks;
     let size = dim.div_ceil(nblocks);
     let lo = block * size;
     lo.min(dim)..((block + 1) * size).min(dim)
+}
+
+/// The model range owned by shard `shard` when `dim` parameters are split
+/// into `n_shards` contiguous blocks (same arithmetic as
+/// [`scheduled_range`], so a schedule with `nblocks == n_shards` touches
+/// exactly one shard per step).
+pub fn shard_range(dim: usize, n_shards: usize, shard: usize) -> Range<usize> {
+    let n_shards = n_shards.clamp(1, dim.max(1));
+    let size = dim.div_ceil(n_shards);
+    let lo = (shard * size).min(dim);
+    lo..((shard + 1) * size).min(dim)
 }
 
 /// Run the engine to completion: every worker performs its step budget.
@@ -101,40 +151,70 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     let lr = cfg.lr;
     let n = cfg.n_workers;
     let seed = cfg.seed;
+    let n_shards = cfg.n_shards.clamp(1, cfg.dim.max(1));
+    let push_batch = cfg.push_batch.max(1);
+    let ranges: Vec<Range<usize>> =
+        (0..n_shards).map(|k| shard_range(cfg.dim, n_shards, k)).collect();
 
-    // ---- server actor ----
-    let server = sys.spawn::<ServerMsg, _, _>("ps-server", move |mb| {
-        let mut w = init_w;
+    // ---- shard actors (model plane) ----
+    let shards: Vec<_> = ranges
+        .iter()
+        .enumerate()
+        .map(|(k, range)| {
+            let block = init_w[range.clone()].to_vec();
+            sys.spawn::<ShardMsg, _, _>(&format!("ps-shard-{k}"), move |mb| {
+                let mut w = block;
+                let mut updates: u64 = 0;
+                // Batched receive: one wakeup drains a burst of queued
+                // pushes, which is what makes many producers cheap.
+                let mut buf = Vec::with_capacity(32);
+                'serve: while mb.recv_batch(&mut buf, 32) > 0 {
+                    for msg in buf.drain(..) {
+                        match msg {
+                            ShardMsg::Push { grad, ack } => {
+                                updates += 1;
+                                for (wi, gi) in w.iter_mut().zip(&grad) {
+                                    *wi -= lr * gi;
+                                }
+                                let _ = ack.send(());
+                            }
+                            ShardMsg::Pull { reply } => {
+                                let _ = reply.send((k, w.clone()));
+                            }
+                            ShardMsg::Stop { reply } => {
+                                let _ = reply.send((w, updates));
+                                break 'serve;
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // ---- coordinator actor (control plane: barrier state) ----
+    let coord = sys.spawn::<CoordMsg, _, _>("ps-coord", move |mb| {
         let mut tracker = StepTracker::new(n);
         let mut rng = Rng::new(seed ^ SERVER_SEED_SALT);
         let mut scratch = Vec::new();
-        let mut updates: u64 = 0;
+        let mut reports: u64 = 0;
         while let Some(msg) = mb.recv() {
             match msg {
-                ServerMsg::Push { grad } => {
-                    updates += 1;
-                    for (wi, gi) in w.iter_mut().zip(&grad) {
-                        *wi -= lr * gi;
-                    }
+                CoordMsg::Report { node, step } => {
+                    reports += 1;
+                    tracker.advance_to(node as usize, step);
                 }
-                ServerMsg::Pull { reply } => {
-                    let _ = reply.send(w.clone());
-                }
-                ServerMsg::Report { node, step } => {
-                    debug_assert_eq!(tracker.step_of(node as usize) + 1, step);
-                    tracker.advance(node as usize);
-                }
-                ServerMsg::Barrier { step, reply } => {
+                CoordMsg::Barrier { step, reply } => {
                     let pass = tracker.min_step() + staleness >= step;
                     let _ = reply.send(pass);
                 }
-                ServerMsg::SampleMin { node, beta, reply } => {
+                CoordMsg::SampleMin { node, beta, reply } => {
                     let m =
                         tracker.sample_min(node as usize, beta, &mut rng, &mut scratch);
                     let _ = reply.send(m);
                 }
-                ServerMsg::Stop { reply } => {
-                    let _ = reply.send((w, updates));
+                CoordMsg::Stop { reply } => {
+                    let _ = reply.send(reports);
                     break;
                 }
             }
@@ -145,10 +225,13 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     let view = method.build().view();
     let workers: Vec<_> = (0..n)
         .map(|i| {
-            let server_addr = server.addr.clone();
+            let shard_addrs: Vec<_> = shards.iter().map(|s| s.addr.clone()).collect();
+            let coord_addr = coord.addr.clone();
+            let ranges = ranges.clone();
             let grad_fn = grad_fn.clone();
             let poll = cfg.poll;
             let steps = cfg.steps_per_worker;
+            let dim = cfg.dim;
             let slow = cfg
                 .stragglers
                 .iter()
@@ -160,33 +243,91 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 let mut rng = Rng::new(wseed);
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
+                let mut w = vec![0.0f32; dim];
+                // Local accumulator for batched pushes + which shards the
+                // accumulated updates touched.
+                let mut acc = vec![0.0f32; dim];
+                let mut touched = vec![false; ranges.len()];
+                let mut pending: u64 = 0;
                 for step in 0..steps {
-                    // pull
+                    // pull: gather every shard's block through one channel
                     let (tx, rx) = channel();
-                    if !server_addr.send(ServerMsg::Pull { reply: tx }) {
+                    let mut requested = 0usize;
+                    for addr in &shard_addrs {
+                        if addr.send(ShardMsg::Pull { reply: tx.clone() }) {
+                            requested += 1;
+                        }
+                    }
+                    if requested < shard_addrs.len() {
+                        break; // a shard is gone: shutting down
+                    }
+                    let mut received = 0usize;
+                    while received < requested {
+                        let Ok((k, block)) = rx.recv() else { break };
+                        w[ranges[k].clone()].copy_from_slice(&block);
+                        received += 1;
+                    }
+                    if received < requested {
                         break;
                     }
-                    let Ok(w) = rx.recv() else { break };
                     // compute (stragglers sleep extra)
                     if let Some(d) = slow {
                         std::thread::sleep(d);
                     }
-                    let mut g = grad_fn(&w, rng.next_u64());
-                    // schedule: restrict the update to this worker's block
-                    if let Some(nblocks) = schedule_blocks {
-                        let range = scheduled_range(g.len(), nblocks, i, step);
-                        for (j, gj) in g.iter_mut().enumerate() {
-                            if !range.contains(&j) {
-                                *gj = 0.0;
+                    let g = grad_fn(&w, rng.next_u64());
+                    // schedule + accumulate: restrict the update to this
+                    // worker's block and fold it into the local batch
+                    match schedule_blocks {
+                        Some(nblocks) => {
+                            let range = scheduled_range(g.len(), nblocks, i, step);
+                            for (j, gj) in g[range.clone()].iter().enumerate() {
+                                acc[range.start + j] += gj;
+                            }
+                            for (k, r) in ranges.iter().enumerate() {
+                                if r.start < range.end && range.start < r.end {
+                                    touched[k] = true;
+                                }
                             }
                         }
+                        None => {
+                            for (aj, gj) in acc.iter_mut().zip(&g) {
+                                *aj += gj;
+                            }
+                            touched.iter_mut().for_each(|t| *t = true);
+                        }
                     }
-                    // push
-                    update_msgs += 1;
-                    server_addr.send(ServerMsg::Push { grad: g });
-                    // report new step
+                    pending += 1;
+                    // push: scatter one batched message per touched shard,
+                    // then wait for the applies — the step report below
+                    // must not outrun the updates it stands for
+                    if pending == push_batch as u64 || step + 1 == steps {
+                        let (ack_tx, ack_rx) = channel();
+                        let mut in_flight = 0usize;
+                        for (k, r) in ranges.iter().enumerate() {
+                            if !touched[k] {
+                                continue;
+                            }
+                            update_msgs += 1;
+                            if shard_addrs[k].send(ShardMsg::Push {
+                                grad: acc[r.clone()].to_vec(),
+                                ack: ack_tx.clone(),
+                            }) {
+                                in_flight += 1;
+                            }
+                            acc[r.clone()].iter_mut().for_each(|v| *v = 0.0);
+                            touched[k] = false;
+                        }
+                        drop(ack_tx);
+                        for _ in 0..in_flight {
+                            if ack_rx.recv().is_err() {
+                                break;
+                            }
+                        }
+                        pending = 0;
+                    }
+                    // report the new step (control plane, every step)
                     control_msgs += 1;
-                    server_addr.send(ServerMsg::Report {
+                    coord_addr.send(CoordMsg::Report {
                         node: i as u32,
                         step: step + 1,
                     });
@@ -200,8 +341,8 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             ViewRequirement::Global => {
                                 let (tx, rx) = channel();
                                 control_msgs += 2;
-                                if !server_addr
-                                    .send(ServerMsg::Barrier { step: step + 1, reply: tx })
+                                if !coord_addr
+                                    .send(CoordMsg::Barrier { step: step + 1, reply: tx })
                                 {
                                     return (control_msgs, update_msgs);
                                 }
@@ -210,7 +351,7 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             ViewRequirement::Sample(beta) => {
                                 let (tx, rx) = channel();
                                 control_msgs += 2 * beta as u64;
-                                if !server_addr.send(ServerMsg::SampleMin {
+                                if !coord_addr.send(CoordMsg::SampleMin {
                                     node: i as u32,
                                     beta,
                                     reply: tx,
@@ -244,13 +385,26 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         control_msgs += c;
         update_msgs += u;
     }
+    let mut model = vec![0.0f32; cfg.dim];
+    let mut server_updates = 0u64;
+    for (k, shard) in shards.into_iter().enumerate() {
+        let (tx, rx) = channel();
+        shard.addr.send(ShardMsg::Stop { reply: tx });
+        let (block, updates) = rx.recv().expect("shard stats");
+        model[ranges[k].clone()].copy_from_slice(&block);
+        server_updates += updates;
+        let (saddr, shandle) = shard.into_parts();
+        drop(saddr);
+        shandle.join().expect("shard panicked");
+    }
     let (tx, rx) = channel();
-    server.addr.send(ServerMsg::Stop { reply: tx });
-    let (model, server_updates) = rx.recv().expect("server stats");
-    let (saddr, shandle) = server.into_parts();
-    drop(saddr);
-    shandle.join().expect("server panicked");
+    coord.addr.send(CoordMsg::Stop { reply: tx });
+    let reports = rx.recv().expect("coordinator stats");
+    let (caddr, chandle) = coord.into_parts();
+    drop(caddr);
+    chandle.join().expect("coordinator panicked");
     assert_eq!(server_updates, update_msgs);
+    assert_eq!(reports, n as u64 * cfg.steps_per_worker);
 
     EngineReport {
         steps: vec![cfg.steps_per_worker; n],
@@ -261,7 +415,8 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     }
 }
 
-/// Salt separating the server's sampling RNG stream from worker streams.
+/// Salt separating the coordinator's sampling RNG stream from worker
+/// streams.
 const SERVER_SEED_SALT: u64 = 0x5EA5_1DE5;
 
 #[cfg(test)]
@@ -285,6 +440,33 @@ mod tests {
                 .to_vec()
         });
         (f, w_true)
+    }
+
+    /// A gradient oracle that depends only on the step seed, never on the
+    /// model. The multiset of applied updates is then independent of
+    /// message interleaving, so any two engine configurations must land on
+    /// the same final model up to float-summation rounding.
+    fn seed_only_grad_fn(dim: usize) -> GradFn {
+        Arc::new(move |_w, seed| {
+            let mut rng = Rng::new(seed);
+            (0..dim).map(|_| (rng.next_f32() - 0.5) * 0.2).collect()
+        })
+    }
+
+    /// Replay what any interleaving of `seed_only_grad_fn` updates sums to.
+    fn expected_seed_only_model(cfg: &PsConfig, grad: &GradFn) -> Vec<f32> {
+        let mut w = vec![0.0f32; cfg.dim];
+        for i in 0..cfg.n_workers {
+            let wseed = cfg.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ i as u64;
+            let mut rng = Rng::new(wseed);
+            for _ in 0..cfg.steps_per_worker {
+                let g = grad(&w, rng.next_u64());
+                for (wi, gi) in w.iter_mut().zip(&g) {
+                    *wi -= cfg.lr * gi;
+                }
+            }
+        }
+        w
     }
 
     fn run_method(method: Method) -> (EngineReport, Vec<f32>) {
@@ -341,6 +523,20 @@ mod tests {
     }
 
     #[test]
+    fn shard_range_partitions_dim() {
+        for (dim, shards) in [(64usize, 4usize), (103, 7), (10, 16), (1, 1)] {
+            let mut covered = vec![false; dim];
+            for k in 0..shards.clamp(1, dim) {
+                for j in shard_range(dim, shards, k) {
+                    assert!(!covered[j], "overlap at {j} (dim={dim} shards={shards})");
+                    covered[j] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "gap (dim={dim} shards={shards})");
+        }
+    }
+
+    #[test]
     fn model_parallel_schedule_converges() {
         let cfg = PsConfig {
             n_workers: 4,
@@ -373,5 +569,127 @@ mod tests {
         let (grad, _) = linear_grad_fn(16, 9);
         let report = run(&cfg, vec![0.0; 16], grad);
         assert_eq!(report.update_msgs, 24);
+    }
+
+    #[test]
+    fn sharding_preserves_single_worker_trajectory() {
+        // One worker => fully deterministic pull/push interleaving, real
+        // (model-dependent) gradients. Sharding must not change the math:
+        // the same per-element updates apply in the same order.
+        let base = PsConfig {
+            n_workers: 1,
+            steps_per_worker: 30,
+            method: Method::Pssp { sample: 8, staleness: 4 },
+            dim: 37, // ragged split across 4 shards
+            lr: 0.05,
+            seed: 11,
+            ..PsConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(base.dim, 13);
+        let reference = run(&base, vec![0.0; base.dim], grad.clone());
+        for shards in [2usize, 3, 4] {
+            let cfg = PsConfig { n_shards: shards, ..base.clone() };
+            let r = run(&cfg, vec![0.0; cfg.dim], grad.clone());
+            let d = l2_dist(&r.model, &reference.model);
+            assert!(d < 1e-6, "shards={shards}: diverged by {d}");
+        }
+    }
+
+    #[test]
+    fn sharded_engine_matches_unsharded_on_seed_only_grads() {
+        // Acceptance sweep: BSP, SSP(4), pSSP(8,4) with n_shards in {1,4}
+        // land on the same final model (within 1e-4) as the analytic
+        // update sum — multi-worker, real threads.
+        for method in [
+            Method::Bsp,
+            Method::Ssp { staleness: 4 },
+            Method::Pssp { sample: 8, staleness: 4 },
+        ] {
+            let base = PsConfig {
+                n_workers: 6,
+                steps_per_worker: 20,
+                method,
+                dim: 50,
+                lr: 0.05,
+                seed: 21,
+                ..PsConfig::default()
+            };
+            let grad = seed_only_grad_fn(base.dim);
+            let expected = expected_seed_only_model(&base, &grad);
+            for shards in [1usize, 4] {
+                let cfg = PsConfig { n_shards: shards, ..base.clone() };
+                let r = run(&cfg, vec![0.0; cfg.dim], grad.clone());
+                let d = l2_dist(&r.model, &expected);
+                assert!(d < 1e-4, "{method} shards={shards}: off by {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn push_batch_coalesces_messages_without_changing_the_sum() {
+        let base = PsConfig {
+            n_workers: 6,
+            steps_per_worker: 16,
+            method: Method::Ssp { staleness: 4 },
+            dim: 48,
+            lr: 0.05,
+            seed: 31,
+            n_shards: 4,
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(base.dim);
+        let expected = expected_seed_only_model(&base, &grad);
+        let unbatched = run(&base, vec![0.0; base.dim], grad.clone());
+        // every step scatters to all 4 shards
+        assert_eq!(unbatched.update_msgs, 6 * 16 * 4);
+        let cfg = PsConfig { push_batch: 4, ..base.clone() };
+        let batched = run(&cfg, vec![0.0; cfg.dim], grad.clone());
+        // 16 steps / batch 4 => 4 flushes per worker, each to all 4 shards
+        assert_eq!(batched.update_msgs, 6 * 4 * 4);
+        assert!(l2_dist(&unbatched.model, &expected) < 1e-4);
+        assert!(l2_dist(&batched.model, &expected) < 1e-4);
+    }
+
+    #[test]
+    fn aligned_schedule_touches_one_shard_per_step() {
+        // schedule_blocks == n_shards: each step's scheduled block is
+        // exactly one shard, so a flush sends exactly one message.
+        let cfg = PsConfig {
+            n_workers: 4,
+            steps_per_worker: 12,
+            method: Method::Asp,
+            dim: 64,
+            lr: 0.05,
+            seed: 41,
+            schedule_blocks: Some(4),
+            n_shards: 4,
+            ..PsConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(cfg.dim, 43);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        assert_eq!(r.update_msgs, 4 * 12);
+    }
+
+    #[test]
+    fn push_batch_ragged_tail_is_flushed() {
+        // steps not divisible by push_batch: the final partial batch must
+        // still reach the shards (total applied updates == analytic sum).
+        let cfg = PsConfig {
+            n_workers: 3,
+            steps_per_worker: 7,
+            method: Method::Asp,
+            dim: 20,
+            lr: 0.1,
+            seed: 51,
+            n_shards: 2,
+            push_batch: 3,
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(cfg.dim);
+        let expected = expected_seed_only_model(&cfg, &grad);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        // per worker: flushes after steps 3, 6 and the final step 7
+        assert_eq!(r.update_msgs, 3 * 3 * 2);
+        assert!(l2_dist(&r.model, &expected) < 1e-4);
     }
 }

@@ -10,11 +10,18 @@
 //! * `ext_churn` — progress and error under increasing node churn, the
 //!   §3 motivation the paper's evaluation doesn't quantify.
 //! * `ext_loss` — robustness to lossy wide-area links.
+//! * `ext_shards` — the live sharded parameter-server engine swept over
+//!   shard count and push-batch size (real threads, not the simulator).
+
+use std::sync::Arc;
 
 use crate::barrier::Method;
+use crate::engine::paramserver::{self, PsConfig};
 use crate::exp::{Cell, ExpOpts, Report};
+use crate::model::linear::{minibatch_grad_fn, Dataset};
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, Simulator};
-use crate::util::stats::Summary;
+use crate::util::rng::Rng;
+use crate::util::stats::{l2_dist, Summary};
 
 fn sgd_cluster(opts: &ExpOpts) -> ClusterConfig {
     ClusterConfig {
@@ -171,6 +178,59 @@ pub fn ext_loss(opts: &ExpOpts) -> Report {
     rep
 }
 
+/// Shard/push-batch sweep on the live parameter-server engine: the
+/// model-plane scaling axis the single-server design caps.
+pub fn ext_shards(opts: &ExpOpts) -> Report {
+    let mut rep = Report::new(
+        "ext_shards",
+        "sharded parameter server: throughput and error vs (shards, push_batch)",
+        &[
+            "shards", "push_batch", "steps_per_s", "update_msgs", "ctrl_msgs",
+            "norm_error", "wall_s",
+        ],
+    );
+    let (workers, steps, dim) = if opts.quick { (8, 24, 256) } else { (16, 60, 1024) };
+    let mut rng = Rng::new(opts.seed);
+    let data = Arc::new(Dataset::synthetic(2048, dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+    let sweep: &[(usize, usize)] = if opts.quick {
+        &[(1, 1), (4, 1), (4, 4)]
+    } else {
+        &[(1, 1), (2, 1), (4, 1), (8, 1), (4, 4), (4, 8)]
+    };
+    for &(shards, push_batch) in sweep {
+        let grad = minibatch_grad_fn(Arc::clone(&data), 32);
+        let cfg = PsConfig {
+            n_workers: workers,
+            steps_per_worker: steps,
+            method: Method::Pssp { sample: opts.eff_sample(), staleness: opts.staleness },
+            lr: 0.05,
+            dim,
+            seed: opts.seed,
+            n_shards: shards,
+            push_batch,
+            ..PsConfig::default()
+        };
+        let r = paramserver::run(&cfg, vec![0.0; dim], grad);
+        let total_steps: u64 = r.steps.iter().sum();
+        let init_err = l2_dist(&vec![0.0; dim], &w_true);
+        rep.row(vec![
+            shards.into(),
+            push_batch.into(),
+            (total_steps as f64 / r.wall_secs.max(1e-9)).into(),
+            r.update_msgs.into(),
+            r.control_msgs.into(),
+            (l2_dist(&r.model, &w_true) / init_err.max(1e-12)).into(),
+            r.wall_secs.into(),
+        ]);
+    }
+    rep.note("expected: worker-step throughput grows with shards (the model \
+              plane parallelises) while barrier semantics — and hence error — \
+              stay put; push batching trades server-view freshness for \
+              message count");
+    rep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +276,28 @@ mod tests {
             fast >= slow,
             "faster polling should cost >= control msgs/step ({fast} vs {slow})"
         );
+    }
+
+    #[test]
+    fn shards_sweep_runs_and_learns() {
+        let rep = ext_shards(&quick());
+        assert_eq!(rep.rows.len(), 3);
+        // sharding must not change what the workers learn, only how the
+        // updates travel: every configuration ends well below the initial
+        // error (column 5 is normalised to the ||w_true|| starting error).
+        for row in &rep.rows {
+            assert!(num(&row[2]) > 0.0, "throughput must be positive");
+            let norm_err = num(&row[5]);
+            assert!(
+                norm_err.is_finite() && norm_err < 0.9,
+                "no learning: normalised error {norm_err}"
+            );
+        }
+        let base_updates = num(&rep.rows[0][3]);
+        let sharded_updates = num(&rep.rows[1][3]);
+        assert_eq!(sharded_updates, base_updates * 4.0, "4 shards => 4x messages");
+        let batched_updates = num(&rep.rows[2][3]);
+        assert_eq!(batched_updates, sharded_updates / 4.0, "batch 4 => /4 messages");
     }
 
     #[test]

@@ -257,6 +257,7 @@ pub const ALL: &[&str] = &[
 /// Ablations + extensions beyond the paper (run via `actor exp ext`).
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
+    "ext_shards",
 ];
 
 /// Run one experiment by id.
@@ -279,6 +280,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "abl_recheck" => vec![ablation::abl_recheck(opts)],
         "ext_churn" => vec![ablation::ext_churn(opts)],
         "ext_loss" => vec![ablation::ext_loss(opts)],
+        "ext_shards" => vec![ablation::ext_shards(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

@@ -4,15 +4,20 @@
 
 use anyhow::{bail, Result};
 
+use std::sync::Arc;
+
 use actor_psp::barrier::Method;
 use actor_psp::cli::{Args, USAGE};
 use actor_psp::config::Config;
+use actor_psp::engine::paramserver::{self, PsConfig};
 use actor_psp::exp::{self, ExpOpts};
+use actor_psp::model::linear::{minibatch_grad_fn, Dataset};
 use actor_psp::runtime::{Manifest, Runtime};
 use actor_psp::sim::{ClusterConfig, SgdConfig, Simulator};
 use actor_psp::theory::{mean_bound, variance_bound, BoundParams};
 use actor_psp::train::{psp_train_lm, train_lm, Corpus, TransformerTrainer};
-use actor_psp::util::stats::Summary;
+use actor_psp::util::rng::Rng;
+use actor_psp::util::stats::{l2_dist, Summary};
 
 fn main() {
     actor_psp::util::logging::init();
@@ -38,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "exp" => cmd_exp(args),
         "sim" => cmd_sim(args),
+        "ps" => cmd_ps(args),
         "train" => cmd_train(args),
         "bounds" => cmd_bounds(args),
         "info" => cmd_info(args),
@@ -129,9 +135,86 @@ fn cmd_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the live sharded parameter-server engine on the pure-Rust linear
+/// SGD workload and print the progress/message/throughput summary.
+fn cmd_ps(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "workers", "steps", "method", "dim", "lr", "seed", "shards",
+        "push-batch", "schedule-blocks",
+    ])?;
+    // config file first, CLI flags override
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.ps_config()?,
+        None => PsConfig::default(),
+    };
+    if let Some(m) = args.get("method") {
+        cfg.method =
+            Method::parse(m).ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?;
+    }
+    if let Some(v) = args.parse_flag::<usize>("workers")? {
+        cfg.n_workers = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("steps")? {
+        cfg.steps_per_worker = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("dim")? {
+        cfg.dim = v;
+    }
+    if let Some(v) = args.parse_flag::<f32>("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("shards")? {
+        cfg.n_shards = v.max(1);
+    }
+    if let Some(v) = args.parse_flag::<usize>("push-batch")? {
+        cfg.push_batch = v.max(1);
+    }
+    if let Some(v) = args.parse_flag::<usize>("schedule-blocks")? {
+        cfg.schedule_blocks = (v > 0).then_some(v);
+    }
+
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let rows = (cfg.dim * 8).clamp(256, 4096);
+    let data = Arc::new(Dataset::synthetic(rows, cfg.dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+    let grad = minibatch_grad_fn(Arc::clone(&data), 32);
+
+    println!(
+        "parameter server: {} workers x {} steps, d={} under {} \
+         ({} shard(s), push batch {})",
+        cfg.n_workers,
+        cfg.steps_per_worker,
+        cfg.dim,
+        cfg.method,
+        cfg.n_shards,
+        cfg.push_batch,
+    );
+    let init_err = l2_dist(&vec![0.0; cfg.dim], &w_true);
+    let r = paramserver::run(&cfg, vec![0.0; cfg.dim], grad);
+    let total_steps: u64 = r.steps.iter().sum();
+    println!(
+        "steps {}  update msgs {}  control msgs {}  error {:.4} -> {:.4}",
+        total_steps,
+        r.update_msgs,
+        r.control_msgs,
+        init_err,
+        l2_dist(&r.model, &w_true),
+    );
+    println!(
+        "wall {:.3}s  ({:.1}k worker-steps/s, {:.1}k pushes/s)",
+        r.wall_secs,
+        total_steps as f64 / r.wall_secs.max(1e-9) / 1e3,
+        r.update_msgs as f64 / r.wall_secs.max(1e-9) / 1e3,
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
-        "config", "steps", "lr", "seed", "workers", "method", "artifacts",
+        "config", "steps", "lr", "seed", "workers", "method", "artifacts", "accum",
     ])?;
     let cfg = args.get_or("config", "tiny");
     let steps: u64 = args.flag_or("steps", 200)?;
@@ -166,8 +249,14 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?,
             None => Method::Pssp { sample: 3, staleness: 2 },
         };
-        println!("PSP-paced data-parallel: {workers} workers under {method}");
-        psp_train_lm(&mut trainer, &corpus, method, workers, steps, lr, seed, None)?
+        let accum: usize = args.flag_or("accum", 1)?;
+        println!(
+            "PSP-paced data-parallel: {workers} workers under {method} \
+             (accum {accum})"
+        );
+        psp_train_lm(
+            &mut trainer, &corpus, method, workers, steps, lr, seed, None, accum,
+        )?
     };
     for (step, loss) in log
         .losses

@@ -116,6 +116,20 @@ impl LinearModel {
     }
 }
 
+/// A [`crate::engine::GradFn`] over a shared dataset: seeded minibatch
+/// gradients through a mutex-guarded model — the pure-Rust counterpart
+/// of `runtime::linear_grad_fn`, and the gradient source every engine
+/// example/experiment shares.
+pub fn minibatch_grad_fn(
+    data: std::sync::Arc<Dataset>,
+    batch: usize,
+) -> crate::engine::GradFn {
+    let model = std::sync::Mutex::new(LinearModel::new(data.dim));
+    std::sync::Arc::new(move |w, seed| {
+        model.lock().unwrap().minibatch_grad(&data, w, seed, batch).to_vec()
+    })
+}
+
 /// 8-lane dot product over `chunks_exact` (bounds-check-free, independent
 /// accumulators => LLVM emits packed FMAs).
 #[inline]

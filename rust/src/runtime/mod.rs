@@ -2,7 +2,16 @@
 //! request path. **Python never runs here**: the HLO text under
 //! `artifacts/` was produced once at build time by `make artifacts`.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API, CPU plugin):
+//! The XLA-backed execution path lives in [`mod@self::pjrt`] behind the
+//! `pjrt` cargo feature (the `xla` crate is not on crates.io, so default
+//! builds — and CI — compile a stub [`Runtime`] with the same API whose
+//! `execute` returns an error). Everything else in this module is pure
+//! Rust: the [`Tensor`] host type with its signature validation, the
+//! [`Manifest`] contract, the [`RuntimeService`] thread facade and the
+//! [`linear_grad_fn`] engine adapter all compile and type-check in both
+//! modes, so the engines and tests never need `#[cfg]` of their own.
+//!
+//! With the feature enabled the flow is:
 //!
 //! ```text
 //! HLO text ── HloModuleProto::from_text_file ──► XlaComputation
@@ -12,20 +21,20 @@
 //! Interchange is HLO *text* because jax ≥ 0.5 serialises protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see `python/compile/aot.py`).
-//!
-//! Executables are compiled once and cached ([`Runtime::prepare`]); the
-//! L2 functions were lowered with `return_tuple=True`, so each execution
-//! returns one tuple literal that [`Runtime::execute`] unpacks.
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
 pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// A typed host-side tensor, matched against [`TensorSpec`] at call time.
 #[derive(Debug, Clone)]
@@ -74,8 +83,10 @@ impl Tensor {
         }
     }
 
-    /// Build the PJRT literal for this tensor with the given shape.
-    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+    /// Validate this tensor against a signature entry (element count and
+    /// dtype). Backend-independent — both the PJRT path and the stub use
+    /// it so shape errors read identically everywhere.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
         if self.len() != spec.elements() {
             bail!(
                 "input '{}': {} elements, spec wants {:?} = {}",
@@ -88,57 +99,26 @@ impl Tensor {
         if self.dtype() != spec.dtype {
             bail!("input '{}': dtype mismatch", spec.name);
         }
-        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32(v) => xla::Literal::vec1(v),
-            Tensor::I32(v) => xla::Literal::vec1(v),
-        };
-        // Scalars and vectors already have rank ≤ 1; reshape handles rank>1
-        // and the rank-0 scalar case.
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
-        let t = match spec.dtype {
-            Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
-            Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
-        };
-        if t.len() != spec.elements() {
-            bail!(
-                "output '{}': got {} elements, expected {}",
-                spec.name,
-                t.len(),
-                spec.elements()
-            );
-        }
-        Ok(t)
+        Ok(())
     }
 }
 
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
-    /// Cumulative host-side execute calls (perf accounting).
-    calls: u64,
-}
-
-/// The PJRT runtime: one CPU client + a cache of compiled executables.
+/// Stub runtime used when the `pjrt` feature is off: the manifest loads
+/// and signatures validate, but execution reports the missing backend.
+#[cfg(not(feature = "pjrt"))]
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    compiled: Mutex<HashMap<String, Compiled>>,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl Runtime {
     /// Create a runtime over the default artifacts directory.
     pub fn new() -> Result<Runtime> {
         Self::with_dir(&Manifest::default_dir())
     }
 
-    pub fn with_dir(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    pub fn with_dir(dir: &std::path::Path) -> Result<Runtime> {
+        Ok(Runtime { manifest: Manifest::load(dir)? })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -146,73 +126,40 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "stub (built without the `pjrt` feature)".to_string()
     }
 
-    /// Compile (and cache) an artifact. Idempotent.
+    /// Resolve the artifact, then report the missing backend.
     pub fn prepare(&self, name: &str) -> Result<()> {
-        let mut cache = self.compiled.lock().unwrap();
-        if cache.contains_key(name) {
-            return Ok(());
-        }
-        let spec = self.manifest.find(name)?.clone();
-        let path = self.manifest.hlo_path(&spec);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact '{name}'"))?;
-        cache.insert(name.to_string(), Compiled { exe, spec, calls: 0 });
-        Ok(())
+        self.manifest.find(name)?;
+        bail!(
+            "artifact '{name}' cannot be compiled: this binary was built \
+             without the `pjrt` feature (see rust/Cargo.toml)"
+        )
     }
 
-    /// Execute an artifact with host tensors; returns the output tensors
-    /// in manifest order. Validates shapes/dtypes both ways.
+    /// Validate the call signature, then report the missing backend.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.prepare(name)?;
-        let mut cache = self.compiled.lock().unwrap();
-        let c = cache.get_mut(name).expect("prepared above");
-        if inputs.len() != c.spec.inputs.len() {
+        let spec = self.manifest.find(name)?;
+        if inputs.len() != spec.inputs.len() {
             bail!(
                 "artifact '{name}': {} inputs given, {} expected",
                 inputs.len(),
-                c.spec.inputs.len()
+                spec.inputs.len()
             );
         }
-        let literals = inputs
-            .iter()
-            .zip(&c.spec.inputs)
-            .map(|(t, s)| t.to_literal(s))
-            .collect::<Result<Vec<_>>>()?;
-        c.calls += 1;
-        let result = c.exe.execute::<xla::Literal>(&literals)?;
-        // Lowered with return_tuple=True: a single tuple output buffer.
-        let out_lit = result[0][0].to_literal_sync()?;
-        let parts = out_lit.to_tuple()?;
-        if parts.len() != c.spec.outputs.len() {
-            bail!(
-                "artifact '{name}': {} outputs, expected {}",
-                parts.len(),
-                c.spec.outputs.len()
-            );
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            t.check_spec(s)?;
         }
-        parts
-            .iter()
-            .zip(&c.spec.outputs)
-            .map(|(l, s)| Tensor::from_literal(l, s))
-            .collect()
+        bail!(
+            "artifact '{name}' cannot be executed: this binary was built \
+             without the `pjrt` feature (see rust/Cargo.toml)"
+        )
     }
 
-    /// How many times an artifact has been executed (perf accounting).
-    pub fn call_count(&self, name: &str) -> u64 {
-        self.compiled
-            .lock()
-            .unwrap()
-            .get(name)
-            .map(|c| c.calls)
-            .unwrap_or(0)
+    /// How many times an artifact has been executed (always 0 in the stub).
+    pub fn call_count(&self, _name: &str) -> u64 {
+        0
     }
 }
 
@@ -272,7 +219,9 @@ impl RuntimeService {
                 }
             })
             .expect("spawn pjrt service");
-        ready_rx.recv().context("pjrt service died during init")??;
+        ready_rx.recv().map_err(|_| {
+            anyhow::anyhow!("pjrt service died during init")
+        })??;
         Ok(RuntimeService { tx: Mutex::new(tx), handle: Mutex::new(Some(handle)) })
     }
 
@@ -343,6 +292,10 @@ mod tests {
     use super::*;
 
     fn runtime() -> Option<Runtime> {
+        if !cfg!(feature = "pjrt") {
+            eprintln!("skipping: built without the pjrt feature");
+            return None;
+        }
         if !Manifest::default_dir().join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");
             return None;
@@ -357,9 +310,22 @@ mod tests {
             shape: vec![2, 3],
             dtype: Dtype::F32,
         };
-        assert!(Tensor::F32(vec![0.0; 6]).to_literal(&spec).is_ok());
-        assert!(Tensor::F32(vec![0.0; 5]).to_literal(&spec).is_err());
-        assert!(Tensor::I32(vec![0; 6]).to_literal(&spec).is_err());
+        assert!(Tensor::F32(vec![0.0; 6]).check_spec(&spec).is_ok());
+        assert!(Tensor::F32(vec![0.0; 5]).check_spec(&spec).is_err());
+        assert!(Tensor::I32(vec![0; 6]).check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let f = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.dtype(), Dtype::F32);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = Tensor::I32(vec![7]);
+        assert!(i.as_i32().is_ok());
+        assert!(i.clone().into_f32().is_err());
+        assert!(!i.is_empty());
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! XLA-backed [`Runtime`]: the real PJRT execution path, compiled only
+//! with the `pjrt` cargo feature (requires a vendored `xla` crate —
+//! xla_extension 0.5.1 bindings — wired in via a `[patch]` entry; see
+//! rust/Cargo.toml).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ArtifactSpec, Dtype, Manifest, Tensor, TensorSpec};
+
+/// Build the PJRT literal for a tensor with the given shape.
+fn to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
+    t.check_spec(spec)?;
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(v) => xla::Literal::vec1(v),
+        Tensor::I32(v) => xla::Literal::vec1(v),
+    };
+    // Scalars and vectors already have rank ≤ 1; reshape handles rank>1
+    // and the rank-0 scalar case.
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    let t = match spec.dtype {
+        Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+        Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+    };
+    if t.len() != spec.elements() {
+        bail!(
+            "output '{}': got {} elements, expected {}",
+            spec.name,
+            t.len(),
+            spec.elements()
+        );
+    }
+    Ok(t)
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+    /// Cumulative host-side execute calls (perf accounting).
+    calls: u64,
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, Compiled>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(&Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact. Idempotent.
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        cache.insert(name.to_string(), Compiled { exe, spec, calls: 0 });
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; returns the output tensors
+    /// in manifest order. Validates shapes/dtypes both ways.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.prepare(name)?;
+        let mut cache = self.compiled.lock().unwrap();
+        let c = cache.get_mut(name).expect("prepared above");
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "artifact '{name}': {} inputs given, {} expected",
+                inputs.len(),
+                c.spec.inputs.len()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .zip(&c.spec.inputs)
+            .map(|(t, s)| to_literal(t, s))
+            .collect::<Result<Vec<_>>>()?;
+        c.calls += 1;
+        let result = c.exe.execute::<xla::Literal>(&literals)?;
+        // Lowered with return_tuple=True: a single tuple output buffer.
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "artifact '{name}': {} outputs, expected {}",
+                parts.len(),
+                c.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&c.spec.outputs)
+            .map(|(l, s)| from_literal(l, s))
+            .collect()
+    }
+
+    /// How many times an artifact has been executed (perf accounting).
+    pub fn call_count(&self, name: &str) -> u64 {
+        self.compiled
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.calls)
+            .unwrap_or(0)
+    }
+}

@@ -104,6 +104,24 @@ impl StepTracker {
         (new_min != old_min).then_some(new_min)
     }
 
+    /// Advance a node directly to `step` (batched step reports: a worker
+    /// that accumulates updates locally may report a jump of several
+    /// steps in one message). A no-op when `step` is not ahead of the
+    /// node's current step. Returns the new global min if it changed.
+    pub fn advance_to(&mut self, node: usize, step: u64) -> Option<u64> {
+        assert!(self.active[node], "advance_to on inactive node {node}");
+        let old = self.steps[node];
+        if step <= old {
+            return None;
+        }
+        let old_min = self.min_step();
+        self.steps[node] = step;
+        self.dec_hist(old);
+        *self.hist.entry(step).or_insert(0) += 1;
+        let new_min = self.min_step();
+        (new_min != old_min).then_some(new_min)
+    }
+
     /// Register a new node joining at the current minimum step (a fresh
     /// replica starts from the latest checkpointed frontier). Returns its id.
     pub fn join(&mut self) -> usize {
@@ -307,6 +325,29 @@ mod tests {
         assert_eq!(t.advance(2), Some(1)); // all at 1 now
         assert_eq!(t.min_step(), 1);
         assert_eq!(t.max_step(), 1);
+    }
+
+    #[test]
+    fn tracker_advance_to_jumps_and_tracks_min() {
+        let mut t = StepTracker::new(3);
+        assert_eq!(t.advance_to(0, 5), None); // min still 0
+        assert_eq!(t.step_of(0), 5);
+        assert_eq!(t.max_step(), 5);
+        // stale or equal reports are no-ops
+        assert_eq!(t.advance_to(0, 5), None);
+        assert_eq!(t.advance_to(0, 3), None);
+        assert_eq!(t.step_of(0), 5);
+        // the last laggard jumping raises the global min
+        t.advance_to(1, 4);
+        assert_eq!(t.advance_to(2, 2), Some(2));
+        assert_eq!(t.min_step(), 2);
+        // equivalent to repeated advance() for +1 reports
+        let mut a = StepTracker::new(2);
+        let mut b = StepTracker::new(2);
+        a.advance(0);
+        b.advance_to(0, 1);
+        assert_eq!(a.all_steps(), b.all_steps());
+        assert_eq!(a.min_step(), b.min_step());
     }
 
     #[test]

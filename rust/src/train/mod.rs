@@ -223,6 +223,11 @@ pub fn train_lm(
 /// step table, the centralised scenario of §5). Updates are applied in
 /// virtual-time order through the shared fused-step executable. Straggler
 /// workers can be injected with `slow` (fraction, slowdown).
+///
+/// `accum` is the LM-layer analogue of the sharded engine's `push_batch`:
+/// each logical step applies `accum` consecutive micro-batches (recording
+/// their mean loss), so one barrier decision paces a larger batched
+/// update. `accum = 1` is the paper's per-step protocol.
 pub fn psp_train_lm(
     trainer: &mut TransformerTrainer,
     corpus: &Corpus,
@@ -232,6 +237,7 @@ pub fn psp_train_lm(
     lr: f32,
     seed: u64,
     slow: Option<(f64, f64)>,
+    accum: usize,
 ) -> Result<TrainLog> {
     let start = std::time::Instant::now();
     let mut rng = Rng::new(seed);
@@ -281,10 +287,15 @@ pub fn psp_train_lm(
             );
             continue;
         }
-        // the worker's batch goes through the real fused step
-        let batch = corpus.next_batch(trainer.meta.batch, trainer.meta.seq, &mut rng);
-        let loss = trainer.train_step(&batch, lr)?;
-        losses.push((applied, loss));
+        // the worker's batch(es) go through the real fused step
+        let accum = accum.max(1);
+        let mut loss_acc = 0.0f32;
+        for _ in 0..accum {
+            let batch =
+                corpus.next_batch(trainer.meta.batch, trainer.meta.seq, &mut rng);
+            loss_acc += trainer.train_step(&batch, lr)?;
+        }
+        losses.push((applied, loss_acc / accum as f32));
         applied += 1;
         tracker.advance(node);
         queue.push(

@@ -1,26 +1,147 @@
-//! Integration over the full three-layer stack (needs `make artifacts`):
-//! PJRT-backed engines, cross-validation of the Pallas-kernel artifacts
-//! against the pure-Rust model, and a short end-to-end transformer run.
+//! Integration over the full three-layer stack (needs `make artifacts`
+//! plus the `pjrt` feature for the PJRT-backed tests): PJRT-backed
+//! engines, cross-validation of the Pallas-kernel artifacts against the
+//! pure-Rust model, a short end-to-end transformer run, and the sharded
+//! parameter-server acceptance sweep on the `real_sgd_cluster` scenario.
 //!
-//! Tests skip (with a note) when artifacts are absent so `cargo test`
-//! stays runnable before the first `make artifacts`.
+//! PJRT tests skip (with a note) when artifacts are absent or the crate
+//! was built without the `pjrt` feature, so plain `cargo test` stays
+//! runnable everywhere; the sharded-engine equivalence tests run the same
+//! workload shape through the pure-Rust gradient path and always run.
 
 use std::sync::Arc;
 
 use actor_psp::barrier::Method;
 use actor_psp::engine::paramserver::{self, PsConfig};
-use actor_psp::model::linear::{Dataset, LinearModel};
+use actor_psp::engine::GradFn;
+use actor_psp::model::linear::{minibatch_grad_fn, Dataset, LinearModel};
 use actor_psp::runtime::{linear_grad_fn, Manifest, Runtime, RuntimeService, Tensor};
 use actor_psp::train::{psp_train_lm, train_lm, Corpus, TransformerTrainer};
 use actor_psp::util::rng::Rng;
 use actor_psp::util::stats::l2_dist;
 
 fn have_artifacts() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
     let ok = Manifest::default_dir().join("manifest.json").exists();
     if !ok {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
     }
     ok
+}
+
+/// The `real_sgd_cluster` example's workload shape: 6 workers, 12 steps,
+/// d = 100, seed 3, pure-Rust gradients over the same synthetic dataset.
+fn sgd_cluster_cfg(method: Method) -> PsConfig {
+    PsConfig {
+        n_workers: 6,
+        steps_per_worker: 12,
+        method,
+        lr: 0.05,
+        dim: 100,
+        seed: 3,
+        ..PsConfig::default()
+    }
+}
+
+fn sgd_cluster_grad(dim: usize) -> (GradFn, Vec<f32>) {
+    let mut rng = Rng::new(11);
+    let data = Arc::new(Dataset::synthetic(2048, dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+    (minibatch_grad_fn(data, 32), w_true)
+}
+
+#[test]
+fn sharded_engine_learns_on_real_sgd_cluster_scenario() {
+    // Every shard count must converge on the seeded scenario, for all
+    // five barrier methods of the paper.
+    for method in Method::paper_five(3, 2) {
+        for shards in [1usize, 4] {
+            let cfg = PsConfig { n_shards: shards, ..sgd_cluster_cfg(method) };
+            let (grad, w_true) = sgd_cluster_grad(cfg.dim);
+            let r = paramserver::run(&cfg, vec![0.0; cfg.dim], grad);
+            let init = l2_dist(&vec![0.0; cfg.dim], &w_true);
+            let err = l2_dist(&r.model, &w_true);
+            assert!(
+                err < init * 0.9,
+                "{method} shards={shards}: no learning ({init} -> {err})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_engine_acceptance_equivalence() {
+    // Acceptance criterion: n_shards in {1, 4} reaches the same final
+    // model (within 1e-4) as the single-actor engine on the seeded
+    // real_sgd_cluster scenario, for BSP, SSP(4) and pSSP(8, 4).
+    //
+    // Live-thread runs with model-dependent gradients are only
+    // interleaving-deterministic with one worker, so the multi-worker leg
+    // uses a seed-only gradient oracle (the applied-update multiset is
+    // then interleaving-independent) and the single-worker leg keeps the
+    // real minibatch gradients.
+    for method in [
+        Method::Bsp,
+        Method::Ssp { staleness: 4 },
+        Method::Pssp { sample: 8, staleness: 4 },
+    ] {
+        // leg 1: single worker, real gradients, bitwise-stable trajectory
+        let single = PsConfig {
+            n_workers: 1,
+            steps_per_worker: 24,
+            ..sgd_cluster_cfg(method)
+        };
+        let (grad, _) = sgd_cluster_grad(single.dim);
+        let reference = paramserver::run(&single, vec![0.0; single.dim], grad.clone());
+        let sharded = paramserver::run(
+            &PsConfig { n_shards: 4, ..single.clone() },
+            vec![0.0; single.dim],
+            grad,
+        );
+        let d = l2_dist(&sharded.model, &reference.model);
+        assert!(d < 1e-4, "{method} single-worker: shards diverged by {d}");
+
+        // leg 2: full 6-worker scenario, seed-only gradients
+        let multi = sgd_cluster_cfg(method);
+        let dim = multi.dim;
+        let oracle: GradFn = Arc::new(move |_w, seed| {
+            let mut rng = Rng::new(seed);
+            (0..dim).map(|_| (rng.next_f32() - 0.5) * 0.2).collect()
+        });
+        let r1 = paramserver::run(&multi, vec![0.0; dim], oracle.clone());
+        let r4 = paramserver::run(
+            &PsConfig { n_shards: 4, ..multi.clone() },
+            vec![0.0; dim],
+            oracle.clone(),
+        );
+        let d = l2_dist(&r1.model, &r4.model);
+        assert!(d < 1e-4, "{method} multi-worker: shards diverged by {d}");
+        // batched pushes keep the same sum too
+        let rb = paramserver::run(
+            &PsConfig { n_shards: 4, push_batch: 3, ..multi.clone() },
+            vec![0.0; dim],
+            oracle,
+        );
+        let d = l2_dist(&r1.model, &rb.model);
+        assert!(d < 1e-4, "{method} batched: diverged by {d}");
+    }
+}
+
+#[test]
+fn sharding_splits_messages_across_shards() {
+    let cfg = PsConfig { n_shards: 4, ..sgd_cluster_cfg(Method::Asp) };
+    let (grad, _) = sgd_cluster_grad(cfg.dim);
+    let r = paramserver::run(&cfg, vec![0.0; cfg.dim], grad);
+    // one scatter message per shard per step
+    assert_eq!(r.update_msgs, 6 * 12 * 4);
+    // batching divides the scatter count
+    let cfg = PsConfig { push_batch: 4, ..cfg };
+    let (grad, _) = sgd_cluster_grad(cfg.dim);
+    let r = paramserver::run(&cfg, vec![0.0; cfg.dim], grad);
+    assert_eq!(r.update_msgs, 6 * 3 * 4);
 }
 
 #[test]
@@ -74,27 +195,33 @@ fn paramserver_engine_over_pjrt_all_methods() {
     let mut rng = Rng::new(21);
     let data = Arc::new(Dataset::synthetic(1024, 100, 0.05, &mut rng));
     for method in Method::paper_five(2, 2) {
-        let grad = linear_grad_fn(
-            Arc::clone(&svc),
-            "linear_grad_n128_d100",
-            Arc::clone(&data),
-            128,
-        )
-        .unwrap();
-        let cfg = PsConfig {
-            n_workers: 3,
-            steps_per_worker: 4,
-            method,
-            lr: 0.05,
-            dim: 100,
-            seed: 5,
-            ..PsConfig::default()
-        };
-        let r = paramserver::run(&cfg, vec![0.0; 100], grad);
-        assert_eq!(r.update_msgs, 12, "{method}");
-        let err = l2_dist(&r.model, &data.w_true);
-        let init = l2_dist(&vec![0.0; 100], &data.w_true);
-        assert!(err < init, "{method}: no learning ({init} -> {err})");
+        for shards in [1usize, 4] {
+            let grad = linear_grad_fn(
+                Arc::clone(&svc),
+                "linear_grad_n128_d100",
+                Arc::clone(&data),
+                128,
+            )
+            .unwrap();
+            let cfg = PsConfig {
+                n_workers: 3,
+                steps_per_worker: 4,
+                method,
+                lr: 0.05,
+                dim: 100,
+                seed: 5,
+                n_shards: shards,
+                ..PsConfig::default()
+            };
+            let r = paramserver::run(&cfg, vec![0.0; 100], grad);
+            assert_eq!(r.update_msgs, 12 * shards as u64, "{method}");
+            let err = l2_dist(&r.model, &data.w_true);
+            let init = l2_dist(&vec![0.0; 100], &data.w_true);
+            assert!(
+                err < init,
+                "{method} shards={shards}: no learning ({init} -> {err})"
+            );
+        }
     }
 }
 
@@ -134,7 +261,7 @@ fn psp_paced_training_differentiates_methods() {
         let corpus = Corpus::synthetic(1 << 14, trainer.meta.vocab, 3);
         psp_train_lm(
             &mut trainer, &corpus, method, 4, steps, 0.25, 13,
-            Some((0.25, 4.0)),
+            Some((0.25, 4.0)), 1,
         )
         .unwrap()
     };
