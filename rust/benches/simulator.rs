@@ -1,85 +1,252 @@
 //! Simulator throughput benches (L3 hot loop): events/s per barrier
-//! method, with and without the real-SGD workload, plus the pure
-//! minibatch-gradient kernel the SGD mode spends its time in.
+//! method and per system size, heap-vs-calendar scheduler comparison,
+//! the real-SGD workload, and the 100k-node sweep.
+//!
+//! Usage (args after `cargo bench --bench simulator --`):
+//!
+//! ```text
+//! --smoke            small CI grid (skips the full-horizon method table)
+//! --json PATH        write results as JSON (default results/bench_simulator.json)
+//! --check PATH       compare events/s against a baseline suite
+//! --tol F            allowed fractional regression (default 0.30)
+//! ```
+//!
+//! Relative paths resolve against the workspace root, so the invocation
+//! works from any working directory. Exits non-zero when any benchmark
+//! regresses more than `tol` below the baseline; baselines with missing
+//! or null `events_per_sec` entries are reported but not enforced (the
+//! bootstrap state before real CI numbers are committed).
 
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use actor_psp::barrier::Method;
 use actor_psp::model::linear::{Dataset, LinearModel};
-use actor_psp::sim::{ClusterConfig, SgdConfig, Simulator};
-use actor_psp::util::bench::{bench, bench_once};
+use actor_psp::sim::{ClusterConfig, SgdConfig, SimResult, Simulator};
+use actor_psp::util::bench::{bench, bench_once, BenchSuite};
 use actor_psp::util::rng::Rng;
 
+/// Resolve a path against the workspace root (parent of the crate dir)
+/// so `cargo bench` behaves the same from the root or from `rust/`.
+fn from_workspace(p: &str) -> PathBuf {
+    let p = Path::new(p);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|root| root.join(p))
+        .unwrap_or_else(|| p.to_path_buf())
+}
+
+struct Opts {
+    smoke: bool,
+    json: String,
+    check: Option<String>,
+    tol: f64,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts {
+        smoke: false,
+        json: "results/bench_simulator.json".to_string(),
+        check: None,
+        tol: 0.30,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => opts.json = it.next().expect("--json needs a path"),
+            "--check" => opts.check = Some(it.next().expect("--check needs a path")),
+            "--tol" => {
+                opts.tol = it
+                    .next()
+                    .expect("--tol needs a value")
+                    .parse()
+                    .expect("--tol must be a number")
+            }
+            // cargo bench passes `--bench` (and test-harness flags) through.
+            _ => {}
+        }
+    }
+    opts
+}
+
+fn scale_cfg(n: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_nodes: n,
+        duration: 20.0,
+        seed: 1,
+        ..ClusterConfig::default()
+    }
+}
+
+fn record_run(suite: &mut BenchSuite, name: &str, r: &SimResult, secs: f64) {
+    let eps = r.events as f64 / secs.max(1e-9);
+    println!(
+        "    -> {} events, {:.2}M events/s, {} advances",
+        r.events,
+        eps / 1e6,
+        r.total_advances
+    );
+    suite.record(name, &[
+        ("events_per_sec", eps),
+        ("events", r.events as f64),
+        ("advances", r.total_advances as f64),
+        ("wall_secs", secs),
+    ]);
+}
+
 fn main() {
+    let opts = parse_opts();
+    let mut suite = BenchSuite::new("simulator");
     println!("simulator throughput (events/s is the L3 perf headline)");
     println!("{}", "-".repeat(110));
 
-    // Pure barrier-dynamics simulation, paper scale.
-    for method in Method::paper_five(10, 4) {
-        let cfg = ClusterConfig {
-            n_nodes: 1000,
-            duration: 40.0,
-            seed: 42,
-            ..ClusterConfig::default()
-        };
-        let (r, secs) = bench_once(
-            &format!("sim 1000x40s {method} (no sgd)"),
-            || Simulator::new(cfg, method).run(),
-        );
-        println!(
-            "    -> {} events, {:.2}M events/s, {} advances",
-            r.events,
-            r.events as f64 / secs / 1e6,
-            r.total_advances
-        );
+    // Pure barrier-dynamics simulation, paper scale (full mode only).
+    if !opts.smoke {
+        for method in Method::paper_five(10, 4) {
+            let cfg = ClusterConfig {
+                n_nodes: 1000,
+                duration: 40.0,
+                seed: 42,
+                ..ClusterConfig::default()
+            };
+            let name = format!("sim_n1000_40s_{method}");
+            let (r, secs) = bench_once(
+                &format!("sim 1000x40s {method} (no sgd)"),
+                || Simulator::new(cfg, method).run(),
+            );
+            record_run(&mut suite, &name, &r, secs);
+        }
     }
 
-    // With the real-SGD workload (d=1000): gradient math dominates.
-    let cfg = ClusterConfig {
-        n_nodes: 1000,
-        duration: 40.0,
-        seed: 42,
-        sgd: Some(SgdConfig::default()),
-        ..ClusterConfig::default()
+    // Calendar queue vs the binary-heap oracle at the acceptance point
+    // (n=10_000, pbsp:10, 20s): same trajectory, different scheduler.
+    {
+        let cfg = scale_cfg(10_000);
+        let m = Method::Pbsp { sample: 10 };
+        let (r_heap, secs_heap) = bench_once("sim n=10000 20s pbsp:10 (heap oracle)", || {
+            Simulator::new(cfg.clone(), m).run_reference()
+        });
+        record_run(&mut suite, "sim_n10000_pbsp10_heap", &r_heap, secs_heap);
+        let (r_cal, secs_cal) = bench_once("sim n=10000 20s pbsp:10 (calendar)", || {
+            Simulator::new(cfg, m).run()
+        });
+        record_run(&mut suite, "sim_n10000_pbsp10", &r_cal, secs_cal);
+        assert_eq!(
+            r_heap.final_steps, r_cal.final_steps,
+            "schedulers must agree on trajectories"
+        );
+        let speedup = (r_cal.events as f64 / secs_cal.max(1e-9))
+            / (r_heap.events as f64 / secs_heap.max(1e-9));
+        println!("    -> calendar/heap speedup at n=10k: {speedup:.2}x");
+        suite.record("sim_n10000_pbsp10", &[("speedup_vs_heap", speedup)]);
+    }
+
+    // Scaling in system size at fixed horizon, up to the 100k sweep the
+    // README's Performance section quotes.
+    let sizes: &[usize] = if opts.smoke {
+        &[1_000, 100_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000]
     };
-    let (r, secs) = bench_once("sim 1000x40s pssp:10:4 + sgd d=1000", || {
-        Simulator::new(cfg, Method::Pssp { sample: 10, staleness: 4 }).run()
-    });
-    println!(
-        "    -> {} updates applied, {:.1}k updates/s",
-        r.update_msgs,
-        r.update_msgs as f64 / secs / 1e3
-    );
-
-    // The inner gradient kernel on its own.
-    let mut rng = Rng::new(3);
-    let data = Dataset::synthetic(4096, 1000, 0.1, &mut rng);
-    let w = vec![0.1f32; 1000];
-    let mut model = LinearModel::new(1000);
-    let mut seed = 0u64;
-    bench(
-        "minibatch_grad d=1000 b=32 (pure rust)",
-        Duration::from_millis(500),
-        || {
-            seed += 1;
-            std::hint::black_box(model.minibatch_grad(&data, &w, seed, 32));
-        },
-    );
-
-    // Scaling in system size at fixed horizon.
-    for &n in &[100usize, 1_000, 10_000] {
-        let cfg = ClusterConfig {
-            n_nodes: n,
-            duration: 20.0,
-            seed: 1,
-            ..ClusterConfig::default()
-        };
+    for &n in sizes {
+        let cfg = scale_cfg(n);
         let (r, secs) = bench_once(&format!("sim n={n} 20s pbsp:10"), || {
             Simulator::new(cfg, Method::Pbsp { sample: 10 }).run()
         });
+        record_run(&mut suite, &format!("sim_n{n}_pbsp10_scale"), &r, secs);
+    }
+
+    // With the real-SGD workload: gradient math dominates; the versioned
+    // snapshot store must keep this at least at parity with the old
+    // clone-per-advance design while holding memory bounded.
+    {
+        let dim = if opts.smoke { 200 } else { 1000 };
+        let cfg = ClusterConfig {
+            n_nodes: 1000,
+            duration: if opts.smoke { 20.0 } else { 40.0 },
+            seed: 42,
+            sgd: Some(SgdConfig { dim, ..SgdConfig::default() }),
+            ..ClusterConfig::default()
+        };
+        let name = format!("sim_n1000_sgd_d{dim}");
+        let (r, secs) = bench_once(&format!("sim 1000 pssp:10:4 + sgd d={dim}"), || {
+            Simulator::new(cfg, Method::Pssp { sample: 10, staleness: 4 }).run()
+        });
         println!(
-            "    -> {:.2}M events/s",
-            r.events as f64 / secs / 1e6
+            "    -> {} updates applied, {:.1}k updates/s",
+            r.update_msgs,
+            r.update_msgs as f64 / secs / 1e3
         );
+        suite.record(&name, &[
+            ("events_per_sec", r.events as f64 / secs.max(1e-9)),
+            ("updates_per_sec", r.update_msgs as f64 / secs.max(1e-9)),
+            ("wall_secs", secs),
+        ]);
+    }
+
+    // The inner gradient kernel on its own (full mode only).
+    if !opts.smoke {
+        let mut rng = Rng::new(3);
+        let data = Dataset::synthetic(4096, 1000, 0.1, &mut rng);
+        let w = vec![0.1f32; 1000];
+        let mut model = LinearModel::new(1000);
+        let mut seed = 0u64;
+        let r = bench(
+            "minibatch_grad d=1000 b=32 (pure rust)",
+            Duration::from_millis(500),
+            || {
+                seed += 1;
+                std::hint::black_box(model.minibatch_grad(&data, &w, seed, 32));
+            },
+        );
+        suite.record("minibatch_grad_d1000_b32", &[("per_sec", r.per_sec())]);
+    }
+
+    // Persist machine-readable results.
+    let json_path = from_workspace(&opts.json);
+    suite.write(&json_path).expect("writing bench JSON");
+    println!("written: {}", json_path.display());
+
+    // Regression gate against a checked-in baseline.
+    if let Some(check) = &opts.check {
+        let base_path = from_workspace(check);
+        let base = BenchSuite::load(&base_path).expect("loading baseline");
+        let mut failures = Vec::new();
+        let mut compared = 0;
+        for name in base.benches() {
+            let Some(want) = base.metric(name, "events_per_sec") else {
+                println!("baseline '{name}': no events_per_sec (bootstrap) — skipped");
+                continue;
+            };
+            let Some(got) = suite.metric(name, "events_per_sec") else {
+                println!("baseline '{name}': not measured in this mode — skipped");
+                continue;
+            };
+            compared += 1;
+            let floor = want * (1.0 - opts.tol);
+            let verdict = if got < floor { "REGRESSED" } else { "ok" };
+            println!(
+                "gate {name}: {:.2}M ev/s vs baseline {:.2}M (floor {:.2}M) {verdict}",
+                got / 1e6,
+                want / 1e6,
+                floor / 1e6
+            );
+            if got < floor {
+                failures.push(name.to_string());
+            }
+        }
+        if !failures.is_empty() {
+            eprintln!(
+                "events/s regressed >{:.0}% on: {}",
+                opts.tol * 100.0,
+                failures.join(", ")
+            );
+            std::process::exit(1);
+        }
+        println!("regression gate passed ({compared} benches compared)");
     }
 }

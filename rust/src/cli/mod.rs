@@ -98,9 +98,10 @@ actor — Probabilistic Synchronous Parallel (Actor framework reproduction)
 
 USAGE:
   actor exp <id|all> [--nodes N] [--duration S] [--seed N] [--sample B]
-            [--staleness T] [--out DIR] [--quick]
+            [--staleness T] [--out DIR] [--quick] [--jobs J] [--config FILE]
       Regenerate a paper table/figure. ids: table1 fig1a..fig1e fig2a..fig2c
-      fig3 fig4 fig5, or 'all'.
+      fig3 fig4 fig5, or 'all'. Sweep grids fan out over J worker threads
+      (default: one per core; reports are identical for every J).
 
   actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
             [--config FILE]

@@ -35,6 +35,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::barrier::Method;
 use crate::engine::paramserver::PsConfig;
+use crate::exp::ExpOpts;
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
 
 /// A parsed config value.
@@ -208,6 +209,31 @@ impl Config {
         })
     }
 
+    /// Build experiment-harness options from the `[exp]` section (all
+    /// keys optional; defaults = paper):
+    ///
+    /// ```toml
+    /// [exp]
+    /// nodes = 1000
+    /// duration = 40.0
+    /// seed = 42
+    /// sample = 10
+    /// staleness = 4
+    /// jobs = 8            # sweep worker threads; 0 = one per core
+    /// ```
+    pub fn exp_opts(&self) -> Result<ExpOpts> {
+        let d = ExpOpts::default();
+        Ok(ExpOpts {
+            nodes: self.usize_or("exp", "nodes", d.nodes)?,
+            duration: self.f64_or("exp", "duration", d.duration)?,
+            seed: self.f64_or("exp", "seed", d.seed as f64)? as u64,
+            sample: self.usize_or("exp", "sample", d.sample)?,
+            staleness: self.usize_or("exp", "staleness", d.staleness as usize)? as u64,
+            jobs: self.usize_or("exp", "jobs", d.jobs)?,
+            ..d
+        })
+    }
+
     /// Build the simulator configuration from `[cluster]`, `[stragglers]`,
     /// `[churn]` and `[sgd]` sections (all optional; defaults = paper).
     pub fn cluster_config(&self) -> Result<ClusterConfig> {
@@ -234,12 +260,14 @@ impl Config {
             None
         };
         let sgd = if self.has_section("sgd") {
+            let ds = SgdConfig::default();
             Some(SgdConfig {
                 dim: self.usize_or("sgd", "dim", 1000)?,
                 batch: self.usize_or("sgd", "batch", 32)?,
                 pool: self.usize_or("sgd", "pool", 4096)?,
                 lr: self.f64_or("sgd", "lr", 0.01)? as f32,
                 noise: self.f64_or("sgd", "noise", 0.1)? as f32,
+                versions: self.usize_or("sgd", "versions", ds.versions)?,
             })
         } else {
             None
@@ -324,6 +352,7 @@ lr = 0.02
         assert_eq!(sgd.dim, 100);
         assert_eq!(sgd.lr, 0.02);
         assert_eq!(sgd.batch, 32); // default
+        assert_eq!(sgd.versions, SgdConfig::default().versions); // default
         assert_eq!(
             c.barrier_method().unwrap(),
             Method::Pbsp { sample: 16 }
@@ -383,6 +412,22 @@ schedule_blocks = 4
         // zero shards clamps to one rather than spawning nothing
         let c = Config::parse("[ps]\nshards = 0").unwrap();
         assert_eq!(c.ps_config().unwrap().n_shards, 1);
+    }
+
+    #[test]
+    fn exp_section_builds_opts() {
+        let c = Config::parse("[exp]\njobs = 8\nnodes = 250").unwrap();
+        let o = c.exp_opts().unwrap();
+        assert_eq!(o.jobs, 8);
+        assert_eq!(o.nodes, 250);
+        assert_eq!(o.staleness, 4); // default
+        // all defaults when the section is missing (jobs 0 = auto)
+        let o = Config::parse("").unwrap().exp_opts().unwrap();
+        assert_eq!(o.jobs, 0);
+        assert_eq!(o.nodes, 1000);
+        // snapshot-store window is configurable per workload
+        let c = Config::parse("[sgd]\nversions = 64").unwrap();
+        assert_eq!(c.cluster_config().unwrap().sgd.unwrap().versions, 64);
     }
 
     #[test]

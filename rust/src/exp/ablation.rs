@@ -17,7 +17,8 @@ use std::sync::Arc;
 
 use crate::barrier::Method;
 use crate::engine::paramserver::{self, PsConfig};
-use crate::exp::{Cell, ExpOpts, Report};
+use crate::exp::parallel::par_map_groups;
+use crate::exp::{par_map, Cell, ExpOpts, Report};
 use crate::model::linear::{minibatch_grad_fn, Dataset};
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, Simulator};
 use crate::util::rng::Rng;
@@ -48,9 +49,11 @@ pub fn abl_beta_error(opts: &ExpOpts) -> Report {
         "pSSP(β,4): progress, dispersion, error and control cost vs β",
         &["beta", "mean_steps", "iqr", "final_error", "ctrl_msgs", "ctrl_per_step"],
     );
-    for &beta in betas {
+    let results = par_map(opts.eff_jobs(), betas.to_vec(), |beta| {
         let m = Method::Pssp { sample: beta, staleness: opts.staleness };
-        let r = Simulator::new(sgd_cluster(opts), m).run();
+        Simulator::new(sgd_cluster(opts), m).run()
+    });
+    for (&beta, r) in betas.iter().zip(&results) {
         let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
         let s = Summary::of(&steps);
         rep.row(vec![
@@ -74,13 +77,16 @@ pub fn abl_quorum(opts: &ExpOpts) -> Report {
         "PQuorum(β,4,q): quorum fraction swept ASP->pSSP (paper §3.2 idea)",
         &["quorum_pct", "mean_steps", "iqr", "final_error"],
     );
-    for quorum_pct in [0u8, 25, 50, 75, 90, 100] {
+    let quorums = vec![0u8, 25, 50, 75, 90, 100];
+    let results = par_map(opts.eff_jobs(), quorums.clone(), |quorum_pct| {
         let m = Method::Pquorum {
             sample: opts.eff_sample(),
             staleness: opts.staleness,
             quorum_pct,
         };
-        let r = Simulator::new(sgd_cluster(opts), m).run();
+        Simulator::new(sgd_cluster(opts), m).run()
+    });
+    for (&quorum_pct, r) in quorums.iter().zip(&results) {
         let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
         let s = Summary::of(&steps);
         rep.row(vec![
@@ -102,13 +108,16 @@ pub fn abl_recheck(opts: &ExpOpts) -> Report {
         "pBSP(β): blocked-worker re-sample backoff sensitivity",
         &["recheck_s", "mean_steps", "ctrl_msgs", "ctrl_per_step"],
     );
-    for recheck in [0.05, 0.1, 0.25, 0.5, 1.0] {
+    let rechecks = vec![0.05, 0.1, 0.25, 0.5, 1.0];
+    let results = par_map(opts.eff_jobs(), rechecks.clone(), |recheck| {
         let cfg = ClusterConfig {
             recheck_interval: recheck,
             ..sgd_cluster(opts)
         };
         let m = Method::Pbsp { sample: opts.eff_sample() };
-        let r = Simulator::new(cfg, m).run();
+        Simulator::new(cfg, m).run()
+    });
+    for (&recheck, r) in rechecks.iter().zip(&results) {
         rep.row(vec![
             recheck.into(),
             r.mean_progress().into(),
@@ -132,16 +141,25 @@ pub fn ext_churn(opts: &ExpOpts) -> Report {
         &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let rates: &[f64] = if opts.quick { &[0.0, 2.0] } else { &[0.0, 0.5, 1.0, 2.0, 5.0] };
+    let mut grid = Vec::new();
     for &rate in rates {
-        let mut row: Vec<Cell> = vec![rate.into()];
         for &m in &methods {
             let cfg = ClusterConfig {
                 churn: (rate > 0.0)
                     .then_some(ChurnConfig { join_rate: rate, leave_rate: rate }),
                 ..sgd_cluster(opts)
             };
-            let r = Simulator::new(cfg, m).run();
-            row.push(r.mean_progress().into());
+            grid.push((cfg, m));
+        }
+    }
+    // One group of `methods.len()` results per churn rate.
+    let grouped = par_map_groups(opts.eff_jobs(), grid, methods.len(), |(cfg, m)| {
+        Simulator::new(cfg, m).run().mean_progress()
+    });
+    for (&rate, progress) in rates.iter().zip(&grouped) {
+        let mut row: Vec<Cell> = vec![rate.into()];
+        for &p in progress {
+            row.push(p.into());
         }
         rep.row(row);
     }
@@ -163,13 +181,23 @@ pub fn ext_loss(opts: &ExpOpts) -> Report {
         &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let rates: &[f64] = if opts.quick { &[0.0, 0.2] } else { &[0.0, 0.05, 0.1, 0.2, 0.4] };
+    let mut grid = Vec::new();
     for &rate in rates {
-        let mut row: Vec<Cell> = vec![rate.into()];
         for &m in &methods {
             let cfg = ClusterConfig { loss_rate: rate, ..sgd_cluster(opts) };
-            let r = Simulator::new(cfg, m).run();
-            row.push(r.final_error().unwrap_or(f64::NAN).into());
-            row.push(r.lost_msgs.into());
+            grid.push((cfg, m));
+        }
+    }
+    // One group of `methods.len()` (error, lost) pairs per loss rate.
+    let grouped = par_map_groups(opts.eff_jobs(), grid, methods.len(), |(cfg, m)| {
+        let r = Simulator::new(cfg, m).run();
+        (r.final_error().unwrap_or(f64::NAN), r.lost_msgs)
+    });
+    for (&rate, results) in rates.iter().zip(&grouped) {
+        let mut row: Vec<Cell> = vec![rate.into()];
+        for &(err, lost) in results {
+            row.push(err.into());
+            row.push(lost.into());
         }
         rep.row(row);
     }

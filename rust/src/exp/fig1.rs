@@ -3,7 +3,7 @@
 //! SSP(4), ASP, pBSP(10), pSSP(10, 4).
 
 use crate::barrier::Method;
-use crate::exp::{Cell, ExpOpts, Report};
+use crate::exp::{par_map, Cell, ExpOpts, Report};
 use crate::sim::{ClusterConfig, SgdConfig, SimResult, Simulator};
 use crate::util::stats::{ecdf_at, Summary};
 
@@ -22,10 +22,10 @@ fn cluster(opts: &ExpOpts, sgd: bool) -> ClusterConfig {
 }
 
 pub(crate) fn run_five(opts: &ExpOpts, sgd: bool) -> Vec<SimResult> {
-    Method::paper_five(opts.eff_sample(), opts.staleness)
-        .into_iter()
-        .map(|m| Simulator::new(cluster(opts, sgd), m).run())
-        .collect()
+    let methods = Method::paper_five(opts.eff_sample(), opts.staleness);
+    par_map(opts.eff_jobs(), methods, |m| {
+        Simulator::new(cluster(opts, sgd), m).run()
+    })
 }
 
 /// Fig 1a: distribution of node progress (steps) at the horizon.
@@ -87,10 +87,9 @@ pub fn fig1b(opts: &ExpOpts) -> Report {
 /// Fig 1c: pBSP CDFs parameterised by sample size 0..64.
 pub fn fig1c(opts: &ExpOpts) -> Report {
     let betas: &[usize] = &[0, 1, 2, 4, 8, 16, 32, 64];
-    let results: Vec<SimResult> = betas
-        .iter()
-        .map(|&b| Simulator::new(cluster(opts, false), Method::Pbsp { sample: b }).run())
-        .collect();
+    let results: Vec<SimResult> = par_map(opts.eff_jobs(), betas.to_vec(), |b| {
+        Simulator::new(cluster(opts, false), Method::Pbsp { sample: b }).run()
+    });
     let max_step = results
         .iter()
         .flat_map(|r| r.final_steps.iter().copied())

@@ -2,6 +2,7 @@
 //! measure progress degradation and model-error inflation per method.
 
 use crate::barrier::Method;
+use crate::exp::parallel::par_map_groups;
 use crate::exp::{Cell, ExpOpts, Report};
 use crate::sim::{ClusterConfig, SgdConfig, Simulator, StragglerConfig};
 
@@ -44,19 +45,34 @@ pub fn fig2a(opts: &ExpOpts) -> Report {
     );
     let mut baselines = vec![0.0f64; methods.len()];
     let seeds = if opts.quick { 1 } else { 3 };
-    for (fi, &frac) in straggler_fracs(opts).iter().enumerate() {
-        let st = (frac > 0.0).then_some(StragglerConfig { fraction: frac, slowdown: 4.0 });
-        let mut row: Vec<Cell> = vec![frac.into()];
-        for (mi, &m) in methods.iter().enumerate() {
-            // average over seeds: BSP advances in single-digit integer
-            // steps, so one run is too quantised for a smooth ratio
-            let mut p = 0.0;
+    let fracs = straggler_fracs(opts);
+    // One grid point per (straggler share, method, seed); every point is
+    // an independent seeded run, so the whole grid fans out at once.
+    let mut grid = Vec::new();
+    for &frac in &fracs {
+        let st =
+            (frac > 0.0).then_some(StragglerConfig { fraction: frac, slowdown: 4.0 });
+        for &m in &methods {
             for s in 0..seeds {
                 let mut cfg = cluster(opts, st, false);
                 cfg.seed = opts.seed + s as u64 * 1000;
-                p += Simulator::new(cfg, m).run().mean_progress();
+                grid.push((cfg, m));
             }
-            p /= seeds as f64;
+        }
+    }
+    // One group of `seeds` results per (frac, method), consumed in the
+    // same nested order the grid was built.
+    let grouped = par_map_groups(opts.eff_jobs(), grid, seeds, |(cfg, m)| {
+        Simulator::new(cfg, m).run().mean_progress()
+    });
+    let mut cells = grouped.iter();
+    for (fi, &frac) in fracs.iter().enumerate() {
+        let mut row: Vec<Cell> = vec![frac.into()];
+        for (mi, _) in methods.iter().enumerate() {
+            // average over seeds: BSP advances in single-digit integer
+            // steps, so one run is too quantised for a smooth ratio
+            let cell = cells.next().expect("grid exhausted");
+            let p = cell.iter().sum::<f64>() / seeds as f64;
             if fi == 0 {
                 baselines[mi] = p;
             }
@@ -80,12 +96,22 @@ pub fn fig2b(opts: &ExpOpts) -> Report {
         &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let mut baselines = vec![0.0f64; methods.len()];
-    for (fi, &frac) in straggler_fracs(opts).iter().enumerate() {
-        let st = (frac > 0.0).then_some(StragglerConfig { fraction: frac, slowdown: 4.0 });
+    let fracs = straggler_fracs(opts);
+    let mut grid = Vec::new();
+    for &frac in &fracs {
+        let st =
+            (frac > 0.0).then_some(StragglerConfig { fraction: frac, slowdown: 4.0 });
+        for &m in &methods {
+            grid.push((cluster(opts, st, true), m));
+        }
+    }
+    // One group of `methods.len()` errors per straggler share.
+    let grouped = par_map_groups(opts.eff_jobs(), grid, methods.len(), |(cfg, m)| {
+        Simulator::new(cfg, m).run().final_error().unwrap_or(f64::NAN)
+    });
+    for ((fi, &frac), errs) in fracs.iter().enumerate().zip(&grouped) {
         let mut row: Vec<Cell> = vec![frac.into()];
-        for (mi, &m) in methods.iter().enumerate() {
-            let r = Simulator::new(cluster(opts, st, true), m).run();
-            let err = r.final_error().unwrap_or(f64::NAN);
+        for (mi, &err) in errs.iter().enumerate() {
             if fi == 0 {
                 baselines[mi] = err;
             }
@@ -121,12 +147,22 @@ pub fn fig2c(opts: &ExpOpts) -> Report {
         "mean progress vs straggler slowness, 5% slow nodes (paper Fig 2c)",
         &columns.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
+    let mut grid = Vec::new();
     for &slow in slowdowns {
-        let st = (slow > 1.0).then_some(StragglerConfig { fraction: 0.05, slowdown: slow });
-        let mut row: Vec<Cell> = vec![slow.into()];
+        let st =
+            (slow > 1.0).then_some(StragglerConfig { fraction: 0.05, slowdown: slow });
         for &m in &methods {
-            let r = Simulator::new(cluster(opts, st, false), m).run();
-            row.push(r.mean_progress().into());
+            grid.push((cluster(opts, st, false), m));
+        }
+    }
+    // One group of `methods.len()` results per slowdown factor.
+    let grouped = par_map_groups(opts.eff_jobs(), grid, methods.len(), |(cfg, m)| {
+        Simulator::new(cfg, m).run().mean_progress()
+    });
+    for (&slow, progress) in slowdowns.iter().zip(&grouped) {
+        let mut row: Vec<Cell> = vec![slow.into()];
+        for &p in progress {
+            row.push(p.into());
         }
         rep.row(row);
     }

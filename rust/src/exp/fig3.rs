@@ -3,6 +3,7 @@
 //! average progress relative to the 100-node system.
 
 use crate::barrier::Method;
+use crate::exp::parallel::par_map_groups;
 use crate::exp::{Cell, ExpOpts, Report};
 use crate::sim::{ClusterConfig, Simulator, StragglerConfig};
 
@@ -24,12 +25,10 @@ pub fn fig3(opts: &ExpOpts) -> Report {
     );
     let mut baselines = vec![0.0f64; methods.len()];
     let seeds = if opts.quick { 1 } else { 3 };
-    for (si, &n) in sizes.iter().enumerate() {
-        let mut row: Vec<Cell> = vec![n.into()];
-        for (mi, &m) in methods.iter().enumerate() {
-            // seed-averaged: BSP/SSP advance in single-digit integer steps
-            // at this horizon, so one run is too quantised for % deltas
-            let mut p = 0.0;
+    // One grid point per (size, method, seed), fanned out together.
+    let mut grid = Vec::new();
+    for &n in &sizes {
+        for &m in &methods {
             for s in 0..seeds {
                 let cfg = ClusterConfig {
                     n_nodes: n,
@@ -38,9 +37,23 @@ pub fn fig3(opts: &ExpOpts) -> Report {
                     stragglers: Some(StragglerConfig { fraction: 0.05, slowdown: 4.0 }),
                     ..ClusterConfig::default()
                 };
-                p += Simulator::new(cfg, m).run().mean_progress();
+                grid.push((cfg, m));
             }
-            p /= seeds as f64;
+        }
+    }
+    // One group of `seeds` results per (size, method), consumed in the
+    // same nested order the grid was built.
+    let grouped = par_map_groups(opts.eff_jobs(), grid, seeds, |(cfg, m)| {
+        Simulator::new(cfg, m).run().mean_progress()
+    });
+    let mut cells = grouped.iter();
+    for (si, &n) in sizes.iter().enumerate() {
+        let mut row: Vec<Cell> = vec![n.into()];
+        for (mi, _) in methods.iter().enumerate() {
+            // seed-averaged: BSP/SSP advance in single-digit integer steps
+            // at this horizon, so one run is too quantised for % deltas
+            let cell = cells.next().expect("grid exhausted");
+            let p = cell.iter().sum::<f64>() / seeds as f64;
             if si == 0 {
                 baselines[mi] = p;
             }

@@ -20,11 +20,14 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig45;
+pub mod parallel;
 pub mod table1;
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
+
+pub use parallel::par_map;
 
 use crate::util::json::{obj, Json};
 
@@ -42,6 +45,9 @@ pub struct ExpOpts {
     pub quick: bool,
     /// Write JSON reports here if set.
     pub out_dir: Option<PathBuf>,
+    /// Worker threads for sweep grids (0 = one per core). Results are
+    /// identical for every value — see [`parallel::par_map`].
+    pub jobs: usize,
 }
 
 impl Default for ExpOpts {
@@ -54,6 +60,7 @@ impl Default for ExpOpts {
             staleness: 4,
             quick: false,
             out_dir: None,
+            jobs: 0,
         }
     }
 }
@@ -80,6 +87,15 @@ impl ExpOpts {
     /// count is overridden, unless an explicit sample was requested.
     pub fn eff_sample(&self) -> usize {
         self.sample.max(1)
+    }
+
+    /// Resolved worker-thread count for sweep grids.
+    pub fn eff_jobs(&self) -> usize {
+        if self.jobs == 0 {
+            parallel::auto_jobs()
+        } else {
+            self.jobs
+        }
     }
 }
 

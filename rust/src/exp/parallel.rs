@@ -1,0 +1,129 @@
+//! Seed-deterministic parallel sweep runner.
+//!
+//! Every experiment grid is a bag of independent `(config, method, seed)`
+//! points — each one a pure function of its inputs (the simulator derives
+//! everything from its own `Rng::new(seed)`). [`par_map`] fans such a bag
+//! out over `jobs` OS threads (`std::thread::scope`, dependency-free) and
+//! returns results **in input order**, so reports are bit-identical for
+//! every thread count: scheduling can reorder *execution*, never
+//! *results*. `--jobs 1` and `--jobs 8` emit the same rows — asserted in
+//! `tests/figures.rs`.
+
+use std::sync::Mutex;
+
+/// Number of worker threads to use when the user asked for "auto" (0):
+/// one per available core.
+pub fn auto_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on `jobs` threads, returning results in input
+/// order. `jobs == 0` means auto (one per core); `jobs == 1` runs inline
+/// with no thread overhead. Work is handed out item-at-a-time, so uneven
+/// grids (one 100k-node point among 1k-node points) still balance.
+pub fn par_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let jobs = if jobs == 0 { auto_jobs() } else { jobs }.min(n.max(1));
+    if jobs <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let work = Mutex::new(items.into_iter().enumerate());
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                // Take the next item; drop the lock before running it.
+                let next = work.lock().unwrap().next();
+                match next {
+                    Some((i, item)) => {
+                        *slots[i].lock().unwrap() = Some(f(item));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker skipped a slot"))
+        .collect()
+}
+
+/// [`par_map`] over a row-major grid, re-chunking the results into
+/// consecutive groups of `group` items — one group per outer grid point.
+/// Sweep sites consume the groups in the same nested-loop order they
+/// built the items, which removes the hand-rolled
+/// `(outer * inner + mi) * seeds` index arithmetic (and the silent
+/// report corruption a drift between build and read-back would cause).
+pub fn par_map_groups<T, R, F>(jobs: usize, items: Vec<T>, group: usize, f: F) -> Vec<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    assert!(group > 0, "group size must be positive");
+    let flat = par_map(jobs, items, f);
+    assert_eq!(flat.len() % group, 0, "grid is not a whole number of groups");
+    let groups = flat.len() / group;
+    let mut it = flat.into_iter();
+    (0..groups).map(|_| it.by_ref().take(group).collect()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(8, items, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_count_does_not_change_results() {
+        let f = |i: u64| {
+            // A tiny seeded computation, like one simulator run.
+            let mut rng = crate::util::rng::Rng::new(i);
+            (0..100).map(|_| rng.next_u64() & 0xFF).sum::<u64>()
+        };
+        let items: Vec<u64> = (0..40).collect();
+        let serial = par_map(1, items.clone(), f);
+        let auto = par_map(0, items.clone(), f);
+        let wide = par_map(16, items, f);
+        assert_eq!(serial, auto);
+        assert_eq!(serial, wide);
+    }
+
+    #[test]
+    fn empty_and_singleton_grids() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(4, none, |x: u32| x).is_empty());
+        assert_eq!(par_map(4, vec![7], |x: u32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn auto_jobs_is_positive() {
+        assert!(auto_jobs() >= 1);
+    }
+
+    #[test]
+    fn groups_preserve_build_order() {
+        let items: Vec<usize> = (0..12).collect();
+        let groups = par_map_groups(4, items, 3, |i| i * 2);
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0], vec![0, 2, 4]);
+        assert_eq!(groups[3], vec![18, 20, 22]);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of groups")]
+    fn ragged_grids_are_rejected() {
+        par_map_groups(2, vec![1, 2, 3], 2, |i: i32| i);
+    }
+}

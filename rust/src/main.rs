@@ -54,21 +54,38 @@ fn dispatch(args: &Args) -> Result<()> {
 fn cmd_exp(args: &Args) -> Result<()> {
     args.check_known(&[
         "nodes", "duration", "seed", "sample", "staleness", "out", "quick",
+        "jobs", "config",
     ])?;
     let id = args
         .positionals
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all");
-    let opts = ExpOpts {
-        nodes: args.flag_or("nodes", 1000)?,
-        duration: args.flag_or("duration", 40.0)?,
-        seed: args.flag_or("seed", 42)?,
-        sample: args.flag_or("sample", 10)?,
-        staleness: args.flag_or("staleness", 4)?,
-        quick: args.switch("quick"),
-        out_dir: args.get("out").map(Into::into),
+    // config file first ([exp] section), CLI flags override
+    let mut opts = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.exp_opts()?,
+        None => ExpOpts::default(),
     };
+    if let Some(v) = args.parse_flag::<usize>("nodes")? {
+        opts.nodes = v;
+    }
+    if let Some(v) = args.parse_flag::<f64>("duration")? {
+        opts.duration = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("seed")? {
+        opts.seed = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("sample")? {
+        opts.sample = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("staleness")? {
+        opts.staleness = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("jobs")? {
+        opts.jobs = v;
+    }
+    opts.quick = args.switch("quick");
+    opts.out_dir = args.get("out").map(Into::into);
     exp::run(id, &opts)?;
     Ok(())
 }

@@ -19,7 +19,7 @@
 //!   view provider, drawing uniform node samples from a structured
 //!   overlay without any global state.
 
-use std::collections::BTreeMap;
+use std::collections::VecDeque;
 
 use crate::util::rng::Rng;
 
@@ -29,6 +29,14 @@ use crate::util::rng::Rng;
 /// All engines and the simulator use this as the single source of truth
 /// for node progress; distributed scenarios restrict themselves to the
 /// sampled API.
+///
+/// The step histogram is a **dense sliding window** rather than a tree:
+/// active steps always span a narrow band `[min, max]` (the barrier
+/// bounds it for every method but ASP, and even ASP's spread grows
+/// slowly), so a `VecDeque` of counts indexed from the window base gives
+/// O(1) increments and O(1) `min_step`/`max_step` — the tree's per-step
+/// node allocation and pointer chasing was a measurable slice of the
+/// simulator's hot loop.
 #[derive(Debug, Clone)]
 pub struct StepTracker {
     /// Step of every node ever seen (dense by NodeId).
@@ -39,16 +47,20 @@ pub struct StepTracker {
     active_ids: Vec<u32>,
     /// Position of each node id in `active_ids` (usize::MAX = not active).
     pos: Vec<usize>,
-    /// step -> number of active nodes at that step.
-    hist: BTreeMap<u64, usize>,
+    /// `hist[i]` = active nodes at step `base + i`. Both ends are kept
+    /// non-zero whenever any node is active, so the window bounds *are*
+    /// the min/max steps.
+    hist: VecDeque<u32>,
+    /// Step of `hist[0]`.
+    base: u64,
 }
 
 impl StepTracker {
     /// Create a tracker with `n` nodes, all active at step 0.
     pub fn new(n: usize) -> StepTracker {
-        let mut hist = BTreeMap::new();
+        let mut hist = VecDeque::new();
         if n > 0 {
-            hist.insert(0, n);
+            hist.push_back(n as u32);
         }
         StepTracker {
             steps: vec![0; n],
@@ -56,6 +68,7 @@ impl StepTracker {
             active_ids: (0..n as u32).collect(),
             pos: (0..n).collect(),
             hist,
+            base: 0,
         }
     }
 
@@ -81,14 +94,30 @@ impl StepTracker {
         self.active[node]
     }
 
+    /// The `k`-th active node id (in the tracker's internal dense order,
+    /// which is stable between mutations). With a uniform `k` this is a
+    /// uniform draw from the active set in O(1) — the simulator's churn
+    /// victim pick uses it instead of scanning all nodes.
+    pub fn active_id_at(&self, k: usize) -> usize {
+        self.active_ids[k] as usize
+    }
+
     /// Minimum step over active nodes (the BSP/SSP release frontier).
     pub fn min_step(&self) -> u64 {
-        self.hist.keys().next().copied().unwrap_or(0)
+        if self.hist.is_empty() {
+            0
+        } else {
+            self.base
+        }
     }
 
     /// Maximum step over active nodes.
     pub fn max_step(&self) -> u64 {
-        self.hist.keys().next_back().copied().unwrap_or(0)
+        if self.hist.is_empty() {
+            0
+        } else {
+            self.base + self.hist.len() as u64 - 1
+        }
     }
 
     /// Advance a node's step by one; returns the new global min if it
@@ -98,8 +127,10 @@ impl StepTracker {
         let old = self.steps[node];
         let old_min = self.min_step();
         self.steps[node] = old + 1;
+        // Increment before decrement: the new count anchors the window so
+        // the front-trim in `dec_hist` cannot slide past it.
+        self.inc_hist(old + 1);
         self.dec_hist(old);
-        *self.hist.entry(old + 1).or_insert(0) += 1;
         let new_min = self.min_step();
         (new_min != old_min).then_some(new_min)
     }
@@ -116,8 +147,8 @@ impl StepTracker {
         }
         let old_min = self.min_step();
         self.steps[node] = step;
+        self.inc_hist(step);
         self.dec_hist(old);
-        *self.hist.entry(step).or_insert(0) += 1;
         let new_min = self.min_step();
         (new_min != old_min).then_some(new_min)
     }
@@ -131,7 +162,7 @@ impl StepTracker {
         self.active.push(true);
         self.pos.push(self.active_ids.len());
         self.active_ids.push(id as u32);
-        *self.hist.entry(step).or_insert(0) += 1;
+        self.inc_hist(step);
         id
     }
 
@@ -155,11 +186,36 @@ impl StepTracker {
         (!self.is_empty() && new_min != old_min).then_some(new_min)
     }
 
+    fn inc_hist(&mut self, step: u64) {
+        if self.hist.is_empty() {
+            // No active nodes: re-anchor the window wherever needed.
+            self.base = step;
+            self.hist.push_back(1);
+            return;
+        }
+        debug_assert!(step >= self.base, "hist window regressed");
+        let idx = (step - self.base) as usize;
+        while idx >= self.hist.len() {
+            self.hist.push_back(0);
+        }
+        self.hist[idx] += 1;
+    }
+
     fn dec_hist(&mut self, step: u64) {
-        let c = self.hist.get_mut(&step).expect("hist underflow");
+        let idx = (step - self.base) as usize;
+        let c = &mut self.hist[idx];
+        debug_assert!(*c > 0, "hist underflow");
         *c -= 1;
-        if *c == 0 {
-            self.hist.remove(&step);
+        // Keep both window ends non-zero (min/max are the window bounds).
+        // Amortised O(1): the front only ever moves forward with the
+        // rising minimum, the back only retreats past steps abandoned by
+        // a departing or advancing maximum.
+        while self.hist.front() == Some(&0) {
+            self.hist.pop_front();
+            self.base += 1;
+        }
+        while self.hist.back() == Some(&0) {
+            self.hist.pop_back();
         }
     }
 
@@ -210,17 +266,22 @@ impl StepTracker {
         Some(min)
     }
 
-    /// Full sampled view (steps, not just min) — used by the estimator.
+    /// Full sampled view (steps, not just min) — used by the estimator
+    /// and the quorum barrier path. Allocation-free like [`Self::sample_min`]:
+    /// the caller provides the index scratch and the output buffer (which
+    /// is cleared and filled with the sampled steps).
     pub fn sample_steps(
         &self,
         observer: usize,
         beta: usize,
         rng: &mut Rng,
-    ) -> Vec<u64> {
-        let mut scratch = Vec::new();
+        scratch: &mut Vec<usize>,
+        out: &mut Vec<u64>,
+    ) {
+        out.clear();
         let n = self.active_ids.len();
         if n == 0 || beta == 0 {
-            return Vec::new();
+            return;
         }
         let obs_pos = if observer < self.pos.len() && self.active[observer] {
             self.pos[observer]
@@ -229,20 +290,17 @@ impl StepTracker {
         };
         let pool = if obs_pos != usize::MAX { n - 1 } else { n };
         if pool == 0 {
-            return Vec::new();
+            return;
         }
-        rng.sample_into(pool, beta.min(pool), &mut scratch);
-        scratch
-            .iter()
-            .map(|&slot| {
-                let idx = if obs_pos != usize::MAX && slot >= obs_pos {
-                    slot + 1
-                } else {
-                    slot
-                };
-                self.steps[self.active_ids[idx] as usize]
-            })
-            .collect()
+        rng.sample_into(pool, beta.min(pool), scratch);
+        for &slot in scratch.iter() {
+            let idx = if obs_pos != usize::MAX && slot >= obs_pos {
+                slot + 1
+            } else {
+                slot
+            };
+            out.push(self.steps[self.active_ids[idx] as usize]);
+        }
     }
 }
 
@@ -390,12 +448,51 @@ mod tests {
         }
         // Another node sampling 4-of-4 peers must see node 0's step 7.
         let mut seen7 = false;
+        let mut view = Vec::new();
         for _ in 0..50 {
-            let v = t.sample_steps(1, 4, &mut rng);
-            assert_eq!(v.len(), 4);
-            seen7 |= v.contains(&7);
+            t.sample_steps(1, 4, &mut rng, &mut scratch, &mut view);
+            assert_eq!(view.len(), 4);
+            seen7 |= view.contains(&7);
         }
         assert!(seen7);
+    }
+
+    #[test]
+    fn sample_steps_reuses_buffers() {
+        let t = StepTracker::new(6);
+        let mut rng = Rng::new(9);
+        let mut scratch = Vec::new();
+        let mut view = Vec::new();
+        t.sample_steps(0, 3, &mut rng, &mut scratch, &mut view);
+        assert_eq!(view.len(), 3);
+        // β=0 and empty trackers clear the output.
+        t.sample_steps(0, 0, &mut rng, &mut scratch, &mut view);
+        assert!(view.is_empty());
+    }
+
+    #[test]
+    fn advance_with_wide_gap_keeps_window_consistent() {
+        // Regression: a laggard advancing from the window base while the
+        // other node sits far ahead must not slide the base past the
+        // laggard's new step.
+        let mut t = StepTracker::new(2);
+        t.advance_to(1, 5);
+        assert_eq!(t.advance(0), Some(1));
+        assert_eq!(t.min_step(), 1);
+        assert_eq!(t.max_step(), 5);
+        // And the single-node collapse: removing the laggard re-anchors.
+        assert_eq!(t.leave(0), Some(5));
+        assert_eq!(t.min_step(), 5);
+        assert_eq!(t.max_step(), 5);
+    }
+
+    #[test]
+    fn active_id_at_covers_exactly_the_active_set() {
+        let mut t = StepTracker::new(5);
+        t.leave(2);
+        let mut seen: Vec<usize> = (0..t.len()).map(|k| t.active_id_at(k)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 3, 4]);
     }
 
     #[test]

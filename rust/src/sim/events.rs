@@ -1,8 +1,20 @@
-//! Event queue for the discrete-event simulator.
+//! Event scheduling for the discrete-event simulator.
 //!
-//! A binary heap keyed by (time, sequence). The sequence number breaks
-//! ties deterministically (FIFO among simultaneous events), which makes
-//! whole simulations bit-reproducible from their seed.
+//! Two schedulers implement the same [`EventScheduler`] interface:
+//!
+//! * [`EventQueue`] — a **calendar queue** (bucketed timer wheel, Brown
+//!   1988): events hash into day-sized buckets by time, so push and pop
+//!   are O(1) amortised instead of the O(log n) of a binary heap. At
+//!   10⁴–10⁵ nodes the heap's sift-downs dominate the simulator's hot
+//!   loop; the calendar queue removes that ceiling.
+//! * [`HeapQueue`] — the pre-calendar binary-heap implementation, kept
+//!   as the **golden-trace oracle**: both schedulers pop in exactly the
+//!   same (time, seq) order, which the property tests below and the
+//!   whole-simulation tests in `tests/sim_golden.rs` assert.
+//!
+//! Ordering contract (both impls): events pop in ascending `time`;
+//! simultaneous events pop FIFO by insertion sequence. That total order
+//! is what makes whole simulations bit-reproducible from their seed.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -59,37 +71,241 @@ impl PartialOrd for Event {
     }
 }
 
-/// Min-heap of events with deterministic tie-breaking.
-#[derive(Debug, Default)]
+/// The scheduler interface the simulator's hot loop is generic over.
+///
+/// Implementations must pop in ascending `(time, seq)` order — the
+/// whole-trajectory reproducibility contract.
+pub trait EventScheduler: Default {
+    /// Schedule `kind` at absolute time `time` (seconds).
+    fn push(&mut self, time: f64, kind: EventKind);
+    /// Pop the earliest event.
+    fn pop(&mut self) -> Option<Event>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calendar queue
+// ---------------------------------------------------------------------------
+
+/// Minimum bucket count (power of two).
+const MIN_BUCKETS: usize = 16;
+/// Maximum bucket count (power of two): beyond this the wheel stops
+/// growing and per-bucket occupancy rises instead — graceful O(len/2²⁰)
+/// degradation rather than an O(len) rebuild on every push.
+const MAX_BUCKETS: usize = 1 << 20;
+/// Resize up when average occupancy exceeds this many events per bucket.
+const GROW_AT: usize = 4;
+
+/// Calendar-queue scheduler: O(1) amortised push/pop.
+///
+/// Buckets cover consecutive `width`-second "days"; an event lands in
+/// bucket `day(time) mod n_buckets`. Popping scans days from the cursor
+/// forward, taking the (time, seq)-minimum of the first non-empty day —
+/// day ranges are disjoint and ordered, so that is the global minimum.
+/// If a whole lap of the wheel finds nothing (all events more than
+/// `n_buckets` days ahead), a direct O(n) scan relocates the cursor; the
+/// periodic re-sizing keeps `width` matched to event density, making
+/// that fallback rare.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+    buckets: Vec<Vec<Event>>,
+    /// `buckets.len() - 1`; bucket count is always a power of two.
+    mask: usize,
+    /// Reciprocal of the day width (multiply, don't divide, in `day_of`
+    /// — push and pop must compute identical day indices).
+    inv_width: f64,
+    /// Day index of the pop cursor; monotone non-decreasing.
+    day: u64,
+    /// Time of the last popped event. In a DES no event is ever pushed
+    /// before it, and (since pop always returns the minimum) no stored
+    /// event precedes it either — so it is the one safe anchor for the
+    /// cursor when `resize` changes the day width.
+    floor: f64,
+    len: usize,
     seq: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> EventQueue {
+        EventQueue::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> EventQueue {
-        EventQueue { heap: BinaryHeap::with_capacity(1024), seq: 0 }
+        EventQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: MIN_BUCKETS - 1,
+            inv_width: 1.0 / 0.1, // 100ms days until the first re-size
+            day: 0,
+            floor: 0.0,
+            len: 0,
+            seq: 0,
+        }
     }
 
-    /// Schedule `kind` at absolute time `time` (seconds).
-    pub fn push(&mut self, time: f64, kind: EventKind) {
+    #[inline]
+    fn day_of(&self, time: f64) -> u64 {
+        (time * self.inv_width) as u64
+    }
+
+    /// Rebuild with a bucket count and day width matched to the current
+    /// contents. Deterministic: depends only on the stored events.
+    fn resize(&mut self) {
+        let n_buckets = self.len.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let events: Vec<Event> =
+            self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        // Width heuristic: spread the live time range over ~2 events per
+        // day. All-equal times (or a single event) keep the old width.
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for e in &events {
+            lo = lo.min(e.time);
+            hi = hi.max(e.time);
+        }
+        if hi > lo {
+            let width = ((hi - lo) / events.len() as f64 * 2.0).max(1e-9);
+            self.inv_width = 1.0 / width;
+        }
+        self.buckets = (0..n_buckets).map(|_| Vec::new()).collect();
+        self.mask = n_buckets - 1;
+        // Re-anchor the cursor at the last popped time — NOT at the
+        // earliest stored event: events may still be pushed between the
+        // two (a handler at t scheduling t+δ), and the lap scan never
+        // looks behind the cursor.
+        self.day = self.day_of(self.floor);
+        for e in events {
+            let b = (self.day_of(e.time) as usize) & self.mask;
+            self.buckets[b].push(e);
+        }
+    }
+}
+
+impl EventScheduler for EventQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
+        debug_assert!(time >= self.floor, "push at {time} before last pop {}", self.floor);
+        let seq = self.seq;
+        self.seq += 1;
+        let b = (self.day_of(time) as usize) & self.mask;
+        self.buckets[b].push(Event { time, seq, kind });
+        self.len += 1;
+        // Guard on MAX_BUCKETS: once the wheel is maxed out a resize
+        // could no longer lower occupancy, and re-triggering it on every
+        // push would turn O(1) insertion quadratic.
+        if self.len > self.buckets.len() * GROW_AT && self.buckets.len() < MAX_BUCKETS {
+            self.resize();
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        let n_buckets = self.buckets.len();
+        // Scan at most one lap of the wheel from the cursor day.
+        for i in 0..n_buckets as u64 {
+            let day = self.day + i;
+            let b = (day as usize) & self.mask;
+            let mut best: Option<usize> = None;
+            for (j, e) in self.buckets[b].iter().enumerate() {
+                // Accept only this day's events; later "years" sharing the
+                // bucket wait for their lap. Recomputing day_of keeps the
+                // test bit-consistent with the placement in push().
+                if self.day_of(e.time) != day {
+                    continue;
+                }
+                best = match best {
+                    None => Some(j),
+                    Some(k) => {
+                        let cur = &self.buckets[b][k];
+                        if (e.time, e.seq) < (cur.time, cur.seq) {
+                            Some(j)
+                        } else {
+                            Some(k)
+                        }
+                    }
+                };
+            }
+            if let Some(j) = best {
+                self.day = day;
+                let e = self.buckets[b].swap_remove(j);
+                self.floor = e.time;
+                self.len -= 1;
+                if self.buckets.len() > MIN_BUCKETS && self.len * 8 < self.buckets.len() {
+                    self.resize();
+                }
+                return Some(e);
+            }
+        }
+        // Everything is more than a lap ahead: locate the global minimum
+        // directly and re-anchor the cursor there. Rare by construction.
+        let mut best: Option<(usize, usize)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (j, e) in bucket.iter().enumerate() {
+                best = match best {
+                    None => Some((b, j)),
+                    Some((bb, jj)) => {
+                        let cur = &self.buckets[bb][jj];
+                        if (e.time, e.seq) < (cur.time, cur.seq) {
+                            Some((b, j))
+                        } else {
+                            Some((bb, jj))
+                        }
+                    }
+                };
+            }
+        }
+        let (b, j) = best.expect("len > 0 but no event found");
+        let e = self.buckets[b].swap_remove(j);
+        self.day = self.day_of(e.time);
+        self.floor = e.time;
+        self.len -= 1;
+        Some(e)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary-heap oracle (pre-refactor implementation)
+// ---------------------------------------------------------------------------
+
+/// Min-heap scheduler with deterministic tie-breaking — the original
+/// `EventQueue`. O(log n) per operation; kept as the reference oracle
+/// for golden-trace tests and for the heap-vs-calendar benchmark in
+/// `benches/simulator.rs`.
+#[derive(Debug, Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl HeapQueue {
+    pub fn new() -> HeapQueue {
+        HeapQueue { heap: BinaryHeap::with_capacity(1024), seq: 0 }
+    }
+}
+
+impl EventScheduler for HeapQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
         debug_assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Event { time, seq, kind });
     }
 
-    /// Pop the earliest event.
-    pub fn pop(&mut self) -> Option<Event> {
+    fn pop(&mut self) -> Option<Event> {
         self.heap.pop()
     }
 
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.heap.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
     }
 }
 
@@ -146,5 +362,103 @@ mod tests {
         assert_eq!(q.len(), 2);
         q.pop();
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn far_future_events_pop_correctly() {
+        // Events many "years" past the wheel exercise the direct-search
+        // fallback and the cursor re-anchoring.
+        let mut q = EventQueue::new();
+        q.push(10_000.0, EventKind::Join);
+        q.push(0.5, EventKind::Leave);
+        q.push(50_000.0, EventKind::SampleTimeline);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Leave);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Join);
+        assert_eq!(q.pop().unwrap().kind, EventKind::SampleTimeline);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn survives_many_resizes() {
+        let mut q = EventQueue::new();
+        for i in 0..5000 {
+            q.push(i as f64 * 0.001, EventKind::ComputeDone { node: i });
+        }
+        for i in 0..5000 {
+            assert_eq!(q.pop().unwrap().kind, EventKind::ComputeDone { node: i });
+        }
+        assert!(q.is_empty());
+    }
+
+    /// Regression (code review): a shrink-resize while the remaining
+    /// events sit far ahead must not advance the cursor past times that
+    /// are still legally pushable — the resize anchors at the last
+    /// popped time, never at the earliest stored event.
+    #[test]
+    fn resize_does_not_orphan_pushes_at_current_time() {
+        let mut q = EventQueue::new();
+        // Grow the wheel well past MIN_BUCKETS…
+        for i in 0..2000 {
+            q.push(10.0 + i as f64 * 1e-3, EventKind::ComputeDone { node: i });
+        }
+        // …plus one far-future event that will be all that remains.
+        q.push(100.0, EventKind::SampleTimeline);
+        // Drain the cluster; shrink-resizes fire along the way.
+        let mut last = 0.0;
+        for _ in 0..2000 {
+            last = q.pop().unwrap().time;
+        }
+        assert!(last < 13.0);
+        // A handler at `last` schedules follow-ups just after it.
+        q.push(last + 0.5, EventKind::Join);
+        q.push(last, EventKind::Leave);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Leave);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Join);
+        assert_eq!(q.pop().unwrap().kind, EventKind::SampleTimeline);
+        assert!(q.pop().is_none());
+    }
+
+    /// The satellite property test: on random interleaved workloads the
+    /// calendar queue pops exactly the (time, seq) sequence the old
+    /// binary heap does — including duplicate times, same-time pushes
+    /// after pops, and clustered + sparse mixtures.
+    #[test]
+    fn prop_calendar_matches_heap_oracle() {
+        property("calendar queue == heap oracle", 150, |g| {
+            let mut cal = EventQueue::new();
+            let mut heap = HeapQueue::new();
+            let mut now = 0.0f64;
+            let ops = g.usize_in(1, 400);
+            for _ in 0..ops {
+                if g.usize_in(0, 2) > 0 || cal.is_empty() {
+                    // Push 1–4 events at or after the current time; small
+                    // strides force ties and bucket collisions, large
+                    // strides force the far-future path.
+                    for _ in 0..g.usize_in(1, 4) {
+                        let dt = match g.usize_in(0, 9) {
+                            0 => 0.0,
+                            1..=6 => g.f64_in(0.0, 2.0),
+                            _ => g.f64_in(0.0, 500.0),
+                        };
+                        let node = g.usize_in(0, 50);
+                        cal.push(now + dt, EventKind::ComputeDone { node });
+                        heap.push(now + dt, EventKind::ComputeDone { node });
+                    }
+                } else {
+                    let a = cal.pop().unwrap();
+                    let b = heap.pop().unwrap();
+                    assert_eq!(a, b, "pop diverged: {a:?} vs {b:?}");
+                    assert_eq!(a.kind, b.kind);
+                    now = a.time;
+                }
+                assert_eq!(cal.len(), heap.len());
+            }
+            while let Some(b) = heap.pop() {
+                let a = cal.pop().expect("calendar ran dry early");
+                assert_eq!(a, b, "drain diverged: {a:?} vs {b:?}");
+                assert_eq!(a.kind, b.kind);
+            }
+            assert!(cal.pop().is_none());
+        });
     }
 }

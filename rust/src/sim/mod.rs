@@ -5,8 +5,24 @@
 //!
 //! The *same barrier code* ([`crate::barrier`]) drives both this simulator
 //! and the live thread-based engines ([`crate::engine`]); the simulator
-//! exists so that the 100–1000-node sweeps behind every figure are exact,
-//! fast and reproducible from a seed.
+//! exists so that the sweeps behind every figure are exact, fast and
+//! reproducible from a seed — and fast enough that 10⁵-node clusters are
+//! routine, not just the paper's 10³.
+//!
+//! ## Hot-path architecture (the 10× pass)
+//!
+//! * Events are scheduled on a **calendar queue** ([`EventQueue`]) — O(1)
+//!   amortised push/pop instead of a binary heap's O(log n) — with the
+//!   old heap retained as [`HeapQueue`], the golden-trace oracle.
+//! * Node progress lives in [`StepTracker`]'s dense sliding-window
+//!   histogram: O(1) advance and O(1) min/max.
+//! * SGD snapshots are **version ids** into a bounded [`SnapshotStore`]
+//!   ring instead of per-worker O(dim) clones, cutting pull cost to O(1)
+//!   and memory from O(n_nodes·dim) to O(versions·dim) while staying
+//!   bit-identical (`tests/sim_golden.rs`).
+//! * Events past the horizon are never enqueued (they could never be
+//!   processed), and churn victims are picked in O(1) from the tracker's
+//!   dense active list.
 //!
 //! ## Worker lifecycle
 //!
@@ -27,16 +43,18 @@
 //!
 //! ## Optional real SGD (`SgdConfig`)
 //!
-//! With SGD enabled each worker holds the model snapshot it pulled when
-//! its iteration started and, on completion, pushes the *actual* MSE
-//! gradient of a minibatch drawn from a shared synthetic dataset
-//! (generated from a ground-truth parameter vector). The server applies
-//! updates on arrival. This reproduces the paper's Fig 1d/2b error
-//! metric: `‖w_server − w_true‖₂` normalised by its initial value.
+//! With SGD enabled each worker holds the version id of the model it
+//! pulled when its iteration started and, on completion, pushes the
+//! *actual* MSE gradient of a minibatch drawn from a shared synthetic
+//! dataset (generated from a ground-truth parameter vector). The server
+//! applies updates on arrival. This reproduces the paper's Fig 1d/2b
+//! error metric: `‖w_server − w_true‖₂` normalised by its initial value.
 
 mod events;
+mod snapshots;
 
-pub use events::{Event, EventKind, EventQueue};
+pub use events::{Event, EventKind, EventQueue, EventScheduler, HeapQueue};
+pub use snapshots::{SnapshotStore, NO_VERSION};
 
 use crate::barrier::{BarrierControl, Method, ViewRequirement};
 use crate::model::linear::{Dataset, LinearModel};
@@ -106,11 +124,24 @@ pub struct SgdConfig {
     pub lr: f32,
     /// Observation noise in the synthetic data.
     pub noise: f32,
+    /// Model versions the snapshot store keeps reconstructable; pins
+    /// that fall further behind are spilled (exactly) on demand. Larger
+    /// values trade memory for fewer spills under heavy blocking. The
+    /// store clamps this up to its minimum window (two checkpoint
+    /// strides, currently 32) — values below that are effectively 32.
+    pub versions: usize,
 }
 
 impl Default for SgdConfig {
     fn default() -> Self {
-        SgdConfig { dim: 1000, batch: 32, pool: 4096, lr: 0.5, noise: 0.1 }
+        SgdConfig {
+            dim: 1000,
+            batch: 32,
+            pool: 4096,
+            lr: 0.5,
+            noise: 0.1,
+            versions: 256,
+        }
     }
 }
 
@@ -214,10 +245,29 @@ struct NodeState {
     status: Status,
     /// Mean iteration time for this node (includes straggler slowdown).
     mean_iter: f64,
-    /// Model snapshot pulled at iteration start (SGD mode only).
-    snapshot: Vec<f32>,
+    /// Snapshot-store version pinned at iteration start (SGD mode only;
+    /// [`NO_VERSION`] otherwise).
+    version: u64,
     /// Minibatch seed for the in-flight iteration.
     batch_seed: u64,
+    /// Update messages in flight to the server (schedules outstanding).
+    pending: u32,
+}
+
+/// Schedule `kind` at `t` unless it lies beyond the horizon — such events
+/// could never be processed (the run loop stops at the first of them), so
+/// skipping them keeps the queue small. Trajectories are unchanged: the
+/// relative order of retained pushes, and hence every (time, seq)
+/// tie-break among events that actually fire, is preserved. Returns
+/// whether the event was enqueued.
+#[inline]
+fn schedule<Q: EventScheduler>(queue: &mut Q, horizon: f64, t: f64, kind: EventKind) -> bool {
+    if t <= horizon {
+        queue.push(t, kind);
+        true
+    } else {
+        false
+    }
 }
 
 /// The simulator. Construct with [`Simulator::new`], run with
@@ -233,14 +283,28 @@ impl Simulator {
         Simulator { barrier: method.build(), cfg, method }
     }
 
-    /// Run the simulation to the configured horizon.
+    /// Run the simulation to the configured horizon on the calendar
+    /// queue (the production scheduler).
     pub fn run(&self) -> SimResult {
+        self.run_with::<EventQueue>()
+    }
+
+    /// Run on the pre-refactor binary-heap scheduler. Slower, trajectory
+    /// -identical — the oracle for the golden-trace tests and the
+    /// heap-vs-calendar comparison in `benches/simulator.rs`.
+    pub fn run_reference(&self) -> SimResult {
+        self.run_with::<HeapQueue>()
+    }
+
+    fn run_with<Q: EventScheduler>(&self) -> SimResult {
         let start = std::time::Instant::now();
         let cfg = &self.cfg;
+        let horizon = cfg.duration;
         let mut rng = Rng::new(cfg.seed);
-        let mut queue = EventQueue::new();
+        let mut queue = Q::default();
         let mut tracker = StepTracker::new(cfg.n_nodes);
         let mut scratch: Vec<usize> = Vec::new();
+        let mut view: Vec<u64> = Vec::new();
 
         // SGD state (optional).
         let mut sgd = cfg
@@ -263,8 +327,9 @@ impl Simulator {
                 NodeState {
                     status: Status::Computing,
                     mean_iter: mean,
-                    snapshot: Vec::new(),
+                    version: NO_VERSION,
                     batch_seed: 0,
+                    pending: 0,
                 }
             })
             .collect();
@@ -272,25 +337,27 @@ impl Simulator {
         // Kick off: every node starts computing step 0 at t=0.
         for (i, node) in nodes.iter_mut().enumerate() {
             if let Some(s) = sgd.as_mut() {
-                node.snapshot = s.server_w.clone();
+                node.version = s.store.pin_head();
                 node.batch_seed = rng.next_u64();
             }
             let d = cfg.iter_dist.sample(node.mean_iter, &mut rng);
-            queue.push(d, EventKind::ComputeDone { node: i });
+            schedule(&mut queue, horizon, d, EventKind::ComputeDone { node: i });
         }
         // Timeline sampling ticks.
         let mut tick = cfg.sample_interval;
         while tick <= cfg.duration + 1e-9 {
-            queue.push(tick, EventKind::SampleTimeline);
+            schedule(&mut queue, horizon, tick, EventKind::SampleTimeline);
             tick += cfg.sample_interval;
         }
         // Churn processes.
         if let Some(churn) = cfg.churn {
             if churn.join_rate > 0.0 {
-                queue.push(rng.exponential(1.0 / churn.join_rate), EventKind::Join);
+                let t = rng.exponential(1.0 / churn.join_rate);
+                schedule(&mut queue, horizon, t, EventKind::Join);
             }
             if churn.leave_rate > 0.0 {
-                queue.push(rng.exponential(1.0 / churn.leave_rate), EventKind::Leave);
+                let t = rng.exponential(1.0 / churn.leave_rate);
+                schedule(&mut queue, horizon, t, EventKind::Leave);
             }
         }
 
@@ -328,7 +395,13 @@ impl Simulator {
                     } else {
                         update_msgs += 1;
                         let delay = rng.exponential(cfg.net_delay_mean);
-                        queue.push(t + delay, EventKind::UpdateArrive { node });
+                        // Count only arrivals that will actually fire, so
+                        // `pending == 0` reliably means "no in-flight
+                        // reads" when reclaiming a departed node's pin.
+                        let arrive = EventKind::UpdateArrive { node };
+                        if schedule(&mut queue, horizon, t + delay, arrive) {
+                            nodes[node].pending += 1;
+                        }
                     }
                     // Global methods: one step-report control message.
                     if is_global {
@@ -337,7 +410,7 @@ impl Simulator {
                     // Barrier decision.
                     self.try_advance(
                         node, t, &mut nodes, &mut tracker, &mut rng, &mut scratch,
-                        &mut queue, &mut blocked_global, &mut control_msgs,
+                        &mut view, &mut queue, &mut blocked_global, &mut control_msgs,
                         &mut total_advances, &mut sgd, staleness,
                     );
                 }
@@ -349,13 +422,21 @@ impl Simulator {
                     }
                     self.try_advance(
                         node, t, &mut nodes, &mut tracker, &mut rng, &mut scratch,
-                        &mut queue, &mut blocked_global, &mut control_msgs,
+                        &mut view, &mut queue, &mut blocked_global, &mut control_msgs,
                         &mut total_advances, &mut sgd, staleness,
                     );
                 }
                 EventKind::UpdateArrive { node } => {
+                    nodes[node].pending -= 1;
                     if let Some(s) = sgd.as_mut() {
                         s.apply_update(node, &nodes);
+                        let st = &mut nodes[node];
+                        if st.status == Status::Gone && st.pending == 0 {
+                            // Last in-flight update of a departed node:
+                            // its snapshot version can be reclaimed.
+                            s.store.unpin(st.version);
+                            st.version = NO_VERSION;
+                        }
                     }
                 }
                 EventKind::SampleTimeline => {
@@ -366,39 +447,41 @@ impl Simulator {
                 }
                 EventKind::Join => {
                     let id = tracker.join();
+                    let mean_iter = cfg.mean_iter_time
+                        * rng.uniform(1.0 - cfg.speed_jitter, 1.0 + cfg.speed_jitter);
+                    let version = match sgd.as_mut() {
+                        Some(s) => s.store.pin_head(),
+                        None => NO_VERSION,
+                    };
                     nodes.push(NodeState {
                         status: Status::Computing,
-                        mean_iter: cfg.mean_iter_time
-                            * rng.uniform(
-                                1.0 - cfg.speed_jitter,
-                                1.0 + cfg.speed_jitter,
-                            ),
-                        snapshot: sgd
-                            .as_ref()
-                            .map(|s| s.server_w.clone())
-                            .unwrap_or_default(),
+                        mean_iter,
+                        version,
                         batch_seed: rng.next_u64(),
+                        pending: 0,
                     });
                     let d = cfg.iter_dist.sample(nodes[id].mean_iter, &mut rng);
-                    queue.push(t + d, EventKind::ComputeDone { node: id });
+                    let done = EventKind::ComputeDone { node: id };
+                    schedule(&mut queue, horizon, t + d, done);
                     if let Some(churn) = cfg.churn {
-                        queue.push(
-                            t + rng.exponential(1.0 / churn.join_rate),
-                            EventKind::Join,
-                        );
+                        let next = t + rng.exponential(1.0 / churn.join_rate);
+                        schedule(&mut queue, horizon, next, EventKind::Join);
                     }
                 }
                 EventKind::Leave => {
-                    // Pick a random active victim.
+                    // Pick a random active victim in O(1) from the dense
+                    // active list (uniform: k is uniform over the set).
                     if tracker.len() > 1 {
                         let victims = tracker.len();
                         let k = rng.next_below(victims as u64) as usize;
-                        // map k-th active -> node id
-                        let victim = (0..nodes.len())
-                            .filter(|&i| tracker.is_active(i))
-                            .nth(k)
-                            .unwrap();
+                        let victim = tracker.active_id_at(k);
                         nodes[victim].status = Status::Gone;
+                        if let Some(s) = sgd.as_mut() {
+                            if nodes[victim].pending == 0 {
+                                s.store.unpin(nodes[victim].version);
+                                nodes[victim].version = NO_VERSION;
+                            }
+                        }
                         if let Some(new_min) = tracker.leave(victim) {
                             release_blocked(
                                 new_min, t, &mut blocked_global, &mut queue,
@@ -406,10 +489,8 @@ impl Simulator {
                         }
                     }
                     if let Some(churn) = cfg.churn {
-                        queue.push(
-                            t + rng.exponential(1.0 / churn.leave_rate),
-                            EventKind::Leave,
-                        );
+                        let next = t + rng.exponential(1.0 / churn.leave_rate);
+                        schedule(&mut queue, horizon, next, EventKind::Leave);
                     }
                 }
                 EventKind::Release { node } => {
@@ -446,7 +527,7 @@ impl Simulator {
     /// Evaluate the barrier for `node` (at barrier after finishing its
     /// step) and either advance it or park it (blocked map / recheck).
     #[allow(clippy::too_many_arguments)]
-    fn try_advance(
+    fn try_advance<Q: EventScheduler>(
         &self,
         node: usize,
         t: f64,
@@ -454,7 +535,8 @@ impl Simulator {
         tracker: &mut StepTracker,
         rng: &mut Rng,
         scratch: &mut Vec<usize>,
-        queue: &mut EventQueue,
+        view: &mut Vec<u64>,
+        queue: &mut Q,
         blocked_global: &mut std::collections::BTreeMap<u64, Vec<u32>>,
         control_msgs: &mut u64,
         total_advances: &mut u64,
@@ -474,8 +556,8 @@ impl Simulator {
                     }
                 } else {
                     // quorum-style predicates need the full sampled view
-                    let view = tracker.sample_steps(node, beta, rng);
-                    self.barrier.can_advance(my_step, &view)
+                    tracker.sample_steps(node, beta, rng, scratch, view);
+                    self.barrier.can_advance(my_step, view)
                 }
             }
         };
@@ -496,7 +578,8 @@ impl Simulator {
                     // Re-sample after a back-off (with ±50% jitter so
                     // blocked nodes don't re-check in lockstep).
                     let back = self.cfg.recheck_interval * rng.uniform(0.5, 1.5);
-                    queue.push(t + back, EventKind::Recheck { node, step: my_step });
+                    let recheck = EventKind::Recheck { node, step: my_step };
+                    schedule(queue, self.cfg.duration, t + back, recheck);
                 }
                 ViewRequirement::None => unreachable!("ASP never blocks"),
             }
@@ -506,14 +589,14 @@ impl Simulator {
     /// Cross the barrier: advance the step, start the next iteration, and
     /// release any globally-blocked nodes the new minimum unblocks.
     #[allow(clippy::too_many_arguments)]
-    fn advance_now(
+    fn advance_now<Q: EventScheduler>(
         &self,
         node: usize,
         t: f64,
         nodes: &mut [NodeState],
         tracker: &mut StepTracker,
         rng: &mut Rng,
-        queue: &mut EventQueue,
+        queue: &mut Q,
         blocked_global: &mut std::collections::BTreeMap<u64, Vec<u32>>,
         total_advances: &mut u64,
         sgd: &mut Option<SgdState>,
@@ -521,13 +604,14 @@ impl Simulator {
     ) {
         *total_advances += 1;
         nodes[node].status = Status::Computing;
-        // Pull a fresh snapshot for the next iteration.
+        // Pin a fresh snapshot version for the next iteration (O(1); the
+        // pre-refactor code cloned the full model here).
         if let Some(s) = sgd.as_mut() {
-            nodes[node].snapshot.clone_from(&s.server_w);
+            nodes[node].version = s.store.repin(nodes[node].version);
             nodes[node].batch_seed = rng.next_u64();
         }
         let d = self.cfg.iter_dist.sample(nodes[node].mean_iter, rng);
-        queue.push(t + d, EventKind::ComputeDone { node });
+        schedule(queue, self.cfg.duration, t + d, EventKind::ComputeDone { node });
         if let Some(new_min) = tracker.advance(node) {
             // A rising minimum is broadcast to blocked nodes; count one
             // control message per released node (the release notification).
@@ -540,11 +624,11 @@ impl Simulator {
 /// Move all globally-blocked nodes whose threshold the new minimum
 /// satisfies onto the event queue (Release events at the current time).
 /// Returns how many were released.
-fn release_blocked(
+fn release_blocked<Q: EventScheduler>(
     new_min: u64,
     t: f64,
     blocked_global: &mut std::collections::BTreeMap<u64, Vec<u32>>,
-    queue: &mut EventQueue,
+    queue: &mut Q,
 ) -> u64 {
     let mut released = 0;
     loop {
@@ -561,11 +645,12 @@ fn release_blocked(
     released
 }
 
-/// Server-side SGD state over the shared synthetic dataset.
+/// Server-side SGD state over the shared synthetic dataset. The model
+/// lives in a [`SnapshotStore`]; workers reference versions, never copies.
 struct SgdState {
     model: LinearModel,
     data: Dataset,
-    server_w: Vec<f32>,
+    store: SnapshotStore,
     w_true: Vec<f32>,
     init_error: f64,
     lr: f32,
@@ -581,7 +666,7 @@ impl SgdState {
             model: LinearModel::new(cfg.dim),
             w_true: data.w_true.clone(),
             data,
-            server_w,
+            store: SnapshotStore::new(server_w, cfg.versions),
             init_error,
             // per-update rate = per-round rate / P (see SgdConfig::lr)
             lr: cfg.lr / n_nodes.max(1) as f32,
@@ -589,25 +674,26 @@ impl SgdState {
         }
     }
 
-    /// Apply the update node `node` computed against its snapshot.
+    /// Apply the update node `node` computed against its pinned snapshot
+    /// version — bit-identical to the pre-refactor cloned-snapshot path.
     fn apply_update(&mut self, node: usize, nodes: &[NodeState]) {
         let st = &nodes[node];
-        if st.snapshot.is_empty() {
+        if st.version == NO_VERSION {
             return;
         }
-        let grad = self.model.minibatch_grad(
-            &self.data,
-            &st.snapshot,
-            st.batch_seed,
-            self.batch,
-        );
-        for (w, g) in self.server_w.iter_mut().zip(grad) {
-            *w -= self.lr * g;
+        let w = self.store.get(st.version);
+        let grad =
+            self.model.minibatch_grad(&self.data, w, st.batch_seed, self.batch);
+        let mut delta = self.store.take_buf();
+        for (d, g) in delta.iter_mut().zip(grad) {
+            *d = self.lr * g;
         }
+        self.store.apply_delta(delta);
     }
 
     fn normalised_error(&self) -> f64 {
-        crate::util::stats::l2_dist(&self.server_w, &self.w_true) / self.init_error
+        crate::util::stats::l2_dist(self.store.head_slice(), &self.w_true)
+            / self.init_error
     }
 }
 
@@ -751,6 +837,25 @@ mod tests {
     }
 
     #[test]
+    fn sgd_with_tiny_version_window_still_learns() {
+        // A minimum-size snapshot ring (versions=1 clamps to the store's
+        // 32-delta floor) must produce results identical to a roomy one:
+        // any read past the window is served by an exact spill.
+        let mk = |versions| ClusterConfig {
+            sgd: Some(SgdConfig { dim: 50, versions, ..SgdConfig::default() }),
+            ..tiny_cfg(25, 16)
+        };
+        let m = Method::Pbsp { sample: 4 };
+        let tight = run(mk(1), m);
+        let roomy = run(mk(4096), m);
+        assert_eq!(tight.final_steps, roomy.final_steps);
+        let bits = |r: &SimResult| -> Vec<u64> {
+            r.error_timeline.iter().map(|&(_, e)| e.to_bits()).collect()
+        };
+        assert_eq!(bits(&tight), bits(&roomy), "spilled reads must be exact");
+    }
+
+    #[test]
     fn churn_keeps_running() {
         let cfg = ClusterConfig {
             churn: Some(ChurnConfig { join_rate: 0.5, leave_rate: 0.5 }),
@@ -761,6 +866,18 @@ mod tests {
             assert!(!r.final_steps.is_empty());
             assert!(r.total_advances > 0, "{m}: no progress under churn");
         }
+    }
+
+    #[test]
+    fn churn_with_sgd_reclaims_departed_pins() {
+        let cfg = ClusterConfig {
+            churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0 }),
+            sgd: Some(SgdConfig { dim: 40, ..SgdConfig::default() }),
+            ..tiny_cfg(20, 17)
+        };
+        let r = run(cfg, Method::Pssp { sample: 4, staleness: 4 });
+        assert!(r.total_advances > 0);
+        assert!(r.final_error().is_some());
     }
 
     #[test]

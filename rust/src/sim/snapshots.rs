@@ -1,0 +1,383 @@
+//! Versioned model-snapshot store for the simulator's SGD mode.
+//!
+//! The pre-refactor simulator cloned the full `dim`-sized server model
+//! into every worker on every advance — O(dim) time per step and
+//! O(n_nodes · dim) resident memory, the term that made 10⁵-node SGD
+//! sweeps infeasible. This store replaces the clone with a **version
+//! id**: the server model is an append-only sequence of versions (one
+//! per applied update), workers pin the version they pulled, and the
+//! store keeps just enough history to reconstruct any pinned version
+//! **bit-exactly**:
+//!
+//! * `cur` — the live model at version `head`;
+//! * a bounded ring of the last `retain` update **deltas** (the store
+//!   takes ownership of the `lr·g` buffer the update already
+//!   materialises, so recording costs no extra copy);
+//! * materialised **checkpoints** every `CHECKPOINT_STRIDE` versions
+//!   inside the ring;
+//! * a **spill map** for pinned versions that fall off the ring (old
+//!   pins of blocked/departed stragglers), de-duplicated by version.
+//!
+//! Reading version `v` replays deltas forward from the nearest
+//! checkpoint at or below `v` into a cached scratch buffer; because the
+//! server itself produced version `v` by the identical subtraction
+//! sequence, the reconstruction is bit-identical to the pre-refactor
+//! cloned snapshot (asserted against an eager-clone oracle in the tests
+//! below and at whole-simulation level in `tests/sim_golden.rs`).
+//! Consecutive reads are usually at adjacent versions, so the scratch
+//! cache makes the common read O(dim · version-gap) ≈ O(dim).
+//!
+//! Memory: O(retain · dim + distinct-spilled · dim) — bounded by the
+//! configured window instead of the cluster size.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// Sentinel for "no version pinned".
+pub const NO_VERSION: u64 = u64::MAX;
+
+/// Materialise a full checkpoint every this many versions.
+const CHECKPOINT_STRIDE: u64 = 16;
+
+/// Bounded-history versioned store over a dense `f32` model vector.
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    /// Live model — version `head`.
+    cur: Vec<f32>,
+    head: u64,
+    /// `deltas[i]` transformed version `base + i` into `base + i + 1`.
+    deltas: VecDeque<Vec<f32>>,
+    /// Oldest version reconstructable from the ring.
+    base: u64,
+    /// Materialised `(version, model)` checkpoints, ascending; the first
+    /// one is always exactly at `base`.
+    checkpoints: VecDeque<(u64, Vec<f32>)>,
+    /// Maximum deltas retained before the window slides (spilling any
+    /// still-pinned versions it passes).
+    retain: usize,
+    /// version -> number of outstanding pins.
+    refs: BTreeMap<u64, u32>,
+    /// Exact copies of pinned versions that fell off the ring.
+    spilled: BTreeMap<u64, Vec<f32>>,
+    /// Reconstruction cache: `scratch` holds version `scratch_v`.
+    scratch: Vec<f32>,
+    scratch_v: u64,
+    /// Recycled delta buffers (capacity reuse for `take_buf`).
+    pool: Vec<Vec<f32>>,
+    /// Lifetime spill count (stat; exposed for tests and benches).
+    spills: u64,
+}
+
+impl SnapshotStore {
+    /// Create a store at version 0 holding `init`, retaining at least
+    /// `retain` versions of history (clamped to one checkpoint stride).
+    pub fn new(init: Vec<f32>, retain: usize) -> SnapshotStore {
+        let mut checkpoints = VecDeque::new();
+        checkpoints.push_back((0, init.clone()));
+        SnapshotStore {
+            cur: init,
+            head: 0,
+            deltas: VecDeque::new(),
+            base: 0,
+            checkpoints,
+            retain: retain.max(CHECKPOINT_STRIDE as usize * 2),
+            refs: BTreeMap::new(),
+            spilled: BTreeMap::new(),
+            scratch: Vec::new(),
+            scratch_v: NO_VERSION,
+            pool: Vec::new(),
+            spills: 0,
+        }
+    }
+
+    /// Current version id.
+    pub fn version(&self) -> u64 {
+        self.head
+    }
+
+    /// The live model (version `head`).
+    pub fn head_slice(&self) -> &[f32] {
+        &self.cur
+    }
+
+    /// Pin the current head version (a worker pulling the model).
+    /// O(log pins) — no copy.
+    pub fn pin_head(&mut self) -> u64 {
+        *self.refs.entry(self.head).or_insert(0) += 1;
+        self.head
+    }
+
+    /// Release a pin taken earlier. `NO_VERSION` is a no-op.
+    pub fn unpin(&mut self, v: u64) {
+        if v == NO_VERSION {
+            return;
+        }
+        let count = self.refs.get_mut(&v).expect("unpin of unpinned version");
+        *count -= 1;
+        if *count == 0 {
+            self.refs.remove(&v);
+            self.spilled.remove(&v);
+        }
+    }
+
+    /// Atomically release `old` and pin the head (a worker advancing).
+    pub fn repin(&mut self, old: u64) -> u64 {
+        self.unpin(old);
+        self.pin_head()
+    }
+
+    /// A `dim`-sized zeroed buffer for the caller to fill with the next
+    /// delta, recycled from evicted ring entries when possible.
+    pub fn take_buf(&mut self) -> Vec<f32> {
+        match self.pool.pop() {
+            Some(mut b) => {
+                b.clear();
+                b.resize(self.cur.len(), 0.0);
+                b
+            }
+            None => vec![0.0; self.cur.len()],
+        }
+    }
+
+    /// Apply an update: `w[i] -= delta[i]` for every element, advancing
+    /// `head` by one and recording `delta` in the ring (taking ownership
+    /// — no copy).
+    pub fn apply_delta(&mut self, delta: Vec<f32>) {
+        debug_assert_eq!(delta.len(), self.cur.len());
+        for (w, d) in self.cur.iter_mut().zip(&delta) {
+            *w -= d;
+        }
+        self.head += 1;
+        self.deltas.push_back(delta);
+        if self.head % CHECKPOINT_STRIDE == 0 {
+            self.checkpoints.push_back((self.head, self.cur.clone()));
+        }
+        self.trim();
+    }
+
+    /// Slide the window forward one checkpoint interval at a time,
+    /// spilling exact copies of any versions still pinned.
+    fn trim(&mut self) {
+        while self.deltas.len() > self.retain && self.checkpoints.len() > 1 {
+            let new_base = self.checkpoints[1].0;
+            let pinned: Vec<u64> = self
+                .refs
+                .range(self.base..new_base)
+                .map(|(&v, _)| v)
+                .filter(|v| !self.spilled.contains_key(v))
+                .collect();
+            for v in pinned {
+                let w = self.rebuild(v);
+                self.spilled.insert(v, w);
+                self.spills += 1;
+            }
+            for _ in self.base..new_base {
+                let mut buf = self.deltas.pop_front().expect("delta ring underflow");
+                if self.pool.len() < 8 {
+                    buf.clear();
+                    self.pool.push(buf);
+                }
+            }
+            self.checkpoints.pop_front();
+            self.base = new_base;
+        }
+    }
+
+    /// Materialise version `v` from the ring (checkpoint + forward
+    /// delta replay). `v` must be inside `[base, head]`.
+    fn rebuild(&self, v: u64) -> Vec<f32> {
+        let ci = self.checkpoints.partition_point(|&(cv, _)| cv <= v) - 1;
+        let (cv, cw) = &self.checkpoints[ci];
+        let mut w = cw.clone();
+        for i in (cv - self.base)..(v - self.base) {
+            for (x, d) in w.iter_mut().zip(&self.deltas[i as usize]) {
+                *x -= d;
+            }
+        }
+        w
+    }
+
+    /// Read version `v` — bit-identical to the model as it was when `v`
+    /// was the head. `v` must be pinned (or the head itself).
+    pub fn get(&mut self, v: u64) -> &[f32] {
+        if v == self.head {
+            return &self.cur;
+        }
+        if let Some(w) = self.spilled.get(&v) {
+            return w;
+        }
+        assert!(
+            v >= self.base && v < self.head,
+            "version {v} outside retained window [{}, {}]",
+            self.base,
+            self.head
+        );
+        // NO_VERSION (u64::MAX) never satisfies `scratch_v <= v`.
+        let cached = self.scratch_v >= self.base && self.scratch_v <= v;
+        if cached {
+            // Forward-replay from the cache: consecutive reads advance a
+            // few versions at a time, so this is the O(dim) common case.
+            for i in (self.scratch_v - self.base)..(v - self.base) {
+                for (x, d) in self.scratch.iter_mut().zip(&self.deltas[i as usize]) {
+                    *x -= d;
+                }
+            }
+        } else {
+            let w = self.rebuild(v);
+            self.scratch = w;
+        }
+        self.scratch_v = v;
+        &self.scratch
+    }
+
+    /// Number of versions currently reconstructable from the ring.
+    pub fn retained(&self) -> usize {
+        self.deltas.len() + 1
+    }
+
+    /// Versions ever spilled (pinned past the window) — a health stat:
+    /// large values mean `retain` is too small for the workload.
+    pub fn spill_count(&self) -> u64 {
+        self.spills
+    }
+
+    /// Outstanding pins across all versions.
+    pub fn pin_count(&self) -> usize {
+        self.refs.values().map(|&c| c as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Eager-clone oracle: every version kept as a full copy.
+    struct Oracle {
+        versions: Vec<Vec<f32>>,
+    }
+
+    impl Oracle {
+        fn new(init: Vec<f32>) -> Oracle {
+            Oracle { versions: vec![init] }
+        }
+
+        fn apply(&mut self, delta: &[f32]) {
+            let mut next = self.versions.last().unwrap().clone();
+            for (w, d) in next.iter_mut().zip(delta) {
+                *w -= d;
+            }
+            self.versions.push(next);
+        }
+    }
+
+    fn random_delta(dim: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..dim).map(|_| (rng.next_f32() - 0.5) * 0.1).collect()
+    }
+
+    #[test]
+    fn head_and_version_track_updates() {
+        let mut s = SnapshotStore::new(vec![1.0, 2.0], 64);
+        assert_eq!(s.version(), 0);
+        s.apply_delta(vec![0.5, -0.5]);
+        assert_eq!(s.version(), 1);
+        assert_eq!(s.head_slice(), &[0.5, 2.5]);
+    }
+
+    #[test]
+    fn reads_are_bit_identical_to_eager_clones() {
+        let dim = 17;
+        let mut rng = Rng::new(7);
+        let init: Vec<f32> = (0..dim).map(|_| rng.next_f32()).collect();
+        let mut store = SnapshotStore::new(init.clone(), 64);
+        let mut oracle = Oracle::new(init);
+        // Pin a scattering of versions as we go, then read them all back
+        // in a jumbled order.
+        let mut pins: Vec<u64> = Vec::new();
+        for step in 0..500 {
+            if step % 3 == 0 {
+                pins.push(store.pin_head());
+            }
+            let d = random_delta(dim, &mut rng);
+            oracle.apply(&d);
+            store.apply_delta(d);
+        }
+        // Jumbled read order: forward cache hits, backward rebuilds,
+        // spilled versions, and the head.
+        let mut order = pins.clone();
+        rng.shuffle(&mut order);
+        for &v in &order {
+            let got = store.get(v).to_vec();
+            let want = &oracle.versions[v as usize];
+            assert_eq!(&got, want, "version {v} diverged");
+        }
+        assert_eq!(store.head_slice(), oracle.versions.last().unwrap().as_slice());
+    }
+
+    #[test]
+    fn old_pins_spill_once_and_dedup() {
+        let dim = 4;
+        let mut store = SnapshotStore::new(vec![0.0; dim], 32);
+        // Three pins of the same early version.
+        let a = store.pin_head();
+        let b = store.pin_head();
+        let c = store.pin_head();
+        assert_eq!(a, b);
+        for _ in 0..400 {
+            store.apply_delta(vec![0.01; dim]);
+        }
+        // The pinned version fell well off the 32-delta ring: it must
+        // have been spilled exactly once despite three pins.
+        assert_eq!(store.spill_count(), 1);
+        let w = store.get(a).to_vec();
+        assert_eq!(w, vec![0.0; dim]);
+        store.unpin(a);
+        store.unpin(b);
+        store.unpin(c);
+        assert_eq!(store.pin_count(), 0);
+    }
+
+    #[test]
+    fn unpinned_versions_are_reclaimed() {
+        let dim = 3;
+        let mut store = SnapshotStore::new(vec![0.0; dim], 32);
+        let v = store.pin_head();
+        for _ in 0..200 {
+            store.apply_delta(vec![0.1; dim]);
+        }
+        assert!(store.spill_count() > 0);
+        store.unpin(v);
+        // Spilled copy is dropped with its last pin.
+        assert_eq!(store.pin_count(), 0);
+        assert!(store.spilled.is_empty());
+    }
+
+    #[test]
+    fn repin_moves_the_pin_to_head() {
+        let mut store = SnapshotStore::new(vec![0.0; 2], 64);
+        let v0 = store.pin_head();
+        store.apply_delta(vec![1.0, 1.0]);
+        let v1 = store.repin(v0);
+        assert_eq!(v1, 1);
+        assert_eq!(store.pin_count(), 1);
+        // v0 is no longer pinned; reading it is only legal via the ring
+        // (still retained here).
+        assert_eq!(store.get(v0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn retained_window_is_bounded() {
+        let dim = 8;
+        let mut store = SnapshotStore::new(vec![0.0; dim], 48);
+        for _ in 0..10_000 {
+            store.apply_delta(vec![0.001; dim]);
+        }
+        // retain is clamped up to >= 2 strides and the window slides in
+        // stride units, so allow one extra stride of slack.
+        assert!(
+            store.retained() <= 48 + 2 * CHECKPOINT_STRIDE as usize,
+            "window grew unbounded: {}",
+            store.retained()
+        );
+        assert_eq!(store.spill_count(), 0, "nothing was pinned");
+    }
+}

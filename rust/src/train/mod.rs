@@ -20,6 +20,7 @@ use anyhow::{anyhow, Result};
 use crate::barrier::{Method, ViewRequirement};
 use crate::runtime::{Runtime, Tensor};
 use crate::sampling::StepTracker;
+use crate::sim::EventScheduler;
 use crate::util::rng::Rng;
 
 /// Deterministic synthetic byte-level corpus.

@@ -6,7 +6,12 @@
 //! Output format is one aligned line per benchmark, stable enough to
 //! diff across the perf-pass iterations recorded in EXPERIMENTS.md §Perf.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -117,6 +122,93 @@ pub fn bench_once<F: FnOnce() -> R, R>(name: &str, f: F) -> (R, f64) {
     (out, secs)
 }
 
+/// Machine-readable benchmark results: named entries of numeric metrics,
+/// serialised as JSON (`results/bench_simulator.json` is the simulator's
+/// perf baseline; CI uploads it as an artifact and gates regressions
+/// against the checked-in copy).
+#[derive(Debug, Clone, Default)]
+pub struct BenchSuite {
+    pub suite: String,
+    /// (bench name, [(metric name, value)]) in insertion order.
+    entries: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> BenchSuite {
+        BenchSuite { suite: suite.to_string(), entries: Vec::new() }
+    }
+
+    /// Record (or extend) a bench entry.
+    pub fn record(&mut self, bench: &str, metrics: &[(&str, f64)]) {
+        let ms: Vec<(String, f64)> =
+            metrics.iter().map(|&(k, v)| (k.to_string(), v)).collect();
+        match self.entries.iter_mut().find(|(n, _)| n == bench) {
+            Some((_, existing)) => existing.extend(ms),
+            None => self.entries.push((bench.to_string(), ms)),
+        }
+    }
+
+    /// Look up one metric of one bench.
+    pub fn metric(&self, bench: &str, metric: &str) -> Option<f64> {
+        let (_, ms) = self.entries.iter().find(|(n, _)| n == bench)?;
+        ms.iter().find(|(k, _)| k == metric).map(|&(_, v)| v)
+    }
+
+    /// Bench names, in insertion order.
+    pub fn benches(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let benches = self
+            .entries
+            .iter()
+            .map(|(name, ms)| {
+                let metrics =
+                    ms.iter().map(|(k, v)| (k.as_str(), Json::Num(*v))).collect();
+                (name.as_str(), obj(metrics))
+            })
+            .collect();
+        obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("benches", obj(benches)),
+        ])
+    }
+
+    /// Write as pretty JSON, creating parent directories.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a suite written by [`BenchSuite::write`].
+    pub fn load(path: &Path) -> Result<BenchSuite> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&src).with_context(|| format!("parsing {}", path.display()))?;
+        let suite = j.req_str("suite")?.to_string();
+        let mut out = BenchSuite { suite, entries: Vec::new() };
+        let benches = j
+            .get("benches")
+            .and_then(Json::as_obj)
+            .context("missing 'benches' object")?;
+        for (name, metrics) in benches {
+            let Some(ms) = metrics.as_obj() else { continue };
+            let vals: Vec<(String, f64)> = ms
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                .collect();
+            out.entries.push((name.clone(), vals));
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +228,25 @@ mod tests {
         let (v, secs) = bench_once("quick", || 42);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn suite_records_and_round_trips() {
+        let mut s = BenchSuite::new("simulator");
+        s.record("sim_n1000", &[("events_per_sec", 1.5e6), ("events", 42.0)]);
+        s.record("sim_n1000", &[("wall_secs", 0.5)]);
+        s.record("sim_n10000", &[("events_per_sec", 2.0e6)]);
+        assert_eq!(s.metric("sim_n1000", "events_per_sec"), Some(1.5e6));
+        assert_eq!(s.metric("sim_n1000", "wall_secs"), Some(0.5));
+        assert_eq!(s.metric("nope", "x"), None);
+        assert_eq!(s.benches(), vec!["sim_n1000", "sim_n10000"]);
+        let dir = std::env::temp_dir().join(format!("psp-bench-{}", std::process::id()));
+        let path = dir.join("suite.json");
+        s.write(&path).unwrap();
+        let loaded = BenchSuite::load(&path).unwrap();
+        assert_eq!(loaded.suite, "simulator");
+        assert_eq!(loaded.metric("sim_n10000", "events_per_sec"), Some(2.0e6));
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

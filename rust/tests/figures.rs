@@ -147,6 +147,20 @@ fn fig4_fig5_bounds_generated() {
     }
 }
 
+/// The parallel sweep runner must not change any report: `--jobs 8`
+/// emits exactly the rows of `--jobs 1` (scheduling reorders execution,
+/// never results).
+#[test]
+fn parallel_jobs_emit_identical_reports() {
+    for id in ["fig1a", "fig2a", "fig3"] {
+        let serial = ExpOpts { jobs: 1, ..quick() };
+        let wide = ExpOpts { jobs: 8, ..quick() };
+        let a = &exp::run(id, &serial).unwrap()[0];
+        let b = &exp::run(id, &wide).unwrap()[0];
+        assert_eq!(a.render(), b.render(), "{id}: rows differ across --jobs");
+    }
+}
+
 #[test]
 fn all_experiments_run_and_emit_json() {
     let dir = std::env::temp_dir().join(format!("psp-exp-{}", std::process::id()));

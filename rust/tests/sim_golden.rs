@@ -1,0 +1,192 @@
+//! Golden-trace tests across the scheduler / snapshot-store refactor.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Oracle equality** — the calendar-queue simulator must produce
+//!    exactly the trajectory of the pre-refactor binary-heap scheduler
+//!    ([`Simulator::run_reference`]), including bit-exact SGD error
+//!    curves through the versioned snapshot store, for every paper
+//!    method, with and without churn and losses.
+//! 2. **Recorded fingerprints** — seed-42 fingerprints of
+//!    `final_steps` / `update_msgs` / `control_msgs` for all of
+//!    `Method::paper_five`, persisted in `tests/golden/sim_seed42.json`.
+//!    On the first run (no file) the fingerprints are recorded; commit
+//!    the generated file to pin the trajectories so *future* refactors
+//!    are held to the same traces. Delete the file to re-baseline after
+//!    an intentional behaviour change.
+
+use actor_psp::barrier::Method;
+use actor_psp::sim::{ChurnConfig, ClusterConfig, SgdConfig, SimResult, Simulator};
+use actor_psp::util::json::{obj, Json};
+
+fn golden_cfg() -> ClusterConfig {
+    ClusterConfig {
+        n_nodes: 300,
+        duration: 20.0,
+        seed: 42,
+        ..ClusterConfig::default()
+    }
+}
+
+fn assert_same_trajectory(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.final_steps, b.final_steps, "{what}: final_steps diverged");
+    assert_eq!(a.update_msgs, b.update_msgs, "{what}: update_msgs diverged");
+    assert_eq!(a.control_msgs, b.control_msgs, "{what}: control_msgs diverged");
+    assert_eq!(a.total_advances, b.total_advances, "{what}: advances diverged");
+    assert_eq!(a.lost_msgs, b.lost_msgs, "{what}: lost_msgs diverged");
+    assert_eq!(a.events, b.events, "{what}: event count diverged");
+    assert_eq!(
+        a.updates_timeline, b.updates_timeline,
+        "{what}: updates timeline diverged"
+    );
+    // Error curves must match to the bit, not approximately: the
+    // snapshot store's replayed reads feed the same gradients in the
+    // same order as the old cloned snapshots.
+    let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+        r.error_timeline
+            .iter()
+            .map(|&(t, e)| (t.to_bits(), e.to_bits()))
+            .collect()
+    };
+    assert_eq!(bits(a), bits(b), "{what}: error timeline diverged");
+}
+
+#[test]
+fn calendar_matches_heap_oracle_for_paper_five() {
+    for m in Method::paper_five(10, 4) {
+        let sim = Simulator::new(golden_cfg(), m);
+        let cal = sim.run();
+        let heap = sim.run_reference();
+        assert_same_trajectory(&cal, &heap, &format!("{m}"));
+    }
+}
+
+#[test]
+fn calendar_matches_heap_oracle_with_sgd() {
+    for m in Method::paper_five(8, 4) {
+        let cfg = ClusterConfig {
+            n_nodes: 80,
+            sgd: Some(SgdConfig { dim: 120, ..SgdConfig::default() }),
+            ..golden_cfg()
+        };
+        let sim = Simulator::new(cfg, m);
+        assert_same_trajectory(&sim.run(), &sim.run_reference(), &format!("{m}+sgd"));
+    }
+}
+
+#[test]
+fn calendar_matches_heap_oracle_under_churn_and_loss() {
+    let cfg = ClusterConfig {
+        n_nodes: 120,
+        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0 }),
+        loss_rate: 0.1,
+        sgd: Some(SgdConfig { dim: 60, ..SgdConfig::default() }),
+        ..golden_cfg()
+    };
+    for m in Method::paper_five(6, 3) {
+        let sim = Simulator::new(cfg.clone(), m);
+        assert_same_trajectory(&sim.run(), &sim.run_reference(), &format!("{m}+churn"));
+    }
+}
+
+/// FNV-1a over the step vector — stable fingerprint of a trajectory.
+fn fnv(steps: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &s in steps {
+        for b in s.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/sim_seed42.json")
+}
+
+#[test]
+fn golden_fingerprints_seed42_paper_five() {
+    let mut measured: Vec<(String, Json)> = Vec::new();
+    let mut results: Vec<(String, SimResult)> = Vec::new();
+    for m in Method::paper_five(10, 4) {
+        let r = Simulator::new(golden_cfg(), m).run();
+        results.push((m.to_string(), r));
+    }
+    for (name, r) in &results {
+        let entry = obj(vec![
+            (
+                "final_steps_fnv",
+                Json::Str(format!("{:016x}", fnv(&r.final_steps))),
+            ),
+            (
+                "final_steps_sum",
+                Json::Num(r.final_steps.iter().sum::<u64>() as f64),
+            ),
+            ("update_msgs", Json::Num(r.update_msgs as f64)),
+            ("control_msgs", Json::Num(r.control_msgs as f64)),
+            ("total_advances", Json::Num(r.total_advances as f64)),
+        ]);
+        measured.push((name.clone(), entry));
+    }
+    let doc = obj(vec![
+        ("config", Json::Str("n=300 d=20s seed=42 defaults".to_string())),
+        (
+            "methods",
+            obj(measured.iter().map(|(n, j)| (n.as_str(), j.clone())).collect()),
+        ),
+    ]);
+
+    let path = golden_path();
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, doc.to_pretty()).unwrap();
+        eprintln!(
+            "recorded golden fingerprints at {} — commit this file to pin \
+             seeded trajectories",
+            path.display()
+        );
+        return;
+    }
+    let want = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let want_methods = want.get("methods").and_then(Json::as_obj).unwrap();
+    for (name, got) in &measured {
+        let w = want_methods
+            .get(name)
+            .unwrap_or_else(|| panic!("golden file missing method {name}"));
+        let w_fnv = w.get("final_steps_fnv").and_then(Json::as_str).unwrap();
+        let g_fnv = got.get("final_steps_fnv").and_then(Json::as_str).unwrap();
+        assert_eq!(
+            w_fnv,
+            g_fnv,
+            "{name}: final_steps fingerprint changed; if intentional, \
+             delete {} and re-run",
+            golden_path().display()
+        );
+        for key in [
+            "final_steps_sum",
+            "update_msgs",
+            "control_msgs",
+            "total_advances",
+        ] {
+            let wv = w.get(key).and_then(Json::as_f64).unwrap();
+            let gv = got.get(key).and_then(Json::as_f64).unwrap();
+            assert_eq!(
+                wv.to_bits(),
+                gv.to_bits(),
+                "{name}.{key}: golden {wv} != measured {gv} — a seeded \
+                 trajectory changed; if intentional, delete {} and re-run",
+                golden_path().display()
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_runs_are_reproducible_across_processes_inputs() {
+    // Same seed, two separate Simulator instances: identical everything.
+    let m = Method::Pssp { sample: 10, staleness: 4 };
+    let a = Simulator::new(golden_cfg(), m).run();
+    let b = Simulator::new(golden_cfg(), m).run();
+    assert_same_trajectory(&a, &b, "re-run");
+}
