@@ -3,6 +3,12 @@
 //! chord-like overlay for its *own* barrier decision, and no global state
 //! exists anywhere in the system.
 //!
+//! The model plane runs twice per method: over the legacy **full-mesh**
+//! broadcast (every delta to every peer, n·(n−1) messages per step) and
+//! over the **gossip plane** (sequence-numbered rumors, per-link
+//! batching, ring-successor chain + TTL'd overlay shortcuts) — same
+//! convergence, an order of magnitude fewer physical messages.
+//!
 //! ```text
 //! cargo run --release --example p2p_distributed
 //! ```
@@ -10,7 +16,8 @@
 use std::sync::{Arc, Mutex};
 
 use actor_psp::barrier::Method;
-use actor_psp::engine::p2p::{self, P2pConfig};
+use actor_psp::engine::gossip::GossipConfig;
+use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::GradFn;
 use actor_psp::model::linear::{Dataset, LinearModel};
 use actor_psp::util::rng::Rng;
@@ -18,51 +25,76 @@ use actor_psp::util::stats::l2_dist;
 
 fn main() {
     let dim = 64;
+    let n_workers = 16;
     let mut rng = Rng::new(31);
     let data = Arc::new(Dataset::synthetic(1024, dim, 0.05, &mut rng));
     let w_true = data.w_true.clone();
 
     println!(
-        "p2p engine: 12 worker threads, replicated d={dim} linear model, \
-         overlay-sampled barriers\n"
+        "p2p engine: {n_workers} worker threads, replicated d={dim} linear \
+         model, overlay-sampled barriers\n"
     );
     println!(
-        "{:>10} {:>9} {:>12} {:>12} {:>12} {:>9}",
-        "method", "steps", "updates", "ctrl msgs", "final err", "wall(s)"
+        "{:>10} {:>8} {:>9} {:>12} {:>9} {:>10} {:>12} {:>9}",
+        "method", "plane", "steps", "updates", "upd/step", "ctrl msgs", "final err",
+        "wall(s)"
     );
     for method in [
         Method::Asp,
         Method::Pbsp { sample: 3 },
         Method::Pssp { sample: 3, staleness: 2 },
     ] {
-        let cfg = P2pConfig {
-            n_workers: 12,
-            steps_per_worker: 30,
-            method,
-            lr: 0.01,
-            dim,
-            seed: 5,
-            ..P2pConfig::default()
-        };
-        let data = Arc::clone(&data);
-        let model = Mutex::new(LinearModel::new(dim));
-        let grad: GradFn = Arc::new(move |w, seed| {
-            model.lock().unwrap().minibatch_grad(&data, w, seed, 32).to_vec()
-        });
-        let r = p2p::run(&cfg, vec![0.0; dim], grad);
-        println!(
-            "{:>10} {:>9} {:>12} {:>12} {:>12.4} {:>9.2}",
-            method.to_string(),
-            r.steps.iter().sum::<u64>(),
-            r.update_msgs,
-            r.control_msgs,
-            l2_dist(&r.model, &w_true),
-            r.wall_secs,
-        );
+        for (plane, dissemination) in [
+            ("mesh", Dissemination::FullMesh),
+            (
+                "gossip",
+                Dissemination::Gossip(GossipConfig {
+                    fanout: 2,
+                    flush_every: 1,
+                    ttl: 6,
+                }),
+            ),
+        ] {
+            let cfg = P2pConfig {
+                n_workers,
+                steps_per_worker: 30,
+                method,
+                lr: 0.01,
+                dim,
+                seed: 5,
+                dissemination,
+                ..P2pConfig::default()
+            };
+            let data = Arc::clone(&data);
+            let model = Mutex::new(LinearModel::new(dim));
+            let grad: GradFn = Arc::new(move |w, seed| {
+                model.lock().unwrap().minibatch_grad(&data, w, seed, 32).to_vec()
+            });
+            let r = p2p::run(&cfg, vec![0.0; dim], grad);
+            let steps: u64 = r.steps.iter().sum();
+            if r.dropped_deltas > 0 {
+                eprintln!("warning: {} late delta(s) dropped", r.dropped_deltas);
+            }
+            println!(
+                "{:>10} {:>8} {:>9} {:>12} {:>9.2} {:>10} {:>12.4} {:>9.2}",
+                method.to_string(),
+                plane,
+                steps,
+                r.update_msgs,
+                r.update_msgs as f64 / steps.max(1) as f64,
+                r.control_msgs,
+                l2_dist(&r.model, &w_true),
+                r.wall_secs,
+            );
+        }
     }
     println!(
-        "\nnote: BSP/SSP cannot run here at all — they need a global view; \
-         the engine rejects them\nat construction. That asymmetry is the \
-         paper's core systems claim."
+        "\nnotes: the mesh sends n-1 = {} updates per worker-step; gossip \
+         batches rumors per link\nand rides the overlay (successor chain + \
+         fanout sampled shortcuts), applying every delta\nexactly once via \
+         per-origin sequence dedup. BSP/SSP cannot run here at all — they \
+         need a\nglobal view; the engine rejects them at construction. That \
+         asymmetry is the paper's core\nsystems claim.",
+        n_workers - 1
     );
 }

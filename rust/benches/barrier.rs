@@ -1,5 +1,7 @@
 //! Hot-path microbenches: the barrier decision, the sampling primitive,
-//! and the sharded parameter-server push path.
+//! the p2p model plane (full-mesh vs gossip), and the sharded
+//! parameter-server push path. The overlay-sampling block asserts the
+//! cost stays ~logarithmic in n (guards the reverse-index fix).
 //!
 //! The paper's scalability argument is quantitative: a PSP decision costs
 //! O(β) regardless of system size, while global methods need O(P) state.
@@ -12,6 +14,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use actor_psp::barrier::{decide_with_oracle, BarrierControl, Bsp, Method, Probabilistic, Ssp};
+use actor_psp::engine::gossip::GossipConfig;
+use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::paramserver::{self, PsConfig};
 use actor_psp::engine::GradFn;
 use actor_psp::overlay::Ring;
@@ -76,11 +80,48 @@ fn main() {
     }
 
     // Overlay-based distributed sampling (routing + window + acceptance).
-    for &n in &[100usize, 1_000] {
+    // The reverse node->id index keeps owner recovery O(log n); the
+    // scaling assertion below holds the line — before it, an O(n) scan
+    // per draw made 16x more nodes cost ~16x more per sample.
+    let mut sample_cost = Vec::new();
+    for &n in &[100usize, 1_000, 16_000] {
         let ring = Ring::with_nodes(n, 7);
-        bench(&format!("overlay sample_nodes β=10 n={n}"), budget, || {
+        let r = bench(&format!("overlay sample_nodes β=10 n={n}"), budget, || {
             std::hint::black_box(ring.sample_nodes(0, 10, &mut rng));
         });
+        sample_cost.push((n, r.mean_ns));
+    }
+    {
+        let (n0, t0) = sample_cost[1];
+        let (n1, t1) = sample_cost[2];
+        let mut ratio = t1 / t0.max(1e-9);
+        // Wall-clock gate, so shrug off one noisy-neighbour measurement
+        // before failing: re-time the large ring and keep the better
+        // ratio. Expected ~1.5-2.5x (log growth); the old O(n) owner
+        // scan measures >=16x here, so 8.0 separates the regimes with
+        // margin on both sides even on a loaded CI runner.
+        if ratio >= 8.0 {
+            let ring = Ring::with_nodes(n1, 7);
+            let retry = bench(
+                &format!("overlay sample_nodes β=10 n={n1} (retry)"),
+                budget,
+                || {
+                    std::hint::black_box(ring.sample_nodes(0, 10, &mut rng));
+                },
+            );
+            ratio = ratio.min(retry.mean_ns / t0.max(1e-9));
+        }
+        println!(
+            "    -> {}x nodes cost {ratio:.2}x per sample (linear scan would \
+             be ~{}x)",
+            n1 / n0,
+            n1 / n0
+        );
+        assert!(
+            ratio < 8.0,
+            "overlay sampling cost grew {ratio:.1}x from n={n0} to n={n1} — \
+             it must stay ~logarithmic in n (reverse-index regression?)"
+        );
     }
 
     // Method construction (config path, not hot, for completeness).
@@ -137,6 +178,62 @@ fn main() {
             },
         );
     }
+    // ---- p2p model plane: full-mesh vs gossip dissemination ----
+    //
+    // Same engine, same workload, two transports. The mesh pays
+    // n·(n-1) physical messages per step; the gossip plane batches
+    // rumors per link and pays O(n·fanout), trading bounded rumor-copy
+    // redundancy for an O(n) cut in message count.
+    println!();
+    println!("p2p model plane: full-mesh vs gossip (32 workers, d=256, ASP)");
+    let p2p_dim = 256usize;
+    let p2p_fixed: Arc<Vec<f32>> =
+        Arc::new((0..p2p_dim).map(|j| (j as f32).cos() * 1e-4).collect());
+    let p2p_grad: GradFn = {
+        let fixed = Arc::clone(&p2p_fixed);
+        Arc::new(move |_w, _seed| fixed.as_ref().clone())
+    };
+    let mut mesh_per_step = 0.0f64;
+    for (label, dissemination) in [
+        ("full-mesh", Dissemination::FullMesh),
+        (
+            "gossip f=2 ttl=6",
+            Dissemination::Gossip(GossipConfig { fanout: 2, flush_every: 1, ttl: 6 }),
+        ),
+        (
+            "gossip f=2 flush=4",
+            Dissemination::Gossip(GossipConfig { fanout: 2, flush_every: 4, ttl: 6 }),
+        ),
+    ] {
+        let cfg = P2pConfig {
+            n_workers: 32,
+            steps_per_worker: 20,
+            method: Method::Asp,
+            lr: 1e-6,
+            dim: p2p_dim,
+            seed: 1,
+            dissemination,
+            ..P2pConfig::default()
+        };
+        let grad = p2p_grad.clone();
+        let (r, _) = bench_once(&format!("p2p 32w x 20 steps, {label}"), || {
+            p2p::run(&cfg, vec![0.0; p2p_dim], grad)
+        });
+        let steps: u64 = r.steps.iter().sum();
+        let per_step = r.update_msgs as f64 / steps.max(1) as f64;
+        if mesh_per_step == 0.0 {
+            mesh_per_step = per_step;
+        }
+        println!(
+            "    -> {} update msgs ({per_step:.2}/worker-step, {:.1}x fewer \
+             than mesh), {} rumor copies, {} dropped",
+            r.update_msgs,
+            mesh_per_step / per_step.max(1e-9),
+            r.rumor_copies,
+            r.dropped_deltas,
+        );
+    }
+
     // Batched pushes on top of sharding: fewer, fatter scatter messages.
     for &(shards, push_batch) in &[(4usize, 4usize), (4, 8)] {
         let cfg = PsConfig {

@@ -124,6 +124,7 @@ fn main() {
 
     // Calendar queue vs the binary-heap oracle at the acceptance point
     // (n=10_000, pbsp:10, 20s): same trajectory, different scheduler.
+    let calendar_speedup;
     {
         let cfg = scale_cfg(10_000);
         let m = Method::Pbsp { sample: 10 };
@@ -143,6 +144,7 @@ fn main() {
             / (r_heap.events as f64 / secs_heap.max(1e-9));
         println!("    -> calendar/heap speedup at n=10k: {speedup:.2}x");
         suite.record("sim_n10000_pbsp10", &[("speedup_vs_heap", speedup)]);
+        calendar_speedup = speedup;
     }
 
     // Scaling in system size at fixed horizon, up to the 100k sweep the
@@ -213,6 +215,20 @@ fn main() {
 
     // Regression gate against a checked-in baseline.
     if let Some(check) = &opts.check {
+        // Self-relative floor first: both schedulers ran on the same
+        // hardware in this very process, so this gate needs no committed
+        // numbers and is armed everywhere — the calendar queue earning
+        // its keep is a ratio, not an absolute.
+        println!(
+            "gate calendar/heap speedup: {calendar_speedup:.2}x (floor 0.70x)"
+        );
+        if calendar_speedup < 0.70 {
+            eprintln!(
+                "calendar-queue scheduler fell to {calendar_speedup:.2}x of \
+                 the heap oracle (floor 0.70x) — scheduler perf regression"
+            );
+            std::process::exit(1);
+        }
         let base_path = from_workspace(check);
         let base = BenchSuite::load(&base_path).expect("loading baseline");
         let mut failures = Vec::new();

@@ -115,6 +115,16 @@ USAGE:
       linear SGD): K model shards, gradients accumulated for B steps and
       scattered as one batched push per touched shard.
 
+  actor p2p [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
+            [--seed N] [--fanout F] [--flush B] [--ttl T] [--full-mesh]
+            [--config FILE]
+      Run the fully-distributed p2p engine (real threads, replicated
+      model, overlay-sampled barriers). Deltas travel the gossip plane:
+      F overlay-sampled shortcuts + the ring successor per forward, B
+      steps compacted per rumor, T shortcut hops — O(n·fanout) messages
+      per step. --full-mesh restores the legacy O(n²) broadcast.
+      M must be asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q.
+
   actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
               [--workers N] [--method M] [--accum B] [--artifacts DIR]
       End-to-end LM training through the PJRT artifacts (L1+L2+L3).

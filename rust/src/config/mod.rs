@@ -34,6 +34,8 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::barrier::Method;
+use crate::engine::gossip::GossipConfig;
+use crate::engine::p2p::{Dissemination, P2pConfig};
 use crate::engine::paramserver::PsConfig;
 use crate::exp::ExpOpts;
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
@@ -205,6 +207,59 @@ impl Config {
             n_shards: self.usize_or("ps", "shards", d.n_shards)?.max(1),
             push_batch: self.usize_or("ps", "push_batch", d.push_batch)?.max(1),
             schedule_blocks,
+            ..d
+        })
+    }
+
+    /// Build the fully-distributed p2p engine configuration from the
+    /// `[p2p]` section (all keys optional) plus `[barrier] method`:
+    ///
+    /// ```toml
+    /// [p2p]
+    /// workers = 16
+    /// steps = 30
+    /// dim = 64
+    /// lr = 0.02
+    /// seed = 7
+    /// fanout = 2          # gossip shortcut targets per forward
+    /// flush = 1           # steps compacted per origination
+    /// ttl = 6             # shortcut hop budget
+    /// full_mesh = false   # true = legacy O(n²) broadcast plane
+    /// drain_timeout = 30.0
+    /// ```
+    pub fn p2p_config(&self) -> Result<P2pConfig> {
+        let d = P2pConfig::default();
+        let g = GossipConfig::default();
+        let full_mesh = match self.get("p2p", "full_mesh") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("[p2p] full_mesh must be a bool"))?,
+        };
+        let dissemination = if full_mesh {
+            Dissemination::FullMesh
+        } else {
+            Dissemination::Gossip(GossipConfig {
+                fanout: self.usize_or("p2p", "fanout", g.fanout)?,
+                flush_every: (self.usize_or("p2p", "flush", g.flush_every as usize)?
+                    as u64)
+                    .max(1),
+                ttl: self.usize_or("p2p", "ttl", g.ttl as usize)? as u32,
+            })
+        };
+        Ok(P2pConfig {
+            n_workers: self.usize_or("p2p", "workers", d.n_workers)?,
+            steps_per_worker: self
+                .usize_or("p2p", "steps", d.steps_per_worker as usize)?
+                as u64,
+            method: self.barrier_method()?,
+            lr: self.f64_or("p2p", "lr", d.lr as f64)? as f32,
+            dim: self.usize_or("p2p", "dim", d.dim)?,
+            seed: self.f64_or("p2p", "seed", d.seed as f64)? as u64,
+            drain_timeout: std::time::Duration::from_secs_f64(
+                self.f64_or("p2p", "drain_timeout", d.drain_timeout.as_secs_f64())?,
+            ),
+            dissemination,
             ..d
         })
     }
@@ -412,6 +467,70 @@ schedule_blocks = 4
         // zero shards clamps to one rather than spawning nothing
         let c = Config::parse("[ps]\nshards = 0").unwrap();
         assert_eq!(c.ps_config().unwrap().n_shards, 1);
+    }
+
+    #[test]
+    fn p2p_section_builds_engine_config() {
+        let src = r#"
+[barrier]
+method = "pssp:3:2"
+
+[p2p]
+workers = 12
+steps = 20
+dim = 48
+lr = 0.02
+fanout = 4
+flush = 2
+ttl = 3
+drain_timeout = 5.0
+"#;
+        let c = Config::parse(src).unwrap();
+        let p = c.p2p_config().unwrap();
+        assert_eq!(p.n_workers, 12);
+        assert_eq!(p.steps_per_worker, 20);
+        assert_eq!(p.dim, 48);
+        assert_eq!(p.lr, 0.02);
+        assert_eq!(p.method, Method::Pssp { sample: 3, staleness: 2 });
+        assert_eq!(p.drain_timeout, std::time::Duration::from_secs(5));
+        match p.dissemination {
+            Dissemination::Gossip(g) => {
+                assert_eq!(g.fanout, 4);
+                assert_eq!(g.flush_every, 2);
+                assert_eq!(g.ttl, 3);
+            }
+            Dissemination::FullMesh => panic!("expected gossip plane"),
+        }
+    }
+
+    #[test]
+    fn p2p_section_defaults_and_full_mesh() {
+        // defaults: gossip plane with the default knobs
+        let p = Config::parse("").unwrap().p2p_config().unwrap();
+        let g = GossipConfig::default();
+        match p.dissemination {
+            Dissemination::Gossip(got) => {
+                assert_eq!(got.fanout, g.fanout);
+                assert_eq!(got.flush_every, g.flush_every);
+                assert_eq!(got.ttl, g.ttl);
+            }
+            Dissemination::FullMesh => panic!("gossip must be the default"),
+        }
+        // full_mesh = true opts back into the legacy broadcast plane
+        let c = Config::parse("[p2p]\nfull_mesh = true\nfanout = 9").unwrap();
+        assert!(matches!(
+            c.p2p_config().unwrap().dissemination,
+            Dissemination::FullMesh
+        ));
+        // flush = 0 clamps to 1 instead of never flushing
+        let c = Config::parse("[p2p]\nflush = 0").unwrap();
+        match c.p2p_config().unwrap().dissemination {
+            Dissemination::Gossip(g) => assert_eq!(g.flush_every, 1),
+            Dissemination::FullMesh => panic!(),
+        }
+        // type errors propagate
+        let c = Config::parse("[p2p]\nfull_mesh = 3").unwrap();
+        assert!(c.p2p_config().is_err());
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! Gossip/aggregation plane for the fully-distributed engine — replaces
+//! the O(n²) full-mesh delta broadcast with overlay-routed rumor
+//! dissemination (paper §3.2 / §4.1 case 4: the structured overlay is
+//! already there for sampling; reuse it for the model plane too).
+//!
+//! Protocol, per model delta:
+//!
+//! * the **origin** sums its local deltas between flushes (delta
+//!   compaction, `flush_every` steps per rumor) and emits one
+//!   sequence-numbered [`Rumor`] per flush;
+//! * every node buffers rumors it sees for the *first* time (applying
+//!   them immediately — exactly once, guarded by a per-origin sequence
+//!   set) and, at each **flush tick**, relays the whole fresh buffer:
+//!   always to its ring **successor** (TTL-exempt — the successor chain
+//!   makes delivery to every live peer a structural guarantee, by
+//!   induction around the ring, instead of a high-probability accident),
+//!   and to `fanout` partners sampled uniformly from the overlay for
+//!   rumors whose TTL lasts (the random shortcuts are what bring latency
+//!   down to O(log n) rounds);
+//! * partners are picked **once per flush tick, not per rumor**, so all
+//!   traffic for one destination rides one physical message: a step
+//!   costs each node `fanout + 1` messages — O(n·fanout) system-wide —
+//!   instead of the full mesh's O(n²).
+//!
+//! The state machine is synchronous and deterministic — the threaded p2p
+//! engine drives one [`GossipNode`] per worker, and
+//! `tests/gossip_dissemination.rs` drives the same code from a
+//! round-based harness to prove the exactly-once/no-loss property under
+//! churn.
+
+use std::sync::Arc;
+
+use crate::overlay::Ring;
+use crate::util::rng::Rng;
+
+/// Gossip-plane knobs (`[p2p]` config section / `actor p2p` flags).
+#[derive(Debug, Clone)]
+pub struct GossipConfig {
+    /// Random gossip partners per flush tick (on top of the successor).
+    /// `fanout = 0` degrades to pure successor-chain dissemination:
+    /// still complete, but O(n) rounds instead of O(log n).
+    pub fanout: usize,
+    /// Steps accumulated (deltas summed) per origination. 1 = a rumor
+    /// per step; larger values trade model-plane freshness for messages.
+    pub flush_every: u64,
+    /// Shortcut hop budget per rumor. Each relay decrements it; a rumor
+    /// stops riding partner messages at 0 (the successor chain never
+    /// stops, so TTL bounds redundant traffic without endangering
+    /// completeness).
+    pub ttl: u32,
+}
+
+impl Default for GossipConfig {
+    fn default() -> Self {
+        GossipConfig { fanout: 2, flush_every: 1, ttl: 6 }
+    }
+}
+
+/// One disseminated model delta. The payload is shared (`Arc`) so
+/// fan-out copies cost a pointer, not a `dim`-float clone.
+#[derive(Debug, Clone)]
+pub struct Rumor {
+    /// Worker that produced the delta.
+    pub origin: u32,
+    /// Per-origin sequence number (dense, starting at 0).
+    pub seq: u32,
+    /// Remaining shortcut hops.
+    pub ttl: u32,
+    /// Summed delta to apply additively: `w += delta`.
+    pub delta: Arc<[f32]>,
+}
+
+/// Growable bitset over sequence numbers (dense per-origin seqs).
+#[derive(Debug, Clone, Default)]
+struct SeqSet {
+    words: Vec<u64>,
+}
+
+impl SeqSet {
+    /// Insert; returns true when the seq was not present before.
+    fn insert(&mut self, seq: u32) -> bool {
+        let (w, b) = ((seq / 64) as usize, seq % 64);
+        if self.words.len() <= w {
+            self.words.resize(w + 1, 0);
+        }
+        let mask = 1u64 << b;
+        let fresh = self.words[w] & mask == 0;
+        self.words[w] |= mask;
+        fresh
+    }
+
+    fn len(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+}
+
+/// Per-worker gossip state: dedup sets, the fresh-rumor relay buffer,
+/// and the dissemination counters the engine reports.
+#[derive(Debug)]
+pub struct GossipNode {
+    id: usize,
+    /// Applied (origin, seq) pairs — the exactly-once guard.
+    seen: Vec<SeqSet>,
+    /// Rumors first seen since the last flush, waiting to be relayed.
+    fresh: Vec<Rumor>,
+    /// Every rumor this node has applied or originated, for graceful
+    /// handoff on `leave` — retained only when constructed with
+    /// [`GossipNode::with_handoff_store`] (the engine path runs workers
+    /// to completion and would otherwise pin every delta of the run).
+    store: Vec<Rumor>,
+    keep_store: bool,
+    next_seq: u32,
+    /// Rumors applied exactly once (excludes own originations).
+    pub applied_rumors: u64,
+    /// Duplicate arrivals dropped by the seq sets.
+    pub dup_rumors: u64,
+    /// Rumor copies shipped (bandwidth proxy; many copies share one
+    /// physical message).
+    pub rumor_copies: u64,
+    /// Overlay routing messages spent picking gossip partners.
+    pub route_msgs: u64,
+}
+
+impl GossipNode {
+    pub fn new(id: usize, n_hint: usize) -> GossipNode {
+        GossipNode {
+            id,
+            seen: (0..n_hint).map(|_| SeqSet::default()).collect(),
+            fresh: Vec::new(),
+            store: Vec::new(),
+            keep_store: false,
+            next_seq: 0,
+            applied_rumors: 0,
+            dup_rumors: 0,
+            rumor_copies: 0,
+            route_msgs: 0,
+        }
+    }
+
+    /// A node that additionally retains every rumor it has seen, so a
+    /// graceful `leave` can hand its knowledge to its successor. Memory
+    /// grows O(total rumors) — churn-capable deployments and the
+    /// dissemination test harness want this; run-to-completion engine
+    /// workers do not.
+    pub fn with_handoff_store(id: usize, n_hint: usize) -> GossipNode {
+        GossipNode { keep_store: true, ..GossipNode::new(id, n_hint) }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    fn seen_mut(&mut self, origin: u32) -> &mut SeqSet {
+        let origin = origin as usize;
+        if self.seen.len() <= origin {
+            self.seen.resize_with(origin + 1, SeqSet::default);
+        }
+        &mut self.seen[origin]
+    }
+
+    /// Emit one locally-produced (already locally-applied) delta as a new
+    /// rumor; it ships with the next flush. Returns the sequence number.
+    ///
+    /// The buffered TTL is `cfg.ttl + 1` so the origin's own send does
+    /// not consume shortcut budget; first receivers see `cfg.ttl`.
+    pub fn originate(&mut self, delta: Arc<[f32]>, cfg: &GossipConfig) -> u32 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let origin = self.id as u32;
+        self.seen_mut(origin).insert(seq);
+        let r = Rumor { origin, seq, ttl: cfg.ttl.saturating_add(1), delta };
+        if self.keep_store {
+            self.store.push(Rumor { ttl: cfg.ttl, ..r.clone() });
+        }
+        self.fresh.push(r);
+        seq
+    }
+
+    /// Ingest one physical message (a batch of rumors). Fresh rumors are
+    /// applied via `apply` exactly once and buffered for relay;
+    /// duplicates are dropped and counted.
+    pub fn receive<F: FnMut(&Rumor)>(&mut self, batch: Vec<Rumor>, mut apply: F) {
+        for r in batch {
+            if self.seen_mut(r.origin).insert(r.seq) {
+                self.applied_rumors += 1;
+                apply(&r);
+                if self.keep_store {
+                    self.fresh.push(r.clone());
+                    self.store.push(r);
+                } else {
+                    self.fresh.push(r);
+                }
+            } else {
+                self.dup_rumors += 1;
+            }
+        }
+    }
+
+    /// One flush tick: relay the fresh buffer. Destinations are the ring
+    /// successor (always; every rumor rides) plus `fanout` partners
+    /// sampled **once for the whole tick** (only rumors with TTL left
+    /// ride those). Each `(destination, batch)` pair is one physical
+    /// message; rumors carry `ttl - 1` onward.
+    pub fn flush(
+        &mut self,
+        cfg: &GossipConfig,
+        ring: &Ring,
+        rng: &mut Rng,
+    ) -> Vec<(usize, Vec<Rumor>)> {
+        if self.fresh.is_empty() {
+            return Vec::new();
+        }
+        let batch = std::mem::take(&mut self.fresh);
+        let mut out: Vec<(usize, Vec<Rumor>)> = Vec::with_capacity(cfg.fanout + 1);
+        if let Some(succ) = ring.successor_node(self.id) {
+            let all: Vec<Rumor> = batch
+                .iter()
+                .map(|r| Rumor { ttl: r.ttl.saturating_sub(1), ..r.clone() })
+                .collect();
+            self.rumor_copies += all.len() as u64;
+            out.push((succ, all));
+        }
+        let live: Vec<Rumor> = batch
+            .iter()
+            .filter(|r| r.ttl > 0)
+            .map(|r| Rumor { ttl: r.ttl - 1, ..r.clone() })
+            .collect();
+        if cfg.fanout > 0 && !live.is_empty() {
+            let (partners, msgs) = ring.sample_nodes(self.id, cfg.fanout, rng);
+            self.route_msgs += msgs;
+            for p in partners {
+                if out.iter().any(|(d, _)| *d == p) {
+                    continue; // partner collided with the successor
+                }
+                self.rumor_copies += live.len() as u64;
+                out.push((p, live.clone()));
+            }
+        }
+        out
+    }
+
+    pub fn fresh_is_empty(&self) -> bool {
+        self.fresh.is_empty()
+    }
+
+    /// How many rumors this node has originated (= its next seq).
+    pub fn originated(&self) -> u32 {
+        self.next_seq
+    }
+
+    /// How many distinct rumors of `origin` this node has applied
+    /// (including its own originations when `origin` is itself). Since
+    /// seqs are dense from 0, `applied_count(o) == k` means exactly seqs
+    /// `0..k` once all k are in — which is what the engine's
+    /// deterministic drain waits for.
+    pub fn applied_count(&self, origin: u32) -> u32 {
+        self.seen
+            .get(origin as usize)
+            .map(SeqSet::len)
+            .unwrap_or(0)
+    }
+
+    /// Everything this node knows, for graceful-leave handoff to its
+    /// successor (receivers dedup, so handing over the full store is
+    /// safe; it is what repairs successor chains broken by departure).
+    /// Empty unless built with [`GossipNode::with_handoff_store`].
+    pub fn handoff_rumors(&self) -> Vec<Rumor> {
+        self.store.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arc(v: &[f32]) -> Arc<[f32]> {
+        v.to_vec().into()
+    }
+
+    #[test]
+    fn seq_set_dedups() {
+        let mut s = SeqSet::default();
+        assert!(s.insert(0));
+        assert!(!s.insert(0));
+        assert!(s.insert(200));
+        assert!(!s.insert(200));
+        assert!(s.insert(63));
+        assert!(s.insert(64));
+    }
+
+    #[test]
+    fn originate_assigns_dense_seqs_and_self_dedups() {
+        let cfg = GossipConfig::default();
+        let mut node = GossipNode::with_handoff_store(0, 8);
+        assert_eq!(node.originate(arc(&[1.0]), &cfg), 0);
+        assert_eq!(node.originate(arc(&[2.0]), &cfg), 1);
+        // own rumors bouncing back are duplicates, never re-applied
+        let own = node.store[0].clone();
+        let mut applied = 0;
+        node.receive(vec![own], |_| applied += 1);
+        assert_eq!(applied, 0);
+        assert_eq!(node.dup_rumors, 1);
+    }
+
+    #[test]
+    fn receive_applies_once_then_relays_on_flush() {
+        let ring = Ring::with_nodes(8, 3);
+        let cfg = GossipConfig { fanout: 2, flush_every: 1, ttl: 4 };
+        let mut rng = Rng::new(2);
+        let mut node = GossipNode::new(1, 8);
+        let r = Rumor { origin: 0, seq: 0, ttl: 4, delta: arc(&[0.5, -0.5]) };
+        let mut applied = Vec::new();
+        node.receive(vec![r.clone(), r.clone()], |r| {
+            applied.push((r.origin, r.seq));
+        });
+        assert_eq!(applied, vec![(0, 0)]);
+        assert_eq!(node.applied_rumors, 1);
+        assert_eq!(node.dup_rumors, 1);
+        // flush relays once: successor + up to fanout partners, children
+        // carry one TTL less
+        let flushed = node.flush(&cfg, &ring, &mut rng);
+        assert!(!flushed.is_empty());
+        assert!(flushed.len() <= 1 + cfg.fanout);
+        let succ = ring.successor_node(1).unwrap();
+        assert_eq!(flushed[0].0, succ);
+        for (_, batch) in &flushed {
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].ttl, 3);
+        }
+        // buffer drained: nothing relays twice
+        assert!(node.fresh_is_empty());
+        assert!(node.flush(&cfg, &ring, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn ttl_zero_stops_partners_but_not_the_successor_chain() {
+        let ring = Ring::with_nodes(8, 3);
+        let cfg = GossipConfig { fanout: 4, flush_every: 1, ttl: 0 };
+        let mut rng = Rng::new(3);
+        let mut node = GossipNode::new(2, 8);
+        let r = Rumor { origin: 0, seq: 0, ttl: 0, delta: arc(&[1.0]) };
+        node.receive(vec![r], |_| {});
+        let flushed = node.flush(&cfg, &ring, &mut rng);
+        // exactly one message: the successor; no partner traffic at ttl 0
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].0, ring.successor_node(2).unwrap());
+        assert_eq!(node.route_msgs, 0);
+    }
+
+    #[test]
+    fn one_physical_message_per_destination_per_tick() {
+        let ring = Ring::with_nodes(16, 3);
+        let cfg = GossipConfig { fanout: 3, flush_every: 1, ttl: 4 };
+        let mut rng = Rng::new(4);
+        let mut node = GossipNode::new(0, 16);
+        for k in 0..10 {
+            node.originate(arc(&[k as f32]), &cfg);
+        }
+        let flushed = node.flush(&cfg, &ring, &mut rng);
+        // 10 rumors ride at most 1 + fanout physical messages
+        assert!(flushed.len() <= 4, "{} messages", flushed.len());
+        let mut dests: Vec<usize> = flushed.iter().map(|(d, _)| *d).collect();
+        dests.sort_unstable();
+        dests.dedup();
+        assert_eq!(dests.len(), flushed.len(), "duplicate destination");
+        for (_, batch) in &flushed {
+            assert_eq!(batch.len(), 10, "every rumor rides every link");
+        }
+    }
+
+    #[test]
+    fn engine_nodes_do_not_retain_a_store() {
+        let cfg = GossipConfig::default();
+        let mut node = GossipNode::new(0, 4);
+        node.originate(arc(&[1.0]), &cfg);
+        node.receive(
+            vec![Rumor { origin: 1, seq: 0, ttl: 2, delta: arc(&[2.0]) }],
+            |_| {},
+        );
+        assert!(node.handoff_rumors().is_empty(), "store must be opt-in");
+        // dedup still works without the store
+        node.receive(
+            vec![Rumor { origin: 1, seq: 0, ttl: 2, delta: arc(&[2.0]) }],
+            |_| panic!("double apply"),
+        );
+        assert_eq!(node.dup_rumors, 1);
+    }
+
+    #[test]
+    fn singleton_ring_sends_nothing() {
+        let mut ring = Ring::new(9);
+        ring.join(0);
+        let cfg = GossipConfig::default();
+        let mut rng = Rng::new(5);
+        let mut node = GossipNode::new(0, 1);
+        node.originate(arc(&[1.0]), &cfg);
+        assert!(node.flush(&cfg, &ring, &mut rng).is_empty());
+    }
+}

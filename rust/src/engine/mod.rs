@@ -21,13 +21,19 @@
 //! worker holds a model replica and runs its own barrier decision over a
 //! sample drawn from the structured overlay, with **no global state
 //! anywhere** — the composition the paper argues only ASP and PSP can
-//! support (global-view barriers are rejected at construction).
+//! support (global-view barriers are rejected at construction). Its
+//! model plane disseminates deltas over the same overlay via the
+//! [`gossip`] plane (sequence-numbered rumors, per-link batching, TTL'd
+//! shortcuts + a successor chain) in O(n·fanout) messages per step; the
+//! legacy O(n²) full-mesh broadcast survives as an explicit mode for
+//! equivalence testing and baselines.
 //!
 //! These engines run real OS threads via [`crate::actor`] and compute real
 //! gradients — either the pure-Rust linear model or the PJRT-backed AOT
 //! artifact ([`crate::runtime`]); the gradient source is a plugged-in
 //! closure ([`GradFn`]) so examples can choose.
 
+pub mod gossip;
 pub mod mapreduce;
 pub mod p2p;
 pub mod paramserver;
@@ -46,12 +52,29 @@ pub type GradFn = Arc<dyn Fn(&[f32], u64) -> Vec<f32> + Send + Sync>;
 pub struct EngineReport {
     /// Final per-worker step counts.
     pub steps: Vec<u64>,
-    /// Update (model-plane) messages.
+    /// Update (model-plane) messages. For the gossip p2p plane this
+    /// counts **physical** messages — rumors for the same destination
+    /// share one message per flush tick.
     pub update_msgs: u64,
-    /// Control (barrier/sampling-plane) messages.
+    /// Control (barrier/sampling-plane) messages: sampling queries and
+    /// replies plus overlay routing hops — including the routing the
+    /// gossip plane spends picking shortcut targets.
     pub control_msgs: u64,
     /// Wall-clock seconds.
     pub wall_secs: f64,
     /// Final model (engine-dependent: server copy or worker-0 replica).
     pub model: Vec<f32>,
+    /// All worker replicas (p2p engine only; empty elsewhere).
+    pub replicas: Vec<Vec<f32>>,
+    // -- dissemination stats (gossip p2p plane; zero elsewhere) --
+    /// Rumors applied exactly once across all workers.
+    pub applied_rumors: u64,
+    /// Duplicate rumor arrivals dropped by per-origin sequence dedup.
+    pub dup_rumors: u64,
+    /// Rumor copies queued (bandwidth proxy; ≥ update_msgs since many
+    /// copies can share one physical message).
+    pub rumor_copies: u64,
+    /// Late model-plane messages dropped at shutdown after the drain
+    /// timeout expired (loudly logged; 0 on a healthy run).
+    pub dropped_deltas: u64,
 }

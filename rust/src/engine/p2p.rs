@@ -9,14 +9,33 @@
 //! node can execute independently.
 //!
 //! Mechanics:
-//! * model plane: each step a worker computes a gradient against its
-//!   replica, applies it locally, and **pushes the delta to every peer**
-//!   (update messages counted);
+//! * model plane ([`Dissemination`]): by default deltas travel the
+//!   **gossip plane** ([`crate::engine::gossip`]) — the origin compacts
+//!   `flush_every` steps into one sequence-numbered rumor, forwards it to
+//!   its ring successor plus `fanout` overlay-sampled shortcuts, and every
+//!   node relays fresh rumors once, batching all rumors per link into one
+//!   physical message per flush tick. Updates reach all peers in
+//!   O(log n) rounds at O(n·fanout) messages per step, applied additively
+//!   exactly once (per-origin sequence dedup). `Dissemination::FullMesh`
+//!   keeps the legacy O(n²) broadcast for equivalence tests and baselines.
 //! * control plane: workers publish their step in a shared atomic table —
 //!   the moral equivalent of answering `StepQuery` RPCs instantly — and a
 //!   blocked worker re-samples the overlay each poll. Control messages
-//!   are accounted as 2 per sampled peer plus overlay routing hops, which
-//!   is what the real RPCs would cost.
+//!   are accounted as 2 per sampled peer plus overlay routing hops
+//!   (self-lookups are local and cost 0), plus the routing the gossip
+//!   plane spends picking shortcut targets — what the real RPCs would
+//!   cost.
+//! * shutdown: every worker announces `Done` and each peer tracks the
+//!   expected senders explicitly. The drain only gives up after
+//!   `drain_timeout` — and then *loudly*: a warning naming the missing
+//!   peers plus a dropped-delta count in [`EngineReport`], instead of the
+//!   old silent 5-second discard. In gossip mode `Done` carries each
+//!   origin's exact rumor count, so the drain's exit condition is
+//!   **deterministic** — every announced rumor applied — not a timing
+//!   heuristic; a worker therefore never exits while it is still owed
+//!   deltas, and a failed send can only ever carry duplicates (the
+//!   structural-completeness argument is exercised by
+//!   `tests/gossip_dissemination.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -24,16 +43,33 @@ use std::time::{Duration, Instant};
 
 use crate::actor::System;
 use crate::barrier::{Method, ViewRequirement};
+use crate::engine::gossip::{GossipConfig, GossipNode, Rumor};
 use crate::engine::{EngineReport, GradFn};
+use crate::log_warn;
 use crate::overlay::Ring;
 use crate::util::rng::Rng;
 
 /// Messages between peer workers (model plane).
 pub enum PeerMsg {
-    /// A model delta from a peer: apply `w += delta`.
+    /// Full-mesh mode: a model delta from a peer, apply `w += delta`.
     Delta { delta: Vec<f32> },
-    /// Finish up: no more deltas will arrive from `from`.
-    Done { from: u32 },
+    /// Gossip mode: one physical message — every rumor queued for this
+    /// link since the sender's last flush.
+    Gossip { rumors: Vec<Rumor> },
+    /// Finish up: no more *originations* will arrive from `from`, which
+    /// emitted exactly `rumors` of them (gossip relays may still follow;
+    /// the count is what lets the drain terminate deterministically).
+    Done { from: u32, rumors: u32 },
+}
+
+/// How the model plane moves deltas.
+#[derive(Debug, Clone)]
+pub enum Dissemination {
+    /// Every worker pushes every delta to every peer: n·(n-1) messages
+    /// per step. Kept as the equivalence/baseline mode.
+    FullMesh,
+    /// Overlay-routed gossip: O(n·fanout) physical messages per step.
+    Gossip(GossipConfig),
 }
 
 /// Engine configuration.
@@ -47,6 +83,13 @@ pub struct P2pConfig {
     pub dim: usize,
     pub seed: u64,
     pub poll: Duration,
+    /// Model-plane transport (default: gossip, fanout 2, flush 1, ttl 6).
+    pub dissemination: Dissemination,
+    /// How long the shutdown drain waits for missing `Done` senders or
+    /// missing rumors before giving up loudly. Never reached on a
+    /// healthy run: the drain's exit condition is exact (every expected
+    /// rumor applied), so this is purely a hang safety net.
+    pub drain_timeout: Duration,
 }
 
 impl Default for P2pConfig {
@@ -59,7 +102,27 @@ impl Default for P2pConfig {
             dim: 32,
             seed: 2,
             poll: Duration::from_micros(200),
+            dissemination: Dissemination::Gossip(GossipConfig::default()),
+            drain_timeout: Duration::from_secs(30),
         }
+    }
+}
+
+/// What one worker hands back at join time.
+struct WorkerOut {
+    w: Vec<f32>,
+    control_msgs: u64,
+    update_msgs: u64,
+    applied_rumors: u64,
+    dup_rumors: u64,
+    rumor_copies: u64,
+    dropped_deltas: u64,
+}
+
+#[inline]
+fn add_delta(w: &mut [f32], delta: &[f32]) {
+    for (wi, di) in w.iter_mut().zip(delta) {
+        *wi += di;
     }
 }
 
@@ -80,19 +143,18 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     // Published step table (the control plane each node exposes).
     let steps: Arc<Vec<AtomicU64>> =
         Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
-    // The structured overlay used for sampling.
+    // The structured overlay used for sampling AND gossip routing.
     let ring = Arc::new(Ring::with_nodes(n, cfg.seed));
 
     // Build the mesh of addresses first (two-phase: spawn, then wire).
     let mut mailboxes = Vec::with_capacity(n);
     let mut addrs = Vec::with_capacity(n);
-    for i in 0..n {
+    for _ in 0..n {
         let (tx, rx) = std::sync::mpsc::channel::<PeerMsg>();
         // Raw channel here: actor::Address requires a running body; we
         // need all endpoints before any worker starts.
         mailboxes.push(rx);
         addrs.push(tx);
-        let _ = i;
     }
     let addrs = Arc::new(addrs);
 
@@ -108,35 +170,107 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
             let cfg = cfg.clone();
             let view = cfg.method.build().view();
             sys.spawn::<(), _, _>(&format!("p2p-{i}"), move |_mb| {
-                let mut rng = Rng::new(cfg.seed ^ (i as u64).wrapping_mul(0xABCD_EF01));
+                // Three independent streams so gradient seeds stay a pure
+                // function of (engine seed, worker, step) no matter how
+                // many barrier polls or gossip relays interleave.
+                let base = cfg.seed ^ (i as u64).wrapping_mul(0xABCD_EF01);
+                let mut grad_rng = Rng::new(base);
+                let mut ctrl_rng = Rng::new(base ^ 0x0C0_17B0_0C0_17B0);
+                let mut gossip_rng = Rng::new(base ^ 0x6055_1900_6055_1900);
+
+                let gossip_cfg = match &cfg.dissemination {
+                    Dissemination::Gossip(g) => Some(g.clone()),
+                    Dissemination::FullMesh => None,
+                };
+                let mut gnode = gossip_cfg.as_ref().map(|_| GossipNode::new(i, n));
+                // Origin-side delta compaction buffer (gossip mode).
+                let mut pending = vec![0.0f32; cfg.dim];
+                let mut pending_steps = 0u64;
+
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
-                let mut done_peers = 0usize;
-                let drain = |w: &mut Vec<f32>, done_peers: &mut usize| {
+                let mut done = vec![false; n];
+                done[i] = true;
+                // Per-origin rumor counts announced by Done messages; the
+                // drain exits when every announced rumor is applied.
+                let mut expected = vec![0u32; n];
+
+                // One flush tick: relay the fresh-rumor buffer — one
+                // physical message per destination (successor + sampled
+                // partners), no matter how many rumors ride along. A send
+                // can only fail when the peer already exited — and a peer
+                // only exits once it has applied *every* expected rumor,
+                // so a failed send carries nothing but duplicates and is
+                // safe to ignore.
+                macro_rules! flush_gossip {
+                    () => {
+                        if let (Some(node), Some(gc)) =
+                            (gnode.as_mut(), gossip_cfg.as_ref())
+                        {
+                            for (dest, rumors) in
+                                node.flush(gc, &ring, &mut gossip_rng)
+                            {
+                                update_msgs += 1;
+                                let _ = addrs[dest].send(PeerMsg::Gossip { rumors });
+                            }
+                        }
+                    };
+                }
+                // Handle one inbound message (shared by step loop, waits
+                // and the shutdown drain).
+                macro_rules! process {
+                    ($msg:expr) => {
+                        match $msg {
+                            PeerMsg::Delta { delta } => add_delta(&mut w, &delta),
+                            PeerMsg::Gossip { rumors } => {
+                                let node = gnode.as_mut().expect(
+                                    "gossip message on a full-mesh plane",
+                                );
+                                node.receive(rumors, |r| add_delta(&mut w, &r.delta));
+                            }
+                            PeerMsg::Done { from, rumors } => {
+                                done[from as usize] = true;
+                                expected[from as usize] = rumors;
+                            }
+                        }
+                    };
+                }
+
+                for step in 0..cfg.steps_per_worker {
                     while let Ok(msg) = rx.try_recv() {
-                        match msg {
-                            PeerMsg::Delta { delta } => {
-                                for (wi, di) in w.iter_mut().zip(&delta) {
-                                    *wi += di;
+                        process!(msg);
+                    }
+                    // compute locally, apply locally
+                    let g = grad_fn(&w, grad_rng.next_u64());
+                    let delta: Vec<f32> = g.iter().map(|x| -cfg.lr * x).collect();
+                    add_delta(&mut w, &delta);
+                    match &cfg.dissemination {
+                        Dissemination::FullMesh => {
+                            // push the delta to all peers (model plane);
+                            // peers outlive every push — they cannot exit
+                            // before processing our Done, which trails all
+                            // of these sends in per-sender FIFO order
+                            for (j, addr) in addrs.iter().enumerate() {
+                                if j != i {
+                                    update_msgs += 1;
+                                    let _ = addr
+                                        .send(PeerMsg::Delta { delta: delta.clone() });
                                 }
                             }
-                            PeerMsg::Done { .. } => *done_peers += 1,
                         }
-                    }
-                };
-                for step in 0..cfg.steps_per_worker {
-                    drain(&mut w, &mut done_peers);
-                    // compute locally, apply locally
-                    let g = grad_fn(&w, rng.next_u64());
-                    let delta: Vec<f32> = g.iter().map(|x| -cfg.lr * x).collect();
-                    for (wi, di) in w.iter_mut().zip(&delta) {
-                        *wi += di;
-                    }
-                    // push the delta to all peers (model plane)
-                    for (j, addr) in addrs.iter().enumerate() {
-                        if j != i {
-                            update_msgs += 1;
-                            let _ = addr.send(PeerMsg::Delta { delta: delta.clone() });
+                        Dissemination::Gossip(gc) => {
+                            add_delta(&mut pending, &delta);
+                            pending_steps += 1;
+                            let last = step + 1 == cfg.steps_per_worker;
+                            if pending_steps >= gc.flush_every || last {
+                                let payload: Arc<[f32]> =
+                                    std::mem::replace(&mut pending, vec![0.0; cfg.dim])
+                                        .into();
+                                pending_steps = 0;
+                                gnode.as_mut().unwrap().originate(payload, gc);
+                            }
+                            // relays + originations leave every step
+                            flush_gossip!();
                         }
                     }
                     steps[i].store(step + 1, Ordering::Release);
@@ -148,7 +282,8 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         let pass = match view {
                             ViewRequirement::None => true,
                             ViewRequirement::Sample(beta) => {
-                                let (peers, hops) = ring.sample_nodes(i, beta, &mut rng);
+                                let (peers, hops) =
+                                    ring.sample_nodes(i, beta, &mut ctrl_rng);
                                 control_msgs += hops + 2 * peers.len() as u64;
                                 peers.iter().all(|&p| {
                                     let sp = steps[p].load(Ordering::Acquire);
@@ -160,55 +295,161 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         if pass {
                             break;
                         }
-                        drain(&mut w, &mut done_peers);
+                        while let Ok(msg) = rx.try_recv() {
+                            process!(msg);
+                        }
+                        // keep relaying while blocked so peers' deltas
+                        // are not parked in our outbox
+                        flush_gossip!();
                         std::thread::sleep(cfg.poll);
                     }
                 }
-                // signal completion, then drain until all peers are done so
-                // late deltas are not lost
+
+                // Signal completion (no more originations from us) with
+                // our exact origination count, then drain until every
+                // expected Done sender reported in and — in gossip mode —
+                // every announced rumor has been applied.
+                let own_rumors = gnode.as_ref().map(|nd| nd.originated()).unwrap_or(0);
+                expected[i] = own_rumors;
                 for (j, addr) in addrs.iter().enumerate() {
                     if j != i {
-                        let _ = addr.send(PeerMsg::Done { from: i as u32 });
+                        let _ = addr.send(PeerMsg::Done {
+                            from: i as u32,
+                            rumors: own_rumors,
+                        });
                     }
                 }
-                let deadline = Instant::now() + Duration::from_secs(5);
-                while done_peers < addrs.len() - 1 && Instant::now() < deadline {
-                    match rx.recv_timeout(Duration::from_millis(5)) {
-                        Ok(PeerMsg::Delta { delta }) => {
-                            for (wi, di) in w.iter_mut().zip(&delta) {
-                                *wi += di;
+                let deadline = Instant::now() + cfg.drain_timeout;
+                // Ingest the whole backlog before relaying, then pace the
+                // next tick at the poll interval: batching stays dense
+                // (many rumors per physical message) and relay traffic
+                // settles into synchronous-like rounds instead of one
+                // flush per arriving message.
+                macro_rules! ingest_backlog_and_relay {
+                    ($first:expr) => {{
+                        process!($first);
+                        while let Ok(m) = rx.try_recv() {
+                            process!(m);
+                        }
+                        flush_gossip!();
+                        std::thread::sleep(cfg.poll);
+                    }};
+                }
+                let mut dropped_deltas = 0u64;
+                loop {
+                    // Exact exit condition — no quiet-window guesswork:
+                    // * full mesh: all Dones in ⇒ drained (per-sender
+                    //   FIFO: a peer's Done follows all its deltas);
+                    // * gossip: all Dones in AND every announced rumor
+                    //   applied. Liveness is structural: a peer exits
+                    //   only after it has applied and relayed everything,
+                    //   so every rumor still owed to us is either in our
+                    //   mailbox or behind a live relayer.
+                    let all_done = done.iter().all(|&d| d);
+                    let complete = all_done
+                        && match &gnode {
+                            None => true,
+                            Some(node) => (0..n).all(|j| {
+                                node.applied_count(j as u32) >= expected[j]
+                            }),
+                        };
+                    if complete {
+                        break;
+                    }
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        // Loud failure: name the silent peers / missing
+                        // rumors and count exactly what this timeout
+                        // discards (a hang here means a peer died).
+                        let missing_done: Vec<usize> = done
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &d)| !d)
+                            .map(|(j, _)| j)
+                            .collect();
+                        let missing_rumors: u64 = match &gnode {
+                            None => 0,
+                            Some(node) => (0..n)
+                                .map(|j| {
+                                    u64::from(expected[j]).saturating_sub(
+                                        u64::from(node.applied_count(j as u32)),
+                                    )
+                                })
+                                .sum(),
+                        };
+                        let mut discarded = 0u64;
+                        while let Ok(msg) = rx.try_recv() {
+                            match msg {
+                                PeerMsg::Delta { .. } => discarded += 1,
+                                PeerMsg::Gossip { rumors } => {
+                                    discarded += rumors.len() as u64
+                                }
+                                PeerMsg::Done { from, rumors } => {
+                                    done[from as usize] = true;
+                                    expected[from as usize] = rumors;
+                                }
                             }
                         }
-                        Ok(PeerMsg::Done { .. }) => done_peers += 1,
-                        Err(_) => {}
+                        dropped_deltas = missing_rumors.max(discarded);
+                        log_warn!(
+                            "p2p-{i}: drain timed out after {:?} (no Done from \
+                             {missing_done:?}; {missing_rumors} expected rumor(s) \
+                             never arrived; {discarded} queued message(s) \
+                             discarded) — the reported replica is missing updates",
+                            cfg.drain_timeout
+                        );
+                        break;
+                    }
+                    if let Ok(msg) =
+                        rx.recv_timeout(left.min(Duration::from_millis(100)))
+                    {
+                        ingest_backlog_and_relay!(msg);
                     }
                 }
-                (w, control_msgs, update_msgs)
+
+                let (applied_rumors, dup_rumors, rumor_copies, route_msgs) =
+                    match &gnode {
+                        Some(nd) => (
+                            nd.applied_rumors,
+                            nd.dup_rumors,
+                            nd.rumor_copies,
+                            nd.route_msgs,
+                        ),
+                        None => (0, 0, 0, 0),
+                    };
+                WorkerOut {
+                    w,
+                    control_msgs: control_msgs + route_msgs,
+                    update_msgs,
+                    applied_rumors,
+                    dup_rumors,
+                    rumor_copies,
+                    dropped_deltas,
+                }
             })
         })
         .collect();
 
-    let mut control_msgs = 0;
-    let mut update_msgs = 0;
-    let results: Vec<Vec<f32>> = workers
-        .into_iter()
-        .map(|wk| {
-            let (addr, handle) = wk.into_parts();
-            drop(addr);
-            let (w, c, u) = handle.join().expect("p2p worker panicked");
-            control_msgs += c;
-            update_msgs += u;
-            w
-        })
-        .collect();
-
-    EngineReport {
-        steps: steps.iter().map(|s| s.load(Ordering::Acquire)).collect(),
-        update_msgs,
-        control_msgs,
-        wall_secs: start.elapsed().as_secs_f64(),
-        model: results.into_iter().next().unwrap_or_default(),
+    let mut report = EngineReport::default();
+    let mut replicas: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for wk in workers {
+        let (addr, handle) = wk.into_parts();
+        drop(addr);
+        let out = handle.join().expect("p2p worker panicked");
+        report.control_msgs += out.control_msgs;
+        report.update_msgs += out.update_msgs;
+        report.applied_rumors += out.applied_rumors;
+        report.dup_rumors += out.dup_rumors;
+        report.rumor_copies += out.rumor_copies;
+        report.dropped_deltas += out.dropped_deltas;
+        replicas.push(out.w);
     }
+
+    report.steps = steps.iter().map(|s| s.load(Ordering::Acquire)).collect();
+    report.wall_secs = start.elapsed().as_secs_f64();
+    report.model = replicas.first().cloned().unwrap_or_default();
+    report.replicas = replicas;
+    report
 }
 
 #[cfg(test)]
@@ -230,7 +471,7 @@ mod tests {
     }
 
     #[test]
-    fn pssp_converges_fully_distributed() {
+    fn pssp_converges_fully_distributed_over_gossip() {
         let cfg = P2pConfig {
             n_workers: 6,
             steps_per_worker: 12,
@@ -247,24 +488,71 @@ mod tests {
         let err = l2_dist(&r.model, &w_true);
         assert!(err < init, "p2p did not reduce error: {init} -> {err}");
         assert!(r.control_msgs > 0, "no sampling traffic recorded");
-        // every worker pushed every delta to every peer
-        assert_eq!(r.update_msgs, 6 * 12 * 5);
+        // the gossip plane must beat the full mesh on physical messages
+        // even at n=6 (mesh would be 6·12·5 = 360)
+        assert!(r.update_msgs > 0);
+        assert_eq!(r.dropped_deltas, 0, "no deltas may be dropped");
+        assert_eq!(r.replicas.len(), 6);
     }
 
     #[test]
-    fn asp_works_with_zero_control_traffic() {
+    fn full_mesh_mode_counts_n_squared_pushes() {
+        let cfg = P2pConfig {
+            n_workers: 6,
+            steps_per_worker: 12,
+            method: Method::Pssp { sample: 2, staleness: 2 },
+            dim: 24,
+            lr: 0.02,
+            seed: 11,
+            dissemination: Dissemination::FullMesh,
+            ..P2pConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(cfg.dim, 13);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        // every worker pushed every delta to every peer
+        assert_eq!(r.update_msgs, 6 * 12 * 5);
+        assert_eq!(r.applied_rumors, 0);
+        assert_eq!(r.dropped_deltas, 0);
+    }
+
+    #[test]
+    fn asp_full_mesh_has_zero_control_traffic() {
         let cfg = P2pConfig {
             n_workers: 4,
             steps_per_worker: 8,
             method: Method::Asp,
             dim: 16,
             seed: 17,
+            dissemination: Dissemination::FullMesh,
             ..P2pConfig::default()
         };
         let (grad, _) = linear_grad_fn(16, 19);
         let r = run(&cfg, vec![0.0; 16], grad);
         assert_eq!(r.control_msgs, 0);
         assert_eq!(r.update_msgs, 4 * 8 * 3);
+    }
+
+    #[test]
+    fn asp_gossip_spends_routing_not_barrier_traffic() {
+        let cfg = P2pConfig {
+            n_workers: 6,
+            steps_per_worker: 8,
+            method: Method::Asp,
+            dim: 16,
+            seed: 17,
+            dissemination: Dissemination::Gossip(GossipConfig {
+                fanout: 2,
+                flush_every: 1,
+                ttl: 4,
+            }),
+            ..P2pConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(16, 19);
+        let r = run(&cfg, vec![0.0; 16], grad);
+        // ASP never samples for barriers, but gossip target selection
+        // routes over the overlay — that traffic is control-plane cost.
+        assert!(r.control_msgs > 0);
+        assert!(r.rumor_copies >= r.applied_rumors);
     }
 
     #[test]
@@ -283,10 +571,35 @@ mod tests {
             method: Method::Pbsp { sample: 0 },
             dim: 8,
             seed: 23,
+            dissemination: Dissemination::FullMesh,
             ..P2pConfig::default()
         };
         let (grad, _) = linear_grad_fn(8, 29);
         let r = run(&cfg, vec![0.0; 8], grad);
         assert_eq!(r.control_msgs, 0);
+    }
+
+    #[test]
+    fn flush_interval_compacts_originations() {
+        let cfg = P2pConfig {
+            n_workers: 5,
+            steps_per_worker: 8,
+            method: Method::Asp,
+            dim: 8,
+            seed: 31,
+            dissemination: Dissemination::Gossip(GossipConfig {
+                fanout: 1,
+                flush_every: 4,
+                ttl: 8,
+            }),
+            ..P2pConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(8, 37);
+        let r = run(&cfg, vec![0.0; 8], grad);
+        // 8 steps at flush 4 → 2 rumors per origin; each of the other 4
+        // workers applies each exactly once when dissemination completes.
+        assert_eq!(r.dropped_deltas, 0);
+        assert_eq!(r.applied_rumors, 5 * 2 * 4);
+        assert_eq!(r.steps, vec![8; 5]);
     }
 }

@@ -412,6 +412,7 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         control_msgs,
         wall_secs: start.elapsed().as_secs_f64(),
         model,
+        ..EngineReport::default()
     }
 }
 

@@ -20,6 +20,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig45;
+pub mod p2p_scale;
 pub mod parallel;
 pub mod table1;
 
@@ -273,7 +274,7 @@ pub const ALL: &[&str] = &[
 /// Ablations + extensions beyond the paper (run via `actor exp ext`).
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
-    "ext_shards",
+    "ext_shards", "ext_p2p",
 ];
 
 /// Run one experiment by id.
@@ -297,6 +298,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "ext_churn" => vec![ablation::ext_churn(opts)],
         "ext_loss" => vec![ablation::ext_loss(opts)],
         "ext_shards" => vec![ablation::ext_shards(opts)],
+        "ext_p2p" => vec![p2p_scale::ext_p2p(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

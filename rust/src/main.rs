@@ -9,6 +9,8 @@ use std::sync::Arc;
 use actor_psp::barrier::Method;
 use actor_psp::cli::{Args, USAGE};
 use actor_psp::config::Config;
+use actor_psp::engine::gossip::GossipConfig;
+use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::paramserver::{self, PsConfig};
 use actor_psp::exp::{self, ExpOpts};
 use actor_psp::model::linear::{minibatch_grad_fn, Dataset};
@@ -26,7 +28,7 @@ fn main() {
         print!("{USAGE}");
         return;
     }
-    let args = match Args::parse(argv, &["quick", "sgd"]) {
+    let args = match Args::parse(argv, &["quick", "sgd", "full-mesh"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -44,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "exp" => cmd_exp(args),
         "sim" => cmd_sim(args),
         "ps" => cmd_ps(args),
+        "p2p" => cmd_p2p(args),
         "train" => cmd_train(args),
         "bounds" => cmd_bounds(args),
         "info" => cmd_info(args),
@@ -225,6 +228,107 @@ fn cmd_ps(args: &Args) -> Result<()> {
         r.wall_secs,
         total_steps as f64 / r.wall_secs.max(1e-9) / 1e3,
         r.update_msgs as f64 / r.wall_secs.max(1e-9) / 1e3,
+    );
+    Ok(())
+}
+
+/// Run the fully-distributed p2p engine: replicated model, gossip-plane
+/// delta dissemination (or the legacy full mesh with --full-mesh), and
+/// per-worker overlay-sampled barriers.
+fn cmd_p2p(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "workers", "steps", "method", "dim", "lr", "seed", "fanout",
+        "flush", "ttl", "full-mesh",
+    ])?;
+    // config file first, CLI flags override
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.p2p_config()?,
+        None => P2pConfig::default(),
+    };
+    if let Some(m) = args.get("method") {
+        cfg.method =
+            Method::parse(m).ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?;
+    }
+    if let Some(v) = args.parse_flag::<usize>("workers")? {
+        cfg.n_workers = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("steps")? {
+        cfg.steps_per_worker = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("dim")? {
+        cfg.dim = v;
+    }
+    if let Some(v) = args.parse_flag::<f32>("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if args.switch("full-mesh") {
+        cfg.dissemination = Dissemination::FullMesh;
+    } else {
+        // start from whatever the config file picked, then apply knobs
+        let mut g = match &cfg.dissemination {
+            Dissemination::Gossip(g) => g.clone(),
+            Dissemination::FullMesh => GossipConfig::default(),
+        };
+        let mut touched = false;
+        if let Some(v) = args.parse_flag::<usize>("fanout")? {
+            g.fanout = v;
+            touched = true;
+        }
+        if let Some(v) = args.parse_flag::<u64>("flush")? {
+            g.flush_every = v.max(1);
+            touched = true;
+        }
+        if let Some(v) = args.parse_flag::<u32>("ttl")? {
+            g.ttl = v;
+            touched = true;
+        }
+        if touched || matches!(cfg.dissemination, Dissemination::Gossip(_)) {
+            cfg.dissemination = Dissemination::Gossip(g);
+        }
+    }
+
+    let mut rng = Rng::new(cfg.seed ^ 0xD157);
+    let rows = (cfg.dim * 8).clamp(256, 4096);
+    let data = Arc::new(Dataset::synthetic(rows, cfg.dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+    let grad = minibatch_grad_fn(Arc::clone(&data), 32);
+
+    let plane = match &cfg.dissemination {
+        Dissemination::FullMesh => "full-mesh".to_string(),
+        Dissemination::Gossip(g) => format!(
+            "gossip fanout={} flush={} ttl={}",
+            g.fanout, g.flush_every, g.ttl
+        ),
+    };
+    println!(
+        "p2p engine: {} workers x {} steps, d={} under {} ({plane})",
+        cfg.n_workers, cfg.steps_per_worker, cfg.dim, cfg.method,
+    );
+    let init_err = l2_dist(&vec![0.0; cfg.dim], &w_true);
+    let r = p2p::run(&cfg, vec![0.0; cfg.dim], grad);
+    let total_steps: u64 = r.steps.iter().sum();
+    let mesh_msgs = total_steps * (cfg.n_workers.saturating_sub(1)) as u64;
+    println!(
+        "steps {}  update msgs {} ({:.2}/worker-step; full mesh would send {})  \
+         control msgs {}",
+        total_steps,
+        r.update_msgs,
+        r.update_msgs as f64 / total_steps.max(1) as f64,
+        mesh_msgs,
+        r.control_msgs,
+    );
+    println!(
+        "rumors: {} applied, {} dup-dropped, {} copies; {} late delta(s) dropped",
+        r.applied_rumors, r.dup_rumors, r.rumor_copies, r.dropped_deltas,
+    );
+    println!(
+        "error {:.4} -> {:.4}  wall {:.3}s",
+        init_err,
+        l2_dist(&r.model, &w_true),
+        r.wall_secs,
     );
     Ok(())
 }

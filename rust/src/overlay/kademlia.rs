@@ -98,13 +98,18 @@ impl Kademlia {
 
     /// Iterative lookup emulation: each hop queries the current node's
     /// bucket for the closest known contacts and halves the distance.
-    /// Returns (owner node, hops).
+    /// Returns (owner node, hops). As in [`super::Ring::lookup`], a
+    /// self-lookup (the observer is already the closest node) is local
+    /// and costs 0 hops; remote lookups cost ≥ 1.
     pub fn lookup(&self, from: usize, target: u64) -> Option<(usize, u32)> {
         if self.members.is_empty() {
             return None;
         }
         let (goal_id, goal_node) = self.closest(target)?;
         let mut cur = self.node_id(from);
+        if cur == goal_id {
+            return Some((goal_node, 0));
+        }
         let mut hops = 0u32;
         while cur != goal_id && hops < 64 {
             // the current node knows the BUCKET_K closest contacts to the
@@ -286,6 +291,19 @@ mod tests {
             d.dedup();
             assert_eq!(d.len(), s.len());
         });
+    }
+
+    #[test]
+    fn self_lookup_costs_zero_hops() {
+        let k = Kademlia::with_nodes(64, 5);
+        let my = k.node_id(0);
+        let (owner, hops) = k.lookup(0, my).unwrap();
+        assert_eq!(owner, 0);
+        assert_eq!(hops, 0);
+        let other = k.node_id(1);
+        let (owner, hops) = k.lookup(0, other).unwrap();
+        assert_eq!(owner, 1);
+        assert!(hops >= 1);
     }
 
     #[test]

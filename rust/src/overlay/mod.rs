@@ -10,7 +10,14 @@
 //! This module implements:
 //!
 //! * a 64-bit identifier ring with successor lists and finger tables
-//!   ([`Ring`]) supporting join/leave (churn) and O(log n) lookup;
+//!   ([`Ring`]) supporting join/leave (churn) and O(log n) lookup, with
+//!   a node→id reverse index so owner-id recovery in the sampling hot
+//!   path and `leave` under churn are O(log n) (not O(n) scans), and
+//!   [`Ring::successor_node`] exposing the first successor-list entry —
+//!   reused by the gossip model plane ([`crate::engine::gossip`]) as the
+//!   completeness-carrying ring edge. Message accounting charges real
+//!   work only: a self-lookup (the observer owns the key) costs 0 hops
+//!   and a local successor-window read is free;
 //! * **uniform node sampling** by looking up uniformly-random points of
 //!   the id space ([`Ring::sample_nodes`]) — correct because node ids are
 //!   uniformly distributed, with the small-arc bias corrected by
@@ -51,17 +58,23 @@ pub fn node_ring_id(node: usize, namespace: u64) -> RingId {
 ///
 /// The authoritative membership is a sorted map id -> node; finger tables
 /// are derived views used by `lookup` to emulate O(log n) routing and to
-/// count the control messages a real deployment would spend.
+/// count the control messages a real deployment would spend. A reverse
+/// node -> id index is maintained alongside so that owner-id recovery in
+/// the sampling hot path and `leave` under churn are O(log n), not O(n)
+/// scans over the membership.
 #[derive(Debug, Clone)]
 pub struct Ring {
     /// id -> application node index.
     members: BTreeMap<RingId, usize>,
+    /// application node index -> id (reverse index; kept in lockstep with
+    /// `members` by `join`/`leave`).
+    ids: BTreeMap<usize, RingId>,
     namespace: u64,
 }
 
 impl Ring {
     pub fn new(namespace: u64) -> Ring {
-        Ring { members: BTreeMap::new(), namespace }
+        Ring { members: BTreeMap::new(), ids: BTreeMap::new(), namespace }
     }
 
     /// Build a ring over nodes 0..n.
@@ -81,25 +94,50 @@ impl Ring {
         self.members.is_empty()
     }
 
-    /// Add a node; returns its ring id.
+    /// Add a node; returns its ring id. Rejoining an existing node is a
+    /// no-op that returns its current id.
     pub fn join(&mut self, node: usize) -> RingId {
+        if let Some(&id) = self.ids.get(&node) {
+            return id;
+        }
         let mut id = node_ring_id(node, self.namespace);
         // Linear-probe collisions (astronomically rare in 64-bit space).
         while self.members.contains_key(&id) {
             id = id.wrapping_add(1);
         }
         self.members.insert(id, node);
+        self.ids.insert(node, id);
         id
     }
 
-    /// Remove a node by application index (scan; churn is not a hot path).
+    /// Remove a node by application index. O(log n) via the reverse index
+    /// — churn-safe: high join/leave rates no longer cost a full
+    /// membership scan per departure.
     pub fn leave(&mut self, node: usize) -> bool {
-        if let Some((&id, _)) = self.members.iter().find(|(_, &n)| n == node) {
-            self.members.remove(&id);
-            true
-        } else {
-            false
+        match self.ids.remove(&node) {
+            Some(id) => {
+                self.members.remove(&id);
+                true
+            }
+            None => false,
         }
+    }
+
+    /// The ring id of a registered node (None if not a member). Reads the
+    /// reverse index, so probed collision ids are reported faithfully.
+    pub fn ring_id_of(&self, node: usize) -> Option<RingId> {
+        self.ids.get(&node).copied()
+    }
+
+    /// The next node clockwise after `node` (its first successor-list
+    /// entry). None if `node` is absent or alone — the successor of a
+    /// singleton ring is itself, which no caller wants as a peer.
+    pub fn successor_node(&self, node: usize) -> Option<usize> {
+        let id = self.ring_id_of(node)?;
+        if self.members.len() <= 1 {
+            return None;
+        }
+        self.successor(id.wrapping_add(1)).map(|(_, n)| n)
     }
 
     /// Successor of a point on the ring (wrapping).
@@ -114,11 +152,19 @@ impl Ring {
     /// Route a lookup from `from_id` to the successor of `key`, returning
     /// (owner node, hop count). Emulates finger-table greedy routing: each
     /// hop at least halves the clockwise distance, so hops ≈ log2(n).
+    ///
+    /// A self-lookup — the observer already owns the key — is purely
+    /// local and costs **0 hops** (no control message is spent; charging
+    /// one here used to inflate `control_msgs` in the p2p engine and the
+    /// simulator-side accounting). Remote lookups cost ≥ 1.
     pub fn lookup(&self, from_id: RingId, key: RingId) -> Option<(usize, u32)> {
         if self.members.is_empty() {
             return None;
         }
         let (target_id, target_node) = self.successor(key)?;
+        if from_id == target_id {
+            return Some((target_node, 0));
+        }
         let mut cur = from_id;
         let mut hops = 0u32;
         while cur != target_id {
@@ -182,7 +228,9 @@ impl Ring {
         if n <= 1 || beta == 0 {
             return (out, msgs);
         }
-        let from = node_ring_id(observer, self.namespace);
+        let from = self
+            .ring_id_of(observer)
+            .unwrap_or_else(|| node_ring_id(observer, self.namespace));
         let target = beta.min(n - 1);
         let k = 32usize.min(n);
         let expect = (u64::MAX as f64) / n as f64;
@@ -191,14 +239,15 @@ impl Ring {
             attempts += 1;
             let point = rng.next_u64();
             let Some((first, hops)) = self.lookup(from, point) else { continue };
-            msgs += hops as u64 + 1; // routing + successor-list fetch
-            // Collect the k-node window starting at `first`'s ring position.
-            let first_id = self
-                .members
-                .iter()
-                .find(|(_, &nd)| nd == first)
-                .map(|(&id, _)| id)
-                .unwrap();
+            // Routing hops, plus one successor-list fetch — unless the
+            // observer itself owns the point, in which case the window
+            // read is local and free.
+            msgs += hops as u64 + u64::from(first != observer);
+            // Collect the k-node window starting at `first`'s ring
+            // position. Owner-id recovery reads the reverse index
+            // (O(log n)); this used to be an O(n) scan on every draw,
+            // which made the sampling hot path grow linearly in n.
+            let first_id = self.ids[&first];
             let mut window = Vec::with_capacity(k);
             let mut cursor = first_id;
             for i in 0..k {
@@ -250,7 +299,9 @@ impl Ring {
             return 0.0;
         }
         let k = k.min(n - 1).max(1);
-        let my_id = node_ring_id(observer, self.namespace);
+        let my_id = self
+            .ring_id_of(observer)
+            .unwrap_or_else(|| node_ring_id(observer, self.namespace));
         // walk k successors clockwise
         let mut last = my_id;
         let mut count = 0;
@@ -343,6 +394,69 @@ mod tests {
         assert!(r.leave(1));
         assert!(!r.leave(1));
         assert_eq!(r.len(), 2);
+        assert_eq!(r.ring_id_of(1), None);
+        assert_eq!(r.ring_id_of(0), Some(node_ring_id(0, 7)));
+    }
+
+    #[test]
+    fn reverse_index_tracks_membership_under_churn() {
+        property("ring reverse index consistent", 60, |g| {
+            let n = g.usize_in(1, 50);
+            let mut r = Ring::with_nodes(n, 13);
+            let mut rng = g.rng();
+            for node in 0..n {
+                if rng.bernoulli(0.4) {
+                    r.leave(node);
+                }
+                if rng.bernoulli(0.2) {
+                    r.join(node); // rejoin (no-op when present)
+                }
+            }
+            // the two maps must be exact inverses of one another
+            assert_eq!(r.len(), r.ids.len());
+            for (&id, &node) in &r.members {
+                assert_eq!(r.ring_id_of(node), Some(id));
+            }
+        });
+    }
+
+    #[test]
+    fn self_lookup_costs_zero_hops() {
+        let r = Ring::with_nodes(64, 5);
+        let id0 = r.ring_id_of(0).unwrap();
+        // Looking up a key the observer already owns is local: 0 hops.
+        let (owner, hops) = r.lookup(id0, id0).unwrap();
+        assert_eq!(owner, 0);
+        assert_eq!(hops, 0);
+        // A key owned by somebody else costs at least one hop.
+        let other = r.ring_id_of(1).unwrap();
+        let (owner, hops) = r.lookup(id0, other).unwrap();
+        assert_eq!(owner, 1);
+        assert!(hops >= 1);
+    }
+
+    #[test]
+    fn successor_node_walks_clockwise() {
+        let mut r = Ring::with_nodes(16, 11);
+        for node in 0..16 {
+            let succ = r.successor_node(node).unwrap();
+            assert_ne!(succ, node);
+            // the successor really is the next member clockwise
+            let id = r.ring_id_of(node).unwrap();
+            let (_, expect) = r.successor(id.wrapping_add(1)).unwrap();
+            assert_eq!(succ, expect);
+        }
+        // successor pointers skip departed nodes
+        let succ_of_3 = r.successor_node(3).unwrap();
+        r.leave(succ_of_3);
+        if let Some(new_succ) = r.successor_node(3) {
+            assert_ne!(new_succ, succ_of_3);
+        }
+        // singleton ring has no usable successor
+        let mut one = Ring::new(1);
+        one.join(0);
+        assert_eq!(one.successor_node(0), None);
+        assert_eq!(one.successor_node(9), None);
     }
 
     #[test]

@@ -10,10 +10,17 @@
 //! 2. **Recorded fingerprints** — seed-42 fingerprints of
 //!    `final_steps` / `update_msgs` / `control_msgs` for all of
 //!    `Method::paper_five`, persisted in `tests/golden/sim_seed42.json`.
-//!    On the first run (no file) the fingerprints are recorded; commit
-//!    the generated file to pin the trajectories so *future* refactors
-//!    are held to the same traces. Delete the file to re-baseline after
-//!    an intentional behaviour change.
+//!    On a fresh checkout (no file) the fingerprints are recorded
+//!    locally; commit the generated file to pin the trajectories so
+//!    *future* refactors are held to the same traces. **CI never
+//!    bootstraps**: with `GITHUB_ACTIONS` (or `GOLDEN_STRICT=1`) set and
+//!    no committed file, the test fails — a silently-recording golden
+//!    test pins nothing and can never catch a regression. CI still
+//!    records + uploads the would-be file as the
+//!    `sim-golden-fingerprints` artifact so a maintainer can commit it
+//!    (this container has no Rust toolchain, so the numbers must come
+//!    from a real run). Intentional trajectory change: delete the file,
+//!    re-run (`GOLDEN_RECORD=1` forces recording anywhere), re-commit.
 
 use actor_psp::barrier::Method;
 use actor_psp::sim::{ChurnConfig, ClusterConfig, SgdConfig, SimResult, Simulator};
@@ -139,11 +146,24 @@ fn golden_fingerprints_seed42_paper_five() {
 
     let path = golden_path();
     if !path.exists() {
+        let force_record = std::env::var_os("GOLDEN_RECORD").is_some();
+        let strict = std::env::var_os("GOLDEN_STRICT").is_some()
+            || std::env::var_os("GITHUB_ACTIONS").is_some();
+        if strict && !force_record {
+            panic!(
+                "golden fingerprint file {} is missing — CI refuses to \
+                 bootstrap (a self-recording golden test pins nothing). \
+                 Run `GOLDEN_RECORD=1 cargo test --test sim_golden` (or \
+                 download the sim-golden-fingerprints CI artifact) and \
+                 commit the file.",
+                path.display()
+            );
+        }
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, doc.to_pretty()).unwrap();
         eprintln!(
             "recorded golden fingerprints at {} — commit this file to pin \
-             seeded trajectories",
+             seeded trajectories (CI fails until it is committed)",
             path.display()
         );
         return;
