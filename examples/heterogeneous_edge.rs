@@ -26,7 +26,7 @@ fn main() {
         // heavy-tailed compute: some iterations take many times the mean
         iter_dist: TimeDist::Pareto { shape: 2.2 },
         stragglers: Some(StragglerConfig { fraction: 0.05, slowdown: 4.0 }),
-        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0 }),
+        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0, crash_rate: 0.0 }),
         net_delay_mean: 0.15, // wide-area RTTs
         sgd: Some(SgdConfig { dim: 500, ..SgdConfig::default() }),
         ..ClusterConfig::default()

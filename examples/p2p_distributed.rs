@@ -88,6 +88,42 @@ fn main() {
             );
         }
     }
+    // Crash-fault demo: one worker crash-stops mid-run — no Done, no
+    // handoff. The membership plane (SWIM-style suspect/confirm over the
+    // heartbeat table) detects it, the dead node's ring successor
+    // re-announces its rumor count from the custody store, and the
+    // survivors drain promptly with nothing lost.
+    println!("\ncrash-stop demo: worker 5 dies silently at step 10 of 30");
+    let cfg = P2pConfig {
+        n_workers,
+        steps_per_worker: 30,
+        method: Method::Pssp { sample: 3, staleness: 2 },
+        lr: 0.01,
+        dim,
+        seed: 5,
+        churn: vec![p2p::Departure { worker: 5, at_step: 10, graceful: false }],
+        ..P2pConfig::default()
+    };
+    let data = Arc::clone(&data);
+    let model = Mutex::new(LinearModel::new(dim));
+    let grad: GradFn = Arc::new(move |w, seed| {
+        model.lock().unwrap().minibatch_grad(&data, w, seed, 32).to_vec()
+    });
+    let r = p2p::run(&cfg, vec![0.0; dim], grad);
+    println!(
+        "  survivors finished {} steps; {} death confirmation(s), {} repair \
+         msg(s), {} rumor(s)\n  repaired; {} missing / {} dropped; drained in \
+         {:.2}s (drain_timeout is {:.0}s) — final err {:.4}",
+        r.steps.iter().sum::<u64>(),
+        r.confirmed_dead,
+        r.repair_msgs,
+        r.repaired_rumors,
+        r.missing_rumors,
+        r.dropped_deltas,
+        r.wall_secs,
+        cfg.drain_timeout.as_secs_f64(),
+        l2_dist(&r.model, &w_true),
+    );
     println!(
         "\nnotes: the mesh sends n-1 = {} updates per worker-step; gossip \
          batches rumors per link\nand rides the overlay (successor chain + \

@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use actor_psp::barrier::Method;
 use actor_psp::model::linear::{Dataset, LinearModel};
-use actor_psp::sim::{ClusterConfig, SgdConfig, SimResult, Simulator};
+use actor_psp::sim::{ChurnConfig, ClusterConfig, SgdConfig, SimResult, Simulator};
 use actor_psp::util::bench::{bench, bench_once, BenchSuite};
 use actor_psp::util::rng::Rng;
 
@@ -160,6 +160,27 @@ fn main() {
             Simulator::new(cfg, Method::Pbsp { sample: 10 }).run()
         });
         record_run(&mut suite, &format!("sim_n{n}_pbsp10_scale"), &r, secs);
+    }
+
+    // Crash-fault churn at scale: Crash/ConfirmDead events plus victims
+    // pinned in the tracker until confirmation exercise the membership
+    // plane's simulator model — the hot loop must absorb the extra event
+    // kinds without losing its events/s headline.
+    {
+        let cfg = ClusterConfig {
+            churn: Some(ChurnConfig {
+                join_rate: 5.0,
+                leave_rate: 2.0,
+                crash_rate: 2.0,
+            }),
+            crash_detect_secs: 1.0,
+            ..scale_cfg(10_000)
+        };
+        let (r, secs) = bench_once("sim n=10000 20s pbsp:10 + crash churn", || {
+            Simulator::new(cfg, Method::Pbsp { sample: 10 }).run()
+        });
+        println!("    -> {} crash-stop(s) confirmed through the run", r.crashes);
+        record_run(&mut suite, "sim_n10000_pbsp10_crash_churn", &r, secs);
     }
 
     // With the real-SGD workload: gradient math dominates; the versioned

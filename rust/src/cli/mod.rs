@@ -104,9 +104,12 @@ USAGE:
       (default: one per core; reports are identical for every J).
 
   actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
-            [--config FILE]
+            [--crash-rate F] [--detect S] [--config FILE]
       One simulated cluster run; prints the progress/error/message summary.
       M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q
+      --crash-rate adds F crash-stops/s (victims keep poisoning samples
+      and pinning the BSP/SSP minimum until failure detection confirms
+      them after --detect seconds).
 
   actor ps [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
            [--seed N] [--shards K] [--push-batch B] [--schedule-blocks NB]
@@ -117,13 +120,20 @@ USAGE:
 
   actor p2p [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
             [--seed N] [--fanout F] [--flush B] [--ttl T] [--full-mesh]
-            [--config FILE]
+            [--crash W:S] [--leave W:S] [--suspect-ms F] [--confirm-ms F]
+            [--no-membership] [--config FILE]
       Run the fully-distributed p2p engine (real threads, replicated
       model, overlay-sampled barriers). Deltas travel the gossip plane:
       F overlay-sampled shortcuts + the ring successor per forward, B
       steps compacted per rumor, T shortcut hops — O(n·fanout) messages
       per step. --full-mesh restores the legacy O(n²) broadcast.
       M must be asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q.
+      Crash-fault membership plane: --crash W:S crash-stops worker W at
+      step S (no Done, no handoff — survivors must detect and repair);
+      --leave W:S departs gracefully (store handoff + Leave). Suspect/
+      confirm heartbeat thresholds via --suspect-ms/--confirm-ms;
+      --no-membership disables detection (a crash then stalls survivors
+      until drain_timeout).
 
   actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
               [--workers N] [--method M] [--accum B] [--artifacts DIR]

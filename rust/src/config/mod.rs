@@ -35,7 +35,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::barrier::Method;
 use crate::engine::gossip::GossipConfig;
-use crate::engine::p2p::{Dissemination, P2pConfig};
+use crate::engine::membership::MembershipConfig;
+use crate::engine::p2p::{Departure, Dissemination, P2pConfig};
 use crate::engine::paramserver::PsConfig;
 use crate::exp::ExpOpts;
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
@@ -226,7 +227,12 @@ impl Config {
     /// ttl = 6             # shortcut hop budget
     /// full_mesh = false   # true = legacy O(n²) broadcast plane
     /// drain_timeout = 30.0
+    /// crash = "3:5"       # worker 3 crash-stops at step 5
+    /// leave = "2:4"       # worker 2 leaves gracefully at step 4
     /// ```
+    ///
+    /// The failure-detection knobs live in the `[membership]` section
+    /// ([`Config::membership_config`]).
     pub fn p2p_config(&self) -> Result<P2pConfig> {
         let d = P2pConfig::default();
         let g = GossipConfig::default();
@@ -247,6 +253,19 @@ impl Config {
                 ttl: self.usize_or("p2p", "ttl", g.ttl as usize)? as u32,
             })
         };
+        let mut churn = Vec::new();
+        if let Some(v) = self.get("p2p", "crash") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("[p2p] crash must be a \"worker:step\" string"))?;
+            churn.push(parse_departure(s, false)?);
+        }
+        if let Some(v) = self.get("p2p", "leave") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("[p2p] leave must be a \"worker:step\" string"))?;
+            churn.push(parse_departure(s, true)?);
+        }
         Ok(P2pConfig {
             n_workers: self.usize_or("p2p", "workers", d.n_workers)?,
             steps_per_worker: self
@@ -260,6 +279,8 @@ impl Config {
                 self.f64_or("p2p", "drain_timeout", d.drain_timeout.as_secs_f64())?,
             ),
             dissemination,
+            membership: self.membership_config()?,
+            churn,
             ..d
         })
     }
@@ -310,6 +331,7 @@ impl Config {
             Some(ChurnConfig {
                 join_rate: self.f64_or("churn", "join_rate", 0.0)?,
                 leave_rate: self.f64_or("churn", "leave_rate", 0.0)?,
+                crash_rate: self.f64_or("churn", "crash_rate", 0.0)?,
             })
         } else {
             None
@@ -340,10 +362,59 @@ impl Config {
             recheck_interval: self
                 .f64_or("cluster", "recheck_interval", d.recheck_interval)?,
             churn,
+            crash_detect_secs: self
+                .f64_or("membership", "detect_secs", d.crash_detect_secs)?,
             sample_interval: self.f64_or("cluster", "sample_interval", d.sample_interval)?,
             sgd,
         })
     }
+
+    /// Build the engine-side membership-plane configuration from the
+    /// `[membership]` section (all keys optional):
+    ///
+    /// ```toml
+    /// [membership]
+    /// enabled = true      # false: no failure detection (crash = stall)
+    /// suspect_ms = 400    # heartbeat frozen this long -> suspect
+    /// confirm_ms = 400    # suspect held this much longer -> dead
+    /// detect_secs = 1.0   # simulator crash -> ConfirmDead latency
+    /// ```
+    pub fn membership_config(&self) -> Result<Option<MembershipConfig>> {
+        let enabled = match self.get("membership", "enabled") {
+            None => true,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("[membership] enabled must be a bool"))?,
+        };
+        if !enabled {
+            return Ok(None);
+        }
+        let d = MembershipConfig::default();
+        let ms = |key: &str, default_us: u64| -> Result<u64> {
+            let v = self.f64_or("membership", key, default_us as f64 / 1000.0)?;
+            if v <= 0.0 {
+                bail!("[membership] {key} must be positive");
+            }
+            Ok((v * 1000.0) as u64)
+        };
+        Ok(Some(MembershipConfig {
+            suspect_after: ms("suspect_ms", d.suspect_after)?,
+            confirm_after: ms("confirm_ms", d.confirm_after)?,
+        }))
+    }
+}
+
+/// Parse a scripted departure `worker:step` (`[p2p] crash/leave` keys and
+/// the `actor p2p --crash/--leave` flags).
+pub fn parse_departure(s: &str, graceful: bool) -> Result<Departure> {
+    let (w, step) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("departure must be worker:step, got '{s}'"))?;
+    Ok(Departure {
+        worker: w.trim().parse().map_err(|e| anyhow!("bad worker in '{s}': {e}"))?,
+        at_step: step.trim().parse().map_err(|e| anyhow!("bad step in '{s}': {e}"))?,
+        graceful,
+    })
 }
 
 /// Parse `exponential | normal:<cv> | pareto:<shape>`.
@@ -547,6 +618,72 @@ drain_timeout = 5.0
         // snapshot-store window is configurable per workload
         let c = Config::parse("[sgd]\nversions = 64").unwrap();
         assert_eq!(c.cluster_config().unwrap().sgd.unwrap().versions, 64);
+    }
+
+    #[test]
+    fn membership_section_and_departures() {
+        let src = r#"
+[membership]
+suspect_ms = 250
+confirm_ms = 150
+detect_secs = 2.5
+
+[churn]
+crash_rate = 0.5
+leave_rate = 1.0
+
+[p2p]
+workers = 8
+crash = "3:5"
+leave = "2:4"
+"#;
+        let c = Config::parse(src).unwrap();
+        let m = c.membership_config().unwrap().unwrap();
+        assert_eq!(m.suspect_after, 250_000); // stored in microseconds
+        assert_eq!(m.confirm_after, 150_000);
+        let cc = c.cluster_config().unwrap();
+        assert_eq!(cc.crash_detect_secs, 2.5);
+        let churn = cc.churn.unwrap();
+        assert_eq!(churn.crash_rate, 0.5);
+        assert_eq!(churn.leave_rate, 1.0);
+        assert_eq!(churn.join_rate, 0.0);
+        let p = c.p2p_config().unwrap();
+        let mem = p.membership.unwrap();
+        assert_eq!(mem.suspect_after, 250_000);
+        assert_eq!(p.churn.len(), 2);
+        assert_eq!(p.churn[0].worker, 3);
+        assert_eq!(p.churn[0].at_step, 5);
+        assert!(!p.churn[0].graceful);
+        assert_eq!(p.churn[1].worker, 2);
+        assert_eq!(p.churn[1].at_step, 4);
+        assert!(p.churn[1].graceful);
+    }
+
+    #[test]
+    fn membership_defaults_on_and_can_be_disabled() {
+        // No [membership] section: detection on with engine defaults.
+        let c = Config::parse("").unwrap();
+        let m = c.membership_config().unwrap().unwrap();
+        let d = MembershipConfig::default();
+        assert_eq!(m.suspect_after, d.suspect_after);
+        assert_eq!(m.confirm_after, d.confirm_after);
+        assert!(c.p2p_config().unwrap().membership.is_some());
+        assert!(c.p2p_config().unwrap().churn.is_empty());
+        assert_eq!(
+            c.cluster_config().unwrap().crash_detect_secs,
+            ClusterConfig::default().crash_detect_secs
+        );
+        // enabled = false turns the plane off entirely.
+        let c = Config::parse("[membership]\nenabled = false").unwrap();
+        assert!(c.membership_config().unwrap().is_none());
+        assert!(c.p2p_config().unwrap().membership.is_none());
+        // Bad values propagate as errors.
+        let c = Config::parse("[membership]\nsuspect_ms = -4").unwrap();
+        assert!(c.membership_config().is_err());
+        let c = Config::parse("[p2p]\ncrash = \"nope\"").unwrap();
+        assert!(c.p2p_config().is_err());
+        assert!(parse_departure("1:2:3", false).is_err());
+        assert!(parse_departure("a:2", true).is_err());
     }
 
     #[test]

@@ -262,10 +262,22 @@ impl GossipNode {
 
     /// Everything this node knows, for graceful-leave handoff to its
     /// successor (receivers dedup, so handing over the full store is
-    /// safe; it is what repairs successor chains broken by departure).
-    /// Empty unless built with [`GossipNode::with_handoff_store`].
+    /// safe; it is what repairs successor chains broken by departure) —
+    /// and, since the crash-fault membership plane, for successor repair:
+    /// re-sending the full store to a *new* successor after the old one
+    /// is confirmed dead restores the chain's relay invariant across the
+    /// gap. Empty unless built with [`GossipNode::with_handoff_store`].
     pub fn handoff_rumors(&self) -> Vec<Rumor> {
         self.store.clone()
+    }
+
+    /// The retained rumors of one origin — what a custodian re-injects
+    /// when that origin is confirmed dead (`tests/membership_crash.rs`).
+    /// Because the origin's chain flushes hit its ring successor first,
+    /// the custodian's copy covers every rumor the origin ever announced.
+    /// Empty unless built with [`GossipNode::with_handoff_store`].
+    pub fn rumors_of(&self, origin: u32) -> Vec<Rumor> {
+        self.store.iter().filter(|r| r.origin == origin).cloned().collect()
     }
 }
 

@@ -1,0 +1,416 @@
+//! Crash-fault membership plane for the gossip engine — SWIM-style
+//! suspect/confirm failure detection plus the two repair roles that turn
+//! a crash-stop from a 30-second `drain_timeout` stall into a structural
+//! non-event.
+//!
+//! ## Why the gossip plane needs this
+//!
+//! PR 3's deterministic shutdown drain is exact — a worker exits only
+//! once every *announced* rumor is applied — but its liveness argument
+//! assumed every origin eventually announces (`Done`) and every ring
+//! edge stays up. A crash-stop node breaks both: it never sends `Done`
+//! (so every survivor camps on `drain_timeout`), and it leaves a gap in
+//! the TTL-exempt successor chain (so rumors relayed into the gap are
+//! silently lost — exactly the loss the chain existed to rule out).
+//! Elastic/dynamic synchronous-parallel designs (Zhao et al. 2019, 2020)
+//! make the same point: membership elasticity is what makes the barrier
+//! family deployable. This module restores both guarantees:
+//!
+//! * [`FailureDetector`] — per-observer suspect → confirm timers over a
+//!   peer heartbeat signal. In the threaded engine heartbeats are a
+//!   shared atomic counter table (the moral equivalent of SWIM pings
+//!   piggybacked on gossip flush ticks: a live node's flush loop beats
+//!   every tick, so "no beat" ⇔ "no flush traffic"); in the round-based
+//!   test harness the clock is the round number. The detector is
+//!   unit-agnostic: `now` and both thresholds share whatever unit the
+//!   caller picks (microseconds / rounds).
+//! * [`Membership`] — the detector plus the observer's *local* overlay
+//!   view ([`Ring`]). Confirming a death evicts the node from the local
+//!   ring so barrier sampling and gossip routing stop touching it, and
+//!   [`EvictOutcome`] tells the caller which repair duties it inherited:
+//!
+//!   1. **successor repair** (`lost_successor`): the dead node was my
+//!      chain successor — I must re-send my rumor store to the node now
+//!      clockwise of the gap, restoring the relay invariant ("every node
+//!      sends everything it applies to its live successor") that makes
+//!      delivery structural;
+//!   2. **custody repair** (`custodian`): I am the first live successor
+//!      of the dead node's old ring position — the dead origin's flushes
+//!      hit me first (the chain edge out of the origin *is* the custody
+//!      assignment), so my per-origin sequence count is the exact number
+//!      of rumors it ever announced. I broadcast that count plus the
+//!      rumors themselves ([`crate::engine::p2p::PeerMsg::Repair`]) as
+//!      the `Done` the origin never sent, reclaiming its
+//!      announced-but-undelivered rumors from my store instead of
+//!      letting the drain discard them.
+//!
+//! The simulator models the same timeline macroscopically: a crash-stop
+//! victim stays in the step table (poisoning samples and pinning the
+//! BSP/SSP minimum — the realistic stall) until `crash_detect_secs`
+//! (= suspect + confirm latency) elapses and a `ConfirmDead` event
+//! removes it.
+//!
+//! Guarantee boundary (documented, property-tested for the single-crash
+//! case in `tests/membership_crash.rs`): repairs are driven by ring
+//! neighbours, so simultaneous crashes of ring-adjacent nodes within one
+//! detection window can lose custody state — the standard chord-style
+//! custody caveat. Unannounced rumors (originated but never flushed) die
+//! with the origin by construction and are excluded from every count.
+
+use crate::overlay::{Ring, RingId};
+
+/// Knobs for the failure detector (`[membership]` config section).
+///
+/// Units are caller-defined ticks: the threaded engine uses microseconds
+/// of wall time, the round-based harness uses rounds, and the simulator
+/// collapses `suspect + confirm` into its `crash_detect_secs` latency.
+#[derive(Debug, Clone)]
+pub struct MembershipConfig {
+    /// Heartbeat-frozen ticks before a live, not-yet-`Done` peer is
+    /// suspected. Must exceed the longest legitimate gap between a
+    /// worker's loop iterations (a slow gradient step), or a stalled but
+    /// live peer gets evicted and re-joined on its next message.
+    pub suspect_after: u64,
+    /// Additional frozen ticks before a suspect is confirmed dead and
+    /// evicted from the observer's overlay view.
+    pub confirm_after: u64,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        // Engine default: 400ms + 400ms in the engine's microsecond
+        // clock — generous against scheduler stalls, still 37× inside
+        // the 30s drain_timeout safety net.
+        MembershipConfig { suspect_after: 400_000, confirm_after: 400_000 }
+    }
+}
+
+/// Detector state of one peer, as seen by one observer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerState {
+    Alive,
+    /// Heartbeat frozen past `suspect_after`; not yet actionable.
+    Suspect,
+    /// Frozen past `suspect_after + confirm_after`; evicted.
+    Dead,
+}
+
+/// Per-observer SWIM-style suspect/confirm timers over peer heartbeats.
+///
+/// Purely local and deterministic given the observed heartbeat sequence:
+/// the same code runs under the threaded engine (shared atomic beat
+/// table, microsecond clock) and the synchronous test harness (round
+/// clock), which is what lets the property tests pin the exact protocol
+/// the engine executes.
+#[derive(Debug)]
+pub struct FailureDetector {
+    me: usize,
+    cfg: MembershipConfig,
+    /// Last heartbeat value observed per peer.
+    last_beat: Vec<u64>,
+    /// Timestamp when `last_beat` last changed.
+    since: Vec<u64>,
+    state: Vec<PeerState>,
+}
+
+impl FailureDetector {
+    pub fn new(me: usize, n: usize, now: u64, cfg: MembershipConfig) -> FailureDetector {
+        FailureDetector {
+            me,
+            cfg,
+            last_beat: vec![0; n],
+            since: vec![now; n],
+            state: vec![PeerState::Alive; n],
+        }
+    }
+
+    pub fn state(&self, peer: usize) -> PeerState {
+        self.state.get(peer).copied().unwrap_or(PeerState::Alive)
+    }
+
+    pub fn is_dead(&self, peer: usize) -> bool {
+        self.state(peer) == PeerState::Dead
+    }
+
+    /// One observation pass at time `now`. `beat(j)` reads peer j's
+    /// heartbeat counter; `exempt(j)` marks peers that can never be
+    /// suspected (ourselves, peers whose `Done`/`Leave` we hold — their
+    /// thread legitimately exited). Returns peers newly confirmed dead
+    /// by *this* pass and peers that just disproved a confirmation, both
+    /// in ascending id order.
+    pub fn observe<B, E>(&mut self, now: u64, beat: B, exempt: E) -> Observation
+    where
+        B: Fn(usize) -> u64,
+        E: Fn(usize) -> bool,
+    {
+        let mut obs = Observation::default();
+        for j in 0..self.state.len() {
+            if j == self.me {
+                continue;
+            }
+            let b = beat(j);
+            if b != self.last_beat[j] {
+                // Progress is proof of life — including for a peer we had
+                // confirmed dead (false positive): the caller must treat a
+                // state that *leaves* Dead as a resurrection and restore
+                // the peer's overlay position.
+                self.last_beat[j] = b;
+                self.since[j] = now;
+                if self.state[j] == PeerState::Dead {
+                    obs.resurrected.push(j);
+                }
+                self.state[j] = PeerState::Alive;
+                continue;
+            }
+            if exempt(j) || self.state[j] == PeerState::Dead {
+                continue;
+            }
+            let frozen = now.saturating_sub(self.since[j]);
+            if frozen >= self.cfg.suspect_after + self.cfg.confirm_after {
+                self.state[j] = PeerState::Dead;
+                obs.dead.push(j);
+            } else if frozen >= self.cfg.suspect_after {
+                self.state[j] = PeerState::Suspect;
+            }
+        }
+        obs
+    }
+
+    /// Accept a death confirmation relayed by another observer (a
+    /// [`crate::engine::p2p::PeerMsg::Repair`] announcement): mark the
+    /// peer dead without waiting for the local timers. Returns true when
+    /// this changed the state (the caller should evict its view).
+    pub fn declare_dead(&mut self, peer: usize) -> bool {
+        if peer >= self.state.len() || peer == self.me {
+            return false;
+        }
+        let changed = self.state[peer] != PeerState::Dead;
+        self.state[peer] = PeerState::Dead;
+        changed
+    }
+
+    /// Direct evidence of life from the message plane (any message from
+    /// `peer` counts, like SWIM's piggybacked acks). Returns true when
+    /// the peer had been confirmed dead — a resurrection the caller must
+    /// propagate to its overlay view.
+    pub fn alive(&mut self, peer: usize, now: u64) -> bool {
+        if peer >= self.state.len() || peer == self.me {
+            return false;
+        }
+        let was_dead = self.state[peer] == PeerState::Dead;
+        self.since[peer] = now;
+        self.state[peer] = PeerState::Alive;
+        was_dead
+    }
+}
+
+/// Outcome of one [`FailureDetector::observe`] pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Observation {
+    /// Peers newly confirmed dead by this pass.
+    pub dead: Vec<usize>,
+    /// Previously-confirmed peers whose heartbeat moved again — false
+    /// positives the caller must re-join to its overlay view.
+    pub resurrected: Vec<usize>,
+}
+
+/// What the observer must do after evicting a confirmed-dead node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictOutcome {
+    /// The dead node's old ring id (its vacated position).
+    pub old_id: RingId,
+    /// The dead node was this observer's chain successor; the new
+    /// successor (post-eviction) is the node that must now receive the
+    /// observer's full rumor store so the relay invariant survives the
+    /// gap. `None` when the observer had a different successor or no
+    /// live successor remains.
+    pub lost_successor: Option<usize>,
+    /// This observer is the first live successor of the vacated position
+    /// — the custodian that must re-announce the dead origin's exact
+    /// rumor count (and re-inject its rumors) in place of its `Done`.
+    pub custodian: bool,
+}
+
+/// The membership plane of one worker: failure detector + the worker's
+/// local, evolving overlay view.
+///
+/// The view starts as a clone of the launch ring and diverges only by
+/// evictions (and resurrections); gossip routing and barrier sampling
+/// must read *this* ring, not the launch ring, so confirmed-dead nodes
+/// stop receiving chain flushes and stop poisoning step samples.
+#[derive(Debug)]
+pub struct Membership {
+    me: usize,
+    pub detector: FailureDetector,
+    ring: Ring,
+}
+
+impl Membership {
+    pub fn new(me: usize, ring: Ring, now: u64, cfg: MembershipConfig) -> Membership {
+        let n = ring.len().max(me + 1);
+        Membership { me, detector: FailureDetector::new(me, n, now, cfg), ring }
+    }
+
+    /// The observer's current overlay view.
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+
+    /// Evict a confirmed-dead node from the local view and report which
+    /// repair roles this observer inherited. Idempotent: evicting an
+    /// already-absent node returns `None`.
+    pub fn evict(&mut self, dead: usize) -> Option<EvictOutcome> {
+        evict_from_view(&mut self.ring, self.me, dead)
+    }
+
+    /// Undo a false-positive eviction: the peer proved it is alive.
+    /// Rejoining is exact — ring ids are a pure function of the node
+    /// index and namespace, so the node returns to its old position.
+    pub fn revive(&mut self, node: usize) {
+        self.ring.join(node);
+    }
+}
+
+/// Evict `dead` from an observer's overlay view (the engine keeps the
+/// view and the detector as separate fields; [`Membership`] packages
+/// them for the synchronous test harness). See [`EvictOutcome`] for the
+/// repair duties the return value assigns.
+pub fn evict_from_view(ring: &mut Ring, me: usize, dead: usize) -> Option<EvictOutcome> {
+    let my_successor_was_dead = ring.successor_node(me) == Some(dead);
+    let old_id = ring.evict(dead)?;
+    // First live successor of the vacated position, in the post-eviction
+    // view (earlier evictions are already skipped).
+    let heir = ring.successor(old_id.wrapping_add(1)).map(|(_, n)| n);
+    Some(EvictOutcome {
+        old_id,
+        lost_successor: if my_successor_was_dead {
+            ring.successor_node(me)
+        } else {
+            None
+        },
+        custodian: heir == Some(me),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(s: u64, c: u64) -> MembershipConfig {
+        MembershipConfig { suspect_after: s, confirm_after: c }
+    }
+
+    #[test]
+    fn detector_confirms_after_suspect_plus_confirm() {
+        let mut beats = vec![0u64; 4];
+        let mut d = FailureDetector::new(0, 4, 0, cfg(2, 3));
+        // Everyone beats for two ticks; node 3 then freezes.
+        for now in 1..=2 {
+            for (j, b) in beats.iter_mut().enumerate().skip(1) {
+                *b += (j != 3 || now <= 2) as u64;
+            }
+            assert!(d.observe(now, |j| beats[j], |_| false).dead.is_empty());
+        }
+        beats[1] += 1;
+        beats[2] += 1;
+        // frozen since now=2: suspect at 4, dead at 7.
+        assert!(d.observe(4, |j| beats[j], |_| false).dead.is_empty());
+        assert_eq!(d.state(3), PeerState::Suspect);
+        beats[1] += 1;
+        beats[2] += 1;
+        let obs = d.observe(7, |j| beats[j], |_| false);
+        assert_eq!(obs.dead, vec![3]);
+        assert!(d.is_dead(3));
+        // Confirmation is reported once, not on every later pass.
+        assert!(d.observe(9, |j| beats[j], |_| false).dead.is_empty());
+        // The live peers were never even suspected.
+        assert_eq!(d.state(1), PeerState::Alive);
+        assert_eq!(d.state(2), PeerState::Alive);
+    }
+
+    #[test]
+    fn detector_exempts_done_peers_and_self() {
+        let beats = vec![0u64; 3];
+        let mut d = FailureDetector::new(0, 3, 0, cfg(1, 1));
+        // Node 1 is done (exited legitimately), node 2 is not exempt.
+        let obs = d.observe(100, |j| beats[j], |j| j == 1);
+        assert_eq!(obs.dead, vec![2]);
+        assert_eq!(d.state(1), PeerState::Alive);
+        assert_eq!(d.state(0), PeerState::Alive, "self is never observed");
+    }
+
+    #[test]
+    fn heartbeat_progress_resets_suspicion_and_resurrects() {
+        let mut beats = vec![0u64; 2];
+        let mut d = FailureDetector::new(0, 2, 0, cfg(1, 1));
+        assert_eq!(d.observe(5, |j| beats[j], |_| false).dead, vec![1]);
+        assert!(d.is_dead(1));
+        // The "dead" peer beats again: the pass reports the resurrection
+        // so the caller can restore the peer's overlay position.
+        beats[1] = 1;
+        let obs = d.observe(6, |j| beats[j], |_| false);
+        assert!(obs.dead.is_empty());
+        assert_eq!(obs.resurrected, vec![1]);
+        assert_eq!(d.state(1), PeerState::Alive);
+        // The message-plane shortcut reports the resurrection directly.
+        assert_eq!(d.observe(20, |j| beats[j], |_| false).dead, vec![1]);
+        assert!(d.alive(1, 21));
+        assert!(!d.alive(1, 22), "second alive() is not a resurrection");
+        // A relayed confirmation short-circuits the local timers.
+        assert!(d.declare_dead(1));
+        assert!(!d.declare_dead(1));
+        assert!(d.is_dead(1));
+    }
+
+    #[test]
+    fn membership_evict_identifies_successor_loss_and_custody() {
+        let n = 8;
+        let ring = Ring::with_nodes(n, 3);
+        // Walk the ring: me -> victim -> heir clockwise.
+        let me = 0;
+        let victim = ring.successor_node(me).unwrap();
+        let heir = ring.successor_node(victim).unwrap();
+        let mut m = Membership::new(me, ring.clone(), 0, cfg(1, 1));
+        let out = m.evict(victim).unwrap();
+        assert_eq!(out.lost_successor, Some(heir), "chain must re-route to heir");
+        assert!(!out.custodian, "predecessor is not the custodian");
+        assert_eq!(out.old_id, ring.ring_id_of(victim).unwrap());
+        // Seen from the heir, the same eviction is a custody grant, not
+        // a successor loss.
+        let mut h = Membership::new(heir, ring.clone(), 0, cfg(1, 1));
+        let out = h.evict(victim).unwrap();
+        assert!(out.custodian);
+        assert_eq!(out.lost_successor, None);
+        // Idempotent.
+        assert_eq!(h.evict(victim), None);
+    }
+
+    #[test]
+    fn membership_revive_restores_ring_position() {
+        let ring = Ring::with_nodes(6, 9);
+        let me = 2;
+        let victim = ring.successor_node(me).unwrap();
+        let old_id = ring.ring_id_of(victim).unwrap();
+        let mut m = Membership::new(me, ring, 0, MembershipConfig::default());
+        m.evict(victim).unwrap();
+        assert_eq!(m.ring().ring_id_of(victim), None);
+        m.revive(victim);
+        assert_eq!(m.ring().ring_id_of(victim), Some(old_id));
+        assert_eq!(m.ring().successor_node(me), Some(victim));
+    }
+
+    #[test]
+    fn chained_evictions_hand_custody_to_the_next_live_successor() {
+        let ring = Ring::with_nodes(8, 5);
+        let a = 0;
+        let b = ring.successor_node(a).unwrap();
+        let c = ring.successor_node(b).unwrap();
+        let d = ring.successor_node(c).unwrap();
+        // Observer d: b and c both die. After evicting c, evicting b must
+        // name d (not the already-dead c) as b's custodian heir.
+        let mut m = Membership::new(d, ring, 0, MembershipConfig::default());
+        assert!(m.evict(c).unwrap().custodian);
+        let out = m.evict(b).unwrap();
+        assert!(out.custodian, "custody skips the already-evicted node");
+    }
+}

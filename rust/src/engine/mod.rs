@@ -35,6 +35,7 @@
 
 pub mod gossip;
 pub mod mapreduce;
+pub mod membership;
 pub mod p2p;
 pub mod paramserver;
 
@@ -75,6 +76,30 @@ pub struct EngineReport {
     /// copies can share one physical message).
     pub rumor_copies: u64,
     /// Late model-plane messages dropped at shutdown after the drain
-    /// timeout expired (loudly logged; 0 on a healthy run).
+    /// timeout expired (loudly logged; 0 on a healthy run). Kept as the
+    /// per-worker `max(missing, discarded)` headline; the two components
+    /// are reported separately below so repair losses (rumors never
+    /// delivered) and discard losses (queued messages thrown away) stay
+    /// distinguishable.
     pub dropped_deltas: u64,
+    /// Rumors still owed (announced but never applied) when a worker's
+    /// drain safety-net fired, summed over workers. Non-zero means the
+    /// repair plane failed to reclaim something.
+    pub missing_rumors: u64,
+    /// Queued messages discarded unprocessed when the drain safety-net
+    /// fired, summed over workers.
+    pub discarded_msgs: u64,
+    // -- crash-fault membership plane (zero when membership is off) --
+    /// Death confirmations observed, summed over workers (each survivor
+    /// confirms independently, so one crash at n workers reports n-1).
+    pub confirmed_dead: u64,
+    /// Repair-plane physical messages: custody re-announcements plus
+    /// full-store re-sends after a successor loss.
+    pub repair_msgs: u64,
+    /// Rumors applied from repair messages that normal dissemination had
+    /// not yet delivered — the deltas a crash would have lost.
+    pub repaired_rumors: u64,
+    /// Workers that left the run early (graceful leave or crash-stop),
+    /// in worker-id order. Their replicas stop at the departure step.
+    pub departed: Vec<usize>,
 }

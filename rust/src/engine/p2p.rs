@@ -25,17 +25,31 @@
 //!   (self-lookups are local and cost 0), plus the routing the gossip
 //!   plane spends picking shortcut targets — what the real RPCs would
 //!   cost.
+//! * membership plane ([`crate::engine::membership`]): alongside the step
+//!   table every worker publishes a heartbeat counter, bumped once per
+//!   loop tick — the SWIM-style liveness signal piggybacked on the flush
+//!   cadence. Each worker runs its own suspect/confirm timers over the
+//!   table and keeps a **local overlay view**: confirming a death evicts
+//!   the node from that view (sampling and chain routing skip it) and
+//!   triggers the two repair roles — the dead node's ring successor
+//!   re-announces its exact rumor count and re-injects its rumors from
+//!   the custody store ([`PeerMsg::Repair`], the `Done` the origin never
+//!   sent), and any worker whose chain successor died re-sends its full
+//!   store to the next live successor, restoring the relay invariant
+//!   across the gap. Workers also depart mid-run via [`P2pConfig::churn`]:
+//!   gracefully (flush + store handoff + [`PeerMsg::Leave`]) or by
+//!   crash-stop (silence).
 //! * shutdown: every worker announces `Done` and each peer tracks the
-//!   expected senders explicitly. The drain only gives up after
-//!   `drain_timeout` — and then *loudly*: a warning naming the missing
-//!   peers plus a dropped-delta count in [`EngineReport`], instead of the
-//!   old silent 5-second discard. In gossip mode `Done` carries each
+//!   expected senders explicitly. In gossip mode `Done` carries each
 //!   origin's exact rumor count, so the drain's exit condition is
 //!   **deterministic** — every announced rumor applied — not a timing
-//!   heuristic; a worker therefore never exits while it is still owed
-//!   deltas, and a failed send can only ever carry duplicates (the
-//!   structural-completeness argument is exercised by
-//!   `tests/gossip_dissemination.rs`).
+//!   heuristic. A crash-stop origin never sends `Done`; the membership
+//!   plane excuses it once confirmed dead and substitutes the custodian's
+//!   count, so survivors still terminate promptly instead of camping on
+//!   `drain_timeout`. The timeout remains as a hang safety net — and then
+//!   fails *loudly*: a warning naming the missing peers plus separate
+//!   missing-rumor / discarded-message counts in [`EngineReport`], so
+//!   repair losses and discard losses stay distinguishable.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -44,22 +58,34 @@ use std::time::{Duration, Instant};
 use crate::actor::System;
 use crate::barrier::{Method, ViewRequirement};
 use crate::engine::gossip::{GossipConfig, GossipNode, Rumor};
+use crate::engine::membership::{self, FailureDetector, MembershipConfig};
 use crate::engine::{EngineReport, GradFn};
 use crate::log_warn;
 use crate::overlay::Ring;
 use crate::util::rng::Rng;
 
-/// Messages between peer workers (model plane).
+/// Messages between peer workers (model + membership planes).
 pub enum PeerMsg {
     /// Full-mesh mode: a model delta from a peer, apply `w += delta`.
     Delta { delta: Vec<f32> },
     /// Gossip mode: one physical message — every rumor queued for this
-    /// link since the sender's last flush.
+    /// link since the sender's last flush (or a repair-plane store
+    /// re-send; receivers dedup, so the two are interchangeable).
     Gossip { rumors: Vec<Rumor> },
     /// Finish up: no more *originations* will arrive from `from`, which
     /// emitted exactly `rumors` of them (gossip relays may still follow;
     /// the count is what lets the drain terminate deterministically).
     Done { from: u32, rumors: u32 },
+    /// Graceful mid-run departure: like `Done`, but the sender left the
+    /// system — receivers also evict it from their overlay views so
+    /// sampling and chain routing stop touching it. The leaver hands its
+    /// rumor store to its successor itself before announcing.
+    Leave { from: u32, rumors: u32 },
+    /// Custody repair: the sender — ring successor of the confirmed-dead
+    /// `origin` — re-announces the origin's exact announced-rumor count
+    /// and re-injects the rumors from its store. Stands in for the `Done`
+    /// the origin never sent; doubles as a death notice.
+    Repair { origin: u32, rumors: u32, store: Vec<Rumor> },
 }
 
 /// How the model plane moves deltas.
@@ -70,6 +96,19 @@ pub enum Dissemination {
     FullMesh,
     /// Overlay-routed gossip: O(n·fanout) physical messages per step.
     Gossip(GossipConfig),
+}
+
+/// A scripted mid-run departure (crash-fault scenario knob).
+#[derive(Debug, Clone)]
+pub struct Departure {
+    /// Which worker leaves.
+    pub worker: usize,
+    /// It departs at the top of this step (having completed `at_step`
+    /// steps and flushed their rumors).
+    pub at_step: u64,
+    /// Graceful (flush + store handoff + `Leave` announcement) or
+    /// crash-stop (thread simply stops; no handoff, no `Done`).
+    pub graceful: bool,
 }
 
 /// Engine configuration.
@@ -87,9 +126,17 @@ pub struct P2pConfig {
     pub dissemination: Dissemination,
     /// How long the shutdown drain waits for missing `Done` senders or
     /// missing rumors before giving up loudly. Never reached on a
-    /// healthy run: the drain's exit condition is exact (every expected
-    /// rumor applied), so this is purely a hang safety net.
+    /// healthy run — and, with the membership plane on, not on a
+    /// crash-faulted run either: confirmed-dead origins are excused and
+    /// repaired instead of timed out. Purely a hang safety net.
     pub drain_timeout: Duration,
+    /// Crash-fault membership plane (failure detection + rumor repair).
+    /// `None` disables detection entirely — a crash-stop peer then stalls
+    /// every survivor until `drain_timeout`, the pre-membership failure
+    /// mode. On by default.
+    pub membership: Option<MembershipConfig>,
+    /// Scripted mid-run departures (at most one per worker is honoured).
+    pub churn: Vec<Departure>,
 }
 
 impl Default for P2pConfig {
@@ -104,6 +151,8 @@ impl Default for P2pConfig {
             poll: Duration::from_micros(200),
             dissemination: Dissemination::Gossip(GossipConfig::default()),
             drain_timeout: Duration::from_secs(30),
+            membership: Some(MembershipConfig::default()),
+            churn: Vec::new(),
         }
     }
 }
@@ -117,6 +166,12 @@ struct WorkerOut {
     dup_rumors: u64,
     rumor_copies: u64,
     dropped_deltas: u64,
+    missing_rumors: u64,
+    discarded_msgs: u64,
+    confirmed_dead: u64,
+    repair_msgs: u64,
+    repaired_rumors: u64,
+    departed: bool,
 }
 
 #[inline]
@@ -139,11 +194,32 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     let start = Instant::now();
     let sys = System::new();
     let n = cfg.n_workers;
+    for d in &cfg.churn {
+        // A typo'd departure must fail loudly, not silently run a
+        // churn-free scenario the caller believes was crash-tested.
+        assert!(
+            d.worker < n,
+            "departure names worker {} but the engine has only {n} workers",
+            d.worker
+        );
+        assert!(
+            d.at_step < cfg.steps_per_worker,
+            "departure of worker {} at step {} can never fire: workers run \
+             only {} step(s)",
+            d.worker,
+            d.at_step,
+            cfg.steps_per_worker
+        );
+    }
 
-    // Published step table (the control plane each node exposes).
+    // Published step table (the control plane each node exposes) and the
+    // heartbeat table (the membership plane's liveness signal).
     let steps: Arc<Vec<AtomicU64>> =
         Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
-    // The structured overlay used for sampling AND gossip routing.
+    let beats: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    // The structured overlay used for sampling AND gossip routing. Each
+    // worker clones its own evolving view from this launch ring.
     let ring = Arc::new(Ring::with_nodes(n, cfg.seed));
 
     // Build the mesh of addresses first (two-phase: spawn, then wire).
@@ -164,11 +240,12 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         .map(|(i, rx)| {
             let grad_fn = grad_fn.clone();
             let steps = Arc::clone(&steps);
+            let beats = Arc::clone(&beats);
             let ring = Arc::clone(&ring);
             let addrs = Arc::clone(&addrs);
             let mut w = init_w.clone();
             let cfg = cfg.clone();
-            let view = cfg.method.build().view();
+            let view_req = cfg.method.build().view();
             sys.spawn::<(), _, _>(&format!("p2p-{i}"), move |_mb| {
                 // Three independent streams so gradient seeds stay a pure
                 // function of (engine seed, worker, step) no matter how
@@ -182,33 +259,193 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     Dissemination::Gossip(g) => Some(g.clone()),
                     Dissemination::FullMesh => None,
                 };
-                let mut gnode = gossip_cfg.as_ref().map(|_| GossipNode::new(i, n));
+                // Churn-capable runs retain the rumor store: graceful
+                // leavers hand it to their successor, and survivors
+                // re-send it across chain gaps / reclaim dead origins'
+                // rumors from it. This is the crash-tolerance memory
+                // trade: with membership on (the default) every worker
+                // pins O(total rumors) of run history, because without
+                // acks nobody can prove a rumor will never be needed for
+                // repair — set `membership: None` (and no scripted
+                // churn) to restore PR 3's store-free fast path.
+                let keep_store = gossip_cfg.is_some()
+                    && (cfg.membership.is_some() || !cfg.churn.is_empty());
+                let mut gnode = gossip_cfg.as_ref().map(|_| {
+                    if keep_store {
+                        GossipNode::with_handoff_store(i, n)
+                    } else {
+                        GossipNode::new(i, n)
+                    }
+                });
                 // Origin-side delta compaction buffer (gossip mode).
                 let mut pending = vec![0.0f32; cfg.dim];
                 let mut pending_steps = 0u64;
 
+                // This worker's evolving overlay view: the launch ring
+                // minus evicted (departed or confirmed-dead) nodes.
+                let mut view: Ring = (*ring).clone();
+                let t0 = Instant::now();
+                let mut detector = cfg
+                    .membership
+                    .as_ref()
+                    .map(|mc| FailureDetector::new(i, n, 0, mc.clone()));
+                // Observation passes are throttled to a fraction of the
+                // suspect threshold — beats are written every tick, but
+                // scanning n counters every 200µs poll would be waste.
+                let detect_every = cfg
+                    .membership
+                    .as_ref()
+                    .map(|mc| (mc.suspect_after / 4).clamp(1, 50_000))
+                    .unwrap_or(u64::MAX);
+                let mut next_detect = 0u64;
+
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
+                let mut repair_msgs = 0u64;
+                let mut repaired_rumors = 0u64;
+                let mut confirmed_dead = 0u64;
                 let mut done = vec![false; n];
                 done[i] = true;
-                // Per-origin rumor counts announced by Done messages; the
-                // drain exits when every announced rumor is applied.
+                // Per-origin rumor counts announced by Done/Leave/Repair;
+                // the drain exits when every announced rumor is applied.
                 let mut expected = vec![0u32; n];
+                // Origins we confirmed dead ourselves and whose custody
+                // announcement we are still owed — the drain must not
+                // exit before the custodian's count arrives (we cannot
+                // know how many rumors we are missing until it does).
+                let mut repair_pending = vec![false; n];
+
+                // Evict `$dead` from this worker's overlay view and carry
+                // out the repair duties the eviction assigns. Custody is
+                // suppressed (`$may_take_custody = false`) when the death
+                // notice came from an existing custodian or the node left
+                // gracefully (it announced its own count).
+                macro_rules! evict {
+                    ($dead:expr, $may_take_custody:expr) => {
+                        let may_take_custody: bool = $may_take_custody;
+                        let evicted = membership::evict_from_view(&mut view, i, $dead);
+                        if evicted.is_none() {
+                            // Already out of the view (e.g. re-confirmed
+                            // after a resurrection raced a Leave): nothing
+                            // to repair, so nothing to hold the drain for.
+                            repair_pending[$dead] = false;
+                        }
+                        if let Some(out) = evicted {
+                            if may_take_custody && out.custodian {
+                                if let Some(node) = gnode.as_ref() {
+                                    // Custody repair: the dead origin's
+                                    // flushes hit us first, so our count
+                                    // is exactly what it ever announced.
+                                    let origin = $dead as u32;
+                                    let count = node.applied_count(origin);
+                                    expected[$dead] = expected[$dead].max(count);
+                                    repair_pending[$dead] = false;
+                                    let store = node.rumors_of(origin);
+                                    // Every peer gets the announcement —
+                                    // including Done-but-still-draining
+                                    // ones, whose own exit waits on this
+                                    // count. Sends into already-exited
+                                    // mailboxes fail harmlessly.
+                                    for (j, addr) in addrs.iter().enumerate() {
+                                        if j != i && j != $dead {
+                                            let sent = addr.send(PeerMsg::Repair {
+                                                origin,
+                                                rumors: count,
+                                                store: store.clone(),
+                                            });
+                                            if sent.is_ok() {
+                                                repair_msgs += 1;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            if let (Some(node), Some(succ)) =
+                                (gnode.as_ref(), out.lost_successor)
+                            {
+                                // Successor repair: everything we ever
+                                // applied goes to the node now clockwise
+                                // of the gap; it dedups and relays the
+                                // fresh remainder, restoring the chain's
+                                // relay invariant.
+                                let store = node.handoff_rumors();
+                                if !store.is_empty()
+                                    && addrs[succ]
+                                        .send(PeerMsg::Gossip { rumors: store })
+                                        .is_ok()
+                                {
+                                    repair_msgs += 1;
+                                    update_msgs += 1;
+                                }
+                            }
+                        }
+                    };
+                }
+
+                // One membership tick: publish our own liveness, and (at
+                // the throttled cadence) run the suspect/confirm timers
+                // over everyone else's.
+                macro_rules! membership_tick {
+                    () => {
+                        beats[i].fetch_add(1, Ordering::Relaxed);
+                        if let Some(det) = detector.as_mut() {
+                            let now = t0.elapsed().as_micros() as u64;
+                            if now >= next_detect {
+                                next_detect = now + detect_every;
+                                let obs = det.observe(
+                                    now,
+                                    |j| beats[j].load(Ordering::Acquire),
+                                    |j| done[j],
+                                );
+                                for d in obs.dead {
+                                    confirmed_dead += 1;
+                                    // Until a custodian announces the dead
+                                    // origin's count we do not know what
+                                    // we are owed — hold the drain open.
+                                    repair_pending[d] = gnode.is_some() && !done[d];
+                                    evict!(d, true);
+                                }
+                                for r in obs.resurrected {
+                                    // False positive: restore the ring
+                                    // position, and if the revived peer is
+                                    // our successor again it missed every
+                                    // chain flush we routed around it —
+                                    // re-send the store.
+                                    view.join(r);
+                                    if view.successor_node(i) == Some(r) {
+                                        if let Some(node) = gnode.as_ref() {
+                                            let store = node.handoff_rumors();
+                                            if !store.is_empty()
+                                                && addrs[r]
+                                                    .send(PeerMsg::Gossip { rumors: store })
+                                                    .is_ok()
+                                            {
+                                                repair_msgs += 1;
+                                                update_msgs += 1;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    };
+                }
 
                 // One flush tick: relay the fresh-rumor buffer — one
                 // physical message per destination (successor + sampled
-                // partners), no matter how many rumors ride along. A send
-                // can only fail when the peer already exited — and a peer
-                // only exits once it has applied *every* expected rumor,
-                // so a failed send carries nothing but duplicates and is
-                // safe to ignore.
+                // partners), no matter how many rumors ride along.
+                // Destinations come from the *local* view, so confirmed-
+                // dead and departed nodes stop receiving chain traffic.
+                // A send into a crashed peer's dropped mailbox fails; the
+                // payload is not lost — it stays in our store and rides
+                // the successor-repair re-send once the death confirms.
                 macro_rules! flush_gossip {
                     () => {
                         if let (Some(node), Some(gc)) =
                             (gnode.as_mut(), gossip_cfg.as_ref())
                         {
                             for (dest, rumors) in
-                                node.flush(gc, &ring, &mut gossip_rng)
+                                node.flush(gc, &view, &mut gossip_rng)
                             {
                                 update_msgs += 1;
                                 let _ = addrs[dest].send(PeerMsg::Gossip { rumors });
@@ -229,27 +466,148 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                                 node.receive(rumors, |r| add_delta(&mut w, &r.delta));
                             }
                             PeerMsg::Done { from, rumors } => {
-                                done[from as usize] = true;
-                                expected[from as usize] = rumors;
+                                let from = from as usize;
+                                done[from] = true;
+                                expected[from] = rumors;
+                                repair_pending[from] = false;
+                                if let Some(det) = detector.as_mut() {
+                                    let now = t0.elapsed().as_micros() as u64;
+                                    if det.alive(from, now) {
+                                        // Our confirmation was a false
+                                        // positive — the peer finished
+                                        // normally. Restore its position,
+                                        // and (as on the observe-path
+                                        // resurrection) re-seed its chain
+                                        // edge: it missed every flush we
+                                        // routed around it, and its own
+                                        // drain still needs those rumors.
+                                        view.join(from);
+                                        if view.successor_node(i) == Some(from) {
+                                            if let Some(node) = gnode.as_ref() {
+                                                let store = node.handoff_rumors();
+                                                if !store.is_empty()
+                                                    && addrs[from]
+                                                        .send(PeerMsg::Gossip { rumors: store })
+                                                        .is_ok()
+                                                {
+                                                    repair_msgs += 1;
+                                                    update_msgs += 1;
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            PeerMsg::Leave { from, rumors } => {
+                                let from = from as usize;
+                                done[from] = true;
+                                expected[from] = rumors;
+                                repair_pending[from] = false;
+                                // The leaver handed its store to its
+                                // successor itself; we only repair our own
+                                // chain edge if we owned it.
+                                evict!(from, false);
+                            }
+                            PeerMsg::Repair { origin, rumors, store } => {
+                                let o = origin as usize;
+                                expected[o] = expected[o].max(rumors);
+                                repair_pending[o] = false;
+                                // A custody announcement doubles as a
+                                // death notice: evict without waiting for
+                                // our own timers (no second custody take —
+                                // the sender already claimed it).
+                                if let Some(det) = detector.as_mut() {
+                                    if det.declare_dead(o) {
+                                        evict!(o, false);
+                                    }
+                                }
+                                if let Some(node) = gnode.as_mut() {
+                                    node.receive(store, |r| {
+                                        repaired_rumors += 1;
+                                        add_delta(&mut w, &r.delta);
+                                    });
+                                }
                             }
                         }
                     };
                 }
 
+                let my_departure = cfg.churn.iter().find(|d| d.worker == i).cloned();
+                let mut departed = false;
+
                 for step in 0..cfg.steps_per_worker {
+                    if let Some(dep) = &my_departure {
+                        if step >= dep.at_step {
+                            departed = true;
+                            if dep.graceful {
+                                // Graceful leave: compact and announce any
+                                // buffered deltas, flush, hand the full
+                                // store to the successor, say goodbye.
+                                while let Ok(msg) = rx.try_recv() {
+                                    process!(msg);
+                                }
+                                if let (Some(node), Some(gc)) =
+                                    (gnode.as_mut(), gossip_cfg.as_ref())
+                                {
+                                    if pending_steps > 0 {
+                                        let payload: Arc<[f32]> = std::mem::replace(
+                                            &mut pending,
+                                            vec![0.0; cfg.dim],
+                                        )
+                                        .into();
+                                        pending_steps = 0;
+                                        node.originate(payload, gc);
+                                    }
+                                }
+                                flush_gossip!();
+                                let own = gnode
+                                    .as_ref()
+                                    .map(|nd| nd.originated())
+                                    .unwrap_or(0);
+                                if let Some(node) = gnode.as_ref() {
+                                    if let Some(succ) = view.successor_node(i) {
+                                        let store = node.handoff_rumors();
+                                        if !store.is_empty() {
+                                            update_msgs += 1;
+                                            let _ = addrs[succ]
+                                                .send(PeerMsg::Gossip { rumors: store });
+                                        }
+                                    }
+                                }
+                                for (j, addr) in addrs.iter().enumerate() {
+                                    if j != i {
+                                        let _ = addr.send(PeerMsg::Leave {
+                                            from: i as u32,
+                                            rumors: own,
+                                        });
+                                    }
+                                }
+                            }
+                            // Crash-stop: no flush, no handoff, no Done —
+                            // dropping the mailbox is the silence the
+                            // survivors must detect and repair around.
+                            break;
+                        }
+                    }
+                    // Drain before detecting: a confirmation must never be
+                    // based on older knowledge than the mailbox holds — a
+                    // custodian that confirmed with the dead origin's
+                    // final flush still queued would broadcast an
+                    // undercounted Repair.
                     while let Ok(msg) = rx.try_recv() {
                         process!(msg);
                     }
+                    membership_tick!();
                     // compute locally, apply locally
                     let g = grad_fn(&w, grad_rng.next_u64());
                     let delta: Vec<f32> = g.iter().map(|x| -cfg.lr * x).collect();
                     add_delta(&mut w, &delta);
                     match &cfg.dissemination {
                         Dissemination::FullMesh => {
-                            // push the delta to all peers (model plane);
-                            // peers outlive every push — they cannot exit
-                            // before processing our Done, which trails all
-                            // of these sends in per-sender FIFO order
+                            // push the delta to all peers (model plane); a
+                            // send fails only into a departed peer's
+                            // dropped mailbox, and a departed peer applies
+                            // no further updates anyway
                             for (j, addr) in addrs.iter().enumerate() {
                                 if j != i {
                                     update_msgs += 1;
@@ -277,13 +635,15 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     if step + 1 == cfg.steps_per_worker {
                         break;
                     }
-                    // fully-distributed barrier: sample the overlay
+                    // fully-distributed barrier: sample the overlay view
+                    // (evicted nodes are invisible, so a dead straggler
+                    // stops poisoning samples the moment it is confirmed)
                     loop {
-                        let pass = match view {
+                        let pass = match view_req {
                             ViewRequirement::None => true,
                             ViewRequirement::Sample(beta) => {
                                 let (peers, hops) =
-                                    ring.sample_nodes(i, beta, &mut ctrl_rng);
+                                    view.sample_nodes(i, beta, &mut ctrl_rng);
                                 control_msgs += hops + 2 * peers.len() as u64;
                                 peers.iter().all(|&p| {
                                     let sp = steps[p].load(Ordering::Acquire);
@@ -301,109 +661,162 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         // keep relaying while blocked so peers' deltas
                         // are not parked in our outbox
                         flush_gossip!();
+                        membership_tick!();
                         std::thread::sleep(cfg.poll);
                     }
                 }
 
-                // Signal completion (no more originations from us) with
-                // our exact origination count, then drain until every
-                // expected Done sender reported in and — in gossip mode —
-                // every announced rumor has been applied.
-                let own_rumors = gnode.as_ref().map(|nd| nd.originated()).unwrap_or(0);
-                expected[i] = own_rumors;
-                for (j, addr) in addrs.iter().enumerate() {
-                    if j != i {
-                        let _ = addr.send(PeerMsg::Done {
-                            from: i as u32,
-                            rumors: own_rumors,
-                        });
+                let mut dropped_deltas = 0u64;
+                let mut missing_total = 0u64;
+                let mut discarded_total = 0u64;
+                if !departed {
+                    // Signal completion (no more originations from us)
+                    // with our exact origination count, then drain until
+                    // every origin is accounted for — by its Done/Leave,
+                    // or by a confirmed death plus the custodian's
+                    // count — and every announced rumor is applied.
+                    let own_rumors =
+                        gnode.as_ref().map(|nd| nd.originated()).unwrap_or(0);
+                    expected[i] = own_rumors;
+                    for (j, addr) in addrs.iter().enumerate() {
+                        if j != i {
+                            let _ = addr.send(PeerMsg::Done {
+                                from: i as u32,
+                                rumors: own_rumors,
+                            });
+                        }
                     }
-                }
-                let deadline = Instant::now() + cfg.drain_timeout;
-                // Ingest the whole backlog before relaying, then pace the
-                // next tick at the poll interval: batching stays dense
-                // (many rumors per physical message) and relay traffic
-                // settles into synchronous-like rounds instead of one
-                // flush per arriving message.
-                macro_rules! ingest_backlog_and_relay {
-                    ($first:expr) => {{
-                        process!($first);
+                    let deadline = Instant::now() + cfg.drain_timeout;
+                    // Shorter waits when the detector is on: the drain is
+                    // where crash confirmation usually lands, so it must
+                    // wake often enough to run the timers.
+                    let drain_wait = if detector.is_some() {
+                        Duration::from_millis(20)
+                    } else {
+                        Duration::from_millis(100)
+                    };
+                    // Ingest the whole backlog before relaying, then pace
+                    // the next tick at the poll interval: batching stays
+                    // dense and relay traffic settles into synchronous-
+                    // like rounds instead of one flush per message.
+                    macro_rules! ingest_backlog_and_relay {
+                        ($first:expr) => {{
+                            process!($first);
+                            while let Ok(m) = rx.try_recv() {
+                                process!(m);
+                            }
+                            flush_gossip!();
+                            std::thread::sleep(cfg.poll);
+                        }};
+                    }
+                    // Exact exit condition — no quiet-window guesswork:
+                    // * full mesh: every peer Done, departed, or confirmed
+                    //   dead (per-sender FIFO: a peer's Done follows all
+                    //   its deltas);
+                    // * gossip: the same, AND every announced rumor
+                    //   applied, AND no confirmed death still awaiting its
+                    //   custodian's count. Liveness is structural: a live
+                    //   peer exits only after relaying everything it
+                    //   applied, and chain gaps left by the dead are
+                    //   re-sent around by their ring neighbours.
+                    macro_rules! drain_complete {
+                        () => {{
+                            (0..n).all(|j| {
+                                done[j]
+                                    || detector
+                                        .as_ref()
+                                        .is_some_and(|d| d.is_dead(j))
+                            }) && repair_pending.iter().all(|&p| !p)
+                                && match &gnode {
+                                    None => true,
+                                    Some(node) => (0..n).all(|j| {
+                                        node.applied_count(j as u32) >= expected[j]
+                                    }),
+                                }
+                        }};
+                    }
+                    loop {
+                        // Same order as the step loop: ingest the whole
+                        // backlog (and relay it) before the detector may
+                        // confirm anything, so custody counts always
+                        // include every flush the dead origin ever
+                        // delivered here.
                         while let Ok(m) = rx.try_recv() {
                             process!(m);
                         }
                         flush_gossip!();
-                        std::thread::sleep(cfg.poll);
-                    }};
-                }
-                let mut dropped_deltas = 0u64;
-                loop {
-                    // Exact exit condition — no quiet-window guesswork:
-                    // * full mesh: all Dones in ⇒ drained (per-sender
-                    //   FIFO: a peer's Done follows all its deltas);
-                    // * gossip: all Dones in AND every announced rumor
-                    //   applied. Liveness is structural: a peer exits
-                    //   only after it has applied and relayed everything,
-                    //   so every rumor still owed to us is either in our
-                    //   mailbox or behind a live relayer.
-                    let all_done = done.iter().all(|&d| d);
-                    let complete = all_done
-                        && match &gnode {
-                            None => true,
-                            Some(node) => (0..n).all(|j| {
-                                node.applied_count(j as u32) >= expected[j]
-                            }),
-                        };
-                    if complete {
-                        break;
-                    }
-                    let left = deadline.saturating_duration_since(Instant::now());
-                    if left.is_zero() {
-                        // Loud failure: name the silent peers / missing
-                        // rumors and count exactly what this timeout
-                        // discards (a hang here means a peer died).
-                        let missing_done: Vec<usize> = done
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, &d)| !d)
-                            .map(|(j, _)| j)
-                            .collect();
-                        let missing_rumors: u64 = match &gnode {
-                            None => 0,
-                            Some(node) => (0..n)
-                                .map(|j| {
-                                    u64::from(expected[j]).saturating_sub(
-                                        u64::from(node.applied_count(j as u32)),
-                                    )
-                                })
-                                .sum(),
-                        };
-                        let mut discarded = 0u64;
-                        while let Ok(msg) = rx.try_recv() {
-                            match msg {
-                                PeerMsg::Delta { .. } => discarded += 1,
-                                PeerMsg::Gossip { rumors } => {
-                                    discarded += rumors.len() as u64
+                        membership_tick!();
+                        if drain_complete!() {
+                            let excused = (0..n).any(|j| !done[j]);
+                            if excused && detector.is_some() {
+                                // About to exit on a death excuse: run one
+                                // ungated observation first — a heartbeat
+                                // since the last throttled pass disproves
+                                // the confirmation, and the drain must
+                                // keep waiting for the real Done.
+                                next_detect = 0;
+                                membership_tick!();
+                                if drain_complete!() {
+                                    break;
                                 }
-                                PeerMsg::Done { from, rumors } => {
-                                    done[from as usize] = true;
-                                    expected[from as usize] = rumors;
-                                }
+                            } else {
+                                break;
                             }
                         }
-                        dropped_deltas = missing_rumors.max(discarded);
-                        log_warn!(
-                            "p2p-{i}: drain timed out after {:?} (no Done from \
-                             {missing_done:?}; {missing_rumors} expected rumor(s) \
-                             never arrived; {discarded} queued message(s) \
-                             discarded) — the reported replica is missing updates",
-                            cfg.drain_timeout
-                        );
-                        break;
-                    }
-                    if let Ok(msg) =
-                        rx.recv_timeout(left.min(Duration::from_millis(100)))
-                    {
-                        ingest_backlog_and_relay!(msg);
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            // Loud failure: name the silent peers / missing
+                            // rumors and count exactly what this timeout
+                            // discards, keeping the two loss kinds apart
+                            // (repair failures vs queue discards).
+                            let missing_done: Vec<usize> = (0..n)
+                                .filter(|&j| {
+                                    !done[j]
+                                        && !detector
+                                            .as_ref()
+                                            .is_some_and(|d| d.is_dead(j))
+                                })
+                                .collect();
+                            let missing_rumors: u64 = match &gnode {
+                                None => 0,
+                                Some(node) => (0..n)
+                                    .map(|j| {
+                                        u64::from(expected[j]).saturating_sub(
+                                            u64::from(node.applied_count(j as u32)),
+                                        )
+                                    })
+                                    .sum(),
+                            };
+                            let mut discarded = 0u64;
+                            while let Ok(msg) = rx.try_recv() {
+                                match msg {
+                                    PeerMsg::Delta { .. } => discarded += 1,
+                                    PeerMsg::Gossip { rumors }
+                                    | PeerMsg::Repair { store: rumors, .. } => {
+                                        discarded += rumors.len() as u64
+                                    }
+                                    PeerMsg::Done { from, rumors }
+                                    | PeerMsg::Leave { from, rumors } => {
+                                        done[from as usize] = true;
+                                        expected[from as usize] = rumors;
+                                    }
+                                }
+                            }
+                            missing_total = missing_rumors;
+                            discarded_total = discarded;
+                            dropped_deltas = missing_rumors.max(discarded);
+                            log_warn!(
+                                "p2p-{i}: drain timed out after {:?} (no Done from \
+                                 {missing_done:?}; {missing_rumors} expected rumor(s) \
+                                 never arrived; {discarded} queued message(s) \
+                                 discarded) — the reported replica is missing updates",
+                                cfg.drain_timeout
+                            );
+                            break;
+                        }
+                        if let Ok(msg) = rx.recv_timeout(left.min(drain_wait)) {
+                            ingest_backlog_and_relay!(msg);
+                        }
                     }
                 }
 
@@ -425,6 +838,12 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     dup_rumors,
                     rumor_copies,
                     dropped_deltas,
+                    missing_rumors: missing_total,
+                    discarded_msgs: discarded_total,
+                    confirmed_dead,
+                    repair_msgs,
+                    repaired_rumors,
+                    departed,
                 }
             })
         })
@@ -432,7 +851,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
 
     let mut report = EngineReport::default();
     let mut replicas: Vec<Vec<f32>> = Vec::with_capacity(n);
-    for wk in workers {
+    for (i, wk) in workers.into_iter().enumerate() {
         let (addr, handle) = wk.into_parts();
         drop(addr);
         let out = handle.join().expect("p2p worker panicked");
@@ -442,12 +861,22 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         report.dup_rumors += out.dup_rumors;
         report.rumor_copies += out.rumor_copies;
         report.dropped_deltas += out.dropped_deltas;
+        report.missing_rumors += out.missing_rumors;
+        report.discarded_msgs += out.discarded_msgs;
+        report.confirmed_dead += out.confirmed_dead;
+        report.repair_msgs += out.repair_msgs;
+        report.repaired_rumors += out.repaired_rumors;
+        if out.departed {
+            report.departed.push(i);
+        }
         replicas.push(out.w);
     }
 
     report.steps = steps.iter().map(|s| s.load(Ordering::Acquire)).collect();
     report.wall_secs = start.elapsed().as_secs_f64();
-    report.model = replicas.first().cloned().unwrap_or_default();
+    // The headline model comes from a worker that saw the run through.
+    let first_live = (0..n).find(|j| !report.departed.contains(j)).unwrap_or(0);
+    report.model = replicas.get(first_live).cloned().unwrap_or_default();
     report.replicas = replicas;
     report
 }
@@ -492,7 +921,14 @@ mod tests {
         // even at n=6 (mesh would be 6·12·5 = 360)
         assert!(r.update_msgs > 0);
         assert_eq!(r.dropped_deltas, 0, "no deltas may be dropped");
+        assert_eq!(r.missing_rumors, 0);
+        assert_eq!(r.discarded_msgs, 0);
         assert_eq!(r.replicas.len(), 6);
+        // no churn: the membership plane confirms nothing and repairs
+        // nothing, it only watches
+        assert_eq!(r.confirmed_dead, 0);
+        assert_eq!(r.repair_msgs, 0);
+        assert!(r.departed.is_empty());
     }
 
     #[test]
@@ -601,5 +1037,67 @@ mod tests {
         assert_eq!(r.dropped_deltas, 0);
         assert_eq!(r.applied_rumors, 5 * 2 * 4);
         assert_eq!(r.steps, vec![8; 5]);
+    }
+
+    #[test]
+    fn graceful_leave_mid_run_drains_without_timeout() {
+        // Worker 2 leaves gracefully at step 3 of 10: it hands its store
+        // to its successor and announces Leave, so survivors finish and
+        // drain with zero drops — and nobody waits on drain_timeout.
+        let cfg = P2pConfig {
+            n_workers: 5,
+            steps_per_worker: 10,
+            method: Method::Pssp { sample: 2, staleness: 3 },
+            dim: 12,
+            lr: 0.02,
+            seed: 41,
+            churn: vec![Departure { worker: 2, at_step: 3, graceful: true }],
+            ..P2pConfig::default()
+        };
+        let (grad, _) = linear_grad_fn(cfg.dim, 43);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        assert_eq!(r.departed, vec![2]);
+        assert_eq!(r.steps[2], 3);
+        for j in [0usize, 1, 3, 4] {
+            assert_eq!(r.steps[j], 10, "survivor {j} did not finish");
+        }
+        assert_eq!(r.dropped_deltas, 0);
+        assert_eq!(r.missing_rumors, 0);
+        // graceful: announced via Leave, nothing for the detector to do
+        assert_eq!(r.confirmed_dead, 0);
+        assert!(
+            r.wall_secs < cfg.drain_timeout.as_secs_f64() / 3.0,
+            "drain stalled: {}s",
+            r.wall_secs
+        );
+    }
+
+    #[test]
+    fn membership_disabled_without_churn_changes_nothing() {
+        let mk = |membership| P2pConfig {
+            n_workers: 5,
+            steps_per_worker: 6,
+            method: Method::Asp,
+            dim: 8,
+            lr: 0.5,
+            seed: 53,
+            membership,
+            ..P2pConfig::default()
+        };
+        // Dyadic, model-independent gradients: replicas are exactly the
+        // delta sum, so both runs must agree bitwise.
+        let grad: GradFn = Arc::new(|_w, seed| {
+            (0..8).map(|j| (((seed ^ j as u64) % 9) as f32 - 4.0) * 0.25).collect()
+        });
+        let with = run(&mk(Some(MembershipConfig::default())), vec![0.0; 8], grad.clone());
+        let without = run(&mk(None), vec![0.0; 8], grad);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (a, b) in with.replicas.iter().zip(&without.replicas) {
+            assert_eq!(bits(a), bits(b));
+        }
+        assert_eq!(with.applied_rumors, without.applied_rumors);
+        assert_eq!(with.confirmed_dead, 0);
+        assert_eq!(with.repair_msgs, 0);
+        assert_eq!(with.repaired_rumors, 0);
     }
 }

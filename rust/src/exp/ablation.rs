@@ -146,7 +146,7 @@ pub fn ext_churn(opts: &ExpOpts) -> Report {
         for &m in &methods {
             let cfg = ClusterConfig {
                 churn: (rate > 0.0)
-                    .then_some(ChurnConfig { join_rate: rate, leave_rate: rate }),
+                    .then_some(ChurnConfig { join_rate: rate, leave_rate: rate, crash_rate: 0.0 }),
                 ..sgd_cluster(opts)
             };
             grid.push((cfg, m));

@@ -16,6 +16,7 @@
 //! `rust/tests/figures.rs`, and EXPERIMENTS.md records one full run.
 
 pub mod ablation;
+pub mod crash_churn;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -30,7 +31,19 @@ use anyhow::{bail, Result};
 
 pub use parallel::par_map;
 
+use crate::barrier::Method;
 use crate::util::json::{obj, Json};
+
+/// Methods that compose with the fully-distributed p2p engine (no
+/// global view available) — shared by every p2p-engine scenario so
+/// their coverage cannot silently diverge.
+pub fn p2p_methods(staleness: u64) -> Vec<Method> {
+    vec![
+        Method::Asp,
+        Method::Pbsp { sample: 3 },
+        Method::Pssp { sample: 3, staleness },
+    ]
+}
 
 /// Options shared by all experiments.
 #[derive(Debug, Clone)]
@@ -274,7 +287,7 @@ pub const ALL: &[&str] = &[
 /// Ablations + extensions beyond the paper (run via `actor exp ext`).
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
-    "ext_shards", "ext_p2p",
+    "ext_shards", "ext_p2p", "ext_crash",
 ];
 
 /// Run one experiment by id.
@@ -299,6 +312,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "ext_loss" => vec![ablation::ext_loss(opts)],
         "ext_shards" => vec![ablation::ext_shards(opts)],
         "ext_p2p" => vec![p2p_scale::ext_p2p(opts)],
+        "ext_crash" => vec![crash_churn::ext_crash(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

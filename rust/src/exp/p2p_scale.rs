@@ -14,22 +14,13 @@
 
 use std::sync::Arc;
 
-use crate::barrier::Method;
 use crate::engine::gossip::GossipConfig;
-use crate::engine::p2p::{self, Dissemination, P2pConfig};
-use crate::exp::{ExpOpts, Report};
+use crate::engine::membership::MembershipConfig;
+use crate::engine::p2p::{self, Departure, Dissemination, P2pConfig};
+use crate::exp::{p2p_methods, ExpOpts, Report};
 use crate::model::linear::{minibatch_grad_fn, Dataset};
 use crate::util::rng::Rng;
 use crate::util::stats::l2_dist;
-
-/// Methods that compose with the fully-distributed engine.
-fn p2p_methods(staleness: u64) -> Vec<Method> {
-    vec![
-        Method::Asp,
-        Method::Pbsp { sample: 3 },
-        Method::Pssp { sample: 3, staleness },
-    ]
-}
 
 pub fn ext_p2p(opts: &ExpOpts) -> Report {
     let mut rep = Report::new(
@@ -60,7 +51,20 @@ pub fn ext_p2p(opts: &ExpOpts) -> Report {
                         ttl: 6,
                     }),
                 ),
+                // Crash case: same gossip plane, one worker crash-stopped
+                // mid-run — failure detection + rumor repair are exercised
+                // on every push via the CI smoke profile, and the
+                // acceptance is unchanged: zero drops, prompt drain.
+                (
+                    "gossip+crash",
+                    Dissemination::Gossip(GossipConfig {
+                        fanout: 2,
+                        flush_every: 1,
+                        ttl: 6,
+                    }),
+                ),
             ] {
+                let crash = plane == "gossip+crash";
                 let cfg = P2pConfig {
                     n_workers: n,
                     steps_per_worker: steps,
@@ -69,6 +73,19 @@ pub fn ext_p2p(opts: &ExpOpts) -> Report {
                     dim,
                     seed: opts.seed,
                     dissemination,
+                    membership: Some(MembershipConfig {
+                        suspect_after: 250_000,
+                        confirm_after: 250_000,
+                    }),
+                    churn: if crash {
+                        vec![Departure {
+                            worker: n / 3,
+                            at_step: steps / 2,
+                            graceful: false,
+                        }]
+                    } else {
+                        Vec::new()
+                    },
                     ..P2pConfig::default()
                 };
                 let grad = minibatch_grad_fn(Arc::clone(&data), 32);
@@ -96,6 +113,12 @@ pub fn ext_p2p(opts: &ExpOpts) -> Report {
         "mesh_ratio = (n-1) / physical update msgs per worker-step; the \
          acceptance bar is >= 5x at n=256 while gossip keeps learning \
          (norm_error well under 1 and no dropped deltas)",
+    );
+    rep.note(
+        "gossip+crash: one worker crash-stops mid-run (no Done, no \
+         handoff) — the membership plane must detect it, reclaim its \
+         announced rumors from its ring successor's store, and drain the \
+         survivors with zero drops in a fraction of drain_timeout",
     );
     rep.note(
         "gossip control msgs include overlay routing for shortcut target \
@@ -128,20 +151,31 @@ mod tests {
     fn gossip_beats_mesh_on_messages_and_still_learns() {
         let opts = ExpOpts { quick: true, seed: 42, ..ExpOpts::default() };
         let rep = ext_p2p(&opts);
-        // rows come in (mesh, gossip) pairs per (n, method)
-        assert_eq!(rep.rows.len() % 2, 0);
+        // rows come in (mesh, gossip, gossip+crash) triples per (n, method)
+        assert_eq!(rep.rows.len() % 3, 0);
         let mut checked_large = false;
-        for pair in rep.rows.chunks(2) {
-            let (mesh, gossip) = (&pair[0], &pair[1]);
+        for triple in rep.rows.chunks(3) {
+            let (mesh, gossip, crash) = (&triple[0], &triple[1], &triple[2]);
             assert_eq!(s(&mesh[2]), "mesh");
             assert_eq!(s(&gossip[2]), "gossip");
+            assert_eq!(s(&crash[2]), "gossip+crash");
             let n = num(&mesh[0]);
             // the mesh really is the n(n-1) broadcast
             assert_eq!(num(&mesh[4]), n - 1.0, "mesh sends n-1 per step");
             // the deterministic drain (Done carries origination counts)
-            // guarantees zero drops on both planes at any scale
+            // guarantees zero drops on both planes at any scale — and the
+            // membership plane extends the guarantee to the crash case
             assert_eq!(num(&mesh[8]), 0.0, "mesh dropped deltas at n={n}");
             assert_eq!(num(&gossip[8]), 0.0, "gossip dropped deltas at n={n}");
+            assert_eq!(num(&crash[8]), 0.0, "crash case dropped deltas at n={n}");
+            // the crash case must finish well under the 30s drain_timeout
+            // (failure detection + repair, not the stall-out safety net)
+            assert!(
+                num(&crash[10]) < 10.0,
+                "crash case drained in {}s at n={n} — suspiciously close \
+                 to drain_timeout",
+                num(&crash[10])
+            );
             if n >= 64.0 {
                 checked_large = true;
                 assert!(

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use actor_psp::barrier::Method;
 use actor_psp::cli::{Args, USAGE};
-use actor_psp::config::Config;
+use actor_psp::config::{parse_departure, Config};
 use actor_psp::engine::gossip::GossipConfig;
 use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::paramserver::{self, PsConfig};
@@ -28,7 +28,7 @@ fn main() {
         print!("{USAGE}");
         return;
     }
-    let args = match Args::parse(argv, &["quick", "sgd", "full-mesh"]) {
+    let args = match Args::parse(argv, &["quick", "sgd", "full-mesh", "no-membership"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -96,6 +96,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_sim(args: &Args) -> Result<()> {
     args.check_known(&[
         "method", "nodes", "duration", "seed", "sgd", "config", "quick",
+        "crash-rate", "detect",
     ])?;
     // config file first, CLI flags override
     let mut cluster = match args.get("config") {
@@ -124,11 +125,21 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if args.switch("sgd") && cluster.sgd.is_none() {
         cluster.sgd = Some(SgdConfig::default());
     }
+    if let Some(rate) = args.parse_flag::<f64>("crash-rate")? {
+        let mut churn = cluster.churn.unwrap_or_default();
+        churn.crash_rate = rate;
+        let any = churn.join_rate > 0.0 || churn.leave_rate > 0.0 || churn.crash_rate > 0.0;
+        cluster.churn = any.then_some(churn);
+    }
+    if let Some(secs) = args.parse_flag::<f64>("detect")? {
+        cluster.crash_detect_secs = secs;
+    }
 
     println!(
         "simulating {} nodes for {:.0}s under {method} (seed {})",
         cluster.n_nodes, cluster.duration, cluster.seed
     );
+    let detect_secs = cluster.crash_detect_secs;
     let r = Simulator::new(cluster, method).run();
     let steps: Vec<f64> = r.final_steps.iter().map(|&s| s as f64).collect();
     let s = Summary::of(&steps);
@@ -149,6 +160,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
         r.events,
         r.events as f64 / r.wall_secs.max(1e-9) / 1e6,
     );
+    if r.crashes > 0 {
+        println!(
+            "churn: {} crash-stop(s) (detect latency {:.2}s), {} departure(s) total",
+            r.crashes,
+            detect_secs,
+            r.churn_victims.len(),
+        );
+    }
     if let Some(e) = r.final_error() {
         println!("final normalised model error: {e:.4}");
     }
@@ -238,7 +257,8 @@ fn cmd_ps(args: &Args) -> Result<()> {
 fn cmd_p2p(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "workers", "steps", "method", "dim", "lr", "seed", "fanout",
-        "flush", "ttl", "full-mesh",
+        "flush", "ttl", "full-mesh", "crash", "leave", "suspect-ms",
+        "confirm-ms", "no-membership",
     ])?;
     // config file first, CLI flags override
     let mut cfg = match args.get("config") {
@@ -289,6 +309,43 @@ fn cmd_p2p(args: &Args) -> Result<()> {
             cfg.dissemination = Dissemination::Gossip(g);
         }
     }
+    // Membership plane: threshold overrides, or off entirely. The flags
+    // never silently re-enable a plane the config file disabled, and the
+    // positivity rule matches the [membership] section's.
+    if args.switch("no-membership") {
+        cfg.membership = None;
+    } else {
+        let suspect = args.parse_flag::<f64>("suspect-ms")?;
+        let confirm = args.parse_flag::<f64>("confirm-ms")?;
+        if suspect.is_some() || confirm.is_some() {
+            let Some(mut m) = cfg.membership.clone() else {
+                bail!(
+                    "--suspect-ms/--confirm-ms have no effect while the \
+                     config file sets [membership] enabled = false"
+                );
+            };
+            if let Some(v) = suspect {
+                if v <= 0.0 {
+                    bail!("--suspect-ms must be positive");
+                }
+                m.suspect_after = (v * 1000.0) as u64;
+            }
+            if let Some(v) = confirm {
+                if v <= 0.0 {
+                    bail!("--confirm-ms must be positive");
+                }
+                m.confirm_after = (v * 1000.0) as u64;
+            }
+            cfg.membership = Some(m);
+        }
+    }
+    // Scripted departures (crash-stop / graceful leave).
+    if let Some(s) = args.get("crash") {
+        cfg.churn.push(parse_departure(s, false)?);
+    }
+    if let Some(s) = args.get("leave") {
+        cfg.churn.push(parse_departure(s, true)?);
+    }
 
     let mut rng = Rng::new(cfg.seed ^ 0xD157);
     let rows = (cfg.dim * 8).clamp(256, 4096);
@@ -321,9 +378,18 @@ fn cmd_p2p(args: &Args) -> Result<()> {
         r.control_msgs,
     );
     println!(
-        "rumors: {} applied, {} dup-dropped, {} copies; {} late delta(s) dropped",
+        "rumors: {} applied, {} dup-dropped, {} copies; {} late delta(s) dropped \
+         ({} missing, {} discarded)",
         r.applied_rumors, r.dup_rumors, r.rumor_copies, r.dropped_deltas,
+        r.missing_rumors, r.discarded_msgs,
     );
+    if !r.departed.is_empty() || r.confirmed_dead > 0 {
+        println!(
+            "membership: departed {:?}; {} death confirmation(s), {} repair \
+             msg(s), {} rumor(s) repaired",
+            r.departed, r.confirmed_dead, r.repair_msgs, r.repaired_rumors,
+        );
+    }
     println!(
         "error {:.4} -> {:.4}  wall {:.3}s",
         init_err,

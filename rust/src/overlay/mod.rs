@@ -114,13 +114,18 @@ impl Ring {
     /// — churn-safe: high join/leave rates no longer cost a full
     /// membership scan per departure.
     pub fn leave(&mut self, node: usize) -> bool {
-        match self.ids.remove(&node) {
-            Some(id) => {
-                self.members.remove(&id);
-                true
-            }
-            None => false,
-        }
+        self.evict(node).is_some()
+    }
+
+    /// Evict a node (crash-fault membership plane), returning the ring id
+    /// it vacated — the position the membership layer needs to find the
+    /// dead node's custodian (`successor(old_id + 1)`) after the entry is
+    /// gone. Same O(log n) removal as [`Ring::leave`]; `None` when the
+    /// node was not a member (eviction is idempotent across observers).
+    pub fn evict(&mut self, node: usize) -> Option<RingId> {
+        let id = self.ids.remove(&node)?;
+        self.members.remove(&id);
+        Some(id)
     }
 
     /// The ring id of a registered node (None if not a member). Reads the
@@ -457,6 +462,21 @@ mod tests {
         one.join(0);
         assert_eq!(one.successor_node(0), None);
         assert_eq!(one.successor_node(9), None);
+    }
+
+    #[test]
+    fn evict_returns_vacated_position_once() {
+        let mut r = Ring::with_nodes(8, 13);
+        let id3 = r.ring_id_of(3).unwrap();
+        assert_eq!(r.evict(3), Some(id3));
+        assert_eq!(r.evict(3), None, "eviction is idempotent");
+        assert_eq!(r.len(), 7);
+        // The vacated position routes to the next live node — the
+        // custodian the membership plane hands the dead node's rumors to.
+        let (_, heir) = r.successor(id3.wrapping_add(1)).unwrap();
+        assert_ne!(heir, 3);
+        // Rejoining restores the identical id (pure function of index).
+        assert_eq!(r.join(3), id3);
     }
 
     #[test]

@@ -35,8 +35,16 @@ pub enum EventKind {
     SampleTimeline,
     /// Churn: a new node joins.
     Join,
-    /// Churn: a random node leaves.
+    /// Churn: a random node leaves gracefully — the membership plane
+    /// observes the departure immediately (explicit goodbye).
     Leave,
+    /// Churn: a random node crash-stops. Unlike [`EventKind::Leave`] the
+    /// victim stays in the step table — poisoning samples and pinning the
+    /// global minimum — until failure detection confirms the death.
+    Crash,
+    /// The failure detector's suspect/confirm timeline elapsed for a
+    /// crashed node: remove it from the tracked membership.
+    ConfirmDead { node: usize },
 }
 
 /// A scheduled event.

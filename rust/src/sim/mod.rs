@@ -90,13 +90,23 @@ impl TimeDist {
     }
 }
 
-/// Churn model: Poisson join/leave processes.
-#[derive(Debug, Clone, Copy)]
+/// Churn model: Poisson join/leave/crash processes.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct ChurnConfig {
     /// Mean joins per simulated second.
     pub join_rate: f64,
-    /// Mean leaves per simulated second.
+    /// Mean graceful leaves per simulated second (explicit goodbye: the
+    /// membership plane removes the node immediately).
     pub leave_rate: f64,
+    /// Mean crash-stops per simulated second. A crash victim goes silent
+    /// but *stays in the step table* — sampled barriers keep observing
+    /// its frozen step and BSP/SSP keep waiting on it — until the
+    /// failure detector's suspect/confirm timeline
+    /// ([`ClusterConfig::crash_detect_secs`]) elapses and a
+    /// [`EventKind::ConfirmDead`] removes it. This is the simulator-side
+    /// model of the engine's membership plane
+    /// ([`crate::engine::membership`]).
+    pub crash_rate: f64,
 }
 
 /// Straggler injection (paper Fig 2): a fraction of nodes run `slowdown`×
@@ -168,6 +178,11 @@ pub struct ClusterConfig {
     /// Back-off before a blocked sampled-barrier worker re-samples.
     pub recheck_interval: f64,
     pub churn: Option<ChurnConfig>,
+    /// Failure-detection latency for crash-stop churn: seconds between a
+    /// crash and its `ConfirmDead` (the suspect + confirm timeline of the
+    /// engine's SWIM-style detector, collapsed to one constant at
+    /// simulation scale).
+    pub crash_detect_secs: f64,
     /// Record timelines every this many simulated seconds.
     pub sample_interval: f64,
     pub sgd: Option<SgdConfig>,
@@ -187,6 +202,7 @@ impl Default for ClusterConfig {
             loss_rate: 0.0,
             recheck_interval: 0.25,
             churn: None,
+            crash_detect_secs: 1.0,
             sample_interval: 5.0,
             sgd: None,
         }
@@ -214,6 +230,13 @@ pub struct SimResult {
     pub total_advances: u64,
     /// Discrete events processed (simulator throughput metric).
     pub events: u64,
+    /// Crash-stops executed (`ChurnConfig::crash_rate` victims).
+    pub crashes: u64,
+    /// Departed nodes (graceful leaves and crash-stops) in victim-pick
+    /// order — the seeded churn trajectory the golden tests pin, so an
+    /// enumeration-order change in victim selection is caught instead of
+    /// silently shifting every seeded figure.
+    pub churn_victims: Vec<u32>,
     /// Host wall-clock seconds spent simulating (perf metric).
     pub wall_secs: f64,
 }
@@ -349,7 +372,8 @@ impl Simulator {
             schedule(&mut queue, horizon, tick, EventKind::SampleTimeline);
             tick += cfg.sample_interval;
         }
-        // Churn processes.
+        // Churn processes. Crash scheduling draws only when crash_rate is
+        // set, so pre-membership configurations replay bit-identically.
         if let Some(churn) = cfg.churn {
             if churn.join_rate > 0.0 {
                 let t = rng.exponential(1.0 / churn.join_rate);
@@ -358,6 +382,10 @@ impl Simulator {
             if churn.leave_rate > 0.0 {
                 let t = rng.exponential(1.0 / churn.leave_rate);
                 schedule(&mut queue, horizon, t, EventKind::Leave);
+            }
+            if churn.crash_rate > 0.0 {
+                let t = rng.exponential(1.0 / churn.crash_rate);
+                schedule(&mut queue, horizon, t, EventKind::Crash);
             }
         }
 
@@ -371,6 +399,8 @@ impl Simulator {
         let mut control_msgs: u64 = 0;
         let mut total_advances: u64 = 0;
         let mut events: u64 = 0;
+        let mut crashes: u64 = 0;
+        let mut churn_victims: Vec<u32> = Vec::new();
         let mut updates_timeline = Vec::new();
         let mut error_timeline = Vec::new();
 
@@ -475,22 +505,70 @@ impl Simulator {
                         let victims = tracker.len();
                         let k = rng.next_below(victims as u64) as usize;
                         let victim = tracker.active_id_at(k);
-                        nodes[victim].status = Status::Gone;
-                        if let Some(s) = sgd.as_mut() {
-                            if nodes[victim].pending == 0 {
-                                s.store.unpin(nodes[victim].version);
-                                nodes[victim].version = NO_VERSION;
+                        // A crashed-but-unconfirmed node is still in the
+                        // active list; it cannot leave twice.
+                        if nodes[victim].status != Status::Gone {
+                            churn_victims.push(victim as u32);
+                            nodes[victim].status = Status::Gone;
+                            if let Some(s) = sgd.as_mut() {
+                                if nodes[victim].pending == 0 {
+                                    s.store.unpin(nodes[victim].version);
+                                    nodes[victim].version = NO_VERSION;
+                                }
                             }
-                        }
-                        if let Some(new_min) = tracker.leave(victim) {
-                            release_blocked(
-                                new_min, t, &mut blocked_global, &mut queue,
-                            );
+                            if let Some(new_min) = tracker.leave(victim) {
+                                release_blocked(
+                                    new_min, t, &mut blocked_global, &mut queue,
+                                );
+                            }
                         }
                     }
                     if let Some(churn) = cfg.churn {
                         let next = t + rng.exponential(1.0 / churn.leave_rate);
                         schedule(&mut queue, horizon, next, EventKind::Leave);
+                    }
+                }
+                EventKind::Crash => {
+                    // Same uniform victim pick as Leave, but the tracker
+                    // keeps the victim: its frozen step poisons samples
+                    // and pins the global minimum until the failure
+                    // detector confirms the death — the realistic stall a
+                    // crash inflicts on synchronous-parallel barriers.
+                    if tracker.len() > 1 {
+                        let victims = tracker.len();
+                        let k = rng.next_below(victims as u64) as usize;
+                        let victim = tracker.active_id_at(k);
+                        if nodes[victim].status != Status::Gone {
+                            churn_victims.push(victim as u32);
+                            crashes += 1;
+                            nodes[victim].status = Status::Gone;
+                            let confirm = EventKind::ConfirmDead { node: victim };
+                            let at = t + cfg.crash_detect_secs;
+                            schedule(&mut queue, horizon, at, confirm);
+                        }
+                    }
+                    if let Some(churn) = cfg.churn {
+                        let next = t + rng.exponential(1.0 / churn.crash_rate);
+                        schedule(&mut queue, horizon, next, EventKind::Crash);
+                    }
+                }
+                EventKind::ConfirmDead { node } => {
+                    // Suspect/confirm elapsed: the membership plane
+                    // removes the victim, releasing anything its frozen
+                    // step was blocking.
+                    if tracker.is_active(node) {
+                        if let Some(s) = sgd.as_mut() {
+                            let st = &mut nodes[node];
+                            if st.pending == 0 && st.version != NO_VERSION {
+                                s.store.unpin(st.version);
+                                st.version = NO_VERSION;
+                            }
+                        }
+                        if let Some(new_min) = tracker.leave(node) {
+                            release_blocked(
+                                new_min, t, &mut blocked_global, &mut queue,
+                            );
+                        }
                     }
                 }
                 EventKind::Release { node } => {
@@ -520,6 +598,8 @@ impl Simulator {
             control_msgs,
             total_advances,
             events,
+            crashes,
+            churn_victims,
             wall_secs: start.elapsed().as_secs_f64(),
         }
     }
@@ -858,7 +938,7 @@ mod tests {
     #[test]
     fn churn_keeps_running() {
         let cfg = ClusterConfig {
-            churn: Some(ChurnConfig { join_rate: 0.5, leave_rate: 0.5 }),
+            churn: Some(ChurnConfig { join_rate: 0.5, leave_rate: 0.5, crash_rate: 0.0 }),
             ..tiny_cfg(30, 13)
         };
         for m in Method::paper_five(5, 4) {
@@ -871,12 +951,80 @@ mod tests {
     #[test]
     fn churn_with_sgd_reclaims_departed_pins() {
         let cfg = ClusterConfig {
-            churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0 }),
+            churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0, crash_rate: 0.0 }),
             sgd: Some(SgdConfig { dim: 40, ..SgdConfig::default() }),
             ..tiny_cfg(20, 17)
         };
         let r = run(cfg, Method::Pssp { sample: 4, staleness: 4 });
         assert!(r.total_advances > 0);
+        assert!(r.final_error().is_some());
+    }
+
+    #[test]
+    fn crash_churn_confirms_victims_and_keeps_running() {
+        let cfg = ClusterConfig {
+            churn: Some(ChurnConfig {
+                join_rate: 0.5,
+                leave_rate: 0.0,
+                crash_rate: 0.5,
+            }),
+            crash_detect_secs: 0.5,
+            ..tiny_cfg(30, 21)
+        };
+        for m in Method::paper_five(5, 4) {
+            let r = run(cfg.clone(), m);
+            assert!(r.crashes > 0, "{m}: no crash fired in 20s at 0.5/s");
+            assert_eq!(r.crashes as usize, r.churn_victims.len());
+            assert!(r.total_advances > 0, "{m}: no progress under crash churn");
+        }
+        // Seed-deterministic, including the victim stream.
+        let a = run(cfg.clone(), Method::Pssp { sample: 5, staleness: 2 });
+        let b = run(cfg, Method::Pssp { sample: 5, staleness: 2 });
+        assert_eq!(a.churn_victims, b.churn_victims);
+        assert_eq!(a.final_steps, b.final_steps);
+    }
+
+    #[test]
+    fn slow_crash_detection_stalls_bsp_harder() {
+        // A crash victim pins the BSP minimum until ConfirmDead fires, so
+        // progress must be monotone in detection speed: the same crash
+        // schedule with a 5s suspect/confirm timeline can only do worse
+        // than with a 0.05s one.
+        let mk = |detect| ClusterConfig {
+            churn: Some(ChurnConfig {
+                join_rate: 0.0,
+                leave_rate: 0.0,
+                crash_rate: 0.4,
+            }),
+            crash_detect_secs: detect,
+            ..tiny_cfg(40, 22)
+        };
+        let fast = run(mk(0.05), Method::Bsp);
+        let slow = run(mk(5.0), Method::Bsp);
+        assert!(fast.crashes > 0 && slow.crashes > 0);
+        assert!(
+            fast.mean_progress() > slow.mean_progress(),
+            "fast-detect BSP {} should out-progress slow-detect {}",
+            fast.mean_progress(),
+            slow.mean_progress()
+        );
+    }
+
+    #[test]
+    fn crash_with_sgd_reclaims_pins_after_confirmation() {
+        let cfg = ClusterConfig {
+            churn: Some(ChurnConfig {
+                join_rate: 1.0,
+                leave_rate: 0.5,
+                crash_rate: 0.5,
+            }),
+            crash_detect_secs: 0.5,
+            sgd: Some(SgdConfig { dim: 40, ..SgdConfig::default() }),
+            ..tiny_cfg(20, 23)
+        };
+        let r = run(cfg, Method::Pssp { sample: 4, staleness: 4 });
+        assert!(r.total_advances > 0);
+        assert!(r.crashes > 0);
         assert!(r.final_error().is_some());
     }
 

@@ -138,6 +138,7 @@ fn prop_churn_preserves_invariants() {
         let churn = actor_psp::sim::ChurnConfig {
             join_rate: g.f64_in(0.1, 2.0),
             leave_rate: g.f64_in(0.1, 2.0),
+            crash_rate: 0.0,
         };
         let c = ClusterConfig {
             n_nodes: n,

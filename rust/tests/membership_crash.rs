@@ -1,0 +1,403 @@
+//! Crash-fault membership correctness: the properties that turn a
+//! crash-stop from "hope the timeout fires" into a structural guarantee.
+//!
+//! 1. **Exactly-once under crash-stop + repair** (property test): a
+//!    deterministic round-based harness drives the same [`GossipNode`] +
+//!    [`Membership`] state machines the threaded engine uses — per-node
+//!    overlay views, shared heartbeat table, suspect/confirm timers,
+//!    custody re-announcement and successor store re-send — and asserts
+//!    that after one crash-stop (messages into the dead node are *lost*,
+//!    not rerouted) every live peer still applies every rumor of every
+//!    live origin, plus every rumor the dead origin ever announced,
+//!    exactly once; and that every survivor learns the custodian's exact
+//!    count (the drain's termination evidence). Across fanout ∈ {1,2,4},
+//!    TTLs including 0, and crash rounds from "before the first
+//!    origination" to "long after quiescence".
+//! 2. **Threaded engine, crash mid-run**: with one peer crash-stopped
+//!    (no `Done`, no handoff), all survivors terminate without reaching
+//!    `drain_timeout`, report zero missing/dropped deltas, and — with
+//!    exactly-representable dyadic gradients — end bit-identical to the
+//!    analytic sum of every announced delta (survivors' full runs + the
+//!    victim's pre-crash steps). Bitwise equality *is* the exactly-once
+//!    proof: a lost or doubled delta shifts the sum.
+//! 3. **The counterfactual**: the same crash with the membership plane
+//!    disabled stalls every survivor to `drain_timeout` — the failure
+//!    mode this subsystem exists to remove.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use actor_psp::barrier::Method;
+use actor_psp::engine::gossip::{GossipConfig, GossipNode, Rumor};
+use actor_psp::engine::membership::{Membership, MembershipConfig};
+use actor_psp::engine::p2p::{self, Departure, Dissemination, P2pConfig};
+use actor_psp::engine::GradFn;
+use actor_psp::overlay::Ring;
+use actor_psp::testing::property;
+use actor_psp::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Synchronous round-based harness (crash-stop + membership plane)
+// ---------------------------------------------------------------------
+
+struct CrashOutcome {
+    /// applies[node][origin][seq] = times `node` applied that rumor.
+    applies: Vec<Vec<Vec<u32>>>,
+    /// Rumors each origin actually originated (the victim stops early).
+    originated: Vec<u32>,
+    /// The victim's announced-count as learned by each node (custodian
+    /// count or the Repair broadcast) — the drain's termination evidence.
+    announced: Vec<Option<u32>>,
+    live: Vec<bool>,
+    rounds: usize,
+    physical_msgs: u64,
+}
+
+/// Drive n nodes for `origin_rounds` rounds of one-origination-per-node,
+/// with a crash-stop at `(victim, round)`, then run to quiescence under
+/// the membership plane. Per round: crash → originate → heartbeat →
+/// flush (via each node's own overlay view) → deliver (messages to the
+/// dead node are LOST — no transport rerouting; repair is the membership
+/// plane's job) → detect/evict/repair. The loop ends only once every
+/// live observer has confirmed the death and the wires are quiet — the
+/// harness analogue of "all survivors drain without the timeout".
+fn run_crash_rounds(
+    n: usize,
+    cfg: &GossipConfig,
+    origin_rounds: usize,
+    crash: (usize, usize),
+    mem: &MembershipConfig,
+    seed: u64,
+) -> CrashOutcome {
+    let launch = Ring::with_nodes(n, seed);
+    let mut rng = Rng::new(seed ^ 0xD15E);
+    let mut nodes: Vec<GossipNode> =
+        (0..n).map(|i| GossipNode::with_handoff_store(i, n)).collect();
+    let mut members: Vec<Membership> = (0..n)
+        .map(|i| Membership::new(i, launch.clone(), 0, mem.clone()))
+        .collect();
+    let (victim, crash_round) = crash;
+    let mut live = vec![true; n];
+    let mut beats = vec![0u64; n];
+    let mut applies = vec![vec![vec![0u32; origin_rounds]; n]; n];
+    let mut originated = vec![0u32; n];
+    let mut announced: Vec<Option<u32>> = vec![None; n];
+    let mut in_flight: Vec<(usize, Vec<Rumor>)> = Vec::new();
+    // Custody announcements queued for next-round delivery: (dest, count, store).
+    let mut repairs: Vec<(usize, u32, Vec<Rumor>)> = Vec::new();
+    let mut physical_msgs = 0u64;
+    let mut round = 0usize;
+    loop {
+        // crash phase: the victim goes silent at the top of its round
+        if round == crash_round && live[victim] {
+            live[victim] = false;
+        }
+        // originate phase
+        if round < origin_rounds {
+            for (i, node) in nodes.iter_mut().enumerate() {
+                if live[i] {
+                    let payload: Arc<[f32]> = vec![i as f32 + 1.0].into();
+                    let seq = node.originate(payload, cfg);
+                    applies[i][i][seq as usize] += 1; // applied locally
+                    originated[i] += 1;
+                }
+            }
+        }
+        // heartbeat phase (the shared liveness table)
+        for (i, b) in beats.iter_mut().enumerate() {
+            if live[i] {
+                *b += 1;
+            }
+        }
+        // flush phase: routed by each node's OWN membership view, so an
+        // evicted victim stops receiving chain traffic
+        for i in 0..n {
+            if live[i] {
+                for (dest, batch) in nodes[i].flush(cfg, members[i].ring(), &mut rng) {
+                    physical_msgs += 1;
+                    in_flight.push((dest, batch));
+                }
+            }
+        }
+        // quiescence check — after flushing (empty wires here mean empty
+        // relay buffers everywhere) and only once every live observer
+        // holds the confirmation
+        let victim_settled = !live[victim]
+            && (0..n)
+                .filter(|&i| live[i])
+                .all(|i| members[i].detector.is_dead(victim));
+        let quiet = in_flight.is_empty() && repairs.is_empty();
+        if quiet && round >= origin_rounds && victim_settled {
+            break;
+        }
+        // delivery phase: messages into the dead node are lost
+        let batches = std::mem::take(&mut in_flight);
+        for (dest, batch) in batches {
+            if !live[dest] {
+                continue;
+            }
+            nodes[dest].receive(batch, |r| {
+                applies[dest][r.origin as usize][r.seq as usize] += 1;
+            });
+        }
+        let pending = std::mem::take(&mut repairs);
+        for (dest, count, store) in pending {
+            if !live[dest] {
+                continue;
+            }
+            announced[dest] = Some(announced[dest].map_or(count, |c| c.max(count)));
+            nodes[dest].receive(store, |r| {
+                applies[dest][r.origin as usize][r.seq as usize] += 1;
+            });
+        }
+        // detection phase: every live observer runs its suspect/confirm
+        // timers over the shared beat table
+        let now = (round + 1) as u64;
+        for i in 0..n {
+            if !live[i] {
+                continue;
+            }
+            let obs = members[i].detector.observe(now, |j| beats[j], |_| false);
+            for d in obs.dead {
+                let out = members[i].evict(d).expect("confirmations are reported once");
+                if out.custodian {
+                    // Custody repair: re-announce the dead origin's exact
+                    // count and re-inject its rumors from our store.
+                    let count = nodes[i].applied_count(d as u32);
+                    announced[i] = Some(announced[i].map_or(count, |c| c.max(count)));
+                    let store = nodes[i].rumors_of(d as u32);
+                    for j in 0..n {
+                        if j != i && live[j] {
+                            physical_msgs += 1;
+                            repairs.push((j, count, store.clone()));
+                        }
+                    }
+                }
+                if let Some(succ) = out.lost_successor {
+                    // Successor repair: re-send our full store across the
+                    // gap the dead node left in the chain.
+                    let store = nodes[i].handoff_rumors();
+                    if !store.is_empty() {
+                        physical_msgs += 1;
+                        in_flight.push((succ, store));
+                    }
+                }
+            }
+        }
+        round += 1;
+        let bound = 10 * n
+            + 10 * origin_rounds
+            + crash_round
+            + (mem.suspect_after + mem.confirm_after) as usize
+            + 100;
+        assert!(
+            round < bound,
+            "crash repair did not quiesce after {round} rounds \
+             (n={n} victim={victim} crash_round={crash_round})"
+        );
+    }
+    CrashOutcome { applies, originated, announced, live, rounds: round, physical_msgs }
+}
+
+#[test]
+fn prop_crash_stop_repairs_to_exactly_once_delivery() {
+    property("crash-stop membership repair exactly-once", 40, |g| {
+        let n = g.usize_in(3, 24);
+        let fanout = *g.choose(&[1usize, 2, 4]);
+        // TTL 0 included on purpose: after the gap is repaired,
+        // completeness must come from the successor chain alone.
+        let ttl = g.usize_in(0, 6) as u32;
+        let cfg = GossipConfig { fanout, flush_every: 1, ttl };
+        let origin_rounds = g.usize_in(1, 3);
+        let victim = g.usize_in(0, n - 1);
+        // From "before anything was announced" to "long after quiescence".
+        let crash_round = g.usize_in(0, 2 * n);
+        let mem = MembershipConfig {
+            suspect_after: g.u64_in(1, 3),
+            confirm_after: g.u64_in(1, 3),
+        };
+        let d = run_crash_rounds(
+            n, &cfg, origin_rounds, (victim, crash_round), &mem, g.seed(),
+        );
+        assert!(!d.live[victim]);
+        // Every rumor every origin *announced* (and the victim announced
+        // everything it originated — it flushed each round it lived)
+        // lands on every live node exactly once.
+        for (node, per_origin) in d.applies.iter().enumerate() {
+            if !d.live[node] {
+                continue;
+            }
+            for (origin, seqs) in per_origin.iter().enumerate() {
+                for (seq, &count) in
+                    seqs.iter().take(d.originated[origin] as usize).enumerate()
+                {
+                    assert_eq!(
+                        count, 1,
+                        "node {node} applied rumor ({origin}, {seq}) {count} \
+                         times (n={n} fanout={fanout} ttl={ttl} \
+                         rounds={origin_rounds} victim={victim} \
+                         crash_round={crash_round} mem={mem:?})"
+                    );
+                }
+            }
+        }
+        // Every survivor holds the custodian's exact count for the dead
+        // origin — the evidence the engine drain terminates on.
+        for i in 0..n {
+            if d.live[i] {
+                assert_eq!(
+                    d.announced[i],
+                    Some(d.originated[victim]),
+                    "node {i} never learned the dead origin's count \
+                     (n={n} victim={victim} crash_round={crash_round})"
+                );
+            }
+        }
+        assert!(d.physical_msgs > 0 || n == 1);
+        assert!(d.rounds > 0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Threaded engine: crash-stop mid-run, exact arithmetic
+// ---------------------------------------------------------------------
+
+const DIM: usize = 16;
+const WORKER_SEED_SALT: u64 = 0xABCD_EF01;
+
+/// Gradients that are (a) independent of the model, so arrival order
+/// cannot change later gradients, and (b) small dyadic rationals, so f32
+/// accumulation is exact and therefore order-independent.
+fn dyadic_grad() -> GradFn {
+    Arc::new(|_w, seed| {
+        (0..DIM)
+            .map(|j| (((seed ^ j as u64) % 15) as f32 - 7.0) * 0.25)
+            .collect()
+    })
+}
+
+/// The exact model every survivor must reach: init + Σ of every
+/// *announced* delta — survivors contribute all their steps, the crash
+/// victim only the steps it completed (and flushed) before going silent.
+fn analytic_model_with_crash(cfg: &P2pConfig, victim: usize, victim_steps: u64) -> Vec<f32> {
+    let mut w = vec![0.0f32; cfg.dim];
+    for i in 0..cfg.n_workers {
+        let mut grad_rng =
+            Rng::new(cfg.seed ^ (i as u64).wrapping_mul(WORKER_SEED_SALT));
+        let steps = if i == victim { victim_steps } else { cfg.steps_per_worker };
+        for _ in 0..steps {
+            let seed = grad_rng.next_u64();
+            for (j, wj) in w.iter_mut().enumerate() {
+                let g = (((seed ^ j as u64) % 15) as f32 - 7.0) * 0.25;
+                *wj += -cfg.lr * g;
+            }
+        }
+    }
+    w
+}
+
+fn crash_cfg(fanout: usize, method: Method) -> P2pConfig {
+    P2pConfig {
+        n_workers: 6,
+        steps_per_worker: 5,
+        method,
+        lr: 0.5, // power of two: deltas stay exactly representable
+        dim: DIM,
+        seed: 97,
+        dissemination: Dissemination::Gossip(GossipConfig {
+            fanout,
+            flush_every: 1,
+            ttl: 4,
+        }),
+        churn: vec![Departure { worker: 3, at_step: 2, graceful: false }],
+        ..P2pConfig::default()
+    }
+}
+
+#[test]
+fn crash_stop_survivors_drain_fast_and_lose_nothing_across_fanouts() {
+    for fanout in [1usize, 2, 4] {
+        let cfg = crash_cfg(fanout, Method::Asp);
+        let expect = analytic_model_with_crash(&cfg, 3, 2);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let r = p2p::run(&cfg, vec![0.0; DIM], dyadic_grad());
+        assert_eq!(r.departed, vec![3], "fanout={fanout}");
+        assert_eq!(r.steps[3], 2, "victim stopped at its crash step");
+        // The property: survivors terminate WITHOUT the drain timeout...
+        assert!(
+            r.wall_secs < cfg.drain_timeout.as_secs_f64() / 2.0,
+            "fanout={fanout}: drain took {}s — that is the timeout stall \
+             the membership plane must prevent",
+            r.wall_secs
+        );
+        // ...and every announced rumor (live origins' 5 each + the
+        // victim's 2) is applied exactly once everywhere: bitwise
+        // equality with the analytic sum proves no loss and no double.
+        assert_eq!(r.dropped_deltas, 0, "fanout={fanout}");
+        assert_eq!(r.missing_rumors, 0, "fanout={fanout}");
+        assert_eq!(r.discarded_msgs, 0, "fanout={fanout}");
+        for (i, rep) in r.replicas.iter().enumerate() {
+            if i == 3 {
+                continue; // the victim's replica stops mid-run
+            }
+            assert_eq!(
+                bits(rep),
+                bits(&expect),
+                "fanout={fanout}: survivor {i} lost or doubled a delta"
+            );
+        }
+        // Failure detection actually ran and repaired.
+        assert!(r.confirmed_dead >= 1, "fanout={fanout}: no confirmation");
+        assert!(r.repair_msgs >= 1, "fanout={fanout}: no repair traffic");
+        for j in [0usize, 1, 2, 4, 5] {
+            assert_eq!(r.steps[j], 5, "fanout={fanout}: survivor {j} stalled");
+        }
+    }
+}
+
+#[test]
+fn crash_stop_under_sampled_barrier_unblocks_after_eviction() {
+    // pSSP survivors eventually sample the frozen victim and block; the
+    // confirm + evict must unblock them (the dead node disappears from
+    // the overlay view), and the run still loses nothing.
+    let cfg = crash_cfg(2, Method::Pssp { sample: 2, staleness: 2 });
+    let expect = analytic_model_with_crash(&cfg, 3, 2);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let r = p2p::run(&cfg, vec![0.0; DIM], dyadic_grad());
+    assert_eq!(r.departed, vec![3]);
+    for j in [0usize, 1, 2, 4, 5] {
+        assert_eq!(r.steps[j], 5, "survivor {j} never got past the dead sample");
+    }
+    assert!(r.wall_secs < cfg.drain_timeout.as_secs_f64() / 2.0);
+    assert_eq!(r.dropped_deltas, 0);
+    assert_eq!(r.missing_rumors, 0);
+    for (i, rep) in r.replicas.iter().enumerate() {
+        if i != 3 {
+            assert_eq!(bits(rep), bits(&expect), "survivor {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn without_membership_a_crash_stalls_survivors_to_drain_timeout() {
+    // The counterfactual this subsystem exists for: same crash, detector
+    // off — every survivor camps on drain_timeout waiting for a Done
+    // that never comes. (Timeout shrunk so the test stays fast; the
+    // victim's announced rumors all delivered pre-crash, so the cost is
+    // pure stall, not loss.)
+    let cfg = P2pConfig {
+        membership: None,
+        drain_timeout: Duration::from_millis(700),
+        ..crash_cfg(2, Method::Asp)
+    };
+    let r = p2p::run(&cfg, vec![0.0; DIM], dyadic_grad());
+    assert_eq!(r.departed, vec![3]);
+    assert!(
+        r.wall_secs >= 0.7,
+        "without membership the drain should stall to the timeout, \
+         finished in {}s",
+        r.wall_secs
+    );
+    assert_eq!(r.confirmed_dead, 0);
+    assert_eq!(r.repair_msgs, 0);
+}

@@ -85,7 +85,7 @@ fn calendar_matches_heap_oracle_with_sgd() {
 fn calendar_matches_heap_oracle_under_churn_and_loss() {
     let cfg = ClusterConfig {
         n_nodes: 120,
-        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0 }),
+        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0, crash_rate: 0.0 }),
         loss_rate: 0.1,
         sgd: Some(SgdConfig { dim: 60, ..SgdConfig::default() }),
         ..golden_cfg()
@@ -93,6 +93,28 @@ fn calendar_matches_heap_oracle_under_churn_and_loss() {
     for m in Method::paper_five(6, 3) {
         let sim = Simulator::new(cfg.clone(), m);
         assert_same_trajectory(&sim.run(), &sim.run_reference(), &format!("{m}+churn"));
+    }
+}
+
+#[test]
+fn calendar_matches_heap_oracle_under_crash_churn() {
+    // Crash-stop churn adds Crash/ConfirmDead events to the schedule; the
+    // calendar queue must still replay the heap oracle bit-exactly,
+    // including the victim stream.
+    let cfg = ClusterConfig {
+        n_nodes: 120,
+        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 0.5, crash_rate: 0.5 }),
+        crash_detect_secs: 0.75,
+        sgd: Some(SgdConfig { dim: 60, ..SgdConfig::default() }),
+        ..golden_cfg()
+    };
+    for m in Method::paper_five(6, 3) {
+        let sim = Simulator::new(cfg.clone(), m);
+        let cal = sim.run();
+        let heap = sim.run_reference();
+        assert_same_trajectory(&cal, &heap, &format!("{m}+crash"));
+        assert_eq!(cal.churn_victims, heap.churn_victims, "{m}: victim stream");
+        assert_eq!(cal.crashes, heap.crashes, "{m}: crash count");
     }
 }
 
@@ -197,6 +219,122 @@ fn golden_fingerprints_seed42_paper_five() {
                 "{name}.{key}: golden {wv} != measured {gv} — a seeded \
                  trajectory changed; if intentional, delete {} and re-run",
                 golden_path().display()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Churn-trajectory golden: pin the victim-selection order
+// ---------------------------------------------------------------------
+
+fn churn_cfg() -> ClusterConfig {
+    ClusterConfig {
+        n_nodes: 120,
+        duration: 20.0,
+        seed: 42,
+        churn: Some(ChurnConfig { join_rate: 1.0, leave_rate: 1.0, crash_rate: 0.0 }),
+        ..ClusterConfig::default()
+    }
+}
+
+fn churn_golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/churn_seed42.json")
+}
+
+/// PR 2 changed churn victim selection from an O(n) scan to the dense
+/// active-list pick — still uniform, but a different enumeration order,
+/// which silently shifted every seeded churn figure. This golden pins the
+/// post-PR-2 victim order explicitly so the *next* refactor of the active
+/// list (or of `next_below`, or of the event schedule around Leave) is
+/// caught as a diff instead of re-shifting the figures. Same record /
+/// strict protocol as the fingerprints above, in its own file.
+#[test]
+fn golden_churn_victim_order_seed42() {
+    let methods = [Method::Pssp { sample: 10, staleness: 4 }, Method::Bsp];
+    let mut measured: Vec<(String, Json)> = Vec::new();
+    for m in methods {
+        let r = Simulator::new(churn_cfg(), m).run();
+        assert!(!r.churn_victims.is_empty(), "{m}: churn never fired");
+        let victims64: Vec<u64> = r.churn_victims.iter().map(|&v| v as u64).collect();
+        let entry = obj(vec![
+            (
+                "victims",
+                Json::Arr(victims64.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+            ("victims_fnv", Json::Str(format!("{:016x}", fnv(&victims64)))),
+            (
+                "final_steps_fnv",
+                Json::Str(format!("{:016x}", fnv(&r.final_steps))),
+            ),
+        ]);
+        measured.push((m.to_string(), entry));
+    }
+    let doc = obj(vec![
+        (
+            "config",
+            Json::Str("n=120 d=20s seed=42 churn join=1 leave=1".to_string()),
+        ),
+        (
+            "methods",
+            obj(measured.iter().map(|(n, j)| (n.as_str(), j.clone())).collect()),
+        ),
+    ]);
+
+    let path = churn_golden_path();
+    if !path.exists() {
+        let force_record = std::env::var_os("GOLDEN_RECORD").is_some();
+        let strict = std::env::var_os("GOLDEN_STRICT").is_some()
+            || std::env::var_os("GITHUB_ACTIONS").is_some();
+        if strict && !force_record {
+            panic!(
+                "churn golden file {} is missing — CI refuses to bootstrap. \
+                 Run `GOLDEN_RECORD=1 cargo test --test sim_golden \
+                 golden_churn_victim_order_seed42` (or download the \
+                 sim-golden-fingerprints CI artifact) and commit the file.",
+                path.display()
+            );
+        }
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, doc.to_pretty()).unwrap();
+        eprintln!(
+            "recorded churn victim-order golden at {} — commit this file to \
+             pin seeded churn trajectories",
+            path.display()
+        );
+        return;
+    }
+    let want = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let want_methods = want.get("methods").and_then(Json::as_obj).unwrap();
+    for (name, got) in &measured {
+        let w = want_methods
+            .get(name)
+            .unwrap_or_else(|| panic!("churn golden missing method {name}"));
+        let wv: Vec<u64> = w
+            .get("victims")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|j| j.as_f64().unwrap() as u64)
+            .collect();
+        let gv: Vec<u64> = got
+            .get("victims")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|j| j.as_f64().unwrap() as u64)
+            .collect();
+        assert_eq!(
+            wv, gv,
+            "{name}: churn victim-selection order changed; if intentional, \
+             delete {} and re-run",
+            churn_golden_path().display()
+        );
+        for key in ["victims_fnv", "final_steps_fnv"] {
+            assert_eq!(
+                w.get(key).and_then(Json::as_str),
+                got.get(key).and_then(Json::as_str),
+                "{name}.{key} diverged"
             );
         }
     }

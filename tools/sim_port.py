@@ -1,0 +1,648 @@
+#!/usr/bin/env python3
+"""Bit-exact Python port of the discrete-event simulator's seeded paths.
+
+The dev container has no Rust toolchain (CHANGES.md), but the golden
+gates in CI refuse to stay red: `tests/sim_golden.rs` hard-fails until
+`tests/golden/sim_seed42.json` and `tests/golden/churn_seed42.json` are
+committed. This port replays the simulator bit-for-bit for the golden
+configurations (no SGD — pure barrier dynamics, which is all the golden
+configs use) and emits exactly the fingerprints the Rust tests compute:
+
+  * util::rng::Rng           (xoshiro256++/splitmix64/Lemire — masked u64)
+  * sampling::StepTracker    (dense active list, sliding-window histogram,
+                              Floyd sampling with observer remap)
+  * sim::events::HeapQueue   ((time, seq) total order — trajectory-equal
+                              to the calendar queue by the oracle tests)
+  * sim::Simulator::run_with (incl. churn: Join/Leave and the new
+                              Crash/ConfirmDead events)
+
+Float arithmetic: Python floats are IEEE-754 doubles like Rust f64, and
+`exponential()` calls the same glibc `log` both languages link, so every
+drawn time is bit-identical (glibc >= 2.27 on both this container and
+the ubuntu CI runners — same dbl-64 log implementation).
+
+Usage:
+  python3 tools/sim_port.py check     # replay the Rust unit-test suite's
+                                      # seeded invariants as a fidelity probe
+  python3 tools/sim_port.py golden    # write both golden files
+"""
+
+import heapq
+import math
+import sys
+from collections import deque
+
+MASK = (1 << 64) - 1
+U64MAX = MASK
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = splitmix64(s)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+    def next_below(self, bound):
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        low = m & MASK
+        if low < bound:
+            t = ((-bound) & MASK) % bound
+            while low < t:
+                x = self.next_u64()
+                m = x * bound
+                low = m & MASK
+        return m >> 64
+
+    def uniform(self, lo, hi):
+        return lo + (hi - lo) * self.next_f64()
+
+    def bernoulli(self, p):
+        return self.next_f64() < p
+
+    def exponential(self, mean):
+        while True:
+            u = self.next_f64()
+            if u < 1.0:
+                break
+        return -mean * math.log(1.0 - u)
+
+    def sample_into(self, n, k, out):
+        # Robert Floyd's algorithm — mirrors util::rng::Rng::sample_into.
+        out.clear()
+        k = min(k, n)
+        if k == 0:
+            return
+        for j in range(n - k, n):
+            t = self.next_below(j + 1)
+            if t in out:
+                out.append(j)
+            else:
+                out.append(t)
+
+
+NOT_ACTIVE = object()
+
+
+class StepTracker:
+    def __init__(self, n):
+        self.steps = [0] * n
+        self.active = [True] * n
+        self.active_ids = list(range(n))
+        self.pos = list(range(n))
+        self.hist = deque()
+        if n > 0:
+            self.hist.append(n)
+        self.base = 0
+
+    def __len__(self):
+        return len(self.active_ids)
+
+    def is_empty(self):
+        return not self.active_ids
+
+    def step_of(self, node):
+        return self.steps[node]
+
+    def is_active(self, node):
+        return self.active[node]
+
+    def active_id_at(self, k):
+        return self.active_ids[k]
+
+    def min_step(self):
+        return self.base if self.hist else 0
+
+    def _inc(self, step):
+        if not self.hist:
+            self.base = step
+            self.hist.append(1)
+            return
+        idx = step - self.base
+        while idx >= len(self.hist):
+            self.hist.append(0)
+        self.hist[idx] += 1
+
+    def _dec(self, step):
+        idx = step - self.base
+        self.hist[idx] -= 1
+        while self.hist and self.hist[0] == 0:
+            self.hist.popleft()
+            self.base += 1
+        while self.hist and self.hist[-1] == 0:
+            self.hist.pop()
+
+    def advance(self, node):
+        assert self.active[node]
+        old = self.steps[node]
+        old_min = self.min_step()
+        self.steps[node] = old + 1
+        self._inc(old + 1)
+        self._dec(old)
+        new_min = self.min_step()
+        return new_min if new_min != old_min else None
+
+    def join(self):
+        nid = len(self.steps)
+        step = self.min_step()
+        self.steps.append(step)
+        self.active.append(True)
+        self.pos.append(len(self.active_ids))
+        self.active_ids.append(nid)
+        self._inc(step)
+        return nid
+
+    def leave(self, node):
+        if not self.active[node]:
+            return None
+        old_min = self.min_step()
+        self.active[node] = False
+        p = self.pos[node]
+        last = self.active_ids[-1]
+        # swap_remove
+        self.active_ids[p] = self.active_ids[-1]
+        self.active_ids.pop()
+        if p < len(self.active_ids):
+            self.pos[last] = p
+        self.pos[node] = NOT_ACTIVE
+        self._dec(self.steps[node])
+        new_min = self.min_step()
+        if self.active_ids and new_min != old_min:
+            return new_min
+        return None
+
+    def sample_min(self, observer, beta, rng, scratch):
+        n = len(self.active_ids)
+        if n == 0 or beta == 0:
+            return None
+        obs_pos = (
+            self.pos[observer]
+            if observer < len(self.pos) and self.active[observer]
+            else None
+        )
+        pool = n - 1 if obs_pos is not None else n
+        if pool == 0:
+            return None
+        rng.sample_into(pool, min(beta, pool), scratch)
+        lo = None
+        for slot in scratch:
+            idx = slot + 1 if (obs_pos is not None and slot >= obs_pos) else slot
+            s = self.steps[self.active_ids[idx]]
+            if lo is None or s < lo:
+                lo = s
+        return lo
+
+
+# Event kinds (tags keep (time, seq) the sole ordering key, as in Rust).
+COMPUTE_DONE, RECHECK, UPDATE_ARRIVE, RELEASE, SAMPLE_TL, JOIN, LEAVE, CRASH, \
+    CONFIRM_DEAD = range(9)
+
+GONE, COMPUTING, BLOCKED = range(3)
+
+
+class Method:
+    def __init__(self, name, view, staleness, beta=0):
+        self.name = name       # display string, e.g. "pssp:10:4"
+        self.view = view       # "global" | "none" | "sample"
+        self.staleness = staleness
+        self.beta = beta
+
+
+def paper_five(sample, staleness):
+    return [
+        Method("bsp", "global", 0),
+        Method(f"ssp:{staleness}", "global", staleness),
+        Method("asp", "none", 0),
+        Method(f"pbsp:{sample}", "sample", 0, sample),
+        Method(f"pssp:{sample}:{staleness}", "sample", staleness, sample),
+    ]
+
+
+class Cfg:
+    def __init__(self, **kw):
+        self.n_nodes = kw.get("n_nodes", 1000)
+        self.seed = kw.get("seed", 42)
+        self.duration = kw.get("duration", 40.0)
+        self.mean_iter_time = kw.get("mean_iter_time", 1.0)
+        self.speed_jitter = kw.get("speed_jitter", 0.3)
+        self.net_delay_mean = kw.get("net_delay_mean", 0.05)
+        self.loss_rate = kw.get("loss_rate", 0.0)
+        self.recheck_interval = kw.get("recheck_interval", 0.25)
+        self.churn = kw.get("churn")   # (join, leave, crash) or None
+        self.crash_detect_secs = kw.get("crash_detect_secs", 1.0)
+        self.sample_interval = kw.get("sample_interval", 5.0)
+
+
+def run(cfg, method):
+    """Port of Simulator::run_with for configs without SGD/stragglers,
+    Exponential iteration times (the golden configurations)."""
+    horizon = cfg.duration
+    rng = Rng(cfg.seed)
+    heap = []
+    seq = [0]
+
+    def push(time, kind, payload=None):
+        heapq.heappush(heap, (time, seq[0], kind, payload))
+        seq[0] += 1
+
+    def schedule(time, kind, payload=None):
+        if time <= horizon:
+            push(time, kind, payload)
+            return True
+        return False
+
+    tracker = StepTracker(cfg.n_nodes)
+    scratch = []
+
+    mean_iter = []
+    status = []
+    pending = []
+    for _ in range(cfg.n_nodes):
+        mean = cfg.mean_iter_time * rng.uniform(
+            1.0 - cfg.speed_jitter, 1.0 + cfg.speed_jitter
+        )
+        mean_iter.append(mean)
+        status.append(COMPUTING)
+        pending.append(0)
+
+    for i in range(cfg.n_nodes):
+        d = rng.exponential(mean_iter[i])
+        schedule(d, COMPUTE_DONE, i)
+    tick = cfg.sample_interval
+    while tick <= cfg.duration + 1e-9:
+        schedule(tick, SAMPLE_TL)
+        tick += cfg.sample_interval
+    if cfg.churn is not None:
+        join_rate, leave_rate, crash_rate = cfg.churn
+        if join_rate > 0.0:
+            schedule(rng.exponential(1.0 / join_rate), JOIN)
+        if leave_rate > 0.0:
+            schedule(rng.exponential(1.0 / leave_rate), LEAVE)
+        if crash_rate > 0.0:
+            schedule(rng.exponential(1.0 / crash_rate), CRASH)
+
+    blocked_global = {}   # threshold -> [node ids] (BTreeMap semantics)
+
+    stats = {
+        "update_msgs": 0, "lost_msgs": 0, "control_msgs": 0,
+        "total_advances": 0, "events": 0, "crashes": 0,
+    }
+    churn_victims = []
+    is_global = method.view == "global"
+    staleness = method.staleness
+
+    def release_blocked(new_min, t):
+        released = 0
+        while blocked_global:
+            thr = min(blocked_global)
+            if thr > new_min:
+                break
+            for node in blocked_global.pop(thr):
+                push(t, RELEASE, node)
+                released += 1
+        return released
+
+    def advance_now(node, t):
+        stats["total_advances"] += 1
+        status[node] = COMPUTING
+        d = rng.exponential(mean_iter[node])
+        schedule(t + d, COMPUTE_DONE, node)
+        new_min = tracker.advance(node)
+        if new_min is not None:
+            stats["control_msgs"] += release_blocked(new_min, t)
+
+    def try_advance(node, t):
+        my_step = tracker.step_of(node)
+        if method.view == "none":
+            ok = True
+        elif method.view == "global":
+            ok = tracker.min_step() + staleness >= my_step
+        else:
+            stats["control_msgs"] += 2 * method.beta
+            m = tracker.sample_min(node, method.beta, rng, scratch)
+            ok = True if m is None else m + staleness >= my_step
+        if ok:
+            advance_now(node, t)
+        else:
+            status[node] = BLOCKED
+            if method.view == "global":
+                thr = max(my_step - staleness, 0)
+                blocked_global.setdefault(thr, []).append(node)
+            else:
+                back = cfg.recheck_interval * rng.uniform(0.5, 1.5)
+                schedule(t + back, RECHECK, (node, my_step))
+
+    while heap:
+        t, _s, kind, payload = heapq.heappop(heap)
+        if t > cfg.duration:
+            break
+        stats["events"] += 1
+        if kind == COMPUTE_DONE:
+            node = payload
+            if status[node] == GONE:
+                continue
+            if cfg.loss_rate > 0.0 and rng.bernoulli(cfg.loss_rate):
+                stats["lost_msgs"] += 1
+            else:
+                stats["update_msgs"] += 1
+                delay = rng.exponential(cfg.net_delay_mean)
+                if schedule(t + delay, UPDATE_ARRIVE, node):
+                    pending[node] += 1
+            if is_global:
+                stats["control_msgs"] += 1
+            try_advance(node, t)
+        elif kind == RECHECK:
+            node, step = payload
+            if status[node] != BLOCKED or tracker.step_of(node) != step:
+                continue
+            try_advance(node, t)
+        elif kind == UPDATE_ARRIVE:
+            pending[payload] -= 1
+        elif kind == SAMPLE_TL:
+            pass
+        elif kind == JOIN:
+            nid = tracker.join()
+            mi = cfg.mean_iter_time * rng.uniform(
+                1.0 - cfg.speed_jitter, 1.0 + cfg.speed_jitter
+            )
+            mean_iter.append(mi)
+            status.append(COMPUTING)
+            pending.append(0)
+            rng.next_u64()   # batch_seed draw (unconditional in Rust)
+            d = rng.exponential(mean_iter[nid])
+            schedule(t + d, COMPUTE_DONE, nid)
+            if cfg.churn is not None:
+                schedule(t + rng.exponential(1.0 / cfg.churn[0]), JOIN)
+        elif kind == LEAVE:
+            if len(tracker) > 1:
+                k = rng.next_below(len(tracker))
+                victim = tracker.active_id_at(k)
+                if status[victim] != GONE:
+                    churn_victims.append(victim)
+                    status[victim] = GONE
+                    new_min = tracker.leave(victim)
+                    if new_min is not None:
+                        release_blocked(new_min, t)
+            if cfg.churn is not None:
+                schedule(t + rng.exponential(1.0 / cfg.churn[1]), LEAVE)
+        elif kind == CRASH:
+            if len(tracker) > 1:
+                k = rng.next_below(len(tracker))
+                victim = tracker.active_id_at(k)
+                if status[victim] != GONE:
+                    churn_victims.append(victim)
+                    stats["crashes"] += 1
+                    status[victim] = GONE
+                    schedule(t + cfg.crash_detect_secs, CONFIRM_DEAD, victim)
+            if cfg.churn is not None:
+                schedule(t + rng.exponential(1.0 / cfg.churn[2]), CRASH)
+        elif kind == CONFIRM_DEAD:
+            node = payload
+            if tracker.is_active(node):
+                new_min = tracker.leave(node)
+                if new_min is not None:
+                    release_blocked(new_min, t)
+        elif kind == RELEASE:
+            node = payload
+            if status[node] != BLOCKED:
+                continue
+            advance_now(node, t)
+
+    final_steps = [
+        tracker.step_of(i)
+        for i in range(len(status))
+        if tracker.is_active(i)
+    ]
+    return {
+        "final_steps": final_steps,
+        "update_msgs": stats["update_msgs"],
+        "control_msgs": stats["control_msgs"],
+        "total_advances": stats["total_advances"],
+        "events": stats["events"],
+        "crashes": stats["crashes"],
+        "churn_victims": churn_victims,
+        "mean_progress": (
+            sum(final_steps) / len(final_steps) if final_steps else 0.0
+        ),
+    }
+
+
+def fnv(xs):
+    h = 0xCBF29CE484222325
+    for x in xs:
+        for _ in range(8):
+            h ^= x & 0xFF
+            h = (h * 0x100000001B3) & MASK
+            x >>= 8
+    return h
+
+
+# ---------------------------------------------------------------------
+# Fidelity probe: replay the seeded invariants of the Rust unit tests
+# ---------------------------------------------------------------------
+
+def tiny_cfg(n, seed):
+    return Cfg(n_nodes=n, seed=seed, duration=20.0, mean_iter_time=1.0)
+
+
+def check():
+    ok = True
+
+    def expect(cond, what):
+        nonlocal ok
+        print(("  ok   " if cond else "  FAIL ") + what)
+        ok = ok and cond
+
+    # deterministic_given_seed
+    a = run(tiny_cfg(50, 7), Method("pssp", "sample", 2, 5))
+    b = run(tiny_cfg(50, 7), Method("pssp", "sample", 2, 5))
+    expect(a["final_steps"] == b["final_steps"]
+           and a["update_msgs"] == b["update_msgs"]
+           and a["control_msgs"] == b["control_msgs"],
+           "deterministic_given_seed")
+    # different_seeds_differ
+    expect(run(tiny_cfg(50, 1), Method("asp", "none", 0))["final_steps"]
+           != run(tiny_cfg(50, 2), Method("asp", "none", 0))["final_steps"],
+           "different_seeds_differ")
+    # bsp_is_lockstep
+    r = run(tiny_cfg(40, 3), Method("bsp", "global", 0))
+    expect(max(r["final_steps"]) - min(r["final_steps"]) <= 1, "bsp_is_lockstep")
+    # ssp_respects_staleness_bound
+    good = True
+    for st in (0, 2, 4, 8):
+        r = run(tiny_cfg(40, 4), Method("ssp", "global", st))
+        good &= max(r["final_steps"]) - min(r["final_steps"]) <= st + 1
+    expect(good, "ssp_respects_staleness_bound")
+    # asp_fastest_bsp_slowest
+    bsp = run(tiny_cfg(60, 5), Method("bsp", "global", 0))
+    ssp = run(tiny_cfg(60, 5), Method("ssp", "global", 4))
+    asp = run(tiny_cfg(60, 5), Method("asp", "none", 0))
+    expect(asp["mean_progress"] > ssp["mean_progress"] > bsp["mean_progress"],
+           "asp_fastest_bsp_slowest")
+    # pbsp_between_asp_and_bsp
+    bsp = run(tiny_cfg(60, 6), Method("bsp", "global", 0))
+    asp = run(tiny_cfg(60, 6), Method("asp", "none", 0))
+    pbsp = run(tiny_cfg(60, 6), Method("pbsp", "sample", 0, 5))
+    expect(bsp["mean_progress"] <= pbsp["mean_progress"] <= asp["mean_progress"],
+           "pbsp_between_asp_and_bsp")
+    # pbsp_sample_zero_equals_asp_progress (identical rng consumption)
+    asp = run(tiny_cfg(40, 8), Method("asp", "none", 0))
+    p0 = run(tiny_cfg(40, 8), Method("pbsp0", "none", 0))
+    expect(asp["final_steps"] == p0["final_steps"], "pbsp0 == asp trajectories")
+    # update_messages_counted
+    r = run(tiny_cfg(30, 9), Method("asp", "none", 0))
+    expect(r["update_msgs"] >= r["total_advances"] > 0, "update_messages_counted")
+    # sampled_methods_cost_control_messages
+    pbsp = run(tiny_cfg(40, 10), Method("pbsp", "sample", 0, 8))
+    asp = run(tiny_cfg(40, 10), Method("asp", "none", 0))
+    expect(pbsp["control_msgs"] >= 16 * pbsp["total_advances"] // 2
+           and asp["control_msgs"] == 0,
+           "sampled_methods_cost_control_messages")
+    # churn_keeps_running (all five methods)
+    good = True
+    for m in paper_five(5, 4):
+        r = run(Cfg(n_nodes=30, seed=13, duration=20.0, churn=(0.5, 0.5, 0.0)), m)
+        good &= bool(r["final_steps"]) and r["total_advances"] > 0
+    expect(good, "churn_keeps_running")
+    # NEW: crash_churn_confirms_victims_and_keeps_running
+    good = True
+    for m in paper_five(5, 4):
+        r = run(Cfg(n_nodes=30, seed=21, duration=20.0,
+                    churn=(0.5, 0.0, 0.5), crash_detect_secs=0.5), m)
+        good &= r["crashes"] > 0 and r["crashes"] == len(r["churn_victims"]) \
+            and r["total_advances"] > 0
+    expect(good, "crash_churn_confirms_victims_and_keeps_running")
+    # NEW: slow_crash_detection_stalls_bsp_harder
+    fast = run(Cfg(n_nodes=40, seed=22, duration=20.0,
+                   churn=(0.0, 0.0, 0.4), crash_detect_secs=0.05),
+               Method("bsp", "global", 0))
+    slow = run(Cfg(n_nodes=40, seed=22, duration=20.0,
+                   churn=(0.0, 0.0, 0.4), crash_detect_secs=5.0),
+               Method("bsp", "global", 0))
+    expect(fast["crashes"] > 0 and slow["crashes"] > 0
+           and fast["mean_progress"] > slow["mean_progress"],
+           f"slow_crash_detection_stalls_bsp_harder "
+           f"(fast {fast['mean_progress']:.2f} vs slow {slow['mean_progress']:.2f})")
+    print("\nfidelity probe:", "ALL OK" if ok else "FAILURES")
+    return ok
+
+
+# ---------------------------------------------------------------------
+# Golden emission
+# ---------------------------------------------------------------------
+
+def write_json(path, doc):
+    # Mirrors util::json::Json::to_pretty: 2-space indent, BTreeMap
+    # (alphabetical) key order, integers rendered bare.
+    def render(v, indent):
+        pad = "  " * indent
+        pad1 = "  " * (indent + 1)
+        if isinstance(v, str):
+            return '"' + v.replace("\\", "\\\\").replace('"', '\\"') + '"'
+        if isinstance(v, bool):
+            return "true" if v else "false"
+        if isinstance(v, (int, float)):
+            f = float(v)
+            if f == int(f) and abs(f) < 1e15:
+                return str(int(f))
+            return repr(f)
+        if isinstance(v, list):
+            if not v:
+                return "[]"
+            inner = ",\n".join(pad1 + render(x, indent + 1) for x in v)
+            return "[\n" + inner + "\n" + pad + "]"
+        if isinstance(v, dict):
+            if not v:
+                return "{}"
+            inner = ",\n".join(
+                pad1 + '"' + k + '": ' + render(v[k], indent + 1)
+                for k in sorted(v)
+            )
+            return "{\n" + inner + "\n" + pad + "}"
+        raise TypeError(v)
+
+    with open(path, "w") as f:
+        f.write(render(doc, 0) + "\n")
+    print(f"wrote {path}")
+
+
+def golden():
+    # golden_fingerprints_seed42_paper_five (tests/sim_golden.rs)
+    cfg = Cfg(n_nodes=300, duration=20.0, seed=42)
+    methods = {}
+    for m in paper_five(10, 4):
+        r = run(cfg, m)
+        methods[m.name] = {
+            "final_steps_fnv": f"{fnv(r['final_steps']):016x}",
+            "final_steps_sum": sum(r["final_steps"]),
+            "update_msgs": r["update_msgs"],
+            "control_msgs": r["control_msgs"],
+            "total_advances": r["total_advances"],
+        }
+        print(f"  {m.name:12s} sum={sum(r['final_steps'])} "
+              f"upd={r['update_msgs']} ctrl={r['control_msgs']} "
+              f"adv={r['total_advances']} events={r['events']}")
+    write_json(
+        "rust/tests/golden/sim_seed42.json",
+        {"config": "n=300 d=20s seed=42 defaults", "methods": methods},
+    )
+
+    # golden_churn_victim_order_seed42
+    ccfg = Cfg(n_nodes=120, duration=20.0, seed=42, churn=(1.0, 1.0, 0.0))
+    methods = {}
+    for m in [Method("pssp:10:4", "sample", 4, 10), Method("bsp", "global", 0)]:
+        r = run(ccfg, m)
+        assert r["churn_victims"], f"{m.name}: churn never fired"
+        methods[m.name] = {
+            "victims": r["churn_victims"],
+            "victims_fnv": f"{fnv(r['churn_victims']):016x}",
+            "final_steps_fnv": f"{fnv(r['final_steps']):016x}",
+        }
+        print(f"  {m.name:12s} victims={r['churn_victims']}")
+    write_json(
+        "rust/tests/golden/churn_seed42.json",
+        {
+            "config": "n=120 d=20s seed=42 churn join=1 leave=1",
+            "methods": methods,
+        },
+    )
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "check"
+    if mode == "check":
+        sys.exit(0 if check() else 1)
+    elif mode == "golden":
+        golden()
+    else:
+        raise SystemExit(f"unknown mode {mode}")

@@ -1,0 +1,561 @@
+#!/usr/bin/env python3
+"""Bit-exact Python port of the crash-fault membership property test.
+
+The dev container has no Rust toolchain (CHANGES.md, PR 3), so — exactly
+as PR 3 did for the gossip exactly-once property — the round-based
+harness in `rust/tests/membership_crash.rs` is verified by porting the
+involved state machines bit-for-bit and replaying every seeded property
+case in Python:
+
+  * util::rng::Rng            (xoshiro256++, splitmix64 seeding, Lemire)
+  * overlay::Ring             (join/evict, successor, finger lookup,
+                               successor-window sampling w/ acceptance)
+  * engine::gossip::GossipNode(originate/receive/flush, custody store)
+  * engine::membership        (FailureDetector, evict_from_view)
+  * testing::{Gen, property}  (seed derivation and draw order)
+  * the run_crash_rounds harness and its assertions
+
+All integer arithmetic is masked to 64 bits; all float arithmetic is
+IEEE-754 double in both languages (Python floats == Rust f64), so the
+trajectories replayed here are the ones `cargo test` will execute.
+
+Run: python3 tools/verify_membership_port.py
+"""
+
+MASK = (1 << 64) - 1
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = splitmix64(s)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+    def next_below(self, bound):
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        low = m & MASK
+        if low < bound:
+            t = ((-bound) & MASK) % bound
+            while low < t:
+                x = self.next_u64()
+                m = x * bound
+                low = m & MASK
+        return m >> 64
+
+    def bernoulli(self, p):
+        return self.next_f64() < p
+
+
+def node_ring_id(node, namespace):
+    z = ((node + 0x9E3779B97F4A7C15) & MASK) * (namespace | 1) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def in_arc(frm, x, to):
+    if frm < to:
+        return frm < x <= to
+    if frm > to:
+        return x > frm or x <= to
+    return False
+
+
+import bisect
+
+
+class Ring:
+    def __init__(self, namespace):
+        self.keys = []      # sorted ring ids
+        self.map = {}       # id -> node
+        self.ids = {}       # node -> id
+        self.namespace = namespace
+
+    @staticmethod
+    def with_nodes(n, namespace):
+        r = Ring(namespace)
+        for node in range(n):
+            r.join(node)
+        return r
+
+    def __len__(self):
+        return len(self.keys)
+
+    def clone(self):
+        r = Ring(self.namespace)
+        r.keys = list(self.keys)
+        r.map = dict(self.map)
+        r.ids = dict(self.ids)
+        return r
+
+    def join(self, node):
+        if node in self.ids:
+            return self.ids[node]
+        i = node_ring_id(node, self.namespace)
+        while i in self.map:
+            i = (i + 1) & MASK
+        bisect.insort(self.keys, i)
+        self.map[i] = node
+        self.ids[node] = i
+        return i
+
+    def evict(self, node):
+        if node not in self.ids:
+            return None
+        i = self.ids.pop(node)
+        del self.map[i]
+        self.keys.remove(i)
+        return i
+
+    def ring_id_of(self, node):
+        return self.ids.get(node)
+
+    def successor(self, point):
+        if not self.keys:
+            return None
+        j = bisect.bisect_left(self.keys, point & MASK)
+        i = self.keys[j] if j < len(self.keys) else self.keys[0]
+        return (i, self.map[i])
+
+    def successor_node(self, node):
+        i = self.ids.get(node)
+        if i is None or len(self.keys) <= 1:
+            return None
+        return self.successor((i + 1) & MASK)[1]
+
+    def lookup(self, from_id, key):
+        if not self.keys:
+            return None
+        target_id, target_node = self.successor(key)
+        if from_id == target_id:
+            return (target_node, 0)
+        cur = from_id
+        hops = 0
+        while cur != target_id:
+            dist = (target_id - cur) & MASK
+            best = None
+            for k in range(63, -1, -1):
+                span = 1 << k
+                if span > dist and dist > 0:
+                    continue
+                fp = (cur + span) & MASK
+                s = self.successor(fp)
+                if s is not None and in_arc(cur, s[0], target_id):
+                    best = s[0]
+                    break
+            if best is not None and best != cur:
+                cur = best
+                hops += 1
+            else:
+                break
+            if hops > 64:
+                break
+        return (target_node, max(hops, 1))
+
+    def sample_nodes(self, observer, beta, rng):
+        n = len(self.keys)
+        out = []
+        msgs = 0
+        if n <= 1 or beta == 0:
+            return out, msgs
+        from_id = self.ids.get(observer)
+        if from_id is None:
+            from_id = node_ring_id(observer, self.namespace)
+        target = min(beta, n - 1)
+        k = min(32, n)
+        expect = float(MASK) / float(n)
+        attempts = 0
+        while len(out) < target and attempts < 128 * (beta + 1):
+            attempts += 1
+            point = rng.next_u64()
+            r = self.lookup(from_id, point)
+            if r is None:
+                continue
+            first, hops = r
+            msgs += hops + (1 if first != observer else 0)
+            first_id = self.ids[first]
+            window = []
+            cursor = first_id
+            for i in range(k):
+                window.append((cursor, self.map[cursor]))
+                j = bisect.bisect_left(self.keys, (cursor + 1) & MASK)
+                nxt = self.keys[j] if j < len(self.keys) else self.keys[0]
+                if i + 1 < k and nxt == first_id:
+                    break
+                cursor = nxt
+            # predecessor of first_id (next_back of range(..first_id), wrapping)
+            j = bisect.bisect_left(self.keys, first_id)
+            pred = self.keys[j - 1] if j > 0 else self.keys[-1]
+            span = (window[-1][0] - pred) & MASK
+            if len(window) >= n:
+                p_accept = 1.0
+            else:
+                p_accept = min((len(window) * expect) / (2.0 * float(span)), 1.0)
+            if not rng.bernoulli(p_accept):
+                continue
+            pick = window[rng.next_below(len(window))][1]
+            if pick == observer or pick in out:
+                continue
+            out.append(pick)
+        return out, msgs
+
+
+class GossipNode:
+    def __init__(self, nid, n, keep_store=True):
+        self.id = nid
+        self.seen = [set() for _ in range(n)]
+        self.fresh = []     # rumors are (origin, seq, ttl)
+        self.store = []
+        self.keep = keep_store
+        self.next_seq = 0
+        self.applied_rumors = 0
+        self.dup_rumors = 0
+        self.rumor_copies = 0
+        self.route_msgs = 0
+
+    def _seen(self, origin):
+        while len(self.seen) <= origin:
+            self.seen.append(set())
+        return self.seen[origin]
+
+    def originate(self, cfg_ttl):
+        seq = self.next_seq
+        self.next_seq += 1
+        self._seen(self.id).add(seq)
+        r = (self.id, seq, min(cfg_ttl + 1, MASK))
+        if self.keep:
+            self.store.append((self.id, seq, cfg_ttl))
+        self.fresh.append(r)
+        return seq
+
+    def receive(self, batch, apply):
+        for r in batch:
+            origin, seq, _ttl = r
+            s = self._seen(origin)
+            if seq not in s:
+                s.add(seq)
+                self.applied_rumors += 1
+                apply(r)
+                if self.keep:
+                    self.fresh.append(r)
+                    self.store.append(r)
+                else:
+                    self.fresh.append(r)
+            else:
+                self.dup_rumors += 1
+
+    def flush(self, fanout, ring, rng):
+        if not self.fresh:
+            return []
+        batch = self.fresh
+        self.fresh = []
+        out = []
+        succ = ring.successor_node(self.id)
+        if succ is not None:
+            alle = [(o, s, t - 1 if t > 0 else 0) for (o, s, t) in batch]
+            self.rumor_copies += len(alle)
+            out.append((succ, alle))
+        live = [(o, s, t - 1) for (o, s, t) in batch if t > 0]
+        if fanout > 0 and live:
+            partners, msgs = ring.sample_nodes(self.id, fanout, rng)
+            self.route_msgs += msgs
+            for p in partners:
+                if any(d == p for d, _ in out):
+                    continue
+                self.rumor_copies += len(live)
+                out.append((p, list(live)))
+        return out
+
+    def applied_count(self, origin):
+        return len(self.seen[origin]) if origin < len(self.seen) else 0
+
+    def rumors_of(self, origin):
+        return [r for r in self.store if r[0] == origin]
+
+    def handoff_rumors(self):
+        return list(self.store)
+
+
+ALIVE, SUSPECT, DEAD = 0, 1, 2
+
+
+class FailureDetector:
+    def __init__(self, me, n, now, suspect_after, confirm_after):
+        self.me = me
+        self.suspect_after = suspect_after
+        self.confirm_after = confirm_after
+        self.last_beat = [0] * n
+        self.since = [now] * n
+        self.state = [ALIVE] * n
+
+    def is_dead(self, peer):
+        return self.state[peer] == DEAD
+
+    def observe(self, now, beat, exempt):
+        dead = []
+        resurrected = []
+        for j in range(len(self.state)):
+            if j == self.me:
+                continue
+            b = beat(j)
+            if b != self.last_beat[j]:
+                self.last_beat[j] = b
+                self.since[j] = now
+                if self.state[j] == DEAD:
+                    resurrected.append(j)
+                self.state[j] = ALIVE
+                continue
+            if exempt(j) or self.state[j] == DEAD:
+                continue
+            frozen = max(now - self.since[j], 0)
+            if frozen >= self.suspect_after + self.confirm_after:
+                self.state[j] = DEAD
+                dead.append(j)
+            elif frozen >= self.suspect_after:
+                self.state[j] = SUSPECT
+        return dead, resurrected
+
+
+def evict_from_view(ring, me, dead):
+    my_successor_was_dead = ring.successor_node(me) == dead
+    old_id = ring.evict(dead)
+    if old_id is None:
+        return None
+    s = ring.successor((old_id + 1) & MASK)
+    heir = s[1] if s is not None else None
+    lost_successor = ring.successor_node(me) if my_successor_was_dead else None
+    return {
+        "old_id": old_id,
+        "lost_successor": lost_successor,
+        "custodian": heir == me,
+    }
+
+
+class Membership:
+    def __init__(self, me, ring, now, suspect_after, confirm_after):
+        self.me = me
+        self.ring = ring
+        self.detector = FailureDetector(
+            me, max(len(ring), me + 1), now, suspect_after, confirm_after
+        )
+
+    def evict(self, dead):
+        return evict_from_view(self.ring, self.me, dead)
+
+
+# ---------------------------------------------------------------------
+# The harness (mirror of run_crash_rounds in tests/membership_crash.rs)
+# ---------------------------------------------------------------------
+
+def run_crash_rounds(n, fanout, ttl, origin_rounds, crash, suspect, confirm, seed):
+    launch = Ring.with_nodes(n, seed)
+    rng = Rng(seed ^ 0xD15E)
+    nodes = [GossipNode(i, n, keep_store=True) for i in range(n)]
+    members = [Membership(i, launch.clone(), 0, suspect, confirm) for i in range(n)]
+    victim, crash_round = crash
+    live = [True] * n
+    beats = [0] * n
+    applies = [[[0] * origin_rounds for _ in range(n)] for _ in range(n)]
+    originated = [0] * n
+    announced = [None] * n
+    in_flight = []
+    repairs = []
+    physical_msgs = 0
+    rounds = 0
+    while True:
+        if rounds == crash_round and live[victim]:
+            live[victim] = False
+        if rounds < origin_rounds:
+            for i in range(n):
+                if live[i]:
+                    seq = nodes[i].originate(ttl)
+                    applies[i][i][seq] += 1
+                    originated[i] += 1
+        for i in range(n):
+            if live[i]:
+                beats[i] += 1
+        for i in range(n):
+            if live[i]:
+                for dest, batch in nodes[i].flush(fanout, members[i].ring, rng):
+                    physical_msgs += 1
+                    in_flight.append((dest, batch))
+        victim_settled = (not live[victim]) and all(
+            members[i].detector.is_dead(victim) for i in range(n) if live[i]
+        )
+        if (not in_flight and not repairs and rounds >= origin_rounds
+                and victim_settled):
+            break
+        batches, in_flight = in_flight, []
+        for dest, batch in batches:
+            if not live[dest]:
+                continue
+
+            def apply(r, dest=dest):
+                applies[dest][r[0]][r[1]] += 1
+
+            nodes[dest].receive(batch, apply)
+        pend, repairs = repairs, []
+        for dest, count, store in pend:
+            if not live[dest]:
+                continue
+            announced[dest] = count if announced[dest] is None else max(
+                announced[dest], count
+            )
+
+            def apply(r, dest=dest):
+                applies[dest][r[0]][r[1]] += 1
+
+            nodes[dest].receive(store, apply)
+        now = rounds + 1
+        for i in range(n):
+            if not live[i]:
+                continue
+            dead, _res = members[i].detector.observe(
+                now, lambda j: beats[j], lambda j: False
+            )
+            for d in dead:
+                out = members[i].evict(d)
+                assert out is not None, "confirmations are reported once"
+                if out["custodian"]:
+                    count = nodes[i].applied_count(d)
+                    announced[i] = count if announced[i] is None else max(
+                        announced[i], count
+                    )
+                    store = nodes[i].rumors_of(d)
+                    for j in range(n):
+                        if j != i and live[j]:
+                            physical_msgs += 1
+                            repairs.append((j, count, list(store)))
+                if out["lost_successor"] is not None:
+                    store = nodes[i].handoff_rumors()
+                    if store:
+                        physical_msgs += 1
+                        in_flight.append((out["lost_successor"], list(store)))
+        rounds += 1
+        bound = 10 * n + 10 * origin_rounds + crash_round + suspect + confirm + 100
+        assert rounds < bound, (
+            f"did not quiesce after {rounds} rounds "
+            f"(n={n} victim={victim} crash_round={crash_round})"
+        )
+    return {
+        "applies": applies,
+        "originated": originated,
+        "announced": announced,
+        "live": live,
+        "rounds": rounds,
+        "physical_msgs": physical_msgs,
+    }
+
+
+# ---------------------------------------------------------------------
+# testing::Gen / property driver (shrink level 0 path)
+# ---------------------------------------------------------------------
+
+class Gen:
+    def __init__(self, seed):
+        self.rng = Rng(seed)
+        self.seed = seed
+
+    def usize_in(self, lo, hi):
+        assert lo <= hi
+        return lo + self.rng.next_below(hi - lo + 1)
+
+    def u64_in(self, lo, hi):
+        return lo + self.rng.next_below(hi - lo + 1)
+
+    def choose(self, xs):
+        return xs[self.rng.next_below(len(xs))]
+
+
+def property_cases(cases):
+    base = 0x5EED_0000
+    for case in range(cases):
+        yield case, ((base + case) * 0x9E3779B97F4A7C15) & MASK
+
+
+def prop_crash_stop_repairs_to_exactly_once(g):
+    n = g.usize_in(3, 24)
+    fanout = g.choose([1, 2, 4])
+    ttl = g.usize_in(0, 6)
+    origin_rounds = g.usize_in(1, 3)
+    victim = g.usize_in(0, n - 1)
+    crash_round = g.usize_in(0, 2 * n)
+    suspect = g.u64_in(1, 3)
+    confirm = g.u64_in(1, 3)
+    d = run_crash_rounds(
+        n, fanout, ttl, origin_rounds, (victim, crash_round), suspect, confirm,
+        g.seed,
+    )
+    ctx = (f"n={n} fanout={fanout} ttl={ttl} rounds={origin_rounds} "
+           f"victim={victim} crash_round={crash_round} "
+           f"mem=({suspect},{confirm})")
+    assert not d["live"][victim], ctx
+    for node in range(n):
+        if not d["live"][node]:
+            continue
+        for origin in range(n):
+            for seq in range(d["originated"][origin]):
+                count = d["applies"][node][origin][seq]
+                assert count == 1, (
+                    f"node {node} applied rumor ({origin}, {seq}) "
+                    f"{count} times ({ctx})"
+                )
+    for i in range(n):
+        if d["live"][i]:
+            assert d["announced"][i] == d["originated"][victim], (
+                f"node {i} learned count {d['announced'][i]} != "
+                f"{d['originated'][victim]} ({ctx})"
+            )
+    assert d["physical_msgs"] > 0 or n == 1
+    assert d["rounds"] > 0
+    return ctx
+
+
+def main():
+    failures = 0
+    for case, seed in property_cases(40):
+        try:
+            ctx = prop_crash_stop_repairs_to_exactly_once(Gen(seed))
+            print(f"case {case:2d} seed={seed:#018x} ok   ({ctx})")
+        except AssertionError as e:
+            failures += 1
+            print(f"case {case:2d} seed={seed:#018x} FAIL: {e}")
+    if failures:
+        raise SystemExit(f"{failures} case(s) failed")
+    print("\nall 40 property cases pass — the Rust harness will replay these "
+          "trajectories bit-exactly")
+
+
+if __name__ == "__main__":
+    main()
