@@ -21,6 +21,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use actor_psp::barrier::Method;
+use actor_psp::engine::paramserver::ShardLayout;
 use actor_psp::model::linear::{Dataset, LinearModel};
 use actor_psp::sim::{ChurnConfig, ClusterConfig, SgdConfig, SimResult, Simulator};
 use actor_psp::util::bench::{bench, bench_once, BenchSuite};
@@ -103,6 +104,30 @@ fn main() {
     let mut suite = BenchSuite::new("simulator");
     println!("simulator throughput (events/s is the L3 perf headline)");
     println!("{}", "-".repeat(110));
+
+    // Virtual-node load balance: max/min per-shard push-traffic ratio
+    // (each batched push to a shard carries its owned-key count in f32s,
+    // so key counts are proportional to push bytes). One ring position
+    // per shard reproduces the classic successor-placement skew; 64
+    // vnodes must flatten it — the ratio-of-ratios is gated below like
+    // the calendar/heap speedup (runs in smoke mode too: pure layout
+    // arithmetic, no simulation).
+    let vnode_improvement;
+    {
+        let (dim, n_shards) = (4096, 8);
+        let skewed = ShardLayout::new(dim, n_shards, 1).imbalance();
+        let flat = ShardLayout::new(dim, n_shards, 64).imbalance();
+        vnode_improvement = skewed / flat;
+        println!(
+            "vnode balance d={dim} shards={n_shards}: max/min {skewed:.2} \
+             (1 vnode) -> {flat:.2} (64 vnodes), {vnode_improvement:.2}x better"
+        );
+        suite.record("vnode_balance", &[
+            ("imbalance_v1", skewed),
+            ("imbalance_v64", flat),
+            ("improvement", vnode_improvement),
+        ]);
+    }
 
     // Pure barrier-dynamics simulation, paper scale (full mode only).
     if !opts.smoke {
@@ -247,6 +272,19 @@ fn main() {
             eprintln!(
                 "calendar-queue scheduler fell to {calendar_speedup:.2}x of \
                  the heap oracle (floor 0.70x) — scheduler perf regression"
+            );
+            std::process::exit(1);
+        }
+        // Hardware-independent like the speedup ratio: virtual nodes must
+        // cut the per-shard push-traffic imbalance at least 3x vs single
+        // -position placement (the PR 6 acceptance bar).
+        println!(
+            "gate vnode balance improvement: {vnode_improvement:.2}x (floor 3.00x)"
+        );
+        if vnode_improvement < 3.0 {
+            eprintln!(
+                "vnode placement only improved push-traffic balance \
+                 {vnode_improvement:.2}x (floor 3.0x) — placement regression"
             );
             std::process::exit(1);
         }

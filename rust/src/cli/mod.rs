@@ -104,19 +104,26 @@ USAGE:
       (default: one per core; reports are identical for every J).
 
   actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
-            [--crash-rate F] [--detect S] [--config FILE]
+            [--crash-rate F] [--detect S] [--shard-crash-rate F]
+            [--shard-rehome S] [--shards K] [--config FILE]
       One simulated cluster run; prints the progress/error/message summary.
       M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q
       --crash-rate adds F crash-stops/s (victims keep poisoning samples
       and pinning the BSP/SSP minimum until failure detection confirms
-      them after --detect seconds).
+      them after --detect seconds). --shard-crash-rate adds F server
+      shard-actor crashes/s; each stalls worker pushes until the shard is
+      re-homed after --shard-rehome seconds.
 
   actor ps [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
            [--seed N] [--shards K] [--push-batch B] [--schedule-blocks NB]
-           [--config FILE]
+           [--replication R] [--vnodes V] [--kill-shard K:A] [--config FILE]
       Run the live sharded parameter-server engine (real threads, pure-Rust
       linear SGD): K model shards, gradients accumulated for B steps and
-      scattered as one batched push per touched shard.
+      scattered as one batched push per touched shard. --replication streams
+      every applied batch to R ring-successor replicas; --vnodes places
+      parameters by consistent hashing over V virtual positions per shard
+      (0 = contiguous blocks); --kill-shard K:A crash-stops shard K after
+      its A-th batch — training must finish with zero lost updates.
 
   actor p2p [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
             [--seed N] [--fanout F] [--flush B] [--ttl T] [--full-mesh]

@@ -187,6 +187,9 @@ impl Config {
     /// lr = 0.05
     /// seed = 7
     /// schedule_blocks = 4 # optional model-parallel schedule
+    /// replication = 2     # ring-successor replicas per shard (0 = off)
+    /// vnodes = 64         # virtual placement positions per shard
+    /// kill_shard = "2:3"  # chaos: crash shard 2 after its 3rd batch
     /// ```
     pub fn ps_config(&self) -> Result<PsConfig> {
         let d = PsConfig::default();
@@ -195,6 +198,15 @@ impl Config {
             Some(v) => Some(v.as_usize().ok_or_else(|| {
                 anyhow!("[ps] schedule_blocks must be a non-negative integer")
             })?),
+        };
+        let kill_shard = match self.get("ps", "kill_shard") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    anyhow!("[ps] kill_shard must be a \"shard:after\" string")
+                })?;
+                Some(parse_kill_shard(s)?)
+            }
         };
         Ok(PsConfig {
             n_workers: self.usize_or("ps", "workers", d.n_workers)?,
@@ -207,6 +219,9 @@ impl Config {
             seed: self.f64_or("ps", "seed", d.seed as f64)? as u64,
             n_shards: self.usize_or("ps", "shards", d.n_shards)?.max(1),
             push_batch: self.usize_or("ps", "push_batch", d.push_batch)?.max(1),
+            replication: self.usize_or("ps", "replication", d.replication)?,
+            vnodes: self.usize_or("ps", "vnodes", d.vnodes)?,
+            kill_shard,
             schedule_blocks,
             ..d
         })
@@ -364,6 +379,14 @@ impl Config {
             churn,
             crash_detect_secs: self
                 .f64_or("membership", "detect_secs", d.crash_detect_secs)?,
+            // Server-side shard-crash process: [churn] keys, but read
+            // independently of the worker-churn section (it lives on
+            // ClusterConfig, not ChurnConfig).
+            shard_crash_rate: self
+                .f64_or("churn", "shard_crash_rate", d.shard_crash_rate)?,
+            shard_rehome_secs: self
+                .f64_or("churn", "shard_rehome_secs", d.shard_rehome_secs)?,
+            n_shards: self.usize_or("churn", "shards", d.n_shards)?.max(1),
             sample_interval: self.f64_or("cluster", "sample_interval", d.sample_interval)?,
             sgd,
         })
@@ -415,6 +438,19 @@ pub fn parse_departure(s: &str, graceful: bool) -> Result<Departure> {
         at_step: step.trim().parse().map_err(|e| anyhow!("bad step in '{s}': {e}"))?,
         graceful,
     })
+}
+
+/// Parse a chaos kill spec `shard:after` (`[ps] kill_shard` and the
+/// `actor ps --kill-shard` flag): crash-stop shard actor `shard` right
+/// after it acknowledges its `after`-th batch.
+pub fn parse_kill_shard(s: &str) -> Result<(usize, u64)> {
+    let (shard, after) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("kill_shard must be shard:after, got '{s}'"))?;
+    Ok((
+        shard.trim().parse().map_err(|e| anyhow!("bad shard in '{s}': {e}"))?,
+        after.trim().parse().map_err(|e| anyhow!("bad after in '{s}': {e}"))?,
+    ))
 }
 
 /// Parse `exponential | normal:<cv> | pareto:<shape>`.
@@ -525,6 +561,49 @@ schedule_blocks = 4
     }
 
     #[test]
+    fn ps_replication_keys_build_engine_config() {
+        let src = r#"
+[ps]
+shards = 4
+replication = 2
+vnodes = 64
+kill_shard = "2:3"
+"#;
+        let c = Config::parse(src).unwrap();
+        let ps = c.ps_config().unwrap();
+        assert_eq!(ps.replication, 2);
+        assert_eq!(ps.vnodes, 64);
+        assert_eq!(ps.kill_shard, Some((2, 3)));
+        // bad kill specs propagate as errors
+        let c = Config::parse("[ps]\nkill_shard = \"nope\"").unwrap();
+        assert!(c.ps_config().is_err());
+        let c = Config::parse("[ps]\nkill_shard = 3").unwrap();
+        assert!(c.ps_config().is_err());
+        assert!(parse_kill_shard("a:1").is_err());
+    }
+
+    #[test]
+    fn churn_shard_crash_keys_build_cluster_config() {
+        let src = r#"
+[churn]
+crash_rate = 0.5
+shard_crash_rate = 0.25
+shard_rehome_secs = 0.75
+shards = 8
+"#;
+        let c = Config::parse(src).unwrap();
+        let cc = c.cluster_config().unwrap();
+        assert_eq!(cc.shard_crash_rate, 0.25);
+        assert_eq!(cc.shard_rehome_secs, 0.75);
+        assert_eq!(cc.n_shards, 8);
+        assert_eq!(cc.churn.unwrap().crash_rate, 0.5);
+        // absent keys fall back to the process-disabled defaults
+        let cc = Config::parse("").unwrap().cluster_config().unwrap();
+        assert_eq!(cc.shard_crash_rate, 0.0);
+        assert_eq!(cc.n_shards, 1);
+    }
+
+    #[test]
     fn ps_section_defaults_and_errors() {
         let ps = Config::parse("").unwrap().ps_config().unwrap();
         let d = PsConfig::default();
@@ -532,6 +611,9 @@ schedule_blocks = 4
         assert_eq!(ps.n_shards, 1);
         assert_eq!(ps.push_batch, 1);
         assert_eq!(ps.schedule_blocks, None);
+        assert_eq!(ps.replication, 0);
+        assert_eq!(ps.vnodes, 0);
+        assert_eq!(ps.kill_shard, None);
         // bad barrier strings propagate as errors
         let c = Config::parse("[barrier]\nmethod = \"pquorum:10:4:101\"").unwrap();
         assert!(c.ps_config().is_err());

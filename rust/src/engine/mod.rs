@@ -102,4 +102,16 @@ pub struct EngineReport {
     /// Workers that left the run early (graceful leave or crash-stop),
     /// in worker-id order. Their replicas stop at the departure step.
     pub departed: Vec<usize>,
+    // -- shard replication plane (paramserver; zero when replication off) --
+    /// Pulls served from a block the answering shard actor was not the
+    /// original home of — i.e. reads a replica (usually a promoted one)
+    /// answered instead of the shard's first primary. Counted separately
+    /// from `update_msgs`/`control_msgs` so the chaos gate can assert a
+    /// post-kill pull really was replica-served.
+    pub replica_pulls: u64,
+    /// Bytes bulk-copied by `Install` handoffs when a confirmed-dead
+    /// shard actor's blocks were re-homed (promotion re-seeding the
+    /// successor list). Setup-time replica seeding is free; only
+    /// failure-driven transfers count.
+    pub handoff_bytes: u64,
 }

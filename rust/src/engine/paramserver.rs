@@ -1,51 +1,108 @@
 //! Parameter-server engine — centralised model, centralised states
 //! (paper §4.1 case 1; supports all five barrier methods plus pQuorum).
 //!
-//! The model vector is partitioned into `n_shards` contiguous blocks, each
-//! owned by its own **shard actor** with its own mailbox; barrier state
-//! (the [`StepTracker`]) lives in a dedicated **coordinator actor**, so
-//! model-plane traffic (pushes/pulls) and control-plane traffic (reports,
-//! barrier checks, sampling) never serialise through one queue. Workers
-//! run the `pull → compute → push → barrier` loop, accumulating gradients
+//! The model vector is partitioned across `n_shards` **shard actors**,
+//! each with its own mailbox; barrier state (the [`StepTracker`]) lives
+//! in a dedicated **coordinator actor**, so model-plane traffic
+//! (pushes/pulls) and control-plane traffic (reports, barrier checks,
+//! sampling) never serialise through one queue. Workers run the
+//! `pull → compute → push → barrier` loop, accumulating gradients
 //! locally for `push_batch` steps and then scattering **one batched
 //! message per touched shard**.
 //!
-//! Pushes are **acknowledged**: a worker reports its new step to the
-//! coordinator only after every touched shard has applied its batch, so
-//! the single-server invariant "a reported step's updates are visible"
-//! survives the split — a BSP/SSP barrier pass still implies the model
-//! contains every update of the steps it waited for. `n_shards = 1,
-//! push_batch = 1` reproduces the paper's single-server scenario exactly
-//! (one mailbox, atomic pulls). With more shards, each *block* is
-//! individually consistent but a pull assembles blocks while concurrent
-//! pushes land — the standard sharded-parameter-server consistency
-//! model. For global methods the coordinator answers barrier checks from
-//! its tracker; for PSP methods it *samples* the tracker (the
-//! centralised sampling scenario of §5) — workers never see global state
-//! either way, which is why the sharding is invisible to barrier
-//! semantics: sampled decisions never needed the model actor at all.
+//! ## Placement ([`ShardLayout`])
+//!
+//! With `vnodes == 0` each shard owns a contiguous block
+//! ([`shard_range`]) — the historical layout, preserved bit-for-bit.
+//! With `vnodes ≥ 1` parameters are placed by consistent hashing on a
+//! chord ring where every shard occupies `vnodes` virtual positions
+//! ([`crate::overlay::Ring::join_vnodes`]): each parameter index is
+//! owned by the ring-successor of its hashed key. One position per
+//! shard reproduces the classic successor-placement skew (tens-of-×
+//! max/min key imbalance); dozens of virtual positions flatten it —
+//! measured by `benches/simulator.rs` and gated in CI.
+//!
+//! ## Replication and failover
+//!
+//! With `replication = r ≥ 1`, every shard actor streams each applied
+//! batch to its `r` distinct ring successors (`Replicate`). The
+//! worker's per-flush ack channel is the **quiescence barrier**: the
+//! primary sends one `PushAck` and forwards the batch with a clone of
+//! the ack sender; replicas apply and then *drop* the clone without
+//! sending. The channel therefore disconnects only once the batch is
+//! applied (or dead-lettered) everywhere it was addressed — so when a
+//! worker proceeds past a flush, every replica is bitwise-identical to
+//! its primary for all acknowledged pushes (asserted at join).
+//!
+//! A killed shard actor (crash-stop, injectable via
+//! [`PsConfig::kill_shard`]) dies at a message boundary: a push it never
+//! acknowledged was never applied *anywhere* (replication happens
+//! before the ack), so worker retries cannot double-apply. Workers that
+//! observe the silence report it to the coordinator, which — reusing
+//! the membership plane's [`FailureDetector::declare_dead`] and ring
+//! eviction as the trigger — promotes the first live successor to
+//! primary and re-seeds the successor list via bulk `Install` handoff
+//! (`handoff_bytes`). Pulls are served by whichever actor currently
+//! holds the block; reads served from a block the actor was not the
+//! original home of count as `replica_pulls` (safe for SGD: replica
+//! reads lag the primary by at most the in-flight batch, the ASAP
+//! argument). Acceptance bar: kill any single shard actor mid-run and
+//! training completes with zero lost updates.
 
 use std::ops::Range;
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::actor::System;
+use crate::actor::{Address, System};
 use crate::barrier::{Method, ViewRequirement};
+use crate::engine::membership::{FailureDetector, MembershipConfig};
 use crate::engine::{EngineReport, GradFn};
+use crate::overlay::{node_ring_id, Ring};
 use crate::sampling::StepTracker;
 use crate::util::rng::Rng;
 
+/// Namespace for shard placement positions on the ring.
+const PLACEMENT_NAMESPACE: u64 = 0xB10C_B10C;
+/// Namespace for hashing parameter indices to ring keys.
+const KEY_NAMESPACE: u64 = 0x4B45_59;
+
+/// One primary acknowledgement per acked push (replicas never send —
+/// they only release their clone of the sender once applied).
+pub struct PushAck {
+    pub shard: usize,
+}
+
 /// Messages understood by a shard actor (model plane).
 pub enum ShardMsg {
-    /// Batched gradient slice for this shard's block; the shard applies
-    /// `w[j] -= lr * grad[j]` elementwise, then acknowledges so the
-    /// worker can report the step as visible.
-    Push { grad: Vec<f32>, ack: Sender<()> },
-    /// Pull this shard's block: replies `(shard index, block)` so a
-    /// worker can gather all shards through one channel.
-    Pull { reply: Sender<(usize, Vec<f32>)> },
-    /// Shut down and report `(block, pushes applied)`.
-    Stop { reply: Sender<(Vec<f32>, u64)> },
+    /// Addresses of every shard actor, delivered by the runtime before
+    /// any worker traffic (FIFO) so primaries can forward replica
+    /// streams and promoted actors can bulk-install.
+    Init { peers: Vec<Address<ShardMsg>> },
+    /// Batched gradient for shard `shard`'s block (values in owned-index
+    /// order); the primary applies `w[j] -= lr * grad[j]`, forwards the
+    /// batch to its replicas, then acknowledges.
+    Push { shard: usize, grad: Vec<f32>, ack: Sender<PushAck> },
+    /// Replica stream: an applied batch forwarded by the primary. The
+    /// replica applies it and then drops `ack` unsent — disconnecting
+    /// the worker's flush channel only after the apply.
+    Replicate { shard: usize, grad: Vec<f32>, ack: Sender<PushAck> },
+    /// Bulk handoff: adopt `block` as the current state of `shard`.
+    Install { shard: usize, block: Vec<f32> },
+    /// Become (or stay) primary for `shard`: forward future batches to
+    /// `replicas` and bulk-install the current block on `install`
+    /// targets. Replies with the handoff bytes shipped.
+    Promote {
+        shard: usize,
+        replicas: Vec<usize>,
+        install: Vec<usize>,
+        reply: Sender<u64>,
+    },
+    /// Pull shard `shard`'s block: replies `(shard, block)` so a worker
+    /// can gather all shards through one channel.
+    Pull { shard: usize, reply: Sender<(usize, Vec<f32>)> },
+    /// Shut down; final state is returned from the actor body.
+    Stop,
 }
 
 /// Messages understood by the barrier coordinator (control plane).
@@ -56,8 +113,26 @@ pub enum CoordMsg {
     Barrier { step: u64, reply: Sender<bool> },
     /// Centralised sampling primitive: min step over β sampled peers.
     SampleMin { node: u32, beta: usize, reply: Sender<Option<u64>> },
-    /// Shut down and report the number of step reports handled.
-    Stop { reply: Sender<u64> },
+    /// Worker observed shard `shard`'s routed actor go silent (failed
+    /// send or missing ack). The coordinator confirms the death, re-homes
+    /// every shard the actor served, and replies with the fresh routes.
+    ShardDead { shard: usize, actor: usize, reply: Sender<Vec<usize>> },
+    /// Shut down and report final control-plane state.
+    Stop { reply: Sender<CoordStats> },
+}
+
+/// Coordinator final state, returned at shutdown.
+pub struct CoordStats {
+    /// Step reports handled.
+    pub reports: u64,
+    /// Final shard -> primary-actor routing table.
+    pub route: Vec<usize>,
+    /// Final shard -> replica-actor lists.
+    pub replicas_of: Vec<Vec<usize>>,
+    /// Per-actor death flags.
+    pub dead: Vec<bool>,
+    /// Deaths confirmed (distinct actors).
+    pub confirmed_dead: u64,
 }
 
 /// Engine configuration.
@@ -90,6 +165,18 @@ pub struct PsConfig {
     /// trade-off is standard gradient accumulation: the server view lags
     /// a worker's local progress by up to `push_batch - 1` updates.
     pub push_batch: usize,
+    /// Ring-successor replicas each shard streams applied batches to.
+    /// 0 = no replication (pre-durability behaviour, bit-identical).
+    pub replication: usize,
+    /// Virtual placement positions per shard. 0 = contiguous blocks
+    /// (historical layout); ≥ 1 = consistent-hash placement with that
+    /// many vnodes per shard (≥ ~32 recommended for balance).
+    pub vnodes: usize,
+    /// Fault injection: `(shard, after)` crash-stops shard actor `shard`
+    /// immediately after it acknowledges its `max(after, 1)`-th primary
+    /// batch. Requires `replication ≥ 1` and `n_shards ≥ 2` (a replica
+    /// must exist to inherit the block).
+    pub kill_shard: Option<(usize, u64)>,
 }
 
 impl Default for PsConfig {
@@ -106,6 +193,9 @@ impl Default for PsConfig {
             schedule_blocks: None,
             n_shards: 1,
             push_batch: 1,
+            replication: 0,
+            vnodes: 0,
+            kill_shard: None,
         }
     }
 }
@@ -129,12 +219,228 @@ pub fn scheduled_range(
 /// The model range owned by shard `shard` when `dim` parameters are split
 /// into `n_shards` contiguous blocks (same arithmetic as
 /// [`scheduled_range`], so a schedule with `nblocks == n_shards` touches
-/// exactly one shard per step).
+/// exactly one shard per step). This is the `vnodes == 0` placement.
 pub fn shard_range(dim: usize, n_shards: usize, shard: usize) -> Range<usize> {
     let n_shards = n_shards.clamp(1, dim.max(1));
     let size = dim.div_ceil(n_shards);
     let lo = (shard * size).min(dim);
     lo..((shard + 1) * size).min(dim)
+}
+
+/// Where every parameter lives and who replicates whom: the placement
+/// ring evaluated once at startup, shared by workers (gather/scatter),
+/// shard actors (initial forward lists) and the coordinator (failover
+/// preference order).
+#[derive(Debug, Clone)]
+pub struct ShardLayout {
+    pub n_shards: usize,
+    /// Parameter indices owned by each shard, ascending.
+    pub owned: Vec<Vec<usize>>,
+    /// Owning shard of each parameter index.
+    pub owner_of: Vec<usize>,
+    /// Full clockwise distinct-successor order per shard — the replica
+    /// preference list (first `r` entries are the live replica set; the
+    /// rest are promotion candidates).
+    pub succ_order: Vec<Vec<usize>>,
+    /// The placement ring itself (evicted on confirmed deaths).
+    pub ring: Ring,
+}
+
+impl ShardLayout {
+    pub fn new(dim: usize, n_shards: usize, vnodes: usize) -> ShardLayout {
+        let n_shards = n_shards.clamp(1, dim.max(1));
+        let mut ring = Ring::new(PLACEMENT_NAMESPACE);
+        for s in 0..n_shards {
+            ring.join_vnodes(s, vnodes.max(1));
+        }
+        let mut owned: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        let mut owner_of = vec![0usize; dim];
+        if vnodes == 0 {
+            // Historical contiguous layout, preserved exactly.
+            for s in 0..n_shards {
+                for j in shard_range(dim, n_shards, s) {
+                    owned[s].push(j);
+                    owner_of[j] = s;
+                }
+            }
+        } else {
+            // Consistent hashing: successor of the key's ring position.
+            for (j, owner) in owner_of.iter_mut().enumerate() {
+                let key = node_ring_id(j, KEY_NAMESPACE);
+                let (_, s) = ring.successor(key).expect("non-empty ring");
+                owned[s].push(j);
+                *owner = s;
+            }
+        }
+        let succ_order: Vec<Vec<usize>> = (0..n_shards)
+            .map(|s| ring.successors_distinct(s, n_shards))
+            .collect();
+        ShardLayout { n_shards, owned, owner_of, succ_order, ring }
+    }
+
+    /// Replica set of shard `s` at replication factor `r`.
+    pub fn replicas(&self, s: usize, r: usize) -> &[usize] {
+        &self.succ_order[s][..r.min(self.succ_order[s].len())]
+    }
+
+    /// Per-shard push-traffic imbalance: max/min owned-key count (each
+    /// batched push to shard `s` carries `owned[s].len()` values, so key
+    /// counts are proportional to push bytes). Min is clamped to 1 so a
+    /// shard that owns nothing reports the worst finite ratio.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.owned.iter().map(Vec::len).max().unwrap_or(1);
+        let min = self.owned.iter().map(Vec::len).min().unwrap_or(1);
+        max as f64 / min.max(1) as f64
+    }
+}
+
+/// A shard actor's final state, returned from its body at shutdown (or
+/// at its injected crash) and recovered via `join`.
+struct ShardDone {
+    /// Block state per shard index (own block + replica copies + any
+    /// blocks adopted by promotion).
+    blocks: Vec<Option<Vec<f32>>>,
+    /// Primary batches applied (and acknowledged).
+    applied: u64,
+    /// Replica batches applied from the forward stream.
+    replica_applied: u64,
+    /// Pulls served from a block this actor was not the home of.
+    replica_pulls: u64,
+    /// Bytes shipped in promotion-driven `Install` handoffs.
+    handoff_bytes: u64,
+    /// Messages discarded for lack of state / stale routing.
+    discarded: u64,
+}
+
+/// Coordinator-side failover state: the routing table plus the
+/// membership machinery that confirms deaths and re-homes shards.
+struct Failover {
+    route: Vec<usize>,
+    replicas_of: Vec<Vec<usize>>,
+    dead: Vec<bool>,
+    confirmed_dead: u64,
+    r: usize,
+    succ_order: Vec<Vec<usize>>,
+    peers: Vec<Address<ShardMsg>>,
+    detector: FailureDetector,
+    ring: Ring,
+}
+
+impl Failover {
+    fn new(layout: &ShardLayout, r: usize, peers: Vec<Address<ShardMsg>>) -> Failover {
+        let n = layout.n_shards;
+        Failover {
+            route: (0..n).collect(),
+            replicas_of: (0..n).map(|s| layout.replicas(s, r).to_vec()).collect(),
+            dead: vec![false; n],
+            confirmed_dead: 0,
+            r,
+            succ_order: layout.succ_order.clone(),
+            peers,
+            // The coordinator observes as pseudo-member `n` so every
+            // shard actor is a declarable peer.
+            detector: FailureDetector::new(n, n + 1, 0, MembershipConfig::default()),
+            ring: layout.ring.clone(),
+        }
+    }
+
+    fn confirm(&mut self, actor: usize) {
+        if self.dead[actor] {
+            return;
+        }
+        self.dead[actor] = true;
+        self.confirmed_dead += 1;
+        // Membership plane: record the death and vacate the actor's ring
+        // positions (all its vnodes) so placement state stays consistent.
+        self.detector.declare_dead(actor);
+        self.ring.evict(actor);
+    }
+
+    /// A worker reported `actor` (routed primary of `shard`) silent.
+    /// Idempotent: a second report of an already-handled death only
+    /// refreshes routes.
+    fn on_shard_dead(&mut self, shard: usize, actor: usize) {
+        if self.dead[actor] || self.route[shard] != actor {
+            return; // stale report — the re-home already happened
+        }
+        self.confirm(actor);
+        for s in 0..self.route.len() {
+            let involved = self.route[s] == actor || self.replicas_of[s].contains(&actor);
+            if involved {
+                self.rehome(s);
+            }
+        }
+    }
+
+    /// Recompute shard `s`'s primary + replica set over live actors and
+    /// push the change to the (possibly newly promoted) primary, which
+    /// bulk-installs state on any replica that lacks it.
+    fn rehome(&mut self, s: usize) {
+        loop {
+            let pref: Vec<usize> = std::iter::once(s)
+                .chain(self.succ_order[s].iter().copied())
+                .filter(|&x| !self.dead[x])
+                .collect();
+            let Some(&primary) = pref.first() else {
+                return; // every candidate dead: the shard is lost
+            };
+            let replicas: Vec<usize> =
+                pref.iter().skip(1).take(self.r).copied().collect();
+            // Actors that already hold s's block (survivors of the old set).
+            let mut holders: Vec<usize> = Vec::new();
+            if !self.dead[self.route[s]] {
+                holders.push(self.route[s]);
+            }
+            holders.extend(
+                self.replicas_of[s].iter().copied().filter(|&x| !self.dead[x]),
+            );
+            let install: Vec<usize> = replicas
+                .iter()
+                .copied()
+                .filter(|t| !holders.contains(t))
+                .collect();
+            let (ptx, prx) = channel();
+            let sent = self.peers[primary].send(ShardMsg::Promote {
+                shard: s,
+                replicas: replicas.clone(),
+                install,
+                reply: ptx,
+            });
+            // Blocking on the reply is safe: shard actors never block, so
+            // a live primary always answers. Waiting here guarantees the
+            // handoff finished before any worker learns the new route.
+            if sent && prx.recv().is_ok() {
+                self.route[s] = primary;
+                self.replicas_of[s] = replicas;
+                return;
+            }
+            // The candidate died under us — confirm and take the next.
+            self.confirm(primary);
+        }
+    }
+}
+
+/// Report a silent shard primary to the coordinator and adopt the
+/// refreshed routing table. Returns false when the engine is shutting
+/// down (coordinator gone).
+fn confirm_dead_and_refresh(
+    coord: &Address<CoordMsg>,
+    routes: &mut Vec<usize>,
+    control_msgs: &mut u64,
+    shard: usize,
+) -> bool {
+    let (tx, rx) = channel();
+    *control_msgs += 2;
+    if !coord.send(CoordMsg::ShardDead { shard, actor: routes[shard], reply: tx }) {
+        return false;
+    }
+    match rx.recv() {
+        Ok(fresh) => {
+            *routes = fresh;
+            true
+        }
+        Err(_) => false,
+    }
 }
 
 /// Run the engine to completion: every worker performs its step budget.
@@ -153,51 +459,161 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     let seed = cfg.seed;
     let n_shards = cfg.n_shards.clamp(1, cfg.dim.max(1));
     let push_batch = cfg.push_batch.max(1);
-    let ranges: Vec<Range<usize>> =
-        (0..n_shards).map(|k| shard_range(cfg.dim, n_shards, k)).collect();
+    let replication = cfg.replication.min(n_shards.saturating_sub(1));
+    let layout = Arc::new(ShardLayout::new(cfg.dim, n_shards, cfg.vnodes));
+    if cfg.kill_shard.is_some() {
+        assert!(
+            replication >= 1 && n_shards >= 2,
+            "kill injection needs replication >= 1 and n_shards >= 2 \
+             so a replica exists to inherit the block"
+        );
+    }
 
     // ---- shard actors (model plane) ----
-    let shards: Vec<_> = ranges
-        .iter()
-        .enumerate()
-        .map(|(k, range)| {
-            let block = init_w[range.clone()].to_vec();
-            sys.spawn::<ShardMsg, _, _>(&format!("ps-shard-{k}"), move |mb| {
-                let mut w = block;
-                let mut updates: u64 = 0;
+    let shards: Vec<_> = (0..n_shards)
+        .map(|k| {
+            let block: Vec<f32> =
+                layout.owned[k].iter().map(|&j| init_w[j]).collect();
+            let init_forward = layout.replicas(k, replication).to_vec();
+            let kill = cfg.kill_shard;
+            sys.spawn::<ShardMsg, ShardDone, _>(&format!("ps-shard-{k}"), move |mb| {
+                let mut blocks: Vec<Option<Vec<f32>>> = vec![None; n_shards];
+                blocks[k] = Some(block);
+                let mut primary_of = vec![false; n_shards];
+                primary_of[k] = true;
+                let mut forward: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+                forward[k] = init_forward;
+                let mut peers: Vec<Address<ShardMsg>> = Vec::new();
+                let mut applied: u64 = 0;
+                let mut replica_applied: u64 = 0;
+                let mut replica_pulls: u64 = 0;
+                let mut handoff_bytes: u64 = 0;
+                let mut discarded: u64 = 0;
                 // Batched receive: one wakeup drains a burst of queued
                 // pushes, which is what makes many producers cheap.
                 let mut buf = Vec::with_capacity(32);
                 'serve: while mb.recv_batch(&mut buf, 32) > 0 {
                     for msg in buf.drain(..) {
                         match msg {
-                            ShardMsg::Push { grad, ack } => {
-                                updates += 1;
+                            ShardMsg::Init { peers: p } => peers = p,
+                            ShardMsg::Push { shard, grad, ack } => {
+                                if !primary_of[shard] {
+                                    // Stale route: neither apply nor ack —
+                                    // the worker re-resolves and retries.
+                                    discarded += 1;
+                                    continue;
+                                }
+                                let w = blocks[shard]
+                                    .as_mut()
+                                    .expect("primary holds its block");
                                 for (wi, gi) in w.iter_mut().zip(&grad) {
                                     *wi -= lr * gi;
                                 }
-                                let _ = ack.send(());
+                                applied += 1;
+                                // Replicate BEFORE acking: an acked batch
+                                // is on every addressed replica's queue.
+                                for &t in &forward[shard] {
+                                    peers[t].send(ShardMsg::Replicate {
+                                        shard,
+                                        grad: grad.clone(),
+                                        ack: ack.clone(),
+                                    });
+                                }
+                                let _ = ack.send(PushAck { shard });
+                                if let Some((victim, after)) = kill {
+                                    if victim == k && applied >= after.max(1) {
+                                        // Crash-stop at a message boundary:
+                                        // everything acked is replicated,
+                                        // everything queued dead-letters.
+                                        break 'serve;
+                                    }
+                                }
                             }
-                            ShardMsg::Pull { reply } => {
-                                let _ = reply.send((k, w.clone()));
+                            ShardMsg::Replicate { shard, grad, ack } => {
+                                match blocks[shard].as_mut() {
+                                    Some(w) => {
+                                        for (wi, gi) in w.iter_mut().zip(&grad) {
+                                            *wi -= lr * gi;
+                                        }
+                                        replica_applied += 1;
+                                    }
+                                    None => discarded += 1,
+                                }
+                                // Quiescence token: released post-apply.
+                                drop(ack);
                             }
-                            ShardMsg::Stop { reply } => {
-                                let _ = reply.send((w, updates));
-                                break 'serve;
+                            ShardMsg::Install { shard, block } => {
+                                blocks[shard] = Some(block);
                             }
+                            ShardMsg::Promote { shard, replicas, install, reply } => {
+                                primary_of[shard] = true;
+                                forward[shard] = replicas;
+                                let mut bytes = 0u64;
+                                if let Some(b) = blocks[shard].as_ref() {
+                                    for &t in &install {
+                                        if peers[t].send(ShardMsg::Install {
+                                            shard,
+                                            block: b.clone(),
+                                        }) {
+                                            bytes += 4 * b.len() as u64;
+                                        }
+                                    }
+                                }
+                                handoff_bytes += bytes;
+                                let _ = reply.send(bytes);
+                            }
+                            ShardMsg::Pull { shard, reply } => match blocks[shard]
+                                .as_ref()
+                            {
+                                Some(b) => {
+                                    if shard != k {
+                                        replica_pulls += 1;
+                                    }
+                                    let _ = reply.send((shard, b.clone()));
+                                }
+                                // No state: drop the reply sender so the
+                                // worker re-resolves the route.
+                                None => discarded += 1,
+                            },
+                            ShardMsg::Stop => break 'serve,
                         }
                     }
+                }
+                ShardDone {
+                    blocks,
+                    applied,
+                    replica_applied,
+                    replica_pulls,
+                    handoff_bytes,
+                    discarded,
                 }
             })
         })
         .collect();
 
-    // ---- coordinator actor (control plane: barrier state) ----
+    // Wire the actors together and seed the initial replica blocks —
+    // all before any worker exists, so these arrive first (FIFO).
+    let peers: Vec<Address<ShardMsg>> =
+        shards.iter().map(|s| s.addr.clone()).collect();
+    for addr in &peers {
+        addr.send(ShardMsg::Init { peers: peers.clone() });
+    }
+    for s in 0..n_shards {
+        let block: Vec<f32> = layout.owned[s].iter().map(|&j| init_w[j]).collect();
+        for &t in layout.replicas(s, replication) {
+            peers[t].send(ShardMsg::Install { shard: s, block: block.clone() });
+        }
+    }
+
+    // ---- coordinator actor (control plane: barrier state + failover) ----
+    let coord_layout = Arc::clone(&layout);
+    let coord_peers = peers.clone();
     let coord = sys.spawn::<CoordMsg, _, _>("ps-coord", move |mb| {
         let mut tracker = StepTracker::new(n);
         let mut rng = Rng::new(seed ^ SERVER_SEED_SALT);
         let mut scratch = Vec::new();
         let mut reports: u64 = 0;
+        let mut fo = Failover::new(&coord_layout, replication, coord_peers);
         while let Some(msg) = mb.recv() {
             match msg {
                 CoordMsg::Report { node, step } => {
@@ -213,8 +629,18 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         tracker.sample_min(node as usize, beta, &mut rng, &mut scratch);
                     let _ = reply.send(m);
                 }
+                CoordMsg::ShardDead { shard, actor, reply } => {
+                    fo.on_shard_dead(shard, actor);
+                    let _ = reply.send(fo.route.clone());
+                }
                 CoordMsg::Stop { reply } => {
-                    let _ = reply.send(reports);
+                    let _ = reply.send(CoordStats {
+                        reports,
+                        route: fo.route.clone(),
+                        replicas_of: fo.replicas_of.clone(),
+                        dead: fo.dead.clone(),
+                        confirmed_dead: fo.confirmed_dead,
+                    });
                     break;
                 }
             }
@@ -225,9 +651,9 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     let view = method.build().view();
     let workers: Vec<_> = (0..n)
         .map(|i| {
-            let shard_addrs: Vec<_> = shards.iter().map(|s| s.addr.clone()).collect();
+            let shard_addrs = peers.clone();
             let coord_addr = coord.addr.clone();
-            let ranges = ranges.clone();
+            let layout = Arc::clone(&layout);
             let grad_fn = grad_fn.clone();
             let poll = cfg.poll;
             let steps = cfg.steps_per_worker;
@@ -243,32 +669,58 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 let mut rng = Rng::new(wseed);
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
+                // Local copy of the shard -> primary routing table,
+                // refreshed from the coordinator after observed deaths.
+                let mut routes: Vec<usize> = (0..n_shards).collect();
                 let mut w = vec![0.0f32; dim];
                 // Local accumulator for batched pushes + which shards the
                 // accumulated updates touched.
                 let mut acc = vec![0.0f32; dim];
-                let mut touched = vec![false; ranges.len()];
+                let mut touched = vec![false; n_shards];
                 let mut pending: u64 = 0;
                 for step in 0..steps {
-                    // pull: gather every shard's block through one channel
-                    let (tx, rx) = channel();
-                    let mut requested = 0usize;
-                    for addr in &shard_addrs {
-                        if addr.send(ShardMsg::Pull { reply: tx.clone() }) {
-                            requested += 1;
+                    // pull: gather every shard's block through one
+                    // channel, re-routing around dead primaries
+                    let mut need = vec![true; n_shards];
+                    let mut outstanding = n_shards;
+                    let mut attempts = 0usize;
+                    while outstanding > 0 {
+                        attempts += 1;
+                        assert!(
+                            attempts <= n_shards + 8,
+                            "ps-worker-{i}: pull never converged on live shards"
+                        );
+                        let (tx, rx) = channel();
+                        for s in 0..n_shards {
+                            if need[s] {
+                                shard_addrs[routes[s]]
+                                    .send(ShardMsg::Pull { shard: s, reply: tx.clone() });
+                            }
                         }
-                    }
-                    if requested < shard_addrs.len() {
-                        break; // a shard is gone: shutting down
-                    }
-                    let mut received = 0usize;
-                    while received < requested {
-                        let Ok((k, block)) = rx.recv() else { break };
-                        w[ranges[k].clone()].copy_from_slice(&block);
-                        received += 1;
-                    }
-                    if received < requested {
-                        break;
+                        drop(tx);
+                        // Disconnects once every addressed actor replied
+                        // or dead-lettered the request.
+                        while let Ok((s, block)) = rx.recv() {
+                            for (&j, v) in layout.owned[s].iter().zip(&block) {
+                                w[j] = *v;
+                            }
+                            if need[s] {
+                                need[s] = false;
+                                outstanding -= 1;
+                            }
+                        }
+                        for s in 0..n_shards {
+                            if need[s]
+                                && !confirm_dead_and_refresh(
+                                    &coord_addr,
+                                    &mut routes,
+                                    &mut control_msgs,
+                                    s,
+                                )
+                            {
+                                return (control_msgs, update_msgs);
+                            }
+                        }
                     }
                     // compute (stragglers sleep extra)
                     if let Some(d) = slow {
@@ -283,10 +735,8 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             for (j, gj) in g[range.clone()].iter().enumerate() {
                                 acc[range.start + j] += gj;
                             }
-                            for (k, r) in ranges.iter().enumerate() {
-                                if r.start < range.end && range.start < r.end {
-                                    touched[k] = true;
-                                }
+                            for j in range {
+                                touched[layout.owner_of[j]] = true;
                             }
                         }
                         None => {
@@ -298,29 +748,59 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     }
                     pending += 1;
                     // push: scatter one batched message per touched shard,
-                    // then wait for the applies — the step report below
-                    // must not outrun the updates it stands for
+                    // then wait for the acks — the step report below must
+                    // not outrun the updates it stands for. The channel
+                    // disconnect additionally waits for the replica
+                    // applies (the quiescence barrier).
                     if pending == push_batch as u64 || step + 1 == steps {
-                        let (ack_tx, ack_rx) = channel();
-                        let mut in_flight = 0usize;
-                        for (k, r) in ranges.iter().enumerate() {
-                            if !touched[k] {
+                        let mut flush: Vec<(usize, Vec<f32>)> = Vec::new();
+                        for s in 0..n_shards {
+                            if !touched[s] {
                                 continue;
                             }
-                            update_msgs += 1;
-                            if shard_addrs[k].send(ShardMsg::Push {
-                                grad: acc[r.clone()].to_vec(),
-                                ack: ack_tx.clone(),
-                            }) {
-                                in_flight += 1;
+                            let grad: Vec<f32> =
+                                layout.owned[s].iter().map(|&j| acc[j]).collect();
+                            for &j in &layout.owned[s] {
+                                acc[j] = 0.0;
                             }
-                            acc[r.clone()].iter_mut().for_each(|v| *v = 0.0);
-                            touched[k] = false;
+                            touched[s] = false;
+                            flush.push((s, grad));
                         }
-                        drop(ack_tx);
-                        for _ in 0..in_flight {
-                            if ack_rx.recv().is_err() {
-                                break;
+                        let mut attempts = 0usize;
+                        while !flush.is_empty() {
+                            attempts += 1;
+                            assert!(
+                                attempts <= n_shards + 8,
+                                "ps-worker-{i}: push never converged on live shards"
+                            );
+                            let (ack_tx, ack_rx) = channel();
+                            for (s, grad) in &flush {
+                                shard_addrs[routes[*s]].send(ShardMsg::Push {
+                                    shard: *s,
+                                    grad: grad.clone(),
+                                    ack: ack_tx.clone(),
+                                });
+                            }
+                            drop(ack_tx);
+                            while let Ok(PushAck { shard }) = ack_rx.recv() {
+                                update_msgs += 1;
+                                flush.retain(|(s, _)| *s != shard);
+                            }
+                            // Unacked pushes were never applied anywhere
+                            // (replication precedes the ack, the crash sits
+                            // at a message boundary) — safe to re-send to
+                            // the promoted primary.
+                            let silent: Vec<usize> =
+                                flush.iter().map(|(s, _)| *s).collect();
+                            for s in silent {
+                                if !confirm_dead_and_refresh(
+                                    &coord_addr,
+                                    &mut routes,
+                                    &mut control_msgs,
+                                    s,
+                                ) {
+                                    return (control_msgs, update_msgs);
+                                }
                             }
                         }
                         pending = 0;
@@ -385,26 +865,55 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         control_msgs += c;
         update_msgs += u;
     }
-    let mut model = vec![0.0f32; cfg.dim];
-    let mut server_updates = 0u64;
-    for (k, shard) in shards.into_iter().enumerate() {
-        let (tx, rx) = channel();
-        shard.addr.send(ShardMsg::Stop { reply: tx });
-        let (block, updates) = rx.recv().expect("shard stats");
-        model[ranges[k].clone()].copy_from_slice(&block);
-        server_updates += updates;
-        let (saddr, shandle) = shard.into_parts();
-        drop(saddr);
-        shandle.join().expect("shard panicked");
-    }
+    // Coordinator first: its final routing table decides which actor's
+    // copy of each block is authoritative.
     let (tx, rx) = channel();
     coord.addr.send(CoordMsg::Stop { reply: tx });
-    let reports = rx.recv().expect("coordinator stats");
+    let stats = rx.recv().expect("coordinator stats");
     let (caddr, chandle) = coord.into_parts();
     drop(caddr);
     chandle.join().expect("coordinator panicked");
+    // Shard actors return their state from the body (a killed actor's
+    // thread already finished at its crash point — join still recovers
+    // its stats and the stale copies it held).
+    let mut dones: Vec<ShardDone> = Vec::with_capacity(n_shards);
+    for shard in shards {
+        shard.addr.send(ShardMsg::Stop);
+        let (saddr, shandle) = shard.into_parts();
+        drop(saddr);
+        dones.push(shandle.join().expect("shard panicked"));
+    }
+    drop(peers);
+
+    // Assemble the model from each shard's current primary and verify
+    // the replication invariants of the final barrier boundary.
+    let mut model = vec![0.0f32; cfg.dim];
+    let mut server_updates = 0u64;
+    for s in 0..n_shards {
+        let p = stats.route[s];
+        assert!(!stats.dead[p], "shard {s}: no live primary survived");
+        let block = dones[p].blocks[s].as_ref().expect("primary block present");
+        for (&j, v) in layout.owned[s].iter().zip(block) {
+            model[j] = *v;
+        }
+        // Every live replica must be bitwise-equal to its primary: the
+        // run is quiescent (all flush channels disconnected), so lagging
+        // even one acked update here would be a lost-durability bug.
+        for &t in &stats.replicas_of[s] {
+            if stats.dead[t] {
+                continue;
+            }
+            let rb = dones[t].blocks[s].as_ref().expect("replica block present");
+            let equal = rb.len() == block.len()
+                && rb.iter().zip(block).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(equal, "shard {s}: replica on actor {t} diverged from primary");
+        }
+    }
+    for d in &dones {
+        server_updates += d.applied;
+    }
     assert_eq!(server_updates, update_msgs);
-    assert_eq!(reports, n as u64 * cfg.steps_per_worker);
+    assert_eq!(stats.reports, n as u64 * cfg.steps_per_worker);
 
     EngineReport {
         steps: vec![cfg.steps_per_worker; n],
@@ -412,6 +921,10 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         control_msgs,
         wall_secs: start.elapsed().as_secs_f64(),
         model,
+        confirmed_dead: stats.confirmed_dead,
+        replica_pulls: dones.iter().map(|d| d.replica_pulls).sum(),
+        handoff_bytes: dones.iter().map(|d| d.handoff_bytes).sum(),
+        discarded_msgs: dones.iter().map(|d| d.discarded).sum(),
         ..EngineReport::default()
     }
 }
@@ -424,6 +937,7 @@ const SERVER_SEED_SALT: u64 = 0x5EA5_1DE5;
 mod tests {
     use super::*;
     use crate::model::linear::{Dataset, LinearModel};
+    use crate::testing::property;
     use crate::util::stats::l2_dist;
     use std::sync::Arc;
     use std::sync::Mutex;
@@ -535,6 +1049,41 @@ mod tests {
             }
             assert!(covered.iter().all(|&c| c), "gap (dim={dim} shards={shards})");
         }
+    }
+
+    #[test]
+    fn vnode_layout_partitions_dim_and_flattens_skew() {
+        for (dim, shards, vnodes) in [(103usize, 7usize, 0usize), (103, 7, 8), (512, 8, 32)] {
+            let l = ShardLayout::new(dim, shards, vnodes);
+            let mut covered = vec![false; dim];
+            for s in 0..shards {
+                for &j in &l.owned[s] {
+                    assert!(!covered[j], "double-owned {j}");
+                    covered[j] = true;
+                    assert_eq!(l.owner_of[j], s);
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "unowned parameter");
+        }
+        // vnodes == 0 reproduces the contiguous pre-vnode split exactly
+        let l = ShardLayout::new(103, 7, 0);
+        for s in 0..7 {
+            assert_eq!(l.owned[s], shard_range(103, 7, s).collect::<Vec<_>>());
+        }
+        // successor order: complete, distinct, never self
+        let l = ShardLayout::new(512, 8, 16);
+        for s in 0..8 {
+            assert_eq!(l.succ_order[s].len(), 7);
+            assert!(!l.succ_order[s].contains(&s));
+            assert_eq!(l.replicas(s, 2).len(), 2);
+        }
+        // the headline: virtual nodes flatten hash-placement imbalance
+        let skewed = ShardLayout::new(4096, 8, 1).imbalance();
+        let flat = ShardLayout::new(4096, 8, 64).imbalance();
+        assert!(
+            skewed / flat >= 3.0,
+            "vnodes should flatten push-traffic skew ≥ 3x: {skewed:.2} vs {flat:.2}"
+        );
     }
 
     #[test]
@@ -692,5 +1241,134 @@ mod tests {
         // per worker: flushes after steps 3, 6 and the final step 7
         assert_eq!(r.update_msgs, 3 * 3 * 2);
         assert!(l2_dist(&r.model, &expected) < 1e-4);
+    }
+
+    #[test]
+    fn replication_preserves_results_and_counters() {
+        // Fault-free replication must be invisible: same model, same
+        // message counts, zero failover traffic. The bitwise
+        // replica == primary check at every run's end is asserted
+        // inside `run` itself.
+        for replication in [1usize, 2, 3] {
+            let cfg = PsConfig {
+                n_workers: 4,
+                steps_per_worker: 10,
+                method: Method::Ssp { staleness: 2 },
+                dim: 40,
+                lr: 0.05,
+                seed: 61,
+                n_shards: 4,
+                replication,
+                ..PsConfig::default()
+            };
+            let grad = seed_only_grad_fn(cfg.dim);
+            let expected = expected_seed_only_model(&cfg, &grad);
+            let r = run(&cfg, vec![0.0; cfg.dim], grad);
+            assert_eq!(r.update_msgs, 4 * 10 * 4, "r={replication}");
+            assert!(l2_dist(&r.model, &expected) < 1e-4, "r={replication}");
+            assert_eq!(r.confirmed_dead, 0);
+            assert_eq!(r.handoff_bytes, 0, "fault-free run shipped handoffs");
+            assert_eq!(r.replica_pulls, 0, "fault-free run read a replica");
+        }
+    }
+
+    #[test]
+    fn prop_replicas_bitwise_equal_at_barrier_boundaries() {
+        // Randomised sweep over shapes, methods and placement: every run
+        // ends with each replica block bitwise-equal to its primary
+        // (checked inside `run`) and the model equal to the analytic
+        // update sum.
+        property("replica blocks bitwise equal", 10, |g| {
+            let n_shards = g.usize_in(2, 5);
+            let methods = [
+                Method::Asp,
+                Method::Bsp,
+                Method::Ssp { staleness: 2 },
+                Method::Pssp { sample: 3, staleness: 2 },
+            ];
+            let cfg = PsConfig {
+                n_workers: g.usize_in(1, 4),
+                steps_per_worker: g.usize_in(1, 8) as u64,
+                method: methods[g.usize_in(0, 3)],
+                dim: g.usize_in(n_shards, 40),
+                lr: 0.05,
+                seed: g.rng().next_u64(),
+                n_shards,
+                push_batch: g.usize_in(1, 3),
+                replication: g.usize_in(1, n_shards - 1),
+                vnodes: [0usize, 4][g.usize_in(0, 1)],
+                ..PsConfig::default()
+            };
+            let grad = seed_only_grad_fn(cfg.dim);
+            let expected = expected_seed_only_model(&cfg, &grad);
+            let r = run(&cfg, vec![0.0; cfg.dim], grad);
+            let d = l2_dist(&r.model, &expected);
+            assert!(d < 1e-3, "off by {d}");
+            assert_eq!(r.confirmed_dead, 0);
+        });
+    }
+
+    #[test]
+    fn chaos_killed_shard_actor_loses_no_acked_updates() {
+        // The PR's acceptance bar: kill ANY single shard actor mid-run
+        // and training completes with zero lost updates — every
+        // acknowledged push is in the final model, the death is
+        // confirmed, post-kill pulls are replica-served, and the
+        // re-home shipped a bulk handoff.
+        let base = PsConfig {
+            n_workers: 3,
+            steps_per_worker: 8,
+            method: Method::Ssp { staleness: 2 },
+            dim: 33,
+            lr: 0.05,
+            seed: 71,
+            n_shards: 4,
+            replication: 2,
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(base.dim);
+        let expected = expected_seed_only_model(&base, &grad);
+        for victim in 0..base.n_shards {
+            let cfg = PsConfig { kill_shard: Some((victim, 3)), ..base.clone() };
+            let r = run(&cfg, vec![0.0; cfg.dim], grad.clone());
+            // every logical push acked exactly once (retries replace the
+            // dead-lettered attempt, never duplicate it)
+            assert_eq!(r.update_msgs, 3 * 8 * 4, "victim {victim}");
+            let d = l2_dist(&r.model, &expected);
+            assert!(d < 1e-4, "victim {victim}: lost updates, off by {d}");
+            assert_eq!(r.confirmed_dead, 1, "victim {victim}");
+            assert!(r.replica_pulls > 0, "victim {victim}: no replica-served pull");
+            assert!(r.handoff_bytes > 0, "victim {victim}: no bulk handoff");
+        }
+    }
+
+    #[test]
+    fn chaos_kill_under_vnode_placement_and_batching() {
+        // Same zero-loss bar with consistent-hash placement and push
+        // batching — the re-home must hand off vnode-scattered blocks.
+        let cfg = PsConfig {
+            n_workers: 4,
+            steps_per_worker: 9,
+            method: Method::Pssp { sample: 3, staleness: 2 },
+            dim: 50,
+            lr: 0.05,
+            seed: 81,
+            n_shards: 5,
+            push_batch: 3,
+            replication: 2,
+            vnodes: 8,
+            kill_shard: Some((2, 2)),
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(cfg.dim);
+        let expected = expected_seed_only_model(&cfg, &grad);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        // per worker: flushes after steps 3, 6 and the final step 9,
+        // each touching all 5 shards
+        assert_eq!(r.update_msgs, 4 * 3 * 5);
+        let d = l2_dist(&r.model, &expected);
+        assert!(d < 1e-4, "lost updates under vnode placement: off by {d}");
+        assert_eq!(r.confirmed_dead, 1);
+        assert!(r.handoff_bytes > 0);
     }
 }

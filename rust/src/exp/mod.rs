@@ -16,6 +16,7 @@
 //! `rust/tests/figures.rs`, and EXPERIMENTS.md records one full run.
 
 pub mod ablation;
+pub mod chaos;
 pub mod crash_churn;
 pub mod fig1;
 pub mod fig2;
@@ -287,7 +288,7 @@ pub const ALL: &[&str] = &[
 /// Ablations + extensions beyond the paper (run via `actor exp ext`).
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
-    "ext_shards", "ext_p2p", "ext_crash",
+    "ext_shards", "ext_p2p", "ext_crash", "ext_chaos",
 ];
 
 /// Run one experiment by id.
@@ -313,6 +314,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "ext_shards" => vec![ablation::ext_shards(opts)],
         "ext_p2p" => vec![p2p_scale::ext_p2p(opts)],
         "ext_crash" => vec![crash_churn::ext_crash(opts)],
+        "ext_chaos" => vec![chaos::ext_chaos(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

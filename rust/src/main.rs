@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use actor_psp::barrier::Method;
 use actor_psp::cli::{Args, USAGE};
-use actor_psp::config::{parse_departure, Config};
+use actor_psp::config::{parse_departure, parse_kill_shard, Config};
 use actor_psp::engine::gossip::GossipConfig;
 use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::paramserver::{self, PsConfig};
@@ -96,7 +96,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_sim(args: &Args) -> Result<()> {
     args.check_known(&[
         "method", "nodes", "duration", "seed", "sgd", "config", "quick",
-        "crash-rate", "detect",
+        "crash-rate", "detect", "shard-crash-rate", "shard-rehome", "shards",
     ])?;
     // config file first, CLI flags override
     let mut cluster = match args.get("config") {
@@ -134,6 +134,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(secs) = args.parse_flag::<f64>("detect")? {
         cluster.crash_detect_secs = secs;
     }
+    if let Some(rate) = args.parse_flag::<f64>("shard-crash-rate")? {
+        cluster.shard_crash_rate = rate;
+    }
+    if let Some(secs) = args.parse_flag::<f64>("shard-rehome")? {
+        cluster.shard_rehome_secs = secs;
+    }
+    if let Some(n) = args.parse_flag::<usize>("shards")? {
+        cluster.n_shards = n.max(1);
+    }
 
     println!(
         "simulating {} nodes for {:.0}s under {method} (seed {})",
@@ -168,6 +177,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
             r.churn_victims.len(),
         );
     }
+    if r.shard_crashes > 0 {
+        println!(
+            "shard faults: {} shard crash(es), {} deferred completion(s)",
+            r.shard_crashes, r.shard_stalls,
+        );
+    }
     if let Some(e) = r.final_error() {
         println!("final normalised model error: {e:.4}");
     }
@@ -179,7 +194,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
 fn cmd_ps(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "workers", "steps", "method", "dim", "lr", "seed", "shards",
-        "push-batch", "schedule-blocks",
+        "push-batch", "schedule-blocks", "replication", "vnodes", "kill-shard",
     ])?;
     // config file first, CLI flags override
     let mut cfg = match args.get("config") {
@@ -214,6 +229,15 @@ fn cmd_ps(args: &Args) -> Result<()> {
     if let Some(v) = args.parse_flag::<usize>("schedule-blocks")? {
         cfg.schedule_blocks = (v > 0).then_some(v);
     }
+    if let Some(v) = args.parse_flag::<usize>("replication")? {
+        cfg.replication = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("vnodes")? {
+        cfg.vnodes = v;
+    }
+    if let Some(s) = args.get("kill-shard") {
+        cfg.kill_shard = Some(parse_kill_shard(s)?);
+    }
 
     let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
     let rows = (cfg.dim * 8).clamp(256, 4096);
@@ -223,13 +247,15 @@ fn cmd_ps(args: &Args) -> Result<()> {
 
     println!(
         "parameter server: {} workers x {} steps, d={} under {} \
-         ({} shard(s), push batch {})",
+         ({} shard(s), push batch {}, replication {}, vnodes {})",
         cfg.n_workers,
         cfg.steps_per_worker,
         cfg.dim,
         cfg.method,
         cfg.n_shards,
         cfg.push_batch,
+        cfg.replication,
+        cfg.vnodes,
     );
     let init_err = l2_dist(&vec![0.0; cfg.dim], &w_true);
     let r = paramserver::run(&cfg, vec![0.0; cfg.dim], grad);
@@ -242,6 +268,13 @@ fn cmd_ps(args: &Args) -> Result<()> {
         init_err,
         l2_dist(&r.model, &w_true),
     );
+    if r.confirmed_dead > 0 || r.replica_pulls > 0 || r.handoff_bytes > 0 {
+        println!(
+            "durability: {} shard death(s) confirmed, {} replica-served \
+             pull(s), {} handoff byte(s)",
+            r.confirmed_dead, r.replica_pulls, r.handoff_bytes,
+        );
+    }
     println!(
         "wall {:.3}s  ({:.1}k worker-steps/s, {:.1}k pushes/s)",
         r.wall_secs,

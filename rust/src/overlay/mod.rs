@@ -46,7 +46,20 @@ pub type RingId = u64;
 /// Hash a node's name/index to a ring id (splitmix-style mixing — uniform
 /// over the id space, which the density estimator relies on).
 pub fn node_ring_id(node: usize, namespace: u64) -> RingId {
+    node_ring_id_v(node, 0, namespace)
+}
+
+/// Ring id of a node's `vnode`-th **virtual node**. `vnode == 0` is the
+/// node's primary id and equals [`node_ring_id`] exactly, so single-vnode
+/// rings (every pre-existing caller) are bit-identical to the pre-vnode
+/// code. Higher vnodes fold an odd-constant multiple of the index into
+/// the pre-mix state, giving each virtual position an independent
+/// uniform draw — the load-balance fix for successor-placement skew
+/// (a 1-vnode ring routinely lands 20–30× more keys on its luckiest
+/// member than its unluckiest; see `benches/simulator.rs`).
+pub fn node_ring_id_v(node: usize, vnode: usize, namespace: u64) -> RingId {
     let mut z = (node as u64)
+        .wrapping_add((vnode as u64).wrapping_mul(0xD1B54A32D192ED03))
         .wrapping_add(0x9E3779B97F4A7C15)
         .wrapping_mul(namespace | 1);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
@@ -64,17 +77,25 @@ pub fn node_ring_id(node: usize, namespace: u64) -> RingId {
 /// scans over the membership.
 #[derive(Debug, Clone)]
 pub struct Ring {
-    /// id -> application node index.
+    /// id -> application node index (every position: primary + vnodes).
     members: BTreeMap<RingId, usize>,
-    /// application node index -> id (reverse index; kept in lockstep with
-    /// `members` by `join`/`leave`).
+    /// application node index -> **primary** id (reverse index; kept in
+    /// lockstep with `members` by `join`/`leave`).
     ids: BTreeMap<usize, RingId>,
+    /// application node index -> extra virtual-node ids (vnode ≥ 1),
+    /// present only for members joined via [`Ring::join_vnodes`].
+    extra: BTreeMap<usize, Vec<RingId>>,
     namespace: u64,
 }
 
 impl Ring {
     pub fn new(namespace: u64) -> Ring {
-        Ring { members: BTreeMap::new(), ids: BTreeMap::new(), namespace }
+        Ring {
+            members: BTreeMap::new(),
+            ids: BTreeMap::new(),
+            extra: BTreeMap::new(),
+            namespace,
+        }
     }
 
     /// Build a ring over nodes 0..n.
@@ -86,8 +107,16 @@ impl Ring {
         r
     }
 
+    /// Ring positions (node count on single-vnode rings; primary + extra
+    /// virtual positions when [`Ring::join_vnodes`] was used).
     pub fn len(&self) -> usize {
         self.members.len()
+    }
+
+    /// Distinct member nodes, regardless of how many virtual positions
+    /// each occupies.
+    pub fn nodes(&self) -> usize {
+        self.ids.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -110,6 +139,30 @@ impl Ring {
         id
     }
 
+    /// Add a node occupying `vnodes` virtual positions (≥ 1; clamped).
+    /// Position 0 is the node's primary id — identical to [`Ring::join`] —
+    /// so a `vnodes == 1` ring is indistinguishable from a plain one.
+    /// Returns the primary id; rejoining an existing node is a no-op.
+    pub fn join_vnodes(&mut self, node: usize, vnodes: usize) -> RingId {
+        if let Some(&id) = self.ids.get(&node) {
+            return id;
+        }
+        let primary = self.join(node);
+        let mut extras = Vec::new();
+        for v in 1..vnodes.max(1) {
+            let mut id = node_ring_id_v(node, v, self.namespace);
+            while self.members.contains_key(&id) {
+                id = id.wrapping_add(1);
+            }
+            self.members.insert(id, node);
+            extras.push(id);
+        }
+        if !extras.is_empty() {
+            self.extra.insert(node, extras);
+        }
+        primary
+    }
+
     /// Remove a node by application index. O(log n) via the reverse index
     /// — churn-safe: high join/leave rates no longer cost a full
     /// membership scan per departure.
@@ -125,6 +178,12 @@ impl Ring {
     pub fn evict(&mut self, node: usize) -> Option<RingId> {
         let id = self.ids.remove(&node)?;
         self.members.remove(&id);
+        // Virtual positions vacate together with the primary.
+        if let Some(extras) = self.extra.remove(&node) {
+            for e in extras {
+                self.members.remove(&e);
+            }
+        }
         Some(id)
     }
 
@@ -136,13 +195,35 @@ impl Ring {
 
     /// The next node clockwise after `node` (its first successor-list
     /// entry). None if `node` is absent or alone — the successor of a
-    /// singleton ring is itself, which no caller wants as a peer.
+    /// singleton ring is itself, which no caller wants as a peer. On
+    /// vnode rings the walk skips the node's own virtual positions.
     pub fn successor_node(&self, node: usize) -> Option<usize> {
-        let id = self.ring_id_of(node)?;
-        if self.members.len() <= 1 {
-            return None;
+        self.successors_distinct(node, 1).first().copied()
+    }
+
+    /// Up to `r` **distinct** nodes walked clockwise from `node`'s
+    /// primary id, skipping `node` itself (and all its virtual
+    /// positions) plus repeat appearances of the same member — the
+    /// successor list that replica placement hands each shard. Returns
+    /// fewer than `r` entries when the ring has fewer other members.
+    pub fn successors_distinct(&self, node: usize, r: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let Some(id) = self.ring_id_of(node) else { return out };
+        let mut point = id.wrapping_add(1);
+        for _ in 0..self.members.len() {
+            let Some((sid, n)) = self.successor(point) else { break };
+            if sid == id {
+                break; // wrapped all the way around
+            }
+            if n != node && !out.contains(&n) {
+                out.push(n);
+                if out.len() == r {
+                    break;
+                }
+            }
+            point = sid.wrapping_add(1);
         }
-        self.successor(id.wrapping_add(1)).map(|(_, n)| n)
+        out
     }
 
     /// Successor of a point on the ring (wrapping).
@@ -477,6 +558,73 @@ mod tests {
         assert_ne!(heir, 3);
         // Rejoining restores the identical id (pure function of index).
         assert_eq!(r.join(3), id3);
+    }
+
+    #[test]
+    fn vnode_zero_id_matches_primary_hash() {
+        // v=0 must be byte-identical to the historical hash: every
+        // committed golden and membership trajectory depends on it.
+        for ns in [1u64, 7, 42, 0xB10C] {
+            for node in 0..64 {
+                assert_eq!(node_ring_id_v(node, 0, ns), node_ring_id(node, ns));
+            }
+        }
+        // higher vnodes land elsewhere
+        assert_ne!(node_ring_id_v(3, 1, 7), node_ring_id_v(3, 0, 7));
+        assert_ne!(node_ring_id_v(3, 2, 7), node_ring_id_v(3, 1, 7));
+    }
+
+    #[test]
+    fn join_vnodes_occupies_and_vacates_all_positions() {
+        let mut r = Ring::new(19);
+        for node in 0..4 {
+            r.join_vnodes(node, 8);
+        }
+        assert_eq!(r.nodes(), 4);
+        assert_eq!(r.len(), 4 * 8);
+        // primary id unchanged by vnode count
+        assert_eq!(r.ring_id_of(2), Some(node_ring_id(2, 19)));
+        // evict removes the primary and every virtual position at once
+        assert_eq!(r.evict(2), Some(node_ring_id(2, 19)));
+        assert_eq!(r.nodes(), 3);
+        assert_eq!(r.len(), 3 * 8);
+        assert_eq!(r.evict(2), None);
+        // successor walks on a vnode ring never return the node itself
+        for node in [0usize, 1, 3] {
+            assert_ne!(r.successor_node(node), Some(node));
+        }
+    }
+
+    #[test]
+    fn successors_distinct_orders_all_other_nodes() {
+        let mut r = Ring::new(23);
+        for node in 0..6 {
+            r.join_vnodes(node, 4);
+        }
+        for node in 0..6 {
+            let all = r.successors_distinct(node, usize::MAX);
+            assert_eq!(all.len(), 5, "node {node} should see every peer");
+            assert!(!all.contains(&node));
+            let mut d = all.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 5, "repeat entries in successor list");
+            // a truncated request is a prefix of the full walk
+            assert_eq!(r.successors_distinct(node, 2), all[..2].to_vec());
+        }
+        // single-vnode rings: first distinct successor == successor_node
+        let plain = Ring::with_nodes(16, 11);
+        for node in 0..16 {
+            assert_eq!(
+                plain.successors_distinct(node, 1).first().copied(),
+                plain.successor_node(node)
+            );
+        }
+        // singleton ring has no successors at all
+        let mut one = Ring::new(3);
+        one.join_vnodes(0, 16);
+        assert!(one.successors_distinct(0, 4).is_empty());
+        assert_eq!(one.successor_node(0), None);
     }
 
     #[test]

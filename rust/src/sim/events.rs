@@ -45,6 +45,12 @@ pub enum EventKind {
     /// The failure detector's suspect/confirm timeline elapsed for a
     /// crashed node: remove it from the tracked membership.
     ConfirmDead { node: usize },
+    /// A parameter-server shard actor crash-stops: pushes/pulls against
+    /// it stall until the shard is re-homed onto a replica.
+    ShardCrash,
+    /// Shard re-home complete (promotion + bulk handoff): workers may
+    /// push/pull shard `shard` again.
+    ShardRehomed { shard: usize },
 }
 
 /// A scheduled event.

@@ -183,6 +183,23 @@ pub struct ClusterConfig {
     /// engine's SWIM-style detector, collapsed to one constant at
     /// simulation scale).
     pub crash_detect_secs: f64,
+    /// Mean parameter-server shard-actor crash-stops per simulated
+    /// second (Poisson, like [`ChurnConfig`] rates but for the *server*
+    /// side). 0 disables the process entirely — no RNG draws, so
+    /// pre-existing seeded trajectories replay bit-identically. Each
+    /// crash stalls every worker's pushes until the shard is re-homed
+    /// onto a replica ([`ClusterConfig::shard_rehome_secs`]) — the
+    /// simulator-scale model of the live engine's replication plane
+    /// ([`crate::engine::paramserver`]).
+    pub shard_crash_rate: f64,
+    /// Seconds from a shard-actor crash to its re-home completing
+    /// (failure confirmation + promotion + bulk handoff); workers whose
+    /// iterations finish inside the window are deferred to its end.
+    pub shard_rehome_secs: f64,
+    /// Server shards the crash process picks victims from (matches the
+    /// live engine's `n_shards`; only meaningful with
+    /// `shard_crash_rate > 0`).
+    pub n_shards: usize,
     /// Record timelines every this many simulated seconds.
     pub sample_interval: f64,
     pub sgd: Option<SgdConfig>,
@@ -203,6 +220,9 @@ impl Default for ClusterConfig {
             recheck_interval: 0.25,
             churn: None,
             crash_detect_secs: 1.0,
+            shard_crash_rate: 0.0,
+            shard_rehome_secs: 0.5,
+            n_shards: 1,
             sample_interval: 5.0,
             sgd: None,
         }
@@ -232,6 +252,12 @@ pub struct SimResult {
     pub events: u64,
     /// Crash-stops executed (`ChurnConfig::crash_rate` victims).
     pub crashes: u64,
+    /// Server-side shard-actor crash-stops executed
+    /// (`ClusterConfig::shard_crash_rate`).
+    pub shard_crashes: u64,
+    /// Worker iterations deferred because they completed while a crashed
+    /// shard was still being re-homed.
+    pub shard_stalls: u64,
     /// Departed nodes (graceful leaves and crash-stops) in victim-pick
     /// order — the seeded churn trajectory the golden tests pin, so an
     /// enumeration-order change in victim selection is caught instead of
@@ -388,6 +414,13 @@ impl Simulator {
                 schedule(&mut queue, horizon, t, EventKind::Crash);
             }
         }
+        // Server-side shard crashes: like churn, the process draws from
+        // the RNG only when enabled, so rate-0 configurations replay the
+        // pre-shard-crash event stream bit-identically.
+        if cfg.shard_crash_rate > 0.0 {
+            let t = rng.exponential(1.0 / cfg.shard_crash_rate);
+            schedule(&mut queue, horizon, t, EventKind::ShardCrash);
+        }
 
         // Blocked bookkeeping.
         // Global methods: required-min-step -> blocked node list.
@@ -400,6 +433,13 @@ impl Simulator {
         let mut total_advances: u64 = 0;
         let mut events: u64 = 0;
         let mut crashes: u64 = 0;
+        let mut shard_crashes: u64 = 0;
+        let mut shard_stalls: u64 = 0;
+        // Shard-crash stall window: while any shard is mid-re-home,
+        // finishing iterations cannot push and are deferred to the end of
+        // the window (monotone: each crash can only extend it).
+        let mut shards_down: u32 = 0;
+        let mut stall_until: f64 = 0.0;
         let mut churn_victims: Vec<u32> = Vec::new();
         let mut updates_timeline = Vec::new();
         let mut error_timeline = Vec::new();
@@ -416,6 +456,17 @@ impl Simulator {
             match ev.kind {
                 EventKind::ComputeDone { node } => {
                     if nodes[node].status == Status::Gone {
+                        continue;
+                    }
+                    // A crashed shard is mid-re-home: the push cannot be
+                    // served, so the whole completion is deferred to the
+                    // end of the stall window (the re-home event carries
+                    // an earlier sequence number, so it fires first and
+                    // the deferred completion proceeds normally).
+                    if shards_down > 0 {
+                        shard_stalls += 1;
+                        let done = EventKind::ComputeDone { node };
+                        schedule(&mut queue, horizon, stall_until, done);
                         continue;
                     }
                     // Push the update for the just-finished step; lossy
@@ -571,6 +622,21 @@ impl Simulator {
                         }
                     }
                 }
+                EventKind::ShardCrash => {
+                    // Victim shard (uniform); re-home completes after the
+                    // confirm + promote + handoff window.
+                    let shard = rng.next_below(cfg.n_shards.max(1) as u64) as usize;
+                    shard_crashes += 1;
+                    shards_down += 1;
+                    let done_at = t + cfg.shard_rehome_secs;
+                    stall_until = stall_until.max(done_at);
+                    schedule(&mut queue, horizon, done_at, EventKind::ShardRehomed { shard });
+                    let next = t + rng.exponential(1.0 / cfg.shard_crash_rate);
+                    schedule(&mut queue, horizon, next, EventKind::ShardCrash);
+                }
+                EventKind::ShardRehomed { shard: _ } => {
+                    shards_down -= 1;
+                }
                 EventKind::Release { node } => {
                     if nodes[node].status != Status::Blocked {
                         continue;
@@ -599,6 +665,8 @@ impl Simulator {
             total_advances,
             events,
             crashes,
+            shard_crashes,
+            shard_stalls,
             churn_victims,
             wall_secs: start.elapsed().as_secs_f64(),
         }
@@ -1026,6 +1094,54 @@ mod tests {
         assert!(r.total_advances > 0);
         assert!(r.crashes > 0);
         assert!(r.final_error().is_some());
+    }
+
+    #[test]
+    fn shard_crashes_stall_but_never_stop_progress() {
+        let mk = |rate| ClusterConfig {
+            shard_crash_rate: rate,
+            shard_rehome_secs: 0.5,
+            n_shards: 8,
+            ..tiny_cfg(30, 24)
+        };
+        for m in Method::paper_five(5, 4) {
+            let r = run(mk(0.4), m);
+            assert!(r.shard_crashes > 0, "{m}: no shard crash in 20s at 0.4/s");
+            assert!(r.shard_stalls > 0, "{m}: crashes never deferred a push");
+            assert!(r.total_advances > 0, "{m}: no progress under shard crashes");
+        }
+        // Stall windows cost progress: the same seed without the crash
+        // process must do at least as well.
+        let faulty = run(mk(0.4), Method::Asp);
+        let clean = run(mk(0.0), Method::Asp);
+        assert_eq!(clean.shard_crashes, 0);
+        assert_eq!(clean.shard_stalls, 0);
+        assert!(clean.mean_progress() >= faulty.mean_progress());
+        // Seed-deterministic, like every other churn process.
+        let a = run(mk(0.4), Method::Pssp { sample: 5, staleness: 2 });
+        let b = run(mk(0.4), Method::Pssp { sample: 5, staleness: 2 });
+        assert_eq!(a.final_steps, b.final_steps);
+        assert_eq!(a.shard_crashes, b.shard_crashes);
+        assert_eq!(a.shard_stalls, b.shard_stalls);
+    }
+
+    #[test]
+    fn shard_crash_rate_zero_replays_the_legacy_trajectory() {
+        // The rate-0 guard must keep the event stream bit-identical to a
+        // config that predates the shard-crash fields entirely.
+        let base = tiny_cfg(40, 25);
+        let with_fields = ClusterConfig {
+            shard_crash_rate: 0.0,
+            shard_rehome_secs: 123.0, // irrelevant when the rate is 0
+            n_shards: 16,
+            ..tiny_cfg(40, 25)
+        };
+        let m = Method::Pssp { sample: 5, staleness: 2 };
+        let a = run(base, m);
+        let b = run(with_fields, m);
+        assert_eq!(a.final_steps, b.final_steps);
+        assert_eq!(a.update_msgs, b.update_msgs);
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

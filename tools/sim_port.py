@@ -13,8 +13,9 @@ configs use) and emits exactly the fingerprints the Rust tests compute:
                               Floyd sampling with observer remap)
   * sim::events::HeapQueue   ((time, seq) total order — trajectory-equal
                               to the calendar queue by the oracle tests)
-  * sim::Simulator::run_with (incl. churn: Join/Leave and the new
-                              Crash/ConfirmDead events)
+  * sim::Simulator::run_with (incl. churn: Join/Leave, Crash/ConfirmDead,
+                              and the PR 6 server-side ShardCrash /
+                              ShardRehomed stall window)
 
 Float arithmetic: Python floats are IEEE-754 doubles like Rust f64, and
 `exponential()` calls the same glibc `log` both languages link, so every
@@ -225,7 +226,7 @@ class StepTracker:
 
 # Event kinds (tags keep (time, seq) the sole ordering key, as in Rust).
 COMPUTE_DONE, RECHECK, UPDATE_ARRIVE, RELEASE, SAMPLE_TL, JOIN, LEAVE, CRASH, \
-    CONFIRM_DEAD = range(9)
+    CONFIRM_DEAD, SHARD_CRASH, SHARD_REHOMED = range(11)
 
 GONE, COMPUTING, BLOCKED = range(3)
 
@@ -260,6 +261,9 @@ class Cfg:
         self.recheck_interval = kw.get("recheck_interval", 0.25)
         self.churn = kw.get("churn")   # (join, leave, crash) or None
         self.crash_detect_secs = kw.get("crash_detect_secs", 1.0)
+        self.shard_crash_rate = kw.get("shard_crash_rate", 0.0)
+        self.shard_rehome_secs = kw.get("shard_rehome_secs", 0.5)
+        self.n_shards = kw.get("n_shards", 1)
         self.sample_interval = kw.get("sample_interval", 5.0)
 
 
@@ -310,13 +314,20 @@ def run(cfg, method):
             schedule(rng.exponential(1.0 / leave_rate), LEAVE)
         if crash_rate > 0.0:
             schedule(rng.exponential(1.0 / crash_rate), CRASH)
+    # Server-side shard crashes: rate-0 draws nothing, so pre-existing
+    # seeded trajectories replay bit-identically (mirrors sim/mod.rs).
+    if cfg.shard_crash_rate > 0.0:
+        schedule(rng.exponential(1.0 / cfg.shard_crash_rate), SHARD_CRASH)
 
     blocked_global = {}   # threshold -> [node ids] (BTreeMap semantics)
 
     stats = {
         "update_msgs": 0, "lost_msgs": 0, "control_msgs": 0,
         "total_advances": 0, "events": 0, "crashes": 0,
+        "shard_crashes": 0, "shard_stalls": 0,
     }
+    shards_down = 0
+    stall_until = 0.0
     churn_victims = []
     is_global = method.view == "global"
     staleness = method.staleness
@@ -370,6 +381,14 @@ def run(cfg, method):
         if kind == COMPUTE_DONE:
             node = payload
             if status[node] == GONE:
+                continue
+            # A crashed shard mid-re-home means no push can be served:
+            # defer the whole completion to the end of the stall window
+            # (the re-home event carries an earlier sequence number, so
+            # it fires first and the deferred completion proceeds).
+            if shards_down > 0:
+                stats["shard_stalls"] += 1
+                schedule(stall_until, COMPUTE_DONE, node)
                 continue
             if cfg.loss_rate > 0.0 and rng.bernoulli(cfg.loss_rate):
                 stats["lost_msgs"] += 1
@@ -432,6 +451,17 @@ def run(cfg, method):
                 new_min = tracker.leave(node)
                 if new_min is not None:
                     release_blocked(new_min, t)
+        elif kind == SHARD_CRASH:
+            rng.next_below(max(cfg.n_shards, 1))  # victim shard (uniform)
+            stats["shard_crashes"] += 1
+            shards_down += 1
+            done_at = t + cfg.shard_rehome_secs
+            stall_until = max(stall_until, done_at)
+            schedule(done_at, SHARD_REHOMED)
+            schedule(t + rng.exponential(1.0 / cfg.shard_crash_rate),
+                     SHARD_CRASH)
+        elif kind == SHARD_REHOMED:
+            shards_down -= 1
         elif kind == RELEASE:
             node = payload
             if status[node] != BLOCKED:
@@ -450,6 +480,8 @@ def run(cfg, method):
         "total_advances": stats["total_advances"],
         "events": stats["events"],
         "crashes": stats["crashes"],
+        "shard_crashes": stats["shard_crashes"],
+        "shard_stalls": stats["shard_stalls"],
         "churn_victims": churn_victims,
         "mean_progress": (
             sum(final_steps) / len(final_steps) if final_steps else 0.0
@@ -553,6 +585,39 @@ def check():
            and fast["mean_progress"] > slow["mean_progress"],
            f"slow_crash_detection_stalls_bsp_harder "
            f"(fast {fast['mean_progress']:.2f} vs slow {slow['mean_progress']:.2f})")
+    # NEW (PR 6): shard_crashes_stall_but_never_stop_progress
+    def shard_cfg(rate):
+        return Cfg(n_nodes=30, seed=24, duration=20.0,
+                   shard_crash_rate=rate, shard_rehome_secs=0.5, n_shards=8)
+    good = True
+    for m in paper_five(5, 4):
+        r = run(shard_cfg(0.4), m)
+        good &= r["shard_crashes"] > 0 and r["shard_stalls"] > 0 \
+            and r["total_advances"] > 0
+    faulty = run(shard_cfg(0.4), Method("asp", "none", 0))
+    clean = run(shard_cfg(0.0), Method("asp", "none", 0))
+    good &= clean["shard_crashes"] == 0 and clean["shard_stalls"] == 0
+    good &= clean["mean_progress"] >= faulty["mean_progress"]
+    a = run(shard_cfg(0.4), Method("pssp", "sample", 2, 5))
+    b = run(shard_cfg(0.4), Method("pssp", "sample", 2, 5))
+    good &= a["final_steps"] == b["final_steps"] \
+        and a["shard_crashes"] == b["shard_crashes"] \
+        and a["shard_stalls"] == b["shard_stalls"]
+    expect(good,
+           f"shard_crashes_stall_but_never_stop_progress "
+           f"(clean {clean['mean_progress']:.2f} vs faulty "
+           f"{faulty['mean_progress']:.2f}, {a['shard_crashes']} crashes, "
+           f"{a['shard_stalls']} stalls)")
+    # NEW (PR 6): shard_crash_rate_zero_replays_the_legacy_trajectory
+    base = run(tiny_cfg(40, 25), Method("pssp", "sample", 2, 5))
+    gated = run(Cfg(n_nodes=40, seed=25, duration=20.0,
+                    shard_crash_rate=0.0, shard_rehome_secs=123.0,
+                    n_shards=16),
+                Method("pssp", "sample", 2, 5))
+    expect(base["final_steps"] == gated["final_steps"]
+           and base["update_msgs"] == gated["update_msgs"]
+           and base["events"] == gated["events"],
+           "shard_crash_rate_zero_replays_the_legacy_trajectory")
     print("\nfidelity probe:", "ALL OK" if ok else "FAILURES")
     return ok
 

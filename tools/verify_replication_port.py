@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Bit-exact Python port of the vnode placement math in
+`rust/src/engine/paramserver.rs` (`ShardLayout`) and
+`rust/src/overlay/mod.rs` (`node_ring_id_v`, `Ring` placement walk).
+
+The dev container has no Rust toolchain, so the numeric claims the PR 6
+acceptance bar makes — most importantly that 64 virtual nodes cut the
+max/min per-shard key-count imbalance by >= 3x vs single-position
+placement at (dim=4096, n_shards=8) — are verified here with masked
+64-bit arithmetic before CI ever compiles the crate. The same gate runs
+in Rust in `benches/simulator.rs --check`; this port must agree.
+
+Checks:
+  1. splitmix vnode hash: v=0 equals the legacy `node_ring_id` exactly.
+  2. ShardLayout partition: every key owned exactly once, for contiguous
+     (vnodes=0) and hashed (vnodes>=1) placement.
+  3. vnodes=0 reproduces the historical contiguous `shard_range` split.
+  4. succ_order: complete, distinct, never contains the shard itself.
+  5. THE GATE: imbalance(4096,8,1) / imbalance(4096,8,64) >= 3.0, and
+     every shard owns at least one key under 64-vnode placement.
+  6. The `ext_chaos` grids (dim=41, shards=4, vnodes in {0,8}) leave no
+     shard empty, so every victim index has replicas worth killing.
+
+Run: python3 tools/verify_replication_port.py
+"""
+
+import bisect
+
+MASK = (1 << 64) - 1
+
+PLACEMENT_NAMESPACE = 0xB10CB10C  # paramserver.rs
+KEY_NAMESPACE = 0x4B4559          # paramserver.rs
+
+
+def node_ring_id_v(node: int, vnode: int, namespace: int) -> int:
+    """Port of overlay::node_ring_id_v (splitmix-style mixing)."""
+    z = (node + (vnode * 0xD1B54A32D192ED03) + 0x9E3779B97F4A7C15) & MASK
+    z = (z * (namespace | 1)) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def node_ring_id(node: int, namespace: int) -> int:
+    return node_ring_id_v(node, 0, namespace)
+
+
+class Ring:
+    """Port of overlay::Ring — only what ShardLayout placement uses."""
+
+    def __init__(self, namespace: int):
+        self.namespace = namespace
+        self.members = {}  # id -> node
+        self.ids = {}      # node -> primary id
+        self._sorted = None
+
+    def join_vnodes(self, node: int, vnodes: int) -> int:
+        if node in self.ids:
+            return self.ids[node]
+        primary = node_ring_id(node, self.namespace)
+        while primary in self.members:  # linear-probe collisions
+            primary = (primary + 1) & MASK
+        self.members[primary] = node
+        self.ids[node] = primary
+        for v in range(1, max(vnodes, 1)):
+            i = node_ring_id_v(node, v, self.namespace)
+            while i in self.members:
+                i = (i + 1) & MASK
+            self.members[i] = node
+        self._sorted = None
+        return primary
+
+    def _keys(self):
+        if self._sorted is None:
+            self._sorted = sorted(self.members)
+        return self._sorted
+
+    def successor(self, point: int):
+        keys = self._keys()
+        if not keys:
+            return None
+        i = bisect.bisect_left(keys, point)
+        sid = keys[i] if i < len(keys) else keys[0]
+        return sid, self.members[sid]
+
+    def successors_distinct(self, node: int, r: int):
+        out = []
+        if node not in self.ids:
+            return out
+        my_id = self.ids[node]
+        point = (my_id + 1) & MASK
+        for _ in range(len(self.members)):
+            nxt = self.successor(point)
+            if nxt is None:
+                break
+            sid, n = nxt
+            if sid == my_id:
+                break  # wrapped all the way around
+            if n != node and n not in out:
+                out.append(n)
+                if len(out) == r:
+                    break
+            point = (sid + 1) & MASK
+        return out
+
+
+def shard_range(dim: int, n_shards: int, s: int):
+    """Port of paramserver::shard_range (div_ceil block sizing — the last
+    shard absorbs the shortfall, matching scheduled_range arithmetic)."""
+    n_shards = max(1, min(n_shards, max(dim, 1)))
+    size = -(-dim // n_shards)  # div_ceil
+    lo = min(s * size, dim)
+    hi = min((s + 1) * size, dim)
+    return range(lo, hi)
+
+
+class ShardLayout:
+    """Port of paramserver::ShardLayout::new."""
+
+    def __init__(self, dim: int, n_shards: int, vnodes: int):
+        n_shards = max(1, min(n_shards, max(dim, 1)))
+        self.n_shards = n_shards
+        ring = Ring(PLACEMENT_NAMESPACE)
+        for s in range(n_shards):
+            ring.join_vnodes(s, max(vnodes, 1))
+        self.owned = [[] for _ in range(n_shards)]
+        self.owner_of = [0] * dim
+        if vnodes == 0:
+            for s in range(n_shards):
+                for j in shard_range(dim, n_shards, s):
+                    self.owned[s].append(j)
+                    self.owner_of[j] = s
+        else:
+            for j in range(dim):
+                _, s = ring.successor(node_ring_id(j, KEY_NAMESPACE))
+                self.owned[s].append(j)
+                self.owner_of[j] = s
+        self.succ_order = [
+            ring.successors_distinct(s, n_shards) for s in range(n_shards)
+        ]
+
+    def imbalance(self) -> float:
+        mx = max(len(o) for o in self.owned)
+        mn = min(len(o) for o in self.owned)
+        return mx / max(mn, 1)
+
+
+def check(name, cond, detail=""):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {name}" + (f" — {detail}" if detail else ""))
+    if not cond:
+        raise SystemExit(f"verification failed: {name} ({detail})")
+
+
+def main():
+    print("1. vnode hash: v=0 is the legacy hash, higher v's are distinct")
+    for node in (0, 1, 7, 1000):
+        for ns in (PLACEMENT_NAMESPACE, KEY_NAMESPACE, 1):
+            check(
+                f"node_ring_id_v({node}, 0, {ns:#x}) == node_ring_id",
+                node_ring_id_v(node, 0, ns) == node_ring_id(node, ns),
+            )
+    ids = {node_ring_id_v(3, v, PLACEMENT_NAMESPACE) for v in range(64)}
+    check("64 vnode ids of one node are all distinct", len(ids) == 64)
+
+    print("2./3. partition properties")
+    for dim, n_shards, vnodes in [(103, 7, 0), (103, 7, 8), (512, 8, 32),
+                                  (4096, 8, 1), (4096, 8, 64),
+                                  (41, 4, 0), (41, 4, 8)]:
+        lay = ShardLayout(dim, n_shards, vnodes)
+        seen = sorted(j for o in lay.owned for j in o)
+        check(
+            f"dim={dim} shards={n_shards} vnodes={vnodes}: exact partition",
+            seen == list(range(dim)),
+        )
+        for s in range(n_shards):
+            for j in lay.owned[s]:
+                check("owner_of consistent", lay.owner_of[j] == s) \
+                    if lay.owner_of[j] != s else None
+        if vnodes == 0:
+            for s in range(n_shards):
+                check(
+                    f"vnodes=0 shard {s} is contiguous shard_range",
+                    lay.owned[s] == list(shard_range(dim, n_shards, s)),
+                )
+
+    print("4. successor order: complete, distinct, never self")
+    for vnodes in (0, 1, 8, 64):
+        lay = ShardLayout(512, 8, vnodes)
+        for s in range(8):
+            so = lay.succ_order[s]
+            check(
+                f"vnodes={vnodes} shard {s}: succ_order covers all others",
+                sorted(so) == [x for x in range(8) if x != s],
+                f"got {so}",
+            )
+
+    print("5. THE GATE: 64 vnodes flatten the 1-vnode skew >= 3x")
+    skewed = ShardLayout(4096, 8, 1).imbalance()
+    flat = ShardLayout(4096, 8, 64).imbalance()
+    improvement = skewed / flat
+    print(f"  imbalance(4096, 8, v=1)  = {skewed:.3f}")
+    print(f"  imbalance(4096, 8, v=64) = {flat:.3f}")
+    print(f"  improvement              = {improvement:.3f}x (floor 3.0x)")
+    check("vnode improvement >= 3.0", improvement >= 3.0,
+          f"{improvement:.3f}x")
+    check(
+        "no empty shard at 64 vnodes",
+        all(len(o) > 0 for o in ShardLayout(4096, 8, 64).owned),
+    )
+
+    print("6. ext_chaos grids leave no shard empty")
+    for vnodes in (0, 8):
+        lay = ShardLayout(41, 4, vnodes)
+        check(
+            f"chaos grid dim=41 shards=4 vnodes={vnodes}: all shards own keys",
+            all(len(o) > 0 for o in lay.owned),
+            f"owned sizes {[len(o) for o in lay.owned]}",
+        )
+
+    print("all replication/placement checks passed")
+
+
+if __name__ == "__main__":
+    main()
