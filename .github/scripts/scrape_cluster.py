@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Scrape the monitor endpoints of a local `actor node`/`actor join` cluster.
+
+Polls each monitor port until it reports status "done" (or the deadline
+passes), then asserts the deployment plane's durability contract:
+zero dropped deltas, zero missing rumors, and identical per-origin
+applied-rumor counts on every process. Stdlib only.
+
+Usage: scrape_cluster.py PORT [PORT ...]
+"""
+
+import json
+import sys
+import time
+import urllib.request
+
+DEADLINE_SECS = 120.0
+
+
+def fetch(port):
+    url = f"http://127.0.0.1:{port}/"
+    with urllib.request.urlopen(url, timeout=2) as resp:
+        return json.loads(resp.read().decode("utf-8"))
+
+
+def main():
+    ports = [int(p) for p in sys.argv[1:]]
+    if not ports:
+        sys.exit("usage: scrape_cluster.py PORT [PORT ...]")
+
+    deadline = time.monotonic() + DEADLINE_SECS
+    docs = {}
+    while time.monotonic() < deadline and len(docs) < len(ports):
+        for port in ports:
+            if port in docs:
+                continue
+            try:
+                doc = fetch(port)
+            except (OSError, ValueError):
+                continue  # not up yet, or mid-run restartable read
+            if doc.get("status") == "done":
+                docs[port] = doc
+        time.sleep(0.3)
+
+    missing = [p for p in ports if p not in docs]
+    if missing:
+        sys.exit(f"monitors never reported status=done: {missing}")
+
+    applied = None
+    for port in ports:
+        doc = docs[port]
+        rep = doc["report"]
+        print(
+            f"monitor :{port} id={doc['id']} ring={doc['ring']} "
+            f"applied_of={doc['applied_of']} dropped={rep['dropped_deltas']} "
+            f"drain_polls={rep['drain_polls']}"
+        )
+        if rep["dropped_deltas"] != 0 or rep["missing_rumors"] != 0:
+            sys.exit(f"monitor :{port}: lost updates — report {rep}")
+        if applied is None:
+            applied = doc["applied_of"]
+        elif doc["applied_of"] != applied:
+            sys.exit(
+                f"monitor :{port}: applied_of diverges across processes: "
+                f"{doc['applied_of']} != {applied}"
+            )
+
+    print(
+        f"cluster clean: {len(ports)} processes done, "
+        f"applied_of={applied}, zero dropped deltas"
+    )
+
+
+if __name__ == "__main__":
+    main()

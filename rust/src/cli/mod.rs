@@ -142,6 +142,26 @@ USAGE:
       --no-membership disables detection (a crash then stalls survivors
       until drain_timeout).
 
+  actor node [--n N] [--listen HOST:PORT] [--monitor HOST:PORT] [--linger S]
+             [--steps N] [--dim D] [--lr F] [--seed N] [--method M]
+             [--fanout F] [--flush B] [--ttl T] [--drain-secs S] [--config FILE]
+      Seed a real multi-process cluster (deployment plane). Binds the
+      listen address, accepts N-1 `actor join` processes, assigns ids in
+      connect order, ships each the full workload, then runs as node 0:
+      one worker per OS process, deltas and barrier state over TCP with
+      a hand-rolled length-prefixed binary codec (reconnect + backoff;
+      the protocol is idempotent, so resends are safe). --monitor serves
+      ring topology + live report counters as JSON over HTTP; --linger
+      keeps the process (and monitor) alive S seconds after the run so
+      CI can scrape final counters. [transport] config keys: listen,
+      monitor, linger_secs, reconnect_min_ms, reconnect_max_ms.
+
+  actor join <seed HOST:PORT> [--listen HOST:PORT] [--monitor HOST:PORT]
+             [--linger S] [--drain-secs S] [--config FILE]
+      Join a seeded cluster: binds its own listener (default port 0 =
+      OS-assigned), announces it to the seed, and receives its id plus
+      the whole workload — a cluster is configured in exactly one place.
+
   actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
               [--workers N] [--method M] [--accum B] [--artifacts DIR]
       End-to-end LM training through the PJRT artifacts (L1+L2+L3).

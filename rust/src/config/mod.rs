@@ -30,6 +30,7 @@
 //! `toml` crate; this subset covers everything the launcher needs.)
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -38,6 +39,7 @@ use crate::engine::gossip::GossipConfig;
 use crate::engine::membership::MembershipConfig;
 use crate::engine::p2p::{Departure, Dissemination, P2pConfig};
 use crate::engine::paramserver::PsConfig;
+use crate::engine::transport::TransportConfig;
 use crate::exp::ExpOpts;
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
 
@@ -425,6 +427,53 @@ impl Config {
             confirm_after: ms("confirm_ms", d.confirm_after)?,
         }))
     }
+
+    /// Build the deployment-plane transport configuration from the
+    /// `[transport]` section (all keys optional):
+    ///
+    /// ```toml
+    /// [transport]
+    /// listen = "127.0.0.1:7070"   # accept address (port 0 = OS-assigned)
+    /// monitor = "127.0.0.1:7071"  # HTTP status endpoint; omit to disable
+    /// linger_secs = 2.0           # keep process alive post-run for scrapes
+    /// reconnect_min_ms = 10       # first writer reconnect backoff
+    /// reconnect_max_ms = 500      # backoff doubling ceiling
+    /// ```
+    pub fn transport_config(&self) -> Result<TransportConfig> {
+        let d = TransportConfig::default();
+        let listen = match self.get("transport", "listen") {
+            None => d.listen,
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("[transport] listen must be a string"))?
+                .to_string(),
+        };
+        let monitor = match self.get("transport", "monitor") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("[transport] monitor must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let linger_secs = self.f64_or("transport", "linger_secs", d.linger_secs)?;
+        if linger_secs < 0.0 {
+            bail!("[transport] linger_secs must be non-negative");
+        }
+        let backoff_ms = |key: &str, default: Duration| -> Result<Duration> {
+            let v = self.f64_or("transport", key, default.as_secs_f64() * 1000.0)?;
+            if v <= 0.0 {
+                bail!("[transport] {key} must be positive");
+            }
+            Ok(Duration::from_secs_f64(v / 1000.0))
+        };
+        let reconnect_min = backoff_ms("reconnect_min_ms", d.reconnect_min)?;
+        let reconnect_max = backoff_ms("reconnect_max_ms", d.reconnect_max)?;
+        if reconnect_max < reconnect_min {
+            bail!("[transport] reconnect_max_ms must be >= reconnect_min_ms");
+        }
+        Ok(TransportConfig { listen, monitor, linger_secs, reconnect_min, reconnect_max })
+    }
 }
 
 /// Parse a scripted departure `worker:step` (`[p2p] crash/leave` keys and
@@ -519,6 +568,43 @@ lr = 0.02
             c.barrier_method().unwrap(),
             Method::Pbsp { sample: 16 }
         );
+    }
+
+    #[test]
+    fn transport_section_builds_transport_config() {
+        let c = Config::parse(
+            r#"
+[transport]
+listen = "127.0.0.1:7070"
+monitor = "127.0.0.1:7071"
+linger_secs = 2.5
+reconnect_min_ms = 5
+reconnect_max_ms = 100
+"#,
+        )
+        .unwrap();
+        let t = c.transport_config().unwrap();
+        assert_eq!(t.listen, "127.0.0.1:7070");
+        assert_eq!(t.monitor.as_deref(), Some("127.0.0.1:7071"));
+        assert_eq!(t.linger_secs, 2.5);
+        assert_eq!(t.reconnect_min, Duration::from_millis(5));
+        assert_eq!(t.reconnect_max, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn transport_defaults_and_validation() {
+        let t = Config::parse("").unwrap().transport_config().unwrap();
+        assert_eq!(t.listen, "127.0.0.1:0");
+        assert!(t.monitor.is_none());
+        assert_eq!(t.linger_secs, 0.0);
+        // Inverted backoff window is rejected, not silently reordered.
+        let c = Config::parse(
+            "[transport]\nreconnect_min_ms = 200\nreconnect_max_ms = 50\n",
+        )
+        .unwrap();
+        assert!(c.transport_config().is_err());
+        let c = Config::parse("[transport]\nlinger_secs = -1\n").unwrap();
+        assert!(c.transport_config().is_err());
     }
 
     #[test]

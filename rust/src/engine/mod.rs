@@ -36,10 +36,35 @@
 pub mod gossip;
 pub mod mapreduce;
 pub mod membership;
+pub mod node;
 pub mod p2p;
 pub mod paramserver;
+pub mod transport;
 
 use std::sync::Arc;
+
+/// A run that could not complete, carrying whatever the engine salvaged.
+///
+/// Engines return this instead of aborting the process when the failure
+/// is a *data-plane* fact the caller may want to inspect — e.g. the
+/// parameter server losing a shard's last live candidate: the partial
+/// report still holds the counters up to the abort and the model with
+/// the surviving blocks filled in.
+#[derive(Debug)]
+pub struct EngineError {
+    /// Human-readable cause, loud enough to paste into an incident note.
+    pub reason: String,
+    /// Everything the engine could still account for at the abort.
+    pub partial: EngineReport,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine aborted: {}", self.reason)
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// A worker's gradient oracle: `(model snapshot, step seed) -> gradient`.
 ///
@@ -89,6 +114,11 @@ pub struct EngineReport {
     /// Queued messages discarded unprocessed when the drain safety-net
     /// fired, summed over workers.
     pub discarded_msgs: u64,
+    /// Shutdown-drain loop iterations, summed over workers. A healthy
+    /// drain pays a handful; a worker camped on `drain_timeout` pays
+    /// ~timeout / MIN_DRAIN_POLL — bounded either way, which is the
+    /// no-busy-wait guarantee `tests/membership_crash.rs` asserts.
+    pub drain_polls: u64,
     // -- crash-fault membership plane (zero when membership is off) --
     /// Death confirmations observed, summed over workers (each survivor
     /// confirms independently, so one crash at n workers reports n-1).

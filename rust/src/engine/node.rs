@@ -1,0 +1,841 @@
+//! Deployed single-node runtime (`actor node` / `actor join`).
+//!
+//! The p2p engine simulates a fully distributed PSP cluster inside one
+//! process: every worker is a thread, and the coordinator-free barrier
+//! reads peer step counts out of shared-nothing *messages*. This module
+//! is the same design with the process boundary made real: **one worker
+//! per OS process**, all state exchanged as [`Frame`]s over a pluggable
+//! [`Transport`] — in-process channels for equivalence tests, TCP for a
+//! real localhost (or LAN) cluster.
+//!
+//! What exists here and not in the sim engines:
+//!
+//! * a **step table** fed by `Step` broadcast frames — in the sim the
+//!   sampling plane could query a peer thread directly; a deployed node
+//!   can only know what peers have told it, so every step advance is
+//!   announced (and re-announced while blocked, since TCP reconnects
+//!   may drop the first copy);
+//! * a **bootstrap handshake** ([`seed_bootstrap`] / [`join_bootstrap`]):
+//!   the seed process accepts `n-1` joiners, assigns ids in connect
+//!   order, and ships each one the full workload ([`Welcome`]) plus the
+//!   roster (`Peers`) — the cluster is configured in exactly one place;
+//! * a **monitor** ([`Monitor`]): a tiny HTTP endpoint serving ring
+//!   topology and live [`EngineReport`] counters as JSON, which the CI
+//!   cluster-smoke job scrapes to assert zero dropped deltas.
+//!
+//! Known limitation (documented, deliberate): the deployed runtime has
+//! no custody-repair/membership plane yet — a crashed *process* is not
+//! repaired the way the sim's membership plane repairs a crashed
+//! worker thread (ROADMAP "deployment plane" item tracks the gap). The
+//! protocol already carries `Repair` frames, so a node *receiving* one
+//! handles it correctly.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::barrier::Method;
+use crate::engine::gossip::{GossipConfig, GossipNode};
+use crate::engine::p2p::{PeerMsg, MIN_DRAIN_POLL};
+use crate::engine::transport::{read_frame, write_frame, Frame, Transport, Welcome};
+use crate::engine::{EngineReport, GradFn};
+use crate::log_warn;
+use crate::overlay::Ring;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// Re-announce cadence for the step broadcast while a node is parked
+/// at a barrier: peers that reconnected mid-run may have missed the
+/// original announcement, and a silent node would park them forever.
+const STEP_REANNOUNCE: Duration = Duration::from_millis(50);
+
+/// One deployed node's slice of the cluster workload.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// This node's id (seed is 0; joiners get 1.. in connect order).
+    pub id: usize,
+    /// Cluster size.
+    pub n: usize,
+    /// Steps this node computes.
+    pub steps: u64,
+    /// Model dimension.
+    pub dim: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Cluster-wide base seed (per-node RNGs fork off it).
+    pub seed: u64,
+    /// Barrier method. Probabilistic methods sample the overlay ring
+    /// exactly like the p2p engine; `bsp`/`ssp` read the full step
+    /// table (available here because every node broadcasts `Step`).
+    pub method: Method,
+    /// Gossip dissemination knobs.
+    pub gossip: GossipConfig,
+    /// Shutdown-drain safety net, after which unreceived rumors are
+    /// counted as dropped and reported loudly.
+    pub drain_timeout: Duration,
+}
+
+/// Cluster-wide workload as the seed node knows it — everything a
+/// joiner needs arrives in the [`Welcome`] built from this.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub n: usize,
+    pub steps: u64,
+    pub dim: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub method: Method,
+    pub gossip: GossipConfig,
+    pub drain_timeout: Duration,
+}
+
+impl Workload {
+    /// The `Welcome` frame assigning `id` to a joiner.
+    pub fn welcome(&self, id: u32) -> Welcome {
+        Welcome {
+            id,
+            n: self.n as u32,
+            seed: self.seed,
+            steps: self.steps,
+            dim: self.dim as u32,
+            lr: self.lr,
+            method: format!("{}", self.method),
+            fanout: self.gossip.fanout as u32,
+            flush: self.gossip.flush_every,
+            ttl: self.gossip.ttl,
+        }
+    }
+
+    /// The node config for one member of this workload.
+    pub fn node_config(&self, id: usize) -> NodeConfig {
+        NodeConfig {
+            id,
+            n: self.n,
+            steps: self.steps,
+            dim: self.dim,
+            lr: self.lr,
+            seed: self.seed,
+            method: self.method,
+            gossip: self.gossip.clone(),
+            drain_timeout: self.drain_timeout,
+        }
+    }
+
+    /// Rebuild a workload from a received `Welcome` (joiner side).
+    /// `None` when the method string does not parse — a version-skewed
+    /// seed, which the joiner must refuse rather than guess around.
+    pub fn from_welcome(w: &Welcome, drain_timeout: Duration) -> Option<Workload> {
+        Some(Workload {
+            n: w.n as usize,
+            steps: w.steps,
+            dim: w.dim as usize,
+            lr: w.lr,
+            seed: w.seed,
+            method: Method::parse(&w.method)?,
+            gossip: GossipConfig {
+                fanout: w.fanout as usize,
+                flush_every: w.flush,
+                ttl: w.ttl,
+            },
+            drain_timeout,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bootstrap handshake
+// ---------------------------------------------------------------------------
+
+/// Seed side: accept `n-1` joiners on `listener`, read each one's
+/// `Join { addr }`, assign ids `1..n` in connect order, then send every
+/// joiner its `Welcome` plus the full roster. Returns the roster
+/// (`(id, listen addr)`, seed included as id 0). The listener is
+/// *borrowed* — hand the same socket to [`TcpTransport::with_listener`]
+/// afterwards so there is no rebind race.
+///
+/// [`TcpTransport::with_listener`]: crate::engine::transport::TcpTransport::with_listener
+pub fn seed_bootstrap(
+    listener: &TcpListener,
+    wl: &Workload,
+    seed_addr: &str,
+) -> io::Result<Vec<(usize, String)>> {
+    let mut joiners: Vec<(TcpStream, String)> = Vec::new();
+    while joiners.len() < wl.n - 1 {
+        let (mut conn, from) = listener.accept()?;
+        conn.set_read_timeout(Some(Duration::from_secs(30)))?;
+        match read_frame(&mut conn) {
+            Ok(Frame::Join { addr }) => {
+                eprintln!("node: joiner {} will be id {} (listens on {addr})", from, joiners.len() + 1);
+                joiners.push((conn, addr));
+            }
+            Ok(other) => {
+                log_warn!("node: bootstrap expected Join from {from}, got {other:?}; dropping");
+            }
+            Err(e) => {
+                log_warn!("node: bootstrap read from {from} failed: {e}; dropping");
+            }
+        }
+    }
+    let mut roster: Vec<(usize, String)> = vec![(0, seed_addr.to_string())];
+    for (i, (_, addr)) in joiners.iter().enumerate() {
+        roster.push((i + 1, addr.clone()));
+    }
+    let peers = Frame::Peers {
+        peers: roster.iter().map(|(id, a)| (*id as u32, a.clone())).collect(),
+    };
+    for (i, (mut conn, _)) in joiners.into_iter().enumerate() {
+        write_frame(&mut conn, &Frame::Welcome(wl.welcome((i + 1) as u32)))?;
+        write_frame(&mut conn, &peers)?;
+        // The bootstrap connection's job is done; the run uses fresh
+        // writer-owned connections in both directions.
+    }
+    Ok(roster)
+}
+
+/// Joiner side: connect to the seed (with retry/backoff until
+/// `timeout` — the seed may not be up yet), announce our listen
+/// address, and collect the `Welcome` + roster.
+pub fn join_bootstrap(
+    seed_addr: &str,
+    my_addr: &str,
+    timeout: Duration,
+) -> io::Result<(Welcome, Vec<(usize, String)>)> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(10);
+    let mut conn = loop {
+        match TcpStream::connect(seed_addr) {
+            Ok(c) => break c,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    };
+    // The seed replies only once the whole cluster has dialed in; give
+    // slow sibling processes a generous window.
+    conn.set_read_timeout(Some(Duration::from_secs(120)))?;
+    write_frame(&mut conn, &Frame::Join { addr: my_addr.to_string() })?;
+    let welcome = match read_frame(&mut conn)? {
+        Frame::Welcome(w) => w,
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bootstrap expected Welcome, got {other:?}"),
+            ))
+        }
+    };
+    let peers = match read_frame(&mut conn)? {
+        Frame::Peers { peers } => {
+            peers.into_iter().map(|(id, a)| (id as usize, a)).collect()
+        }
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bootstrap expected Peers, got {other:?}"),
+            ))
+        }
+    };
+    Ok((welcome, peers))
+}
+
+// ---------------------------------------------------------------------------
+// Monitor endpoint
+// ---------------------------------------------------------------------------
+
+/// Minimal HTTP endpoint serving one JSON document — ring topology and
+/// live engine counters. Any `GET` gets the current snapshot; the CI
+/// cluster-smoke job curls it and asserts `dropped_deltas == 0`.
+pub struct Monitor {
+    addr: SocketAddr,
+    state: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Bind and start serving. Port 0 picks a free port; the real
+    /// address is [`addr`](Self::addr).
+    pub fn serve(listen: &str) -> io::Result<Monitor> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(Mutex::new(
+            obj(vec![("status", Json::Str("starting".to_string()))]).to_string(),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(mut conn) = conn else { continue };
+                    let body = state.lock().unwrap().clone();
+                    // Consume (and ignore) the request head — every
+                    // path serves the same document.
+                    let _ = conn.set_read_timeout(Some(Duration::from_millis(500)));
+                    let mut scratch = [0u8; 1024];
+                    let _ = conn.read(&mut scratch);
+                    let resp = format!(
+                        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                        body.len(),
+                        body
+                    );
+                    let _ = conn.write_all(resp.as_bytes());
+                }
+            })
+        };
+        Ok(Monitor { addr, state, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port-0 binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Swap the served document.
+    pub fn set(&self, doc: &Json) {
+        *self.state.lock().unwrap() = doc.to_string();
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop so it can observe the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The monitor document for one node: identity, ring order, step table
+/// and the report counters the smoke gate asserts on.
+pub fn status_json(
+    status: &str,
+    cfg: &NodeConfig,
+    ring: &Ring,
+    report: &EngineReport,
+    applied_of: &[u32],
+) -> Json {
+    let mut order: Vec<(u64, usize)> = (0..cfg.n)
+        .filter_map(|i| ring.ring_id_of(i).map(|rid| (rid, i)))
+        .collect();
+    order.sort_unstable();
+    obj(vec![
+        ("status", Json::Str(status.to_string())),
+        ("id", Json::Num(cfg.id as f64)),
+        ("n", Json::Num(cfg.n as f64)),
+        ("ring", Json::Arr(order.iter().map(|&(_, i)| Json::Num(i as f64)).collect())),
+        ("steps", Json::Arr(report.steps.iter().map(|&s| Json::Num(s as f64)).collect())),
+        (
+            "applied_of",
+            Json::Arr(applied_of.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        (
+            "report",
+            obj(vec![
+                ("update_msgs", Json::Num(report.update_msgs as f64)),
+                ("control_msgs", Json::Num(report.control_msgs as f64)),
+                ("applied_rumors", Json::Num(report.applied_rumors as f64)),
+                ("dup_rumors", Json::Num(report.dup_rumors as f64)),
+                ("rumor_copies", Json::Num(report.rumor_copies as f64)),
+                ("dropped_deltas", Json::Num(report.dropped_deltas as f64)),
+                ("missing_rumors", Json::Num(report.missing_rumors as f64)),
+                ("discarded_msgs", Json::Num(report.discarded_msgs as f64)),
+                ("drain_polls", Json::Num(report.drain_polls as f64)),
+                ("wall_secs", Json::Num(report.wall_secs)),
+            ]),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Node runtime
+// ---------------------------------------------------------------------------
+
+/// What a finished node hands back: the standard engine report plus the
+/// per-origin applied-rumor counts — the signature the equivalence
+/// tests diff across transports (channel vs TCP must match exactly).
+#[derive(Debug, Clone)]
+pub struct NodeOutcome {
+    pub report: EngineReport,
+    /// `applied_of[o]` = distinct rumors of origin `o` this node
+    /// applied (own originations included).
+    pub applied_of: Vec<u32>,
+}
+
+/// Mutable node state, factored out so the frame handler and the main
+/// loop borrow disjoint fields without closure gymnastics.
+struct NodeState {
+    me: usize,
+    n: usize,
+    gossip: GossipNode,
+    ring: Ring,
+    w: Vec<f32>,
+    /// Last known completed-step count per peer (fed by `Step` frames).
+    steps_done: Vec<u64>,
+    /// Max beat seen per peer — distinguishes fresh announcements from
+    /// reconnect resends in debug logs; merging is max on both fields.
+    beats: Vec<u64>,
+    /// `Some(count)` once origin announced its final origination count
+    /// (via `Done`, `Leave`, or a custodian `Repair`).
+    expected: Vec<Option<u32>>,
+    update_msgs: u64,
+    control_msgs: u64,
+    discarded_msgs: u64,
+}
+
+fn axpy(w: &mut [f32], delta: &[f32]) {
+    debug_assert_eq!(w.len(), delta.len(), "delta dimension mismatch");
+    for (wi, di) in w.iter_mut().zip(delta) {
+        *wi += di;
+    }
+}
+
+impl NodeState {
+    fn handle(&mut self, frame: Frame) {
+        match frame {
+            Frame::Peer(PeerMsg::Gossip { rumors }) => {
+                let w = &mut self.w;
+                self.gossip.receive(rumors, |r| axpy(w, &r.delta));
+            }
+            Frame::Peer(PeerMsg::Delta { delta }) => axpy(&mut self.w, &delta),
+            Frame::Peer(PeerMsg::Done { from, rumors }) => {
+                self.expected[from as usize] = Some(rumors);
+            }
+            Frame::Peer(PeerMsg::Leave { from, rumors }) => {
+                self.expected[from as usize] = Some(rumors);
+                self.ring.evict(from as usize);
+            }
+            Frame::Peer(PeerMsg::Repair { origin, rumors, store }) => {
+                // A custodian re-announcing for a dead origin: stands in
+                // for the Done the origin never sent.
+                self.expected[origin as usize].get_or_insert(rumors);
+                let w = &mut self.w;
+                self.gossip.receive(store, |r| axpy(w, &r.delta));
+            }
+            Frame::Step { from, step, beat } => {
+                let i = from as usize;
+                if i < self.n {
+                    self.steps_done[i] = self.steps_done[i].max(step);
+                    self.beats[i] = self.beats[i].max(beat);
+                } else {
+                    self.discarded_msgs += 1;
+                }
+            }
+            other @ (Frame::Join { .. } | Frame::Welcome(_) | Frame::Peers { .. }) => {
+                log_warn!("node {}: bootstrap frame after bootstrap: {other:?}", self.me);
+                self.discarded_msgs += 1;
+            }
+        }
+    }
+
+    /// Flush queued gossip batches onto the wire.
+    fn flush_gossip<T: Transport>(&mut self, cfg: &GossipConfig, rng: &mut Rng, transport: &T) {
+        for (dst, rumors) in self.gossip.flush(cfg, &self.ring, rng) {
+            if transport.send(dst, Frame::Peer(PeerMsg::Gossip { rumors })) {
+                self.update_msgs += 1;
+            }
+        }
+    }
+
+    /// A peer's step count as the barrier sees it: a peer that already
+    /// announced its final origination count can never block anyone.
+    fn view(&self, j: usize) -> u64 {
+        if self.expected[j].is_some() {
+            u64::MAX
+        } else {
+            self.steps_done[j]
+        }
+    }
+
+    /// Can this node start computing step `my_step`? Returns the pass
+    /// verdict and the overlay routing messages the sample cost.
+    fn barrier_pass(&mut self, my_step: u64, method: &Method, rng: &mut Rng) -> (bool, u64) {
+        let min_all = || (0..self.n).filter(|&j| j != self.me).map(|j| self.view(j)).min();
+        match method {
+            Method::Asp => (true, 0),
+            Method::Bsp => (min_all().map_or(true, |m| m >= my_step), 0),
+            Method::Ssp { staleness } => {
+                (min_all().map_or(true, |m| my_step.saturating_sub(m) <= *staleness), 0)
+            }
+            Method::Pbsp { sample } => {
+                let (peers, msgs) = self.ring.sample_nodes(self.me, *sample, rng);
+                let pass = peers.iter().map(|&j| self.view(j)).min().map_or(true, |m| m >= my_step);
+                (pass, msgs)
+            }
+            Method::Pssp { sample, staleness } => {
+                let (peers, msgs) = self.ring.sample_nodes(self.me, *sample, rng);
+                let pass = peers
+                    .iter()
+                    .map(|&j| self.view(j))
+                    .min()
+                    .map_or(true, |m| my_step.saturating_sub(m) <= *staleness);
+                (pass, msgs)
+            }
+            Method::Pquorum { sample, staleness, quorum_pct } => {
+                let (peers, msgs) = self.ring.sample_nodes(self.me, *sample, rng);
+                if peers.is_empty() {
+                    return (true, msgs);
+                }
+                let within = peers
+                    .iter()
+                    .filter(|&&j| my_step.saturating_sub(self.view(j)) <= *staleness)
+                    .count();
+                let pass = within * 100 >= peers.len() * *quorum_pct as usize;
+                (pass, msgs)
+            }
+        }
+    }
+}
+
+/// Run one deployed node to completion: compute `cfg.steps` SGD steps
+/// under the configured barrier, disseminating deltas over the gossip
+/// plane carried by `transport`, then drain until every announced rumor
+/// of every origin has been applied (or `drain_timeout` fires — losses
+/// are loud, never silent).
+pub fn run_node<T: Transport>(
+    cfg: &NodeConfig,
+    transport: &mut T,
+    grad_fn: GradFn,
+    monitor: Option<&Monitor>,
+) -> NodeOutcome {
+    assert_eq!(cfg.id, transport.me(), "config/transport id mismatch");
+    assert_eq!(cfg.n, transport.n(), "config/transport size mismatch");
+    assert!(cfg.n >= 1 && cfg.id < cfg.n);
+    let t0 = Instant::now();
+    let me = cfg.id;
+    let n = cfg.n;
+    // Same fork recipe as the sim engines' per-worker RNGs: cluster
+    // seed spread by the golden ratio, xor'd with the node id.
+    let wseed = cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ me as u64;
+    let mut rng = Rng::new(wseed);
+    let mut st = NodeState {
+        me,
+        n,
+        gossip: GossipNode::new(me, n),
+        ring: Ring::with_nodes(n, cfg.seed),
+        w: vec![0.0; cfg.dim],
+        steps_done: vec![0; n],
+        beats: vec![0; n],
+        expected: vec![None; n],
+        update_msgs: 0,
+        control_msgs: 0,
+        discarded_msgs: 0,
+    };
+    let gcfg = cfg.gossip.clone();
+    let flush_every = gcfg.flush_every.max(1);
+    let mut pending = vec![0.0f32; cfg.dim];
+    let mut step: u64 = 0;
+    let mut beat: u64 = 0;
+
+    let broadcast_step =
+        |st: &mut NodeState, transport: &T, step: u64, beat: u64| {
+            for peer in 0..n {
+                if peer != me && transport.send(peer, Frame::Step { from: me as u32, step, beat }) {
+                    st.control_msgs += 1;
+                }
+            }
+        };
+
+    beat += 1;
+    broadcast_step(&mut st, transport, 0, beat);
+    let mut last_announce = Instant::now();
+
+    while step < cfg.steps {
+        while let Some(f) = transport.try_recv() {
+            st.handle(f);
+        }
+        let (pass, sample_msgs) = st.barrier_pass(step, &cfg.method, &mut rng);
+        st.control_msgs += sample_msgs;
+        if !pass {
+            if let Some(f) = transport.recv_timeout(Duration::from_millis(2)) {
+                st.handle(f);
+            }
+            // Relay anything a received batch queued even while parked,
+            // or the cluster can deadlock waiting on our shortcuts.
+            st.flush_gossip(&gcfg, &mut rng, transport);
+            if last_announce.elapsed() >= STEP_REANNOUNCE {
+                beat += 1;
+                broadcast_step(&mut st, transport, step, beat);
+                last_announce = Instant::now();
+            }
+            continue;
+        }
+
+        let g = grad_fn(&st.w, wseed.wrapping_add(step));
+        for d in 0..cfg.dim {
+            let delta = -cfg.lr * g[d];
+            st.w[d] += delta;
+            pending[d] += delta;
+        }
+        step += 1;
+        st.steps_done[me] = step;
+
+        if step % flush_every == 0 || step == cfg.steps {
+            let delta = std::mem::replace(&mut pending, vec![0.0; cfg.dim]);
+            st.gossip.originate(delta.into(), &gcfg);
+            st.flush_gossip(&gcfg, &mut rng, transport);
+        }
+        beat += 1;
+        broadcast_step(&mut st, transport, step, beat);
+        last_announce = Instant::now();
+
+        if let Some(m) = monitor {
+            if step % 16 == 0 || step == cfg.steps {
+                let snap = interim_report(&st, t0, 0);
+                let applied: Vec<u32> =
+                    (0..n).map(|o| st.gossip.applied_count(o as u32)).collect();
+                m.set(&status_json("running", cfg, &st.ring, &snap, &applied));
+            }
+        }
+    }
+
+    // Announce our exact origination count so every peer's drain can
+    // terminate deterministically, then drain ourselves.
+    let announced = st.gossip.originated();
+    st.expected[me] = Some(announced);
+    for peer in 0..n {
+        if peer != me
+            && transport.send(peer, Frame::Peer(PeerMsg::Done { from: me as u32, rumors: announced }))
+        {
+            st.control_msgs += 1;
+        }
+    }
+
+    let deadline = Instant::now() + cfg.drain_timeout;
+    let mut drain_polls: u64 = 0;
+    let mut timed_out = false;
+    loop {
+        let drained = (0..n).all(|o| match st.expected[o] {
+            Some(c) => st.gossip.applied_count(o as u32) >= c,
+            None => false,
+        });
+        if drained {
+            break;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            timed_out = true;
+            break;
+        }
+        // Same clamp as the p2p engine: near the deadline recv_timeout
+        // would degenerate to a hot spin without a floor.
+        let wait = (deadline - now).max(MIN_DRAIN_POLL);
+        drain_polls += 1;
+        if let Some(f) = transport.recv_timeout(wait) {
+            st.handle(f);
+            while let Some(f) = transport.try_recv() {
+                st.handle(f);
+            }
+            st.flush_gossip(&gcfg, &mut rng, transport);
+        }
+    }
+
+    let mut missing_rumors: u64 = 0;
+    let mut discarded: u64 = st.discarded_msgs;
+    if timed_out {
+        for o in 0..n {
+            match st.expected[o] {
+                Some(c) => {
+                    missing_rumors += u64::from(c.saturating_sub(st.gossip.applied_count(o as u32)))
+                }
+                None => log_warn!(
+                    "node {me}: drain timed out with no Done from {o}; its rumor count is unknown"
+                ),
+            }
+        }
+        while transport.try_recv().is_some() {
+            discarded += 1;
+        }
+        log_warn!(
+            "node {me}: drain safety-net fired after {:?} — {missing_rumors} rumors missing, {discarded} messages discarded",
+            cfg.drain_timeout
+        );
+    }
+
+    let mut report = interim_report(&st, t0, drain_polls);
+    report.missing_rumors = missing_rumors;
+    report.discarded_msgs = discarded;
+    report.dropped_deltas = missing_rumors.max(discarded);
+    let applied_of: Vec<u32> = (0..n).map(|o| st.gossip.applied_count(o as u32)).collect();
+    if let Some(m) = monitor {
+        m.set(&status_json("done", cfg, &st.ring, &report, &applied_of));
+    }
+    NodeOutcome { report, applied_of }
+}
+
+/// The report as far as `st` can tell; loss fields are filled by the
+/// caller once the drain verdict is known.
+fn interim_report(st: &NodeState, t0: Instant, drain_polls: u64) -> EngineReport {
+    EngineReport {
+        steps: st.steps_done.clone(),
+        update_msgs: st.update_msgs,
+        control_msgs: st.control_msgs + st.gossip.route_msgs,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        model: st.w.clone(),
+        applied_rumors: st.gossip.applied_rumors,
+        dup_rumors: st.gossip.dup_rumors,
+        rumor_copies: st.gossip.rumor_copies,
+        drain_polls,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::transport::ChannelTransport;
+    use std::sync::Arc;
+
+    fn test_workload(n: usize, steps: u64, method: Method) -> Workload {
+        Workload {
+            n,
+            steps,
+            dim: 8,
+            lr: 0.1,
+            seed: 42,
+            method,
+            gossip: GossipConfig { fanout: 2, flush_every: 1, ttl: 4 },
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+
+    fn seed_only_grad() -> GradFn {
+        Arc::new(|w: &[f32], seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..w.len()).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+        })
+    }
+
+    fn run_cluster(wl: &Workload) -> Vec<NodeOutcome> {
+        let transports = ChannelTransport::cluster(wl.n);
+        let mut handles = Vec::new();
+        for (id, mut tr) in transports.into_iter().enumerate() {
+            let cfg = wl.node_config(id);
+            let grad = seed_only_grad();
+            handles.push(std::thread::spawn(move || {
+                run_node(&cfg, &mut tr, grad, None)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("node thread")).collect()
+    }
+
+    #[test]
+    fn channel_cluster_drains_with_zero_losses_under_pssp() {
+        let wl = test_workload(4, 12, Method::Pssp { sample: 2, staleness: 2 });
+        let outs = run_cluster(&wl);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.report.dropped_deltas, 0, "node {i} dropped deltas");
+            assert_eq!(o.report.missing_rumors, 0, "node {i} missing rumors");
+            // Every node applied every origin's full origination run.
+            assert_eq!(o.applied_of, outs[0].applied_of, "node {i} applied_of diverges");
+            assert_eq!(o.applied_of.iter().map(|&c| c as u64).sum::<u64>(), 4 * 12);
+        }
+    }
+
+    #[test]
+    fn channel_cluster_converges_under_bsp_lockstep() {
+        // bsp over the broadcast step table: no node may ever lead by
+        // more than one step, and all finish all steps.
+        let wl = test_workload(3, 8, Method::Bsp);
+        let outs = run_cluster(&wl);
+        for o in &outs {
+            assert_eq!(o.report.dropped_deltas, 0);
+            assert_eq!(o.applied_of.iter().map(|&c| c as u64).sum::<u64>(), 3 * 8);
+        }
+    }
+
+    #[test]
+    fn flush_cadence_batches_originations() {
+        // flush_every=3 over 7 steps -> originations at steps 3, 6, 7.
+        let wl = Workload {
+            gossip: GossipConfig { fanout: 1, flush_every: 3, ttl: 4 },
+            ..test_workload(2, 7, Method::Asp)
+        };
+        let outs = run_cluster(&wl);
+        for o in &outs {
+            assert_eq!(o.applied_of, vec![3, 3]);
+            assert_eq!(o.report.dropped_deltas, 0);
+        }
+    }
+
+    #[test]
+    fn welcome_round_trips_the_workload() {
+        let wl = test_workload(5, 20, Method::Pquorum { sample: 3, staleness: 1, quorum_pct: 80 });
+        let w = wl.welcome(3);
+        assert_eq!(w.id, 3);
+        assert_eq!(w.method, "pquorum:3:1:80");
+        let back = Workload::from_welcome(&w, wl.drain_timeout).expect("parses");
+        assert_eq!(back.n, wl.n);
+        assert_eq!(back.steps, wl.steps);
+        assert_eq!(back.dim, wl.dim);
+        assert_eq!(back.method, wl.method);
+        assert_eq!(back.gossip.fanout, wl.gossip.fanout);
+        assert!(Workload::from_welcome(
+            &Welcome { method: "warp-speed".into(), ..w },
+            wl.drain_timeout
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn monitor_serves_the_current_snapshot_over_http() {
+        let m = Monitor::serve("127.0.0.1:0").expect("bind monitor");
+        m.set(&obj(vec![
+            ("status", Json::Str("done".to_string())),
+            ("dropped_deltas", Json::Num(0.0)),
+        ]));
+        let mut conn = TcpStream::connect(m.addr()).expect("connect");
+        conn.write_all(b"GET /status HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let _ = conn.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "bad response: {resp}");
+        assert!(resp.contains("\"dropped_deltas\":0") || resp.contains("\"dropped_deltas\": 0"),
+            "body missing counter: {resp}");
+    }
+
+    #[test]
+    fn bootstrap_handshake_assigns_ids_and_ships_the_roster() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind seed");
+        let seed_addr = listener.local_addr().unwrap().to_string();
+        let wl = test_workload(3, 4, Method::Asp);
+        let seed_thread = {
+            let wl = wl.clone();
+            let seed_addr = seed_addr.clone();
+            std::thread::spawn(move || seed_bootstrap(&listener, &wl, &seed_addr).expect("seed"))
+        };
+        let mut joiners = Vec::new();
+        for j in 0..2 {
+            let seed_addr = seed_addr.clone();
+            joiners.push(std::thread::spawn(move || {
+                let my_addr = format!("127.0.0.1:{}", 9000 + j);
+                join_bootstrap(&seed_addr, &my_addr, Duration::from_secs(10)).expect("join")
+            }));
+        }
+        let roster = seed_thread.join().expect("seed thread");
+        assert_eq!(roster.len(), 3);
+        assert_eq!(roster[0], (0, seed_addr.clone()));
+        let mut ids = Vec::new();
+        for j in joiners {
+            let (welcome, peers) = j.join().expect("join thread");
+            assert_eq!(welcome.n, 3);
+            assert_eq!(welcome.method, "asp");
+            assert_eq!(peers.len(), 3);
+            assert_eq!(peers[0].1, seed_addr);
+            ids.push(welcome.id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+    }
+}

@@ -64,7 +64,15 @@ use crate::log_warn;
 use crate::overlay::Ring;
 use crate::util::rng::Rng;
 
+/// Floor for the drain's blocking wait. Once the deadline is nearer than
+/// this, `recv_timeout(left)` would degenerate toward `recv_timeout(0)` —
+/// an immediate return, turning the final stretch before the timeout
+/// branch into a hot spin. Clamping trades at most one millisecond of
+/// deadline overshoot for a paced wait.
+pub(crate) const MIN_DRAIN_POLL: Duration = Duration::from_millis(1);
+
 /// Messages between peer workers (model + membership planes).
+#[derive(Debug, Clone)]
 pub enum PeerMsg {
     /// Full-mesh mode: a model delta from a peer, apply `w += delta`.
     Delta { delta: Vec<f32> },
@@ -171,6 +179,7 @@ struct WorkerOut {
     confirmed_dead: u64,
     repair_msgs: u64,
     repaired_rumors: u64,
+    drain_polls: u64,
     departed: bool,
 }
 
@@ -669,6 +678,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 let mut dropped_deltas = 0u64;
                 let mut missing_total = 0u64;
                 let mut discarded_total = 0u64;
+                let mut drain_polls = 0u64;
                 if !departed {
                     // Signal completion (no more originations from us)
                     // with our exact origination count, then drain until
@@ -736,6 +746,10 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         }};
                     }
                     loop {
+                        // Iteration count surfaced in EngineReport: the
+                        // no-busy-wait assertion in tests/membership_crash
+                        // bounds it by drain_timeout / MIN_DRAIN_POLL.
+                        drain_polls += 1;
                         // Same order as the step loop: ingest the whole
                         // backlog (and relay it) before the detector may
                         // confirm anything, so custody counts always
@@ -814,7 +828,13 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             );
                             break;
                         }
-                        if let Ok(msg) = rx.recv_timeout(left.min(drain_wait)) {
+                        // Clamp below by MIN_DRAIN_POLL: as the deadline
+                        // approaches, `left` saturates toward zero and an
+                        // unclamped recv_timeout(≈0) spins hot until the
+                        // timeout branch fires.
+                        if let Ok(msg) =
+                            rx.recv_timeout(left.min(drain_wait).max(MIN_DRAIN_POLL))
+                        {
                             ingest_backlog_and_relay!(msg);
                         }
                     }
@@ -843,6 +863,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     confirmed_dead,
                     repair_msgs,
                     repaired_rumors,
+                    drain_polls,
                     departed,
                 }
             })
@@ -866,6 +887,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         report.confirmed_dead += out.confirmed_dead;
         report.repair_msgs += out.repair_msgs;
         report.repaired_rumors += out.repaired_rumors;
+        report.drain_polls += out.drain_polls;
         if out.departed {
             report.departed.push(i);
         }

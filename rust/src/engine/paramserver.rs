@@ -57,7 +57,7 @@ use std::time::{Duration, Instant};
 use crate::actor::{Address, System};
 use crate::barrier::{Method, ViewRequirement};
 use crate::engine::membership::{FailureDetector, MembershipConfig};
-use crate::engine::{EngineReport, GradFn};
+use crate::engine::{EngineError, EngineReport, GradFn};
 use crate::overlay::{node_ring_id, Ring};
 use crate::sampling::StepTracker;
 use crate::util::rng::Rng;
@@ -66,6 +66,12 @@ use crate::util::rng::Rng;
 const PLACEMENT_NAMESPACE: u64 = 0xB10C_B10C;
 /// Namespace for hashing parameter indices to ring keys.
 const KEY_NAMESPACE: u64 = 0x4B45_59;
+
+/// Routing-table sentinel: the shard has no live candidate left (its
+/// primary and every ring successor are confirmed dead). Workers that
+/// adopt a route carrying this abort with a partial report instead of
+/// retrying into the void.
+pub const SHARD_LOST: usize = usize::MAX;
 
 /// One primary acknowledgement per acked push (replicas never send —
 /// they only release their clone of the sender once applied).
@@ -267,7 +273,17 @@ impl ShardLayout {
             // Consistent hashing: successor of the key's ring position.
             for (j, owner) in owner_of.iter_mut().enumerate() {
                 let key = node_ring_id(j, KEY_NAMESPACE);
-                let (_, s) = ring.successor(key).expect("non-empty ring");
+                // `successor` is `None` only on an empty ring. The layout
+                // ring joined every shard just above, so the lookup cannot
+                // miss *here* — but the same ring is cloned into
+                // [`Failover`] and evicted on confirmed deaths, where the
+                // empty case is real and must surface as an
+                // [`EngineError`], never a process abort (this line used
+                // to `expect("non-empty ring")`).
+                let Some((_, s)) = ring.successor(key) else {
+                    debug_assert!(false, "placement ring empty at layout");
+                    continue;
+                };
                 owned[s].push(j);
                 *owner = s;
             }
@@ -310,6 +326,16 @@ struct ShardDone {
     handoff_bytes: u64,
     /// Messages discarded for lack of state / stale routing.
     discarded: u64,
+}
+
+/// A worker thread's final accounting, returned from its body.
+struct WorkerDone {
+    control_msgs: u64,
+    update_msgs: u64,
+    /// Steps fully completed (== `steps_per_worker` on a healthy run).
+    steps_done: u64,
+    /// Set when the worker aborted on a [`SHARD_LOST`] route.
+    lost_shard: Option<usize>,
 }
 
 /// Coordinator-side failover state: the routing table plus the
@@ -376,13 +402,29 @@ impl Failover {
     /// push the change to the (possibly newly promoted) primary, which
     /// bulk-installs state on any replica that lacks it.
     fn rehome(&mut self, s: usize) {
+        if self.route[s] == SHARD_LOST {
+            return; // already declared lost
+        }
         loop {
             let pref: Vec<usize> = std::iter::once(s)
                 .chain(self.succ_order[s].iter().copied())
                 .filter(|&x| !self.dead[x])
                 .collect();
             let Some(&primary) = pref.first() else {
-                return; // every candidate dead: the shard is lost
+                // Every candidate is confirmed dead — the eviction that
+                // emptied this preference list is the same one that used
+                // to walk the engine into `expect("non-empty ring")` /
+                // retry-exhaustion aborts. Mark the route LOST so workers
+                // bail out loudly with a partial report instead.
+                eprintln!(
+                    "ps-coord: shard {s} LOST — primary and every ring \
+                     successor confirmed dead before re-home completed \
+                     ({} of {} actors live)",
+                    self.dead.iter().filter(|&&d| !d).count(),
+                    self.dead.len(),
+                );
+                self.route[s] = SHARD_LOST;
+                return;
             };
             let replicas: Vec<usize> =
                 pref.iter().skip(1).take(self.r).copied().collect();
@@ -420,34 +462,67 @@ impl Failover {
     }
 }
 
+/// What a worker learns from reporting a silent shard primary.
+enum Refresh {
+    /// Fresh routes adopted; every shard still has a live primary.
+    Ok,
+    /// The engine is shutting down (coordinator gone).
+    Shutdown,
+    /// This shard's route came back [`SHARD_LOST`]: no live candidate.
+    Lost(usize),
+}
+
 /// Report a silent shard primary to the coordinator and adopt the
-/// refreshed routing table. Returns false when the engine is shutting
-/// down (coordinator gone).
+/// refreshed routing table.
 fn confirm_dead_and_refresh(
     coord: &Address<CoordMsg>,
     routes: &mut Vec<usize>,
     control_msgs: &mut u64,
     shard: usize,
-) -> bool {
+) -> Refresh {
     let (tx, rx) = channel();
     *control_msgs += 2;
     if !coord.send(CoordMsg::ShardDead { shard, actor: routes[shard], reply: tx }) {
-        return false;
+        return Refresh::Shutdown;
     }
     match rx.recv() {
         Ok(fresh) => {
             *routes = fresh;
-            true
+            // Any LOST entry aborts the worker — not just the reported
+            // shard: the worker pulls every shard each step, so a single
+            // unrecoverable block makes its step budget unfinishable.
+            match routes.iter().position(|&r| r == SHARD_LOST) {
+                Some(s) => Refresh::Lost(s),
+                None => Refresh::Ok,
+            }
         }
-        Err(_) => false,
+        Err(_) => Refresh::Shutdown,
     }
 }
 
 /// Run the engine to completion: every worker performs its step budget.
 ///
 /// `grad_fn` supplies gradients (pure-Rust model or PJRT artifact);
-/// `init_w` is the initial model.
+/// `init_w` is the initial model. Panics if the run cannot complete —
+/// callers that want the partial report instead use [`try_run`].
 pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
+    match try_run(cfg, init_w, grad_fn) {
+        Ok(r) => r,
+        Err(e) => panic!("paramserver engine failed: {e}"),
+    }
+}
+
+/// [`run`], but a lost shard (every placement candidate confirmed dead
+/// before re-home completed — e.g. `kill_shard` with no replica to
+/// inherit the block) surfaces as an [`EngineError`] carrying the
+/// partial [`EngineReport`] instead of aborting the process. The
+/// partial model keeps the initial values for lost blocks; counters
+/// cover everything up to the abort.
+pub fn try_run(
+    cfg: &PsConfig,
+    init_w: Vec<f32>,
+    grad_fn: GradFn,
+) -> Result<EngineReport, EngineError> {
     assert_eq!(init_w.len(), cfg.dim);
     let start = Instant::now();
     let sys = System::new();
@@ -461,11 +536,13 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     let push_batch = cfg.push_batch.max(1);
     let replication = cfg.replication.min(n_shards.saturating_sub(1));
     let layout = Arc::new(ShardLayout::new(cfg.dim, n_shards, cfg.vnodes));
-    if cfg.kill_shard.is_some() {
-        assert!(
-            replication >= 1 && n_shards >= 2,
-            "kill injection needs replication >= 1 and n_shards >= 2 \
-             so a replica exists to inherit the block"
+    if cfg.kill_shard.is_some() && (replication == 0 || n_shards < 2) {
+        // No replica exists to inherit the victim's block: the kill will
+        // lose the shard. Legal — but say so up front, loudly.
+        eprintln!(
+            "paramserver: kill injection with replication={replication}, \
+             n_shards={n_shards} — no replica can inherit the block; \
+             expect a lost shard and a partial report"
         );
     }
 
@@ -621,12 +698,21 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     tracker.advance_to(node as usize, step);
                 }
                 CoordMsg::Barrier { step, reply } => {
-                    let pass = tracker.min_step() + staleness >= step;
+                    // A lost shard means aborted workers will never report
+                    // again: release the barrier so survivors advance to
+                    // their next pull, observe the dead route, and abort
+                    // with a partial report instead of polling forever.
+                    let pass = fo.route.contains(&SHARD_LOST)
+                        || tracker.min_step() + staleness >= step;
                     let _ = reply.send(pass);
                 }
                 CoordMsg::SampleMin { node, beta, reply } => {
-                    let m =
-                        tracker.sample_min(node as usize, beta, &mut rng, &mut scratch);
+                    // Same release-on-loss rule: `None` reads as "pass".
+                    let m = if fo.route.contains(&SHARD_LOST) {
+                        None
+                    } else {
+                        tracker.sample_min(node as usize, beta, &mut rng, &mut scratch)
+                    };
                     let _ = reply.send(m);
                 }
                 CoordMsg::ShardDead { shard, actor, reply } => {
@@ -665,7 +751,7 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 .map(|&(_, d)| d);
             let wseed = cfg.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ i as u64;
             let schedule_blocks = cfg.schedule_blocks;
-            sys.spawn::<(), (u64, u64), _>(&format!("ps-worker-{i}"), move |_mb| {
+            sys.spawn::<(), WorkerDone, _>(&format!("ps-worker-{i}"), move |_mb| {
                 let mut rng = Rng::new(wseed);
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
@@ -710,15 +796,36 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             }
                         }
                         for s in 0..n_shards {
-                            if need[s]
-                                && !confirm_dead_and_refresh(
-                                    &coord_addr,
-                                    &mut routes,
-                                    &mut control_msgs,
-                                    s,
-                                )
-                            {
-                                return (control_msgs, update_msgs);
+                            if !need[s] {
+                                continue;
+                            }
+                            match confirm_dead_and_refresh(
+                                &coord_addr,
+                                &mut routes,
+                                &mut control_msgs,
+                                s,
+                            ) {
+                                Refresh::Ok => {}
+                                Refresh::Shutdown => {
+                                    return WorkerDone {
+                                        control_msgs,
+                                        update_msgs,
+                                        steps_done: step,
+                                        lost_shard: None,
+                                    };
+                                }
+                                Refresh::Lost(ls) => {
+                                    eprintln!(
+                                        "ps-worker-{i}: shard {ls} lost — \
+                                         aborting at step {step}/{steps}"
+                                    );
+                                    return WorkerDone {
+                                        control_msgs,
+                                        update_msgs,
+                                        steps_done: step,
+                                        lost_shard: Some(ls),
+                                    };
+                                }
                             }
                         }
                     }
@@ -793,13 +900,33 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             let silent: Vec<usize> =
                                 flush.iter().map(|(s, _)| *s).collect();
                             for s in silent {
-                                if !confirm_dead_and_refresh(
+                                match confirm_dead_and_refresh(
                                     &coord_addr,
                                     &mut routes,
                                     &mut control_msgs,
                                     s,
                                 ) {
-                                    return (control_msgs, update_msgs);
+                                    Refresh::Ok => {}
+                                    Refresh::Shutdown => {
+                                        return WorkerDone {
+                                            control_msgs,
+                                            update_msgs,
+                                            steps_done: step,
+                                            lost_shard: None,
+                                        };
+                                    }
+                                    Refresh::Lost(ls) => {
+                                        eprintln!(
+                                            "ps-worker-{i}: shard {ls} lost — \
+                                             aborting at step {step}/{steps}"
+                                        );
+                                        return WorkerDone {
+                                            control_msgs,
+                                            update_msgs,
+                                            steps_done: step,
+                                            lost_shard: Some(ls),
+                                        };
+                                    }
                                 }
                             }
                         }
@@ -824,7 +951,12 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                                 if !coord_addr
                                     .send(CoordMsg::Barrier { step: step + 1, reply: tx })
                                 {
-                                    return (control_msgs, update_msgs);
+                                    return WorkerDone {
+                                        control_msgs,
+                                        update_msgs,
+                                        steps_done: step + 1,
+                                        lost_shard: None,
+                                    };
                                 }
                                 rx.recv().unwrap_or(true)
                             }
@@ -836,7 +968,12 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                                     beta,
                                     reply: tx,
                                 }) {
-                                    return (control_msgs, update_msgs);
+                                    return WorkerDone {
+                                        control_msgs,
+                                        update_msgs,
+                                        steps_done: step + 1,
+                                        lost_shard: None,
+                                    };
                                 }
                                 match rx.recv() {
                                     Ok(Some(min)) => min + staleness >= step + 1,
@@ -850,7 +987,12 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         std::thread::sleep(poll);
                     }
                 }
-                (control_msgs, update_msgs)
+                WorkerDone {
+                    control_msgs,
+                    update_msgs,
+                    steps_done: steps,
+                    lost_shard: None,
+                }
             })
         })
         .collect();
@@ -858,12 +1000,18 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     // ---- join ----
     let mut control_msgs = 0;
     let mut update_msgs = 0;
+    let mut worker_steps = Vec::with_capacity(n);
+    let mut lost_reports: Vec<usize> = Vec::new();
     for wkr in workers {
         let (addr, handle) = wkr.into_parts();
         drop(addr);
-        let (c, u) = handle.join().expect("worker panicked");
-        control_msgs += c;
-        update_msgs += u;
+        let done = handle.join().expect("worker panicked");
+        control_msgs += done.control_msgs;
+        update_msgs += done.update_msgs;
+        worker_steps.push(done.steps_done);
+        if let Some(s) = done.lost_shard {
+            lost_reports.push(s);
+        }
     }
     // Coordinator first: its final routing table decides which actor's
     // copy of each block is authoritative.
@@ -885,12 +1033,27 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     }
     drop(peers);
 
+    // The coordinator's routing table is the authority on lost shards;
+    // worker reports only corroborate it (a worker can abort on a LOST
+    // entry before the coordinator hears from every survivor).
+    let lost: Vec<usize> =
+        (0..n_shards).filter(|&s| stats.route[s] == SHARD_LOST).collect();
+    debug_assert!(
+        lost_reports.iter().all(|s| lost.contains(s)),
+        "worker reported a lost shard the coordinator never declared"
+    );
+
     // Assemble the model from each shard's current primary and verify
-    // the replication invariants of the final barrier boundary.
-    let mut model = vec![0.0f32; cfg.dim];
+    // the replication invariants of the final barrier boundary. Lost
+    // blocks keep the initial values — there is no authoritative copy
+    // anywhere, and returning zeros would silently look like data.
+    let mut model = init_w.clone();
     let mut server_updates = 0u64;
     for s in 0..n_shards {
         let p = stats.route[s];
+        if p == SHARD_LOST {
+            continue;
+        }
         assert!(!stats.dead[p], "shard {s}: no live primary survived");
         let block = dones[p].blocks[s].as_ref().expect("primary block present");
         for (&j, v) in layout.owned[s].iter().zip(block) {
@@ -912,11 +1075,16 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
     for d in &dones {
         server_updates += d.applied;
     }
-    assert_eq!(server_updates, update_msgs);
-    assert_eq!(stats.reports, n as u64 * cfg.steps_per_worker);
+    if lost.is_empty() {
+        // Quiescence accounting only holds when every worker ran to its
+        // full budget; an aborted run has in-flight pushes and missing
+        // step reports by construction.
+        assert_eq!(server_updates, update_msgs);
+        assert_eq!(stats.reports, n as u64 * cfg.steps_per_worker);
+    }
 
-    EngineReport {
-        steps: vec![cfg.steps_per_worker; n],
+    let report = EngineReport {
+        steps: worker_steps,
         update_msgs,
         control_msgs,
         wall_secs: start.elapsed().as_secs_f64(),
@@ -926,6 +1094,18 @@ pub fn run(cfg: &PsConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         handoff_bytes: dones.iter().map(|d| d.handoff_bytes).sum(),
         discarded_msgs: dones.iter().map(|d| d.discarded).sum(),
         ..EngineReport::default()
+    };
+    if lost.is_empty() {
+        Ok(report)
+    } else {
+        Err(EngineError {
+            reason: format!(
+                "shard(s) {lost:?} lost: every placement candidate was \
+                 confirmed dead before re-home completed; partial model \
+                 keeps the initial values for the lost block(s)"
+            ),
+            partial: report,
+        })
     }
 }
 
@@ -1370,5 +1550,71 @@ mod tests {
         assert!(d < 1e-4, "lost updates under vnode placement: off by {d}");
         assert_eq!(r.confirmed_dead, 1);
         assert!(r.handoff_bytes > 0);
+    }
+
+    #[test]
+    fn losing_the_last_shard_errors_loudly_with_a_partial_report() {
+        // The PR 7 regression: kill the only shard of a replication-0 run.
+        // This used to abort the whole process (retry-exhaustion assert
+        // downstream of the `expect("non-empty ring")` family); now it
+        // must come back as a loud `EngineError` carrying the partial
+        // report, with the process — and the test harness — intact.
+        let cfg = PsConfig {
+            n_workers: 2,
+            steps_per_worker: 6,
+            method: Method::Asp,
+            dim: 8,
+            lr: 0.1,
+            seed: 91,
+            n_shards: 1,
+            replication: 0,
+            kill_shard: Some((0, 2)),
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(cfg.dim);
+        let err = try_run(&cfg, vec![1.0; cfg.dim], grad)
+            .expect_err("last shard died with no replica — run must not complete");
+        assert!(err.reason.contains("[0]"), "reason should name the shard: {}", err.reason);
+        let r = &err.partial;
+        // The crash fires deterministically after the 2nd acked batch, so
+        // exactly two pushes were ever acknowledged.
+        assert_eq!(r.update_msgs, 2);
+        assert_eq!(r.confirmed_dead, 1);
+        // No worker can finish its budget without the model.
+        assert_eq!(r.steps.len(), 2);
+        assert!(
+            r.steps.iter().all(|&s| s < 6),
+            "a worker claims a full budget on a lost model: {:?}",
+            r.steps
+        );
+        // The lost block keeps the initial values bitwise — zeros here
+        // would masquerade as trained data.
+        assert_eq!(r.model, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn losing_the_last_shard_releases_barrier_waiters() {
+        // Same loss under a staleness-bounded barrier: survivors parked at
+        // the barrier must be released (aborted peers never report again),
+        // hit the dead route at their next pull, and abort — not poll
+        // forever. Completing at all is the assertion; the 4-worker spread
+        // makes at least one worker barrier-wait across the kill.
+        let cfg = PsConfig {
+            n_workers: 4,
+            steps_per_worker: 8,
+            method: Method::Ssp { staleness: 1 },
+            dim: 12,
+            lr: 0.1,
+            seed: 92,
+            n_shards: 1,
+            replication: 0,
+            kill_shard: Some((0, 5)),
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(cfg.dim);
+        let err = try_run(&cfg, vec![0.0; cfg.dim], grad)
+            .expect_err("last shard died with no replica — run must not complete");
+        assert_eq!(err.partial.update_msgs, 5);
+        assert_eq!(err.partial.confirmed_dead, 1);
     }
 }

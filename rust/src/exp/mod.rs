@@ -25,6 +25,7 @@ pub mod fig45;
 pub mod p2p_scale;
 pub mod parallel;
 pub mod table1;
+pub mod transport;
 
 use std::path::PathBuf;
 
@@ -288,7 +289,7 @@ pub const ALL: &[&str] = &[
 /// Ablations + extensions beyond the paper (run via `actor exp ext`).
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
-    "ext_shards", "ext_p2p", "ext_crash", "ext_chaos",
+    "ext_shards", "ext_p2p", "ext_crash", "ext_chaos", "ext_transport",
 ];
 
 /// Run one experiment by id.
@@ -315,6 +316,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "ext_p2p" => vec![p2p_scale::ext_p2p(opts)],
         "ext_crash" => vec![crash_churn::ext_crash(opts)],
         "ext_chaos" => vec![chaos::ext_chaos(opts)],
+        "ext_transport" => vec![transport::ext_transport(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

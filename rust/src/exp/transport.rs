@@ -1,0 +1,148 @@
+//! `ext_transport` — the deployment plane measured against its in-process
+//! baseline: one workload, two carriers.
+//!
+//! The same pSSP node-runtime cluster (`engine::node::run_node`) runs
+//! once over [`ChannelTransport`] (in-process mpsc, the sim engines'
+//! carrier) and once over [`TcpTransport`] (real sockets on localhost,
+//! length-prefixed binary codec, writer threads with reconnect). Rows
+//! report, per carrier: wall time, per-node update/control messages,
+//! applied/dup rumor counts, dropped deltas, and — TCP only — actual
+//! bytes on the wire per worker-step, the codec's framing overhead made
+//! visible.
+//!
+//! Expected shape: identical dissemination outcomes (applied == n ×
+//! originations, dropped == 0 on both rows — the cross-transport
+//! equivalence `tests/transport_cluster.rs` gates on), with TCP paying
+//! wall-clock and byte overhead for crossing a real socket.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::barrier::Method;
+use crate::engine::gossip::GossipConfig;
+use crate::engine::node::{run_node, NodeOutcome, Workload};
+use crate::engine::transport::{ChannelTransport, TcpTransport};
+use crate::engine::GradFn;
+use crate::exp::{ExpOpts, Report};
+use crate::util::rng::Rng;
+
+fn grad() -> GradFn {
+    Arc::new(|w: &[f32], seed: u64| {
+        let mut rng = Rng::new(seed);
+        (0..w.len()).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    })
+}
+
+struct CarrierRun {
+    outcomes: Vec<NodeOutcome>,
+    wall_secs: f64,
+    /// Payload bytes written to peers, summed over nodes (TCP only).
+    bytes_out: u64,
+}
+
+fn run_channel(wl: &Workload) -> CarrierRun {
+    let t0 = std::time::Instant::now();
+    let transports = ChannelTransport::cluster(wl.n);
+    let mut handles = Vec::new();
+    for (id, mut tr) in transports.into_iter().enumerate() {
+        let cfg = wl.node_config(id);
+        let g = grad();
+        handles.push(std::thread::spawn(move || run_node(&cfg, &mut tr, g, None)));
+    }
+    let outcomes = handles.into_iter().map(|h| h.join().expect("node")).collect();
+    CarrierRun { outcomes, wall_secs: t0.elapsed().as_secs_f64(), bytes_out: 0 }
+}
+
+fn run_tcp(wl: &Workload) -> CarrierRun {
+    let t0 = std::time::Instant::now();
+    let listeners: Vec<TcpListener> = (0..wl.n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+        .collect();
+    let roster: Vec<(usize, String)> = listeners
+        .iter()
+        .enumerate()
+        .map(|(id, l)| (id, l.local_addr().unwrap().to_string()))
+        .collect();
+    let mut handles = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let cfg = wl.node_config(id);
+        let roster = roster.clone();
+        let g = grad();
+        handles.push(std::thread::spawn(move || {
+            let mut tr = TcpTransport::with_listener(id, cfg.n, listener).expect("transport");
+            tr.connect_peers(&roster);
+            let out = run_node(&cfg, &mut tr, g, None);
+            // Snapshot after the drain: all model-plane frames are on
+            // the wire by now (late Step frames may still be queued —
+            // a slight undercount, irrelevant to the B/step column).
+            let bytes = tr.bytes_out();
+            (out, bytes)
+        }));
+    }
+    let mut outcomes = Vec::new();
+    let mut bytes_out = 0;
+    for h in handles {
+        let (out, bytes) = h.join().expect("node");
+        outcomes.push(out);
+        bytes_out += bytes;
+    }
+    CarrierRun { outcomes, wall_secs: t0.elapsed().as_secs_f64(), bytes_out }
+}
+
+fn carrier_row(label: &str, wl: &Workload, run: &CarrierRun) -> Vec<crate::exp::Cell> {
+    let total_steps: u64 = wl.steps * wl.n as u64;
+    let update: u64 = run.outcomes.iter().map(|o| o.report.update_msgs).sum();
+    let control: u64 = run.outcomes.iter().map(|o| o.report.control_msgs).sum();
+    let applied: u64 = run.outcomes.iter().map(|o| o.report.applied_rumors).sum();
+    let dups: u64 = run.outcomes.iter().map(|o| o.report.dup_rumors).sum();
+    let dropped: u64 = run.outcomes.iter().map(|o| o.report.dropped_deltas).sum();
+    vec![
+        label.into(),
+        run.wall_secs.into(),
+        (update as f64 / total_steps as f64).into(),
+        (control as f64 / total_steps as f64).into(),
+        applied.into(),
+        dups.into(),
+        dropped.into(),
+        (run.bytes_out as f64 / total_steps as f64).into(),
+    ]
+}
+
+/// Channel vs TCP carriers under one pSSP workload.
+pub fn ext_transport(opts: &ExpOpts) -> Report {
+    let n = 3usize;
+    let steps: u64 = if opts.quick { 12 } else { 40 };
+    let wl = Workload {
+        n,
+        steps,
+        dim: 32,
+        lr: 0.1,
+        seed: opts.seed,
+        method: Method::Pssp { sample: 2, staleness: opts.staleness.min(4) },
+        gossip: GossipConfig { fanout: 2, flush_every: 1, ttl: 4 },
+        drain_timeout: Duration::from_secs(20),
+    };
+    let mut r = Report::new(
+        "ext_transport",
+        "deployment plane: in-process channels vs TCP sockets, one pSSP workload",
+        &[
+            "carrier", "wall_s", "upd/step", "ctl/step", "applied", "dups",
+            "dropped", "B/step",
+        ],
+    );
+    let channel = run_channel(&wl);
+    let tcp = run_tcp(&wl);
+    r.row(carrier_row("channel", &wl, &channel));
+    r.row(carrier_row("tcp", &wl, &tcp));
+    let agree = (0..n).all(|i| channel.outcomes[i].applied_of == tcp.outcomes[i].applied_of);
+    r.note(format!(
+        "per-origin applied counts {} across carriers (n={n}, {steps} steps, \
+         {}, seed {}); B/step is real wire bytes incl. framing — 0 for channels",
+        if agree { "IDENTICAL" } else { "DIVERGED (bug!)" },
+        wl.method,
+        wl.seed,
+    ));
+    r.note("dropped must be 0 on both rows: the drain owes exactly-once delivery");
+    r
+}

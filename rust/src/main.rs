@@ -10,8 +10,10 @@ use actor_psp::barrier::Method;
 use actor_psp::cli::{Args, USAGE};
 use actor_psp::config::{parse_departure, parse_kill_shard, Config};
 use actor_psp::engine::gossip::GossipConfig;
+use actor_psp::engine::node::{self, Monitor, Workload};
 use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::paramserver::{self, PsConfig};
+use actor_psp::engine::transport::{TcpTransport, TransportConfig};
 use actor_psp::exp::{self, ExpOpts};
 use actor_psp::model::linear::{minibatch_grad_fn, Dataset};
 use actor_psp::runtime::{Manifest, Runtime};
@@ -47,6 +49,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "sim" => cmd_sim(args),
         "ps" => cmd_ps(args),
         "p2p" => cmd_p2p(args),
+        "node" => cmd_node(args),
+        "join" => cmd_join(args),
         "train" => cmd_train(args),
         "bounds" => cmd_bounds(args),
         "info" => cmd_info(args),
@@ -258,7 +262,16 @@ fn cmd_ps(args: &Args) -> Result<()> {
         cfg.vnodes,
     );
     let init_err = l2_dist(&vec![0.0; cfg.dim], &w_true);
-    let r = paramserver::run(&cfg, vec![0.0; cfg.dim], grad);
+    // A lost shard (every candidate dead before re-home) is a loud error
+    // plus whatever the run salvaged — not a process abort.
+    let (r, lost) = match paramserver::try_run(&cfg, vec![0.0; cfg.dim], grad) {
+        Ok(r) => (r, false),
+        Err(e) => {
+            eprintln!("ENGINE ERROR: {e}");
+            eprintln!("partial report follows (counters up to the abort):");
+            (e.partial, true)
+        }
+    };
     let total_steps: u64 = r.steps.iter().sum();
     println!(
         "steps {}  update msgs {}  control msgs {}  error {:.4} -> {:.4}",
@@ -281,6 +294,9 @@ fn cmd_ps(args: &Args) -> Result<()> {
         total_steps as f64 / r.wall_secs.max(1e-9) / 1e3,
         r.update_msgs as f64 / r.wall_secs.max(1e-9) / 1e3,
     );
+    if lost {
+        bail!("parameter-server run aborted on a lost shard (see above)");
+    }
     Ok(())
 }
 
@@ -429,6 +445,175 @@ fn cmd_p2p(args: &Args) -> Result<()> {
         l2_dist(&r.model, &w_true),
         r.wall_secs,
     );
+    Ok(())
+}
+
+/// Shared flag handling for the deployment plane: `[transport]` config
+/// section first, CLI flags override.
+fn transport_flags(args: &Args) -> Result<TransportConfig> {
+    let mut tcfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.transport_config()?,
+        None => TransportConfig::default(),
+    };
+    if let Some(v) = args.get("listen") {
+        tcfg.listen = v.to_string();
+    }
+    if let Some(v) = args.get("monitor") {
+        tcfg.monitor = Some(v.to_string());
+    }
+    if let Some(v) = args.parse_flag::<f64>("linger")? {
+        if v < 0.0 {
+            bail!("--linger must be non-negative");
+        }
+        tcfg.linger_secs = v;
+    }
+    Ok(tcfg)
+}
+
+/// Seed a real multi-process cluster: bind, accept `n-1` joiners, hand
+/// each the workload, then run as node 0 over TCP.
+fn cmd_node(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "n", "listen", "monitor", "linger", "steps", "dim", "lr",
+        "seed", "method", "fanout", "flush", "ttl", "drain-secs",
+    ])?;
+    let tcfg = transport_flags(args)?;
+    let n: usize = args.flag_or("n", 3)?;
+    if n < 1 {
+        bail!("--n must be at least 1");
+    }
+    let method = match args.get("method") {
+        Some(m) => Method::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?,
+        None => Method::Pssp { sample: 2, staleness: 2 },
+    };
+    let wl = Workload {
+        n,
+        steps: args.flag_or("steps", 30)?,
+        dim: args.flag_or("dim", 64)?,
+        lr: args.flag_or("lr", 0.1)?,
+        seed: args.flag_or("seed", 42)?,
+        method,
+        gossip: GossipConfig {
+            fanout: args.flag_or("fanout", 2)?,
+            flush_every: args.flag_or::<u64>("flush", 1)?.max(1),
+            ttl: args.flag_or("ttl", 6)?,
+        },
+        drain_timeout: std::time::Duration::from_secs_f64(
+            args.flag_or("drain-secs", 10.0)?,
+        ),
+    };
+    let listener = std::net::TcpListener::bind(&tcfg.listen)?;
+    let seed_addr = listener.local_addr()?.to_string();
+    println!(
+        "node 0 (seed): {} workers x {} steps, d={} under {}; listening on \
+         {seed_addr}, waiting for {} joiner(s)",
+        wl.n,
+        wl.steps,
+        wl.dim,
+        wl.method,
+        n - 1,
+    );
+    let roster = node::seed_bootstrap(&listener, &wl, &seed_addr)?;
+    run_deployed(0, &wl, listener, roster, &tcfg)
+}
+
+/// Join a cluster: `actor join <seed host:port>`. Everything about the
+/// workload arrives in the seed's Welcome.
+fn cmd_join(args: &Args) -> Result<()> {
+    args.check_known(&["config", "listen", "monitor", "linger", "drain-secs"])?;
+    let seed_addr = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("actor join needs the seed's host:port"))?;
+    let tcfg = transport_flags(args)?;
+    let listener = std::net::TcpListener::bind(&tcfg.listen)?;
+    let my_addr = listener.local_addr()?.to_string();
+    let drain =
+        std::time::Duration::from_secs_f64(args.flag_or("drain-secs", 10.0)?);
+    println!("joining {seed_addr} (listening on {my_addr})...");
+    let (welcome, roster) = node::join_bootstrap(
+        seed_addr,
+        &my_addr,
+        std::time::Duration::from_secs(60),
+    )?;
+    let wl = Workload::from_welcome(&welcome, drain).ok_or_else(|| {
+        anyhow::anyhow!("seed sent unparseable method '{}'", welcome.method)
+    })?;
+    println!(
+        "node {}: joined a cluster of {} ({} steps, d={} under {})",
+        welcome.id, wl.n, wl.steps, wl.dim, wl.method,
+    );
+    run_deployed(welcome.id as usize, &wl, listener, roster, &tcfg)
+}
+
+/// The deployed run itself, common to seed and joiners: TCP transport
+/// over the bootstrap listener, the same synthetic linear workload as
+/// the sim engines (derived from the cluster seed, so every process
+/// regresses against the same ground truth), optional monitor, linger.
+fn run_deployed(
+    id: usize,
+    wl: &Workload,
+    listener: std::net::TcpListener,
+    roster: Vec<(usize, String)>,
+    tcfg: &TransportConfig,
+) -> Result<()> {
+    let monitor = match &tcfg.monitor {
+        Some(addr) => {
+            let m = Monitor::serve(addr)?;
+            println!("node {id}: monitor on http://{}/", m.addr());
+            Some(m)
+        }
+        None => None,
+    };
+    let mut transport = TcpTransport::with_listener(id, wl.n, listener)?;
+    transport.set_backoff(tcfg.reconnect_min, tcfg.reconnect_max);
+    transport.connect_peers(&roster);
+
+    let mut rng = Rng::new(wl.seed ^ 0xDA7A);
+    let rows = (wl.dim * 8).clamp(256, 4096);
+    let data = Arc::new(Dataset::synthetic(rows, wl.dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+    let grad = minibatch_grad_fn(Arc::clone(&data), 32);
+
+    let cfg = wl.node_config(id);
+    let init_err = l2_dist(&vec![0.0; wl.dim], &w_true);
+    let out = node::run_node(&cfg, &mut transport, grad, monitor.as_ref());
+    let r = &out.report;
+    println!(
+        "node {id}: done — applied per origin {:?} ({} rumors, {} dups, {} copies)",
+        out.applied_of, r.applied_rumors, r.dup_rumors, r.rumor_copies,
+    );
+    println!(
+        "node {id}: {} update msgs, {} control msgs; {} dropped delta(s) \
+         ({} missing, {} discarded); drain polls {}",
+        r.update_msgs,
+        r.control_msgs,
+        r.dropped_deltas,
+        r.missing_rumors,
+        r.discarded_msgs,
+        r.drain_polls,
+    );
+    println!(
+        "node {id}: error {init_err:.4} -> {:.4}  wall {:.3}s  wire {} B out / {} B in",
+        l2_dist(&r.model, &w_true),
+        r.wall_secs,
+        transport.bytes_out(),
+        transport.bytes_in(),
+    );
+    if tcfg.linger_secs > 0.0 {
+        println!(
+            "node {id}: lingering {:.1}s for monitor scrapes",
+            tcfg.linger_secs
+        );
+        std::thread::sleep(std::time::Duration::from_secs_f64(tcfg.linger_secs));
+    }
+    let dropped = r.dropped_deltas;
+    drop(monitor);
+    drop(transport); // joins writer/reader threads, flushing queued frames
+    if dropped > 0 {
+        bail!("node {id} dropped {dropped} delta(s) — dissemination incomplete");
+    }
     Ok(())
 }
 

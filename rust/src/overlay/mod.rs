@@ -311,13 +311,17 @@ impl Ring {
         let n = self.members.len();
         let mut out = Vec::with_capacity(beta);
         let mut msgs = 0u64;
-        if n <= 1 || beta == 0 {
+        // Degenerate rings cannot yield a peer. The second clause counts
+        // *distinct nodes*: a single member occupying many virtual
+        // positions has n > 1 yet nothing to sample — without it the loop
+        // spins through 128·(β+1) lookups before returning empty-handed.
+        if n <= 1 || self.ids.len() <= 1 || beta == 0 {
             return (out, msgs);
         }
         let from = self
             .ring_id_of(observer)
             .unwrap_or_else(|| node_ring_id(observer, self.namespace));
-        let target = beta.min(n - 1);
+        let target = beta.min(self.ids.len() - 1);
         let k = 32usize.min(n);
         let expect = (u64::MAX as f64) / n as f64;
         let mut attempts = 0;
@@ -333,33 +337,42 @@ impl Ring {
             // position. Owner-id recovery reads the reverse index
             // (O(log n)); this used to be an O(n) scan on every draw,
             // which made the sampling hot path grow linearly in n.
-            let first_id = self.ids[&first];
+            let Some(&first_id) = self.ids.get(&first) else { continue };
             let mut window = Vec::with_capacity(k);
             let mut cursor = first_id;
             for i in 0..k {
                 window.push((cursor, self.members[&cursor]));
-                let next = self
+                let Some(next) = self
                     .members
                     .range(cursor.wrapping_add(1)..)
                     .next()
                     .or_else(|| self.members.iter().next())
                     .map(|(&id, _)| id)
-                    .unwrap();
+                else {
+                    break; // membership emptied under us: nothing to walk
+                };
                 if i + 1 < k && next == first_id {
                     break; // wrapped the whole ring
                 }
                 cursor = next;
             }
             // Span covered by the window's arcs (predecessor of first -> last).
-            let pred = self
+            let Some(pred) = self
                 .members
                 .range(..first_id)
                 .next_back()
                 .or_else(|| self.members.iter().next_back())
                 .map(|(&id, _)| id)
-                .unwrap();
-            let span = window.last().unwrap().0.wrapping_sub(pred);
-            let p_accept = if window.len() >= n {
+            else {
+                continue;
+            };
+            let Some(&(last_id, _)) = window.last() else { continue };
+            let span = last_id.wrapping_sub(pred);
+            // span == 0 means the window closed on its own predecessor (a
+            // single-member or fully-wrapped arc): the density correction
+            // would divide by zero — the window already covers the whole
+            // populated ring, so the draw is exactly uniform; accept it.
+            let p_accept = if window.len() >= n || span == 0 {
                 1.0 // whole ring: exactly uniform already
             } else {
                 ((window.len() as f64 * expect) / (2.0 * span as f64)).min(1.0)
@@ -669,6 +682,53 @@ mod tests {
             assert_eq!(d.len(), 10);
             assert!(msgs > 0);
         }
+    }
+
+    #[test]
+    fn sample_on_degenerate_rings_returns_empty_without_drawing() {
+        // n = 0 and n = 1 (plain + vnodes): nobody to sample, and the rng
+        // must not be consumed — a single node occupying 8 virtual
+        // positions used to spin 128·(β+1) window draws (and hit the
+        // span-0 division) before returning empty-handed.
+        let mut rng = Rng::new(77);
+        let mut probe = rng.clone();
+        let empty = Ring::new(7);
+        assert_eq!(empty.sample_nodes(0, 4, &mut rng), (vec![], 0));
+        let mut one = Ring::new(7);
+        one.join(0);
+        assert_eq!(one.sample_nodes(0, 4, &mut rng), (vec![], 0));
+        let mut vone = Ring::new(7);
+        vone.join_vnodes(0, 8);
+        assert_eq!(vone.sample_nodes(0, 4, &mut rng), (vec![], 0));
+        assert_eq!(rng.next_u64(), probe.next_u64(), "no rng draws spent");
+    }
+
+    #[test]
+    fn sample_at_window_size_covers_whole_ring() {
+        // n == k (the successor window wraps the full ring, k = min(32, n)):
+        // the span correction degenerates to the whole-ring case; sampling
+        // must stay exact — every peer reachable, none repeated, no panic.
+        for n in [2usize, 3, 31, 32] {
+            let r = Ring::with_nodes(n, 9);
+            let mut rng = Rng::new(n as u64);
+            let (s, _) = r.sample_nodes(0, n - 1, &mut rng);
+            let mut d = s.clone();
+            d.sort_unstable();
+            assert_eq!(d, (1..n).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sample_on_vnode_ring_targets_distinct_nodes() {
+        // β is capped by distinct members, not ring positions: 2 nodes ×
+        // 8 vnodes = 16 positions but exactly one samplable peer.
+        let mut r = Ring::new(31);
+        r.join_vnodes(0, 8);
+        r.join_vnodes(1, 8);
+        let mut rng = Rng::new(5);
+        let (s, msgs) = r.sample_nodes(0, 6, &mut rng);
+        assert_eq!(s, vec![1]);
+        assert!(msgs > 0);
     }
 
     #[test]

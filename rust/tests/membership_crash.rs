@@ -400,4 +400,16 @@ fn without_membership_a_crash_stalls_survivors_to_drain_timeout() {
     );
     assert_eq!(r.confirmed_dead, 0);
     assert_eq!(r.repair_msgs, 0);
+    // No busy-wait while camped on the deadline: the drain's blocking
+    // recv is clamped to a ≥1ms poll floor, so each of the 5 stalled
+    // survivors pays at most ~timeout/1ms iterations (plus one per
+    // message ingested). An unclamped recv_timeout(≈0) hot-spins through
+    // millions of iterations in the same 700ms.
+    assert!(r.drain_polls > 0, "drain ran but recorded no poll iterations");
+    assert!(
+        r.drain_polls < 20_000,
+        "drain busy-waited: {} poll iterations across survivors for a \
+         700ms timeout",
+        r.drain_polls
+    );
 }

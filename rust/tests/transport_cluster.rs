@@ -1,0 +1,124 @@
+//! Cross-transport equivalence for the deployed node runtime.
+//!
+//! The same 3-node pSSP workload runs twice — once over in-process
+//! channels, once over real TCP sockets (each node's transport bound to
+//! 127.0.0.1:0) — and must produce the *same dissemination outcome*:
+//! identical per-origin applied-rumor counts on every node, zero
+//! dropped deltas, zero missing rumors. Models are not compared: f32
+//! accumulation order legitimately differs with arrival order; what the
+//! deployment plane owes the engine is that every announced rumor is
+//! applied exactly once, and that is transport-independent.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use actor_psp::barrier::Method;
+use actor_psp::engine::gossip::GossipConfig;
+use actor_psp::engine::node::{run_node, NodeOutcome, Workload};
+use actor_psp::engine::transport::{ChannelTransport, TcpTransport};
+use actor_psp::engine::GradFn;
+use actor_psp::util::rng::Rng;
+
+fn workload(steps: u64, flush_every: u64, method: Method) -> Workload {
+    Workload {
+        n: 3,
+        steps,
+        dim: 16,
+        lr: 0.1,
+        seed: 42,
+        method,
+        gossip: GossipConfig { fanout: 2, flush_every, ttl: 4 },
+        drain_timeout: Duration::from_secs(20),
+    }
+}
+
+/// Gradients derived only from the step seed, so a node's originations
+/// are identical across transports by construction.
+fn seed_only_grad() -> GradFn {
+    Arc::new(|w: &[f32], seed: u64| {
+        let mut rng = Rng::new(seed);
+        (0..w.len()).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    })
+}
+
+fn run_channel_cluster(wl: &Workload) -> Vec<NodeOutcome> {
+    let transports = ChannelTransport::cluster(wl.n);
+    let mut handles = Vec::new();
+    for (id, mut tr) in transports.into_iter().enumerate() {
+        let cfg = wl.node_config(id);
+        let grad = seed_only_grad();
+        handles.push(std::thread::spawn(move || run_node(&cfg, &mut tr, grad, None)));
+    }
+    handles.into_iter().map(|h| h.join().expect("channel node")).collect()
+}
+
+fn run_tcp_cluster(wl: &Workload) -> Vec<NodeOutcome> {
+    // Bind every listener first so the full roster is known before any
+    // node starts (the CLI learns it from the bootstrap handshake; the
+    // test shortcuts to the same roster directly).
+    let listeners: Vec<TcpListener> = (0..wl.n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+        .collect();
+    let roster: Vec<(usize, String)> = listeners
+        .iter()
+        .enumerate()
+        .map(|(id, l)| (id, l.local_addr().unwrap().to_string()))
+        .collect();
+    let mut handles = Vec::new();
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let cfg = wl.node_config(id);
+        let roster = roster.clone();
+        let grad = seed_only_grad();
+        handles.push(std::thread::spawn(move || {
+            let mut tr = TcpTransport::with_listener(id, cfg.n, listener).expect("transport");
+            tr.connect_peers(&roster);
+            let out = run_node(&cfg, &mut tr, grad, None);
+            assert!(tr.bytes_out() > 0, "node {id} never wrote to the wire");
+            out
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("tcp node")).collect()
+}
+
+fn assert_equivalent(wl: &Workload, channel: &[NodeOutcome], tcp: &[NodeOutcome]) {
+    let originations = wl.steps.div_ceil(wl.gossip.flush_every.max(1));
+    for id in 0..wl.n {
+        let (c, t) = (&channel[id], &tcp[id]);
+        assert_eq!(c.report.dropped_deltas, 0, "channel node {id} dropped");
+        assert_eq!(t.report.dropped_deltas, 0, "tcp node {id} dropped");
+        assert_eq!(c.report.missing_rumors, 0, "channel node {id} missing");
+        assert_eq!(t.report.missing_rumors, 0, "tcp node {id} missing");
+        assert_eq!(
+            c.applied_of, t.applied_of,
+            "node {id}: per-origin applied counts diverge across transports"
+        );
+        assert_eq!(
+            t.applied_of,
+            vec![originations as u32; wl.n],
+            "node {id}: not every origination was applied exactly once"
+        );
+        // Every node completed its own steps (the step table may lag
+        // for *other* nodes — Done, not Step, is the final word).
+        assert_eq!(t.report.steps[id], wl.steps, "tcp node {id} steps");
+        assert_eq!(c.report.steps[id], wl.steps, "channel node {id} steps");
+    }
+}
+
+#[test]
+fn tcp_cluster_matches_channel_cluster_under_pssp() {
+    let wl = workload(15, 1, Method::Pssp { sample: 2, staleness: 2 });
+    let channel = run_channel_cluster(&wl);
+    let tcp = run_tcp_cluster(&wl);
+    assert_equivalent(&wl, &channel, &tcp);
+}
+
+#[test]
+fn tcp_cluster_matches_channel_cluster_with_batched_flushes() {
+    // flush_every=4 over 10 steps -> originations at 4, 8, 10: the
+    // batching path (rumor per 4 compacted deltas) must also agree.
+    let wl = workload(10, 4, Method::Asp);
+    let channel = run_channel_cluster(&wl);
+    let tcp = run_tcp_cluster(&wl);
+    assert_equivalent(&wl, &channel, &tcp);
+}

@@ -187,12 +187,14 @@ class Ring:
         n = len(self.keys)
         out = []
         msgs = 0
-        if n <= 1 or beta == 0:
+        # PR 7: distinct-node guard + target (identical on this port's
+        # vnode-less rings, where len(ids) == len(keys) always).
+        if n <= 1 or len(self.ids) <= 1 or beta == 0:
             return out, msgs
         from_id = self.ids.get(observer)
         if from_id is None:
             from_id = node_ring_id(observer, self.namespace)
-        target = min(beta, n - 1)
+        target = min(beta, len(self.ids) - 1)
         k = min(32, n)
         expect = float(MASK) / float(n)
         attempts = 0
@@ -218,7 +220,7 @@ class Ring:
             j = bisect.bisect_left(self.keys, first_id)
             pred = self.keys[j - 1] if j > 0 else self.keys[-1]
             span = (window[-1][0] - pred) & MASK
-            if len(window) >= n:
+            if len(window) >= n or span == 0:
                 p_accept = 1.0
             else:
                 p_accept = min((len(window) * expect) / (2.0 * float(span)), 1.0)

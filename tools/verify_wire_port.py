@@ -1,0 +1,432 @@
+#!/usr/bin/env python3
+"""Bit-exact Python port of the deployment-plane wire codec.
+
+The dev container has no Rust toolchain (CHANGES.md, PR 3), so — as the
+earlier ports did for the gossip and membership planes — the
+length-prefixed binary codec in `rust/src/engine/transport.rs` is
+verified by re-implementing it from the format spec and replaying the
+same seeded frame generator:
+
+  * util::rng::Rng           (xoshiro256++, splitmix64 seeding, Lemire)
+  * engine::transport codec  (encode + decode for every frame tag)
+  * the seeded `gen_frame`   (draw order mirrored from the Rust test)
+
+Three cross-checks pin the format:
+
+  1. the known-answer hex vectors hardcoded in the Rust test;
+  2. encode→decode→re-encode round-trips for 500 generated frames;
+  3. an FNV-1a digest over the concatenated encodings of 40 seeded
+     property cases — the same constant is hardcoded in the Rust test
+     `cross_language_digest_is_pinned`, so both implementations must
+     produce identical bytes for identical seeds.
+
+f32 note: `Rng::next_f32` yields k * 2^-24 with k < 2^24, and the
+generator's only f32 arithmetic is `v * 2 - 1` = (k - 2^23) * 2^-23 —
+both exactly representable in f32 *and* f64, so emulating the f32 path
+with Python doubles and packing via struct '<f' is lossless.
+
+Run: python3 tools/verify_wire_port.py
+"""
+
+import struct
+
+MASK = (1 << 64) - 1
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = splitmix64(s)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_f32(self):
+        # Exact in f64; see module docstring.
+        return (self.next_u64() >> 40) * (2.0 ** -24)
+
+    def next_below(self, bound):
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        low = m & MASK
+        if low < bound:
+            t = ((-bound) & MASK) % bound
+            while low < t:
+                x = self.next_u64()
+                m = x * bound
+                low = m & MASK
+        return m >> 64
+
+
+# ---------------------------------------------------------------------------
+# Codec (mirror of rust/src/engine/transport.rs)
+# ---------------------------------------------------------------------------
+
+TAG_DELTA = 1
+TAG_GOSSIP = 2
+TAG_DONE = 3
+TAG_LEAVE = 4
+TAG_REPAIR = 5
+TAG_STEP = 6
+TAG_JOIN = 7
+TAG_WELCOME = 8
+TAG_PEERS = 9
+
+MAX_FRAME = 64 << 20
+
+# Frames are plain tuples: ("delta", [f...]), ("gossip", [rumor...]),
+# ("done", from, rumors), ("leave", from, rumors),
+# ("repair", origin, rumors, [rumor...]), ("step", from, step, beat),
+# ("join", addr), ("welcome", dict), ("peers", [(id, addr)...]).
+# A rumor is (origin, seq, ttl, [f...]).
+
+
+def p_u32(v):
+    return struct.pack("<I", v)
+
+
+def p_u64(v):
+    return struct.pack("<Q", v)
+
+
+def p_f32(v):
+    return struct.pack("<f", v)
+
+
+def p_str(s):
+    raw = s.encode("utf-8")
+    return p_u32(len(raw)) + raw
+
+
+def p_f32s(xs):
+    return p_u32(len(xs)) + b"".join(p_f32(x) for x in xs)
+
+
+def p_rumor(r):
+    origin, seq, ttl, delta = r
+    return p_u32(origin) + p_u32(seq) + p_u32(ttl) + p_f32s(delta)
+
+
+def p_rumors(rs):
+    return p_u32(len(rs)) + b"".join(p_rumor(r) for r in rs)
+
+
+def encode(frame):
+    kind = frame[0]
+    if kind == "delta":
+        body = bytes([TAG_DELTA]) + p_f32s(frame[1])
+    elif kind == "gossip":
+        body = bytes([TAG_GOSSIP]) + p_rumors(frame[1])
+    elif kind == "done":
+        body = bytes([TAG_DONE]) + p_u32(frame[1]) + p_u32(frame[2])
+    elif kind == "leave":
+        body = bytes([TAG_LEAVE]) + p_u32(frame[1]) + p_u32(frame[2])
+    elif kind == "repair":
+        body = bytes([TAG_REPAIR]) + p_u32(frame[1]) + p_u32(frame[2]) + p_rumors(frame[3])
+    elif kind == "step":
+        body = bytes([TAG_STEP]) + p_u32(frame[1]) + p_u64(frame[2]) + p_u64(frame[3])
+    elif kind == "join":
+        body = bytes([TAG_JOIN]) + p_str(frame[1])
+    elif kind == "welcome":
+        w = frame[1]
+        body = (
+            bytes([TAG_WELCOME])
+            + p_u32(w["id"])
+            + p_u32(w["n"])
+            + p_u64(w["seed"])
+            + p_u64(w["steps"])
+            + p_u32(w["dim"])
+            + p_f32(w["lr"])
+            + p_str(w["method"])
+            + p_u32(w["fanout"])
+            + p_u64(w["flush"])
+            + p_u32(w["ttl"])
+        )
+    elif kind == "peers":
+        body = bytes([TAG_PEERS]) + p_u32(len(frame[1]))
+        for pid, addr in frame[1]:
+            body += p_u32(pid) + p_str(addr)
+    else:
+        raise ValueError(kind)
+    assert len(body) <= MAX_FRAME
+    return p_u32(len(body)) + body
+
+
+class Rd:
+    def __init__(self, buf):
+        self.buf = buf
+        self.off = 0
+
+    def take(self, n):
+        if len(self.buf) - self.off < n:
+            raise ValueError("truncated")
+        s = self.buf[self.off : self.off + n]
+        self.off += n
+        return s
+
+    def u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f32(self):
+        return struct.unpack("<f", self.take(4))[0]
+
+    def f32s(self):
+        n = self.u32()
+        if len(self.buf) - self.off < 4 * n:
+            raise ValueError("truncated")
+        return [self.f32() for _ in range(n)]
+
+    def string(self):
+        n = self.u32()
+        return self.take(n).decode("utf-8")
+
+    def rumor(self):
+        return (self.u32(), self.u32(), self.u32(), self.f32s())
+
+    def rumors(self):
+        n = self.u32()
+        if (len(self.buf) - self.off) // 16 < n:
+            raise ValueError("truncated")
+        return [self.rumor() for _ in range(n)]
+
+
+def decode(data):
+    if len(data) < 4:
+        raise ValueError("truncated")
+    (length,) = struct.unpack("<I", data[:4])
+    if length > MAX_FRAME:
+        raise ValueError("oversize")
+    if len(data) - 4 != length:
+        raise ValueError("length mismatch")
+    body = data[4:]
+    tag, rd = body[0], Rd(body[1:])
+    if tag == TAG_DELTA:
+        frame = ("delta", rd.f32s())
+    elif tag == TAG_GOSSIP:
+        frame = ("gossip", rd.rumors())
+    elif tag == TAG_DONE:
+        frame = ("done", rd.u32(), rd.u32())
+    elif tag == TAG_LEAVE:
+        frame = ("leave", rd.u32(), rd.u32())
+    elif tag == TAG_REPAIR:
+        frame = ("repair", rd.u32(), rd.u32(), rd.rumors())
+    elif tag == TAG_STEP:
+        frame = ("step", rd.u32(), rd.u64(), rd.u64())
+    elif tag == TAG_JOIN:
+        frame = ("join", rd.string())
+    elif tag == TAG_WELCOME:
+        frame = (
+            "welcome",
+            {
+                "id": rd.u32(),
+                "n": rd.u32(),
+                "seed": rd.u64(),
+                "steps": rd.u64(),
+                "dim": rd.u32(),
+                "lr": rd.f32(),
+                "method": rd.string(),
+                "fanout": rd.u32(),
+                "flush": rd.u64(),
+                "ttl": rd.u32(),
+            },
+        )
+    elif tag == TAG_PEERS:
+        n = rd.u32()
+        frame = ("peers", [(rd.u32(), rd.string()) for _ in range(n)])
+    else:
+        raise ValueError(f"unknown tag {tag}")
+    if rd.off != len(rd.buf):
+        raise ValueError("trailing bytes")
+    return frame
+
+
+# ---------------------------------------------------------------------------
+# Seeded frame generator (mirror of transport.rs tests::gen_frame)
+# ---------------------------------------------------------------------------
+
+METHODS = ["asp", "bsp", "ssp:4", "pssp:3:2", "pquorum:6:4:80"]
+
+
+def gen_f32(rng):
+    return rng.next_f32() * 2.0 - 1.0
+
+
+def gen_delta(rng):
+    return [gen_f32(rng) for _ in range(rng.next_below(5))]
+
+
+def gen_rumor(rng):
+    origin = rng.next_below(64)
+    seq = rng.next_below(100)
+    ttl = rng.next_below(8)
+    return (origin, seq, ttl, gen_delta(rng))
+
+
+def gen_rumors(rng):
+    return [gen_rumor(rng) for _ in range(rng.next_below(4))]
+
+
+def gen_addr(rng):
+    return f"127.0.0.1:{rng.next_below(65536)}"
+
+
+def gen_frame(rng):
+    k = rng.next_below(9)
+    if k == 0:
+        return ("delta", gen_delta(rng))
+    if k == 1:
+        return ("gossip", gen_rumors(rng))
+    if k == 2:
+        return ("done", rng.next_below(64), rng.next_below(1000))
+    if k == 3:
+        return ("leave", rng.next_below(64), rng.next_below(1000))
+    if k == 4:
+        return ("repair", rng.next_below(64), rng.next_below(1000), gen_rumors(rng))
+    if k == 5:
+        return ("step", rng.next_below(64), rng.next_below(1 << 20), rng.next_below(1 << 20))
+    if k == 6:
+        return ("join", gen_addr(rng))
+    if k == 7:
+        return (
+            "welcome",
+            {
+                "id": rng.next_below(64),
+                "n": rng.next_below(64) + 1,
+                "seed": rng.next_u64(),
+                "steps": rng.next_below(1000),
+                "dim": rng.next_below(128) + 1,
+                "lr": gen_f32(rng),
+                "method": METHODS[rng.next_below(len(METHODS))],
+                "fanout": rng.next_below(8),
+                "flush": rng.next_below(8) + 1,
+                "ttl": rng.next_below(16),
+            },
+        )
+    return ("peers", [(rng.next_below(64), gen_addr(rng)) for _ in range(rng.next_below(4))])
+
+
+# ---------------------------------------------------------------------------
+# Checks
+# ---------------------------------------------------------------------------
+
+def fnv1a(data, h=0xCBF29CE484222325):
+    for b in data:
+        h = ((h ^ b) * 0x100000001B3) & MASK
+    return h
+
+
+def known_answers():
+    assert encode(("done", 3, 7)).hex() == "09000000030300000007000000"
+    assert (
+        encode(("gossip", [(1, 2, 3, [1.0, -2.5])])).hex()
+        == "1d0000000201000000010000000200000003000000020000000000803f000020c0"
+    )
+    assert (
+        encode(("step", 1, 5, 9)).hex()
+        == "15000000060100000005000000000000000900000000000000"
+    )
+    print("known-answer vectors   OK (3 vectors)")
+
+
+def round_trips():
+    rng = Rng(0x5EED_0000)
+    for i in range(500):
+        f = gen_frame(rng)
+        data = encode(f)
+        back = decode(data)
+        again = encode(back)
+        assert again == data, f"round-trip mismatch at frame {i}: {f}"
+    print("encode/decode round trip  OK (500 frames)")
+
+
+def malformed():
+    good = encode(("done", 3, 7))
+    for cut in range(len(good)):
+        try:
+            decode(good[:cut])
+            raise AssertionError(f"prefix {cut} decoded")
+        except ValueError:
+            pass
+    try:
+        decode(good + b"\xaa")
+        raise AssertionError("trailing bytes decoded")
+    except ValueError:
+        pass
+    try:
+        decode(p_u32(1) + b"\xff")
+        raise AssertionError("unknown tag decoded")
+    except ValueError:
+        pass
+    try:
+        decode(p_u32(MAX_FRAME + 1) + bytes([TAG_DONE]))
+        raise AssertionError("oversize decoded")
+    except ValueError:
+        pass
+    # A rumor count that cannot fit the remaining bytes must fail
+    # before any allocation on its behalf.
+    body = bytes([TAG_GOSSIP]) + p_u32(0xFFFFFFFF)
+    try:
+        decode(p_u32(len(body)) + body)
+        raise AssertionError("impossible rumor count decoded")
+    except ValueError:
+        pass
+    print("malformed rejection    OK")
+
+
+def cross_digest():
+    h = 0xCBF29CE484222325
+    for case in range(40):
+        seed = ((0x5EED_0000 + case) * 0x9E3779B97F4A7C15) & MASK
+        rng = Rng(seed)
+        h = fnv1a(encode(gen_frame(rng)), h)
+    return h
+
+
+# Must equal transport.rs tests::CROSS_DIGEST.
+EXPECTED_DIGEST = 0x149961E406FF0717
+
+
+def main():
+    known_answers()
+    round_trips()
+    malformed()
+    h = cross_digest()
+    print(f"cross-language digest  0x{h:016X}")
+    assert h == EXPECTED_DIGEST, (
+        f"digest drifted: got 0x{h:016X}, pinned 0x{EXPECTED_DIGEST:016X} "
+        "(update BOTH this constant and transport.rs tests::CROSS_DIGEST "
+        "if the wire format changed on purpose)"
+    )
+    print("all wire-port checks passed")
+
+
+if __name__ == "__main__":
+    main()
