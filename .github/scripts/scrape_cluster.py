@@ -6,7 +6,15 @@ passes), then asserts the deployment plane's durability contract:
 zero dropped deltas, zero missing rumors, and identical per-origin
 applied-rumor counts on every process. Stdlib only.
 
-Usage: scrape_cluster.py PORT [PORT ...]
+Chaos mode (the `cluster-chaos` CI job): pass only the *survivor*
+ports plus `--expect-dead ID` for a process that was SIGKILL'd mid-run.
+Every survivor must then list ID in its membership verdicts as
+confirmed dead, at least one survivor must have sent custody-repair
+traffic, and — with `--max-wall S` — the whole scrape must finish in S
+seconds, proving the crash cost ~suspect+confirm rather than the drain
+timeout.
+
+Usage: scrape_cluster.py [--expect-dead ID] [--max-wall S] PORT [PORT ...]
 """
 
 import json
@@ -23,12 +31,34 @@ def fetch(port):
         return json.loads(resp.read().decode("utf-8"))
 
 
+def parse_args(argv):
+    expect_dead = None
+    max_wall = None
+    ports = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--expect-dead":
+            expect_dead = int(next(it))
+        elif arg == "--max-wall":
+            max_wall = float(next(it))
+        else:
+            ports.append(int(arg))
+    return expect_dead, max_wall, ports
+
+
 def main():
-    ports = [int(p) for p in sys.argv[1:]]
+    try:
+        expect_dead, max_wall, ports = parse_args(sys.argv[1:])
+    except (StopIteration, ValueError):
+        sys.exit(
+            "usage: scrape_cluster.py [--expect-dead ID] [--max-wall S] "
+            "PORT [PORT ...]"
+        )
     if not ports:
         sys.exit("usage: scrape_cluster.py PORT [PORT ...]")
 
-    deadline = time.monotonic() + DEADLINE_SECS
+    t0 = time.monotonic()
+    deadline = t0 + (max_wall if max_wall is not None else DEADLINE_SECS)
     docs = {}
     while time.monotonic() < deadline and len(docs) < len(ports):
         for port in ports:
@@ -41,12 +71,16 @@ def main():
             if doc.get("status") == "done":
                 docs[port] = doc
         time.sleep(0.3)
+    wall = time.monotonic() - t0
 
     missing = [p for p in ports if p not in docs]
     if missing:
-        sys.exit(f"monitors never reported status=done: {missing}")
+        sys.exit(
+            f"monitors never reported status=done within {wall:.1f}s: {missing}"
+        )
 
     applied = None
+    repair_msgs = 0
     for port in ports:
         doc = docs[port]
         rep = doc["report"]
@@ -64,10 +98,44 @@ def main():
                 f"monitor :{port}: applied_of diverges across processes: "
                 f"{doc['applied_of']} != {applied}"
             )
+        if expect_dead is not None:
+            mem = doc.get("membership")
+            if mem is None:
+                sys.exit(
+                    f"monitor :{port}: --expect-dead given but the status "
+                    f"JSON has no membership section (membership plane off?)"
+                )
+            print(
+                f"monitor :{port} membership: alive={mem['alive']} "
+                f"suspect={mem['suspect']} confirmed_dead={mem['confirmed_dead']} "
+                f"repair_msgs={mem['repair_msgs']} "
+                f"repaired_rumors={mem['repaired_rumors']}"
+            )
+            if expect_dead not in mem["confirmed_dead"]:
+                sys.exit(
+                    f"monitor :{port}: node {expect_dead} was killed but is "
+                    f"not confirmed dead: {mem}"
+                )
+            if doc["id"] in mem["confirmed_dead"]:
+                sys.exit(f"monitor :{port}: survivor thinks itself dead: {mem}")
+            repair_msgs += mem["repair_msgs"]
 
+    if expect_dead is not None and repair_msgs == 0:
+        sys.exit(
+            f"node {expect_dead} confirmed dead but no survivor sent any "
+            f"custody-repair traffic — its rumors cannot have been re-announced"
+        )
+    if max_wall is not None and wall > max_wall:
+        sys.exit(f"cluster took {wall:.1f}s, over the --max-wall {max_wall}s bound")
+
+    verdict = (
+        f"crash of node {expect_dead} detected + repaired ({repair_msgs} repair msgs)"
+        if expect_dead is not None
+        else "zero dropped deltas"
+    )
     print(
-        f"cluster clean: {len(ports)} processes done, "
-        f"applied_of={applied}, zero dropped deltas"
+        f"cluster clean in {wall:.1f}s: {len(ports)} processes done, "
+        f"applied_of={applied}, {verdict}"
     )
 
 

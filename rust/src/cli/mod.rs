@@ -144,23 +144,43 @@ USAGE:
 
   actor node [--n N] [--listen HOST:PORT] [--monitor HOST:PORT] [--linger S]
              [--steps N] [--dim D] [--lr F] [--seed N] [--method M]
-             [--fanout F] [--flush B] [--ttl T] [--drain-secs S] [--config FILE]
+             [--fanout F] [--flush B] [--ttl T] [--drain-secs S] [--step-ms F]
+             [--suspect-ms F] [--confirm-ms F] [--no-membership]
+             [--fault-drop P] [--fault-dup P] [--fault-delay P]
+             [--fault-delay-ms F] [--fault-retry-ms F] [--fault-reorder P]
+             [--fault-partition A:B,..] [--fault-heal-ms F] [--fault-seed N]
+             [--config FILE]
       Seed a real multi-process cluster (deployment plane). Binds the
       listen address, accepts N-1 `actor join` processes, assigns ids in
       connect order, ships each the full workload, then runs as node 0:
       one worker per OS process, deltas and barrier state over TCP with
       a hand-rolled length-prefixed binary codec (reconnect + backoff;
       the protocol is idempotent, so resends are safe). --monitor serves
-      ring topology + live report counters as JSON over HTTP; --linger
-      keeps the process (and monitor) alive S seconds after the run so
-      CI can scrape final counters. [transport] config keys: listen,
-      monitor, linger_secs, reconnect_min_ms, reconnect_max_ms.
+      ring topology + live report counters (and membership verdicts) as
+      JSON over HTTP; --linger keeps the process (and monitor) alive S
+      seconds after the run so CI can scrape final counters; --step-ms
+      pads every step to F ms of synthetic compute (chaos-demo pacing).
+      Crash-fault membership is ON by default: heartbeats ride the Step
+      broadcast; a process silent past suspect+confirm is confirmed
+      dead, evicted from every survivor's ring view, and its ring
+      successor re-announces + re-injects its rumors from the custody
+      store — a kill -9 costs ~suspect+confirm, not drain_timeout.
+      Thresholds via --suspect-ms/--confirm-ms (shipped to joiners in
+      the Welcome); --no-membership restores the stall-to-drain
+      behavior. --fault-* wrap the wire in a seeded fault-injection
+      decorator (drop = first-attempt loss with retransmit after
+      --fault-retry-ms, plus duplicates/delays/reordering and
+      one-directional --fault-partition A:B pairs, healing after
+      --fault-heal-ms). Config sections: [transport], [membership],
+      [fault].
 
   actor join <seed HOST:PORT> [--listen HOST:PORT] [--monitor HOST:PORT]
-             [--linger S] [--drain-secs S] [--config FILE]
+             [--linger S] [--drain-secs S] [--fault-*...] [--config FILE]
       Join a seeded cluster: binds its own listener (default port 0 =
       OS-assigned), announces it to the seed, and receives its id plus
-      the whole workload — a cluster is configured in exactly one place.
+      the whole workload — a cluster is configured in exactly one place
+      (membership timing included, via the Welcome). --fault-* flags
+      inject faults on this process's wire only.
 
   actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
               [--workers N] [--method M] [--accum B] [--artifacts DIR]

@@ -39,7 +39,7 @@ use crate::engine::gossip::GossipConfig;
 use crate::engine::membership::MembershipConfig;
 use crate::engine::p2p::{Departure, Dissemination, P2pConfig};
 use crate::engine::paramserver::PsConfig;
-use crate::engine::transport::TransportConfig;
+use crate::engine::transport::{FaultConfig, TransportConfig};
 use crate::exp::ExpOpts;
 use crate::sim::{ChurnConfig, ClusterConfig, SgdConfig, StragglerConfig, TimeDist};
 
@@ -474,6 +474,100 @@ impl Config {
         }
         Ok(TransportConfig { listen, monitor, linger_secs, reconnect_min, reconnect_max })
     }
+
+    /// Build the wire fault-injection configuration from the `[fault]`
+    /// section. `None` when the section is absent (the common case: a
+    /// clean wire, no decorator). All keys optional:
+    ///
+    /// ```toml
+    /// [fault]
+    /// seed = 24314            # decorator RNG (deterministic chaos)
+    /// drop = 0.05             # P(first attempt lost -> retransmitted)
+    /// dup = 0.02              # P(frame delivered twice)
+    /// delay = 0.1             # P(frame held up to delay_ms)
+    /// delay_ms = 20.0
+    /// retry_ms = 30.0         # retransmit gap for dropped frames
+    /// reorder = 0.05          # P(frame briefly held behind successors)
+    /// partition = "0:1,2:0"   # one-directional src:dst blocks
+    /// heal_ms = 500.0         # partitions heal after this; omit = never
+    /// ```
+    pub fn fault_config(&self) -> Result<Option<FaultConfig>> {
+        if !self.has_section("fault") {
+            return Ok(None);
+        }
+        let d = FaultConfig::default();
+        let prob = |key: &str, default: f64| -> Result<f64> {
+            let v = self.f64_or("fault", key, default)?;
+            if !(0.0..=1.0).contains(&v) {
+                bail!("[fault] {key} must be a probability in [0, 1]");
+            }
+            Ok(v)
+        };
+        let ms = |key: &str, default: Duration| -> Result<Duration> {
+            let v = self.f64_or("fault", key, default.as_secs_f64() * 1000.0)?;
+            if v < 0.0 {
+                bail!("[fault] {key} must be non-negative");
+            }
+            Ok(Duration::from_secs_f64(v / 1000.0))
+        };
+        let partitions = match self.get("fault", "partition") {
+            None => Vec::new(),
+            Some(v) => parse_partitions(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("[fault] partition must be a string"))?,
+            )?,
+        };
+        let heal_after = match self.get("fault", "heal_ms") {
+            None => None,
+            Some(v) => {
+                let h = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("[fault] heal_ms must be a number"))?;
+                if h < 0.0 {
+                    bail!("[fault] heal_ms must be non-negative");
+                }
+                Some(Duration::from_secs_f64(h / 1000.0))
+            }
+        };
+        let seed = match self.get("fault", "seed") {
+            None => d.seed,
+            Some(v) => v
+                .as_f64()
+                .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                .ok_or_else(|| anyhow!("[fault] seed must be a non-negative integer"))?
+                as u64,
+        };
+        Ok(Some(FaultConfig {
+            seed,
+            drop_p: prob("drop", d.drop_p)?,
+            dup_p: prob("dup", d.dup_p)?,
+            delay_p: prob("delay", d.delay_p)?,
+            delay_max: ms("delay_ms", d.delay_max)?,
+            retry: ms("retry_ms", d.retry)?,
+            reorder_p: prob("reorder", d.reorder_p)?,
+            partitions,
+            heal_after,
+        }))
+    }
+}
+
+/// Parse a one-directional partition list `"src:dst,src:dst"` (the
+/// `[fault] partition` key and the `--fault-partition` flag). `0:1`
+/// blocks frames from node 0 *to* node 1 only — the reverse direction
+/// still flows, the classic asymmetric-partition failure mode.
+pub fn parse_partitions(s: &str) -> Result<Vec<(usize, usize)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|pair| {
+            let (a, b) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow!("partition must be src:dst, got '{pair}'"))?;
+            Ok((
+                a.trim().parse().map_err(|e| anyhow!("bad src in '{pair}': {e}"))?,
+                b.trim().parse().map_err(|e| anyhow!("bad dst in '{pair}': {e}"))?,
+            ))
+        })
+        .collect()
 }
 
 /// Parse a scripted departure `worker:step` (`[p2p] crash/leave` keys and
@@ -605,6 +699,45 @@ reconnect_max_ms = 100
         assert!(c.transport_config().is_err());
         let c = Config::parse("[transport]\nlinger_secs = -1\n").unwrap();
         assert!(c.transport_config().is_err());
+    }
+
+    #[test]
+    fn fault_section_builds_fault_config() {
+        // Absent section = clean wire, no decorator.
+        assert!(Config::parse("").unwrap().fault_config().unwrap().is_none());
+        let c = Config::parse(
+            r#"
+[fault]
+seed = 7
+drop = 0.05
+dup = 0.02
+delay = 0.1
+delay_ms = 15
+retry_ms = 40
+reorder = 0.03
+partition = "0:1, 2:0"
+heal_ms = 500
+"#,
+        )
+        .unwrap();
+        let f = c.fault_config().unwrap().expect("section present");
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.drop_p, 0.05);
+        assert_eq!(f.dup_p, 0.02);
+        assert_eq!(f.delay_p, 0.1);
+        assert_eq!(f.delay_max, Duration::from_millis(15));
+        assert_eq!(f.retry, Duration::from_millis(40));
+        assert_eq!(f.reorder_p, 0.03);
+        assert_eq!(f.partitions, vec![(0, 1), (2, 0)]);
+        assert_eq!(f.heal_after, Some(Duration::from_millis(500)));
+        // An empty [fault] section still enables the decorator (noop
+        // probabilities), and bad probabilities are rejected loudly.
+        let f = Config::parse("[fault]\n").unwrap().fault_config().unwrap().unwrap();
+        assert!(f.is_noop());
+        let c = Config::parse("[fault]\ndrop = 1.5\n").unwrap();
+        assert!(c.fault_config().is_err());
+        let c = Config::parse("[fault]\npartition = \"nonsense\"\n").unwrap();
+        assert!(c.fault_config().is_err());
     }
 
     #[test]

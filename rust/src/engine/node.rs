@@ -23,12 +23,25 @@
 //!   topology and live [`EngineReport`] counters as JSON, which the CI
 //!   cluster-smoke job scrapes to assert zero dropped deltas.
 //!
-//! Known limitation (documented, deliberate): the deployed runtime has
-//! no custody-repair/membership plane yet — a crashed *process* is not
-//! repaired the way the sim's membership plane repairs a crashed
-//! worker thread (ROADMAP "deployment plane" item tracks the gap). The
-//! protocol already carries `Repair` frames, so a node *receiving* one
-//! handles it correctly.
+//! * the **crash-fault membership plane over the wire**: the same
+//!   SWIM-style [`FailureDetector`] the in-process engine runs, fed by
+//!   the `Step` beat table (every announcement is a heartbeat). When a
+//!   peer's beats go silent past `suspect_after + confirm_after`, the
+//!   survivor confirms it dead, broadcasts a `Confirm` frame so the
+//!   whole cluster converges on one verdict, evicts the corpse from its
+//!   ring view (sampling and the drain stop waiting on it), tears down
+//!   the peer's writer via [`Transport::evict_peer`], and — if it is
+//!   the dead node's ring successor — acts as *custodian*: re-announces
+//!   the origin's rumor count and re-injects its rumors from the
+//!   custody store, standing in for the `Done` the dead process never
+//!   sent. A `kill -9` therefore costs the survivors roughly
+//!   suspect+confirm of wall clock, not `drain_timeout`.
+//!
+//! Multi-crash caveat (same as the in-process plane): custody assumes
+//! the dead origin's ring successor holds every rumor the origin
+//! flushed, which per-peer FIFO guarantees for a single crash; if the
+//! custodian dies in the same window, counts can under-report and the
+//! drain falls back to the timeout safety net — loud, never silent.
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -39,6 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::barrier::Method;
 use crate::engine::gossip::{GossipConfig, GossipNode};
+use crate::engine::membership::{evict_from_view, FailureDetector, MembershipConfig, PeerState};
 use crate::engine::p2p::{PeerMsg, MIN_DRAIN_POLL};
 use crate::engine::transport::{read_frame, write_frame, Frame, Transport, Welcome};
 use crate::engine::{EngineReport, GradFn};
@@ -76,6 +90,22 @@ pub struct NodeConfig {
     /// Shutdown-drain safety net, after which unreceived rumors are
     /// counted as dropped and reported loudly.
     pub drain_timeout: Duration,
+    /// Crash-fault detection thresholds (µs of beat silence); `None`
+    /// disables the membership plane — a dead peer then stalls the
+    /// drain to `drain_timeout` exactly as before. The thresholds must
+    /// comfortably exceed one gradient step: a node computing does not
+    /// beat mid-step.
+    pub membership: Option<MembershipConfig>,
+    /// Synthetic per-step compute padding. Deployment demos and the
+    /// chaos CI job use it to pin a run's duration to `steps × pad`
+    /// regardless of hardware, so a mid-run SIGKILL is actually
+    /// mid-run. Zero (the default) means full speed.
+    pub step_pad: Duration,
+    /// Crash-stop after completing this many steps: return without
+    /// `Done` or drain, exactly the silence survivors must detect and
+    /// repair. Test/experiment hook; a real deployment crashes by
+    /// dying.
+    pub crash_at: Option<u64>,
 }
 
 /// Cluster-wide workload as the seed node knows it — everything a
@@ -90,10 +120,16 @@ pub struct Workload {
     pub method: Method,
     pub gossip: GossipConfig,
     pub drain_timeout: Duration,
+    /// Crash-fault detection thresholds; rides the `Welcome` frame so
+    /// seed and joiners agree on detection timing from one place.
+    pub membership: Option<MembershipConfig>,
 }
 
 impl Workload {
-    /// The `Welcome` frame assigning `id` to a joiner.
+    /// The `Welcome` frame assigning `id` to a joiner. Membership
+    /// timing travels as µs pairs; `0/0` encodes "membership off"
+    /// (zero silence-tolerance would confirm everyone dead instantly,
+    /// so the zero value is free to mean *disabled*).
     pub fn welcome(&self, id: u32) -> Welcome {
         Welcome {
             id,
@@ -106,6 +142,8 @@ impl Workload {
             fanout: self.gossip.fanout as u32,
             flush: self.gossip.flush_every,
             ttl: self.gossip.ttl,
+            suspect_us: self.membership.as_ref().map_or(0, |m| m.suspect_after),
+            confirm_us: self.membership.as_ref().map_or(0, |m| m.confirm_after),
         }
     }
 
@@ -121,6 +159,9 @@ impl Workload {
             method: self.method,
             gossip: self.gossip.clone(),
             drain_timeout: self.drain_timeout,
+            membership: self.membership.clone(),
+            step_pad: Duration::ZERO,
+            crash_at: None,
         }
     }
 
@@ -141,6 +182,14 @@ impl Workload {
                 ttl: w.ttl,
             },
             drain_timeout,
+            membership: if w.suspect_us == 0 || w.confirm_us == 0 {
+                None
+            } else {
+                Some(MembershipConfig {
+                    suspect_after: w.suspect_us,
+                    confirm_after: w.confirm_us,
+                })
+            },
         })
     }
 }
@@ -317,20 +366,35 @@ impl Drop for Monitor {
     }
 }
 
+/// Live membership verdicts for the monitor document, so the chaos CI
+/// job can assert *detection*, not just completion.
+#[derive(Debug, Clone, Default)]
+pub struct MembershipStatus {
+    pub alive: Vec<usize>,
+    pub suspect: Vec<usize>,
+    pub confirmed_dead: Vec<usize>,
+    pub repair_msgs: u64,
+    pub repaired_rumors: u64,
+    pub suspect_notices: u64,
+}
+
 /// The monitor document for one node: identity, ring order, step table
-/// and the report counters the smoke gate asserts on.
+/// and the report counters the smoke gate asserts on. The `membership`
+/// key appears only when the detector is running.
 pub fn status_json(
     status: &str,
     cfg: &NodeConfig,
     ring: &Ring,
     report: &EngineReport,
     applied_of: &[u32],
+    membership: Option<&MembershipStatus>,
 ) -> Json {
     let mut order: Vec<(u64, usize)> = (0..cfg.n)
         .filter_map(|i| ring.ring_id_of(i).map(|rid| (rid, i)))
         .collect();
     order.sort_unstable();
-    obj(vec![
+    let ids = |v: &[usize]| Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect());
+    let mut doc = vec![
         ("status", Json::Str(status.to_string())),
         ("id", Json::Num(cfg.id as f64)),
         ("n", Json::Num(cfg.n as f64)),
@@ -355,7 +419,21 @@ pub fn status_json(
                 ("wall_secs", Json::Num(report.wall_secs)),
             ]),
         ),
-    ])
+    ];
+    if let Some(ms) = membership {
+        doc.push((
+            "membership",
+            obj(vec![
+                ("alive", ids(&ms.alive)),
+                ("suspect", ids(&ms.suspect)),
+                ("confirmed_dead", ids(&ms.confirmed_dead)),
+                ("repair_msgs", Json::Num(ms.repair_msgs as f64)),
+                ("repaired_rumors", Json::Num(ms.repaired_rumors as f64)),
+                ("suspect_notices", Json::Num(ms.suspect_notices as f64)),
+            ]),
+        ));
+    }
+    obj(doc)
 }
 
 // ---------------------------------------------------------------------------
@@ -392,6 +470,24 @@ struct NodeState {
     update_msgs: u64,
     control_msgs: u64,
     discarded_msgs: u64,
+    /// SWIM-style suspect/confirm timers over the beat table; `None`
+    /// when the membership plane is off.
+    detector: Option<FailureDetector>,
+    /// Dead origins whose custodian count has not arrived yet — each
+    /// holds the drain open exactly like an unannounced `Done`.
+    repair_pending: Vec<bool>,
+    /// Latch so each suspect transition broadcasts once per episode,
+    /// not once per detector pass.
+    announced_suspect: Vec<bool>,
+    confirmed_dead: u64,
+    repair_msgs: u64,
+    repaired_rumors: u64,
+    suspect_notices: u64,
+    /// Next observation pass, in µs since `t0` — passes are throttled
+    /// to `detect_every` so the timer sweep is not a per-frame cost.
+    next_detect: u64,
+    detect_every: u64,
+    t0: Instant,
 }
 
 fn axpy(w: &mut [f32], delta: &[f32]) {
@@ -402,7 +498,12 @@ fn axpy(w: &mut [f32], delta: &[f32]) {
 }
 
 impl NodeState {
-    fn handle(&mut self, frame: Frame) {
+    /// Detector clock: µs since this node started.
+    fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    fn handle<T: Transport>(&mut self, frame: Frame, transport: &mut T) {
         match frame {
             Frame::Peer(PeerMsg::Gossip { rumors }) => {
                 let w = &mut self.w;
@@ -410,18 +511,52 @@ impl NodeState {
             }
             Frame::Peer(PeerMsg::Delta { delta }) => axpy(&mut self.w, &delta),
             Frame::Peer(PeerMsg::Done { from, rumors }) => {
-                self.expected[from as usize] = Some(rumors);
+                let from = from as usize;
+                self.expected[from] = Some(rumors);
+                self.repair_pending[from] = false;
+                let now = self.now_us();
+                let was_dead =
+                    self.detector.as_mut().is_some_and(|det| det.alive(from, now));
+                if was_dead {
+                    // Our confirmation was a false positive — the peer
+                    // finished normally. Restore its ring position and
+                    // writer, and re-seed its chain edge: it missed
+                    // every flush routed around it.
+                    self.announced_suspect[from] = false;
+                    self.ring.join(from);
+                    transport.revive_peer(from);
+                    self.reseed_successor(from, transport);
+                }
             }
             Frame::Peer(PeerMsg::Leave { from, rumors }) => {
-                self.expected[from as usize] = Some(rumors);
-                self.ring.evict(from as usize);
+                let from = from as usize;
+                self.expected[from] = Some(rumors);
+                self.repair_pending[from] = false;
+                // The leaver handed its store to its successor itself;
+                // we only repair our own chain edge if we owned it.
+                self.evict_dead(from, false, transport);
             }
             Frame::Peer(PeerMsg::Repair { origin, rumors, store }) => {
                 // A custodian re-announcing for a dead origin: stands in
-                // for the Done the origin never sent.
-                self.expected[origin as usize].get_or_insert(rumors);
+                // for the Done the origin never sent. Max-merge — under
+                // multi-crash a second custodian may know strictly more.
+                let o = origin as usize;
+                let e = &mut self.expected[o];
+                *e = Some(e.map_or(rumors, |c| c.max(rumors)));
+                self.repair_pending[o] = false;
+                // A custody announcement doubles as a death notice:
+                // evict without waiting for our own timers (no second
+                // custody take — the sender already claimed it).
+                if self.detector.as_mut().is_some_and(|det| det.declare_dead(o)) {
+                    self.confirmed_dead += 1;
+                    self.evict_dead(o, false, transport);
+                }
                 let w = &mut self.w;
-                self.gossip.receive(store, |r| axpy(w, &r.delta));
+                let repaired = &mut self.repaired_rumors;
+                self.gossip.receive(store, |r| {
+                    *repaired += 1;
+                    axpy(w, &r.delta);
+                });
             }
             Frame::Step { from, step, beat } => {
                 let i = from as usize;
@@ -432,11 +567,210 @@ impl NodeState {
                     self.discarded_msgs += 1;
                 }
             }
+            Frame::Suspect { from, peer } => {
+                // Informational only: another observer's suspicion. Our
+                // own timers decide; the notice is surfaced for
+                // operators (and the chaos test) via the monitor.
+                let _ = (from, peer);
+                self.suspect_notices += 1;
+            }
+            Frame::Confirm { from, peer } => {
+                // Adopt a peer's confirm verdict so the whole cluster
+                // converges at roughly one detector's cost instead of
+                // n staggered detections.
+                let p = peer as usize;
+                if p == self.me {
+                    log_warn!(
+                        "node {}: peer {from} confirmed us dead; ignoring — we are visibly alive",
+                        self.me
+                    );
+                    self.discarded_msgs += 1;
+                } else if p < self.n && self.expected[p].is_none() {
+                    let changed =
+                        self.detector.as_mut().is_some_and(|det| det.declare_dead(p));
+                    if changed {
+                        self.confirmed_dead += 1;
+                        self.repair_pending[p] = true;
+                        self.evict_dead(p, true, transport);
+                    }
+                }
+            }
             other @ (Frame::Join { .. } | Frame::Welcome(_) | Frame::Peers { .. }) => {
                 log_warn!("node {}: bootstrap frame after bootstrap: {other:?}", self.me);
                 self.discarded_msgs += 1;
             }
         }
+    }
+
+    /// Re-send the custody store to `peer` if it is (again) our chain
+    /// successor — it missed every chain flush we routed around it.
+    fn reseed_successor<T: Transport>(&mut self, peer: usize, transport: &T) {
+        if self.ring.successor_node(self.me) == Some(peer) {
+            let rumors = self.gossip.handoff_rumors();
+            if !rumors.is_empty()
+                && transport.send(peer, Frame::Peer(PeerMsg::Gossip { rumors }))
+            {
+                self.repair_msgs += 1;
+                self.update_msgs += 1;
+            }
+        }
+    }
+
+    /// Evict a departed or confirmed-dead node from the local view,
+    /// take over whatever repair roles the eviction assigns, and tear
+    /// down the transport writer so nobody reconnect-spins at a corpse.
+    fn evict_dead<T: Transport>(&mut self, dead: usize, may_take_custody: bool, transport: &mut T) {
+        match evict_from_view(&mut self.ring, self.me, dead) {
+            None => {
+                // Already out of the view (e.g. a re-confirm raced a
+                // Leave): nothing to repair, nothing to hold the drain.
+                self.repair_pending[dead] = false;
+            }
+            Some(out) => {
+                if may_take_custody && out.custodian {
+                    // Custody repair: the dead origin's flushes hit us
+                    // first (per-peer FIFO), so our applied count is
+                    // exactly what it ever announced. Stand in for its
+                    // Done and re-inject the rumors for everyone who
+                    // missed them.
+                    let origin = dead as u32;
+                    let count = self.gossip.applied_count(origin);
+                    let e = &mut self.expected[dead];
+                    *e = Some(e.map_or(count, |c| c.max(count)));
+                    self.repair_pending[dead] = false;
+                    let store = self.gossip.rumors_of(origin);
+                    for j in 0..self.n {
+                        if j != self.me
+                            && j != dead
+                            && transport.send(
+                                j,
+                                Frame::Peer(PeerMsg::Repair {
+                                    origin,
+                                    rumors: count,
+                                    store: store.clone(),
+                                }),
+                            )
+                        {
+                            self.repair_msgs += 1;
+                        }
+                    }
+                }
+                if let Some(succ) = out.lost_successor {
+                    // Successor repair: everything we ever applied goes
+                    // to the node now clockwise of the gap; it dedups
+                    // and relays the fresh remainder, restoring the
+                    // chain's relay invariant.
+                    let rumors = self.gossip.handoff_rumors();
+                    if !rumors.is_empty()
+                        && transport.send(succ, Frame::Peer(PeerMsg::Gossip { rumors }))
+                    {
+                        self.repair_msgs += 1;
+                        self.update_msgs += 1;
+                    }
+                }
+            }
+        }
+        transport.evict_peer(dead);
+    }
+
+    /// One throttled detector pass over the beat table. `force` skips
+    /// the throttle — the drain's death-excused exit uses it to make
+    /// sure no heartbeat arrived since the last scheduled pass.
+    fn membership_tick<T: Transport>(&mut self, transport: &mut T, force: bool) {
+        if self.detector.is_none() {
+            return;
+        }
+        let now = self.now_us();
+        if !force && now < self.next_detect {
+            return;
+        }
+        self.next_detect = now + self.detect_every;
+        let obs = {
+            let beats = &self.beats;
+            let expected = &self.expected;
+            let det = self.detector.as_mut().expect("membership on");
+            det.observe(now, |j| beats[j], |j| expected[j].is_some())
+        };
+        // Broadcast each fresh suspect transition once: informational,
+        // but it lets operators and tests watch detection in flight.
+        for j in 0..self.n {
+            if j == self.me {
+                continue;
+            }
+            match self.detector.as_ref().map(|d| d.state(j)) {
+                Some(PeerState::Suspect) if !self.announced_suspect[j] => {
+                    self.announced_suspect[j] = true;
+                    for peer in 0..self.n {
+                        if peer != self.me
+                            && peer != j
+                            && transport
+                                .send(peer, Frame::Suspect { from: self.me as u32, peer: j as u32 })
+                        {
+                            self.control_msgs += 1;
+                        }
+                    }
+                }
+                Some(PeerState::Alive) => self.announced_suspect[j] = false,
+                _ => {}
+            }
+        }
+        for d in obs.dead {
+            self.confirmed_dead += 1;
+            // Until a custodian announces the dead origin's count we do
+            // not know what we are owed — hold the drain open.
+            self.repair_pending[d] = self.expected[d].is_none();
+            for peer in 0..self.n {
+                if peer != self.me
+                    && peer != d
+                    && transport.send(peer, Frame::Confirm { from: self.me as u32, peer: d as u32 })
+                {
+                    self.control_msgs += 1;
+                }
+            }
+            self.evict_dead(d, true, transport);
+        }
+        for r in obs.resurrected {
+            // False positive: restore the ring position and the writer,
+            // and if the revived peer is our successor again it missed
+            // every chain flush we routed around it — re-send the store.
+            self.announced_suspect[r] = false;
+            self.ring.join(r);
+            transport.revive_peer(r);
+            self.reseed_successor(r, transport);
+        }
+    }
+
+    /// Exact drain-exit condition: every origin accounted for — its own
+    /// `Done`/`Leave` count met, or a confirmed death whose custodian
+    /// count has arrived and been met — with no repair still pending.
+    fn drained(&self) -> bool {
+        (0..self.n).all(|o| match self.expected[o] {
+            Some(c) => self.gossip.applied_count(o as u32) >= c,
+            None => self.detector.as_ref().is_some_and(|d| d.is_dead(o)),
+        }) && self.repair_pending.iter().all(|&p| !p)
+    }
+
+    /// Live membership snapshot for the monitor; `None` when off.
+    fn membership_status(&self) -> Option<MembershipStatus> {
+        let det = self.detector.as_ref()?;
+        let mut ms = MembershipStatus {
+            repair_msgs: self.repair_msgs,
+            repaired_rumors: self.repaired_rumors,
+            suspect_notices: self.suspect_notices,
+            ..MembershipStatus::default()
+        };
+        for j in 0..self.n {
+            if j == self.me {
+                ms.alive.push(j);
+                continue;
+            }
+            match det.state(j) {
+                PeerState::Alive => ms.alive.push(j),
+                PeerState::Suspect => ms.suspect.push(j),
+                PeerState::Dead => ms.confirmed_dead.push(j),
+            }
+        }
+        Some(ms)
     }
 
     /// Flush queued gossip batches onto the wire.
@@ -449,9 +783,14 @@ impl NodeState {
     }
 
     /// A peer's step count as the barrier sees it: a peer that already
-    /// announced its final origination count can never block anyone.
+    /// announced its final origination count — or one the detector
+    /// confirmed dead — can never block anyone. (`bsp`/`ssp` read the
+    /// full table, so without the dead-exemption one corpse would pin
+    /// every survivor at its last step forever.)
     fn view(&self, j: usize) -> u64 {
-        if self.expected[j].is_some() {
+        if self.expected[j].is_some()
+            || self.detector.as_ref().is_some_and(|d| d.is_dead(j))
+        {
             u64::MAX
         } else {
             self.steps_done[j]
@@ -519,10 +858,18 @@ pub fn run_node<T: Transport>(
     // seed spread by the golden ratio, xor'd with the node id.
     let wseed = cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ me as u64;
     let mut rng = Rng::new(wseed);
+    // With membership on, the store is the crash-tolerance memory
+    // trade: every rumor is pinned for the run so a custodian can
+    // re-inject a dead origin's history (same trade as the p2p engine).
+    let gossip = if cfg.membership.is_some() {
+        GossipNode::with_handoff_store(me, n)
+    } else {
+        GossipNode::new(me, n)
+    };
     let mut st = NodeState {
         me,
         n,
-        gossip: GossipNode::new(me, n),
+        gossip,
         ring: Ring::with_nodes(n, cfg.seed),
         w: vec![0.0; cfg.dim],
         steps_done: vec![0; n],
@@ -531,6 +878,25 @@ pub fn run_node<T: Transport>(
         update_msgs: 0,
         control_msgs: 0,
         discarded_msgs: 0,
+        detector: cfg
+            .membership
+            .as_ref()
+            .map(|mc| FailureDetector::new(me, n, 0, mc.clone())),
+        repair_pending: vec![false; n],
+        announced_suspect: vec![false; n],
+        confirmed_dead: 0,
+        repair_msgs: 0,
+        repaired_rumors: 0,
+        suspect_notices: 0,
+        next_detect: 0,
+        // Observation passes at a quarter of the suspect threshold:
+        // often enough that detection latency is timer-dominated, rare
+        // enough that the sweep is not a per-frame cost.
+        detect_every: cfg
+            .membership
+            .as_ref()
+            .map_or(u64::MAX, |mc| (mc.suspect_after / 4).clamp(1, 50_000)),
+        t0,
     };
     let gcfg = cfg.gossip.clone();
     let flush_every = gcfg.flush_every.max(1);
@@ -552,18 +918,39 @@ pub fn run_node<T: Transport>(
     let mut last_announce = Instant::now();
 
     while step < cfg.steps {
-        while let Some(f) = transport.try_recv() {
-            st.handle(f);
+        if cfg.crash_at == Some(step) {
+            // Crash-stop: no flush, no Done, no drain — returning here
+            // is the silence survivors must detect and repair around.
+            log_warn!("node {me}: crash-stop at step {step} (scripted)");
+            let report = interim_report(&st, t0, 0);
+            let applied_of: Vec<u32> =
+                (0..n).map(|o| st.gossip.applied_count(o as u32)).collect();
+            if let Some(m) = monitor {
+                m.set(&status_json(
+                    "crashed", cfg, &st.ring, &report, &applied_of,
+                    st.membership_status().as_ref(),
+                ));
+            }
+            return NodeOutcome { report, applied_of };
         }
+        while let Some(f) = transport.try_recv() {
+            st.handle(f, transport);
+        }
+        // Ingest before detecting: a confirmation must never be based
+        // on older knowledge than the queue holds — a custodian that
+        // confirmed with the dead origin's final flush still queued
+        // would broadcast an undercounted Repair.
+        st.membership_tick(transport, false);
         let (pass, sample_msgs) = st.barrier_pass(step, &cfg.method, &mut rng);
         st.control_msgs += sample_msgs;
         if !pass {
             if let Some(f) = transport.recv_timeout(Duration::from_millis(2)) {
-                st.handle(f);
+                st.handle(f, transport);
             }
             // Relay anything a received batch queued even while parked,
             // or the cluster can deadlock waiting on our shortcuts.
             st.flush_gossip(&gcfg, &mut rng, transport);
+            st.membership_tick(transport, false);
             if last_announce.elapsed() >= STEP_REANNOUNCE {
                 beat += 1;
                 broadcast_step(&mut st, transport, step, beat);
@@ -572,6 +959,10 @@ pub fn run_node<T: Transport>(
             continue;
         }
 
+        if !cfg.step_pad.is_zero() {
+            // Synthetic compute: pins run duration for the chaos demos.
+            std::thread::sleep(cfg.step_pad);
+        }
         let g = grad_fn(&st.w, wseed.wrapping_add(step));
         for d in 0..cfg.dim {
             let delta = -cfg.lr * g[d];
@@ -595,7 +986,10 @@ pub fn run_node<T: Transport>(
                 let snap = interim_report(&st, t0, 0);
                 let applied: Vec<u32> =
                     (0..n).map(|o| st.gossip.applied_count(o as u32)).collect();
-                m.set(&status_json("running", cfg, &st.ring, &snap, &applied));
+                m.set(&status_json(
+                    "running", cfg, &st.ring, &snap, &applied,
+                    st.membership_status().as_ref(),
+                ));
             }
         }
     }
@@ -616,12 +1010,20 @@ pub fn run_node<T: Transport>(
     let mut drain_polls: u64 = 0;
     let mut timed_out = false;
     loop {
-        let drained = (0..n).all(|o| match st.expected[o] {
-            Some(c) => st.gossip.applied_count(o as u32) >= c,
-            None => false,
-        });
-        if drained {
-            break;
+        if st.drained() {
+            let excused = (0..n).any(|o| st.expected[o].is_none());
+            if excused && st.detector.is_some() {
+                // About to exit on a death excuse: run one ungated
+                // observation first — a heartbeat since the last
+                // throttled pass disproves the confirmation, and the
+                // drain must keep waiting for the real Done.
+                st.membership_tick(transport, true);
+                if st.drained() {
+                    break;
+                }
+            } else {
+                break;
+            }
         }
         let now = Instant::now();
         if now >= deadline {
@@ -629,16 +1031,22 @@ pub fn run_node<T: Transport>(
             break;
         }
         // Same clamp as the p2p engine: near the deadline recv_timeout
-        // would degenerate to a hot spin without a floor.
-        let wait = (deadline - now).max(MIN_DRAIN_POLL);
+        // would degenerate to a hot spin without a floor. With the
+        // detector on, also cap the wait — the drain is where crash
+        // confirmation usually lands, so it must wake for the timers.
+        let mut wait = (deadline - now).max(MIN_DRAIN_POLL);
+        if st.detector.is_some() {
+            wait = wait.min(Duration::from_millis(20));
+        }
         drain_polls += 1;
         if let Some(f) = transport.recv_timeout(wait) {
-            st.handle(f);
+            st.handle(f, transport);
             while let Some(f) = transport.try_recv() {
-                st.handle(f);
+                st.handle(f, transport);
             }
             st.flush_gossip(&gcfg, &mut rng, transport);
         }
+        st.membership_tick(transport, false);
     }
 
     let mut missing_rumors: u64 = 0;
@@ -649,6 +1057,9 @@ pub fn run_node<T: Transport>(
                 Some(c) => {
                     missing_rumors += u64::from(c.saturating_sub(st.gossip.applied_count(o as u32)))
                 }
+                None if st.detector.as_ref().is_some_and(|d| d.is_dead(o)) => log_warn!(
+                    "node {me}: drain timed out awaiting custody repair for dead origin {o}"
+                ),
                 None => log_warn!(
                     "node {me}: drain timed out with no Done from {o}; its rumor count is unknown"
                 ),
@@ -669,7 +1080,10 @@ pub fn run_node<T: Transport>(
     report.dropped_deltas = missing_rumors.max(discarded);
     let applied_of: Vec<u32> = (0..n).map(|o| st.gossip.applied_count(o as u32)).collect();
     if let Some(m) = monitor {
-        m.set(&status_json("done", cfg, &st.ring, &report, &applied_of));
+        m.set(&status_json(
+            "done", cfg, &st.ring, &report, &applied_of,
+            st.membership_status().as_ref(),
+        ));
     }
     NodeOutcome { report, applied_of }
 }
@@ -687,6 +1101,12 @@ fn interim_report(st: &NodeState, t0: Instant, drain_polls: u64) -> EngineReport
         dup_rumors: st.gossip.dup_rumors,
         rumor_copies: st.gossip.rumor_copies,
         drain_polls,
+        confirmed_dead: st.confirmed_dead,
+        repair_msgs: st.repair_msgs,
+        repaired_rumors: st.repaired_rumors,
+        // Everyone no longer in our overlay view: graceful leavers and
+        // confirmed-dead peers alike.
+        departed: (0..st.n).filter(|&j| st.ring.ring_id_of(j).is_none()).collect(),
         ..Default::default()
     }
 }
@@ -707,6 +1127,7 @@ mod tests {
             method,
             gossip: GossipConfig { fanout: 2, flush_every: 1, ttl: 4 },
             drain_timeout: Duration::from_secs(10),
+            membership: None,
         }
     }
 
@@ -781,11 +1202,72 @@ mod tests {
         assert_eq!(back.dim, wl.dim);
         assert_eq!(back.method, wl.method);
         assert_eq!(back.gossip.fanout, wl.gossip.fanout);
+        // Membership timing rides the Welcome; off encodes as 0/0.
+        assert_eq!((w.suspect_us, w.confirm_us), (0, 0));
+        assert!(back.membership.is_none());
         assert!(Workload::from_welcome(
             &Welcome { method: "warp-speed".into(), ..w },
             wl.drain_timeout
         )
         .is_none());
+        let mut mwl = wl.clone();
+        mwl.membership =
+            Some(MembershipConfig { suspect_after: 250_000, confirm_after: 125_000 });
+        let mw = mwl.welcome(1);
+        assert_eq!((mw.suspect_us, mw.confirm_us), (250_000, 125_000));
+        let mback = Workload::from_welcome(&mw, mwl.drain_timeout).expect("parses");
+        let mc = mback.membership.expect("membership survives the round trip");
+        assert_eq!(mc.suspect_after, 250_000);
+        assert_eq!(mc.confirm_after, 125_000);
+    }
+
+    #[test]
+    fn channel_cluster_survives_a_crash_via_membership_repair() {
+        // One node crash-stops mid-run; survivors must confirm it dead,
+        // repair its rumors via the custodian, and drain losslessly in
+        // ~suspect+confirm — far under the drain timeout.
+        let victim = 2usize;
+        let mut wl = test_workload(3, 30, Method::Pssp { sample: 2, staleness: 3 });
+        wl.membership =
+            Some(MembershipConfig { suspect_after: 80_000, confirm_after: 80_000 });
+        wl.drain_timeout = Duration::from_secs(30);
+        let t0 = std::time::Instant::now();
+        let transports = ChannelTransport::cluster(wl.n);
+        let mut handles = Vec::new();
+        for (id, mut tr) in transports.into_iter().enumerate() {
+            let mut cfg = wl.node_config(id);
+            if id == victim {
+                cfg.crash_at = Some(15);
+            }
+            let grad = seed_only_grad();
+            handles.push(std::thread::spawn(move || run_node(&cfg, &mut tr, grad, None)));
+        }
+        let outs: Vec<NodeOutcome> =
+            handles.into_iter().map(|h| h.join().expect("node thread")).collect();
+        let wall = t0.elapsed();
+        assert!(
+            wall < Duration::from_secs(10),
+            "survivors took {wall:?} — the crash stalled them toward drain_timeout"
+        );
+        for &i in &[0usize, 1] {
+            let r = &outs[i].report;
+            assert_eq!(r.dropped_deltas, 0, "node {i} dropped deltas");
+            assert_eq!(r.missing_rumors, 0, "node {i} missing rumors");
+            assert!(r.confirmed_dead >= 1, "node {i} never confirmed the crash");
+            assert!(r.departed.contains(&victim), "node {i} still has the corpse in view");
+            // Survivors finished all their own steps despite sampling a corpse.
+            assert_eq!(r.steps[i], 30, "node {i} did not finish");
+        }
+        // The custodian (whichever survivor it was) re-announced.
+        assert!(
+            outs[0].report.repair_msgs + outs[1].report.repair_msgs > 0,
+            "no custody repair was broadcast"
+        );
+        // Survivors agree exactly on every origin — including the dead
+        // one, whose count the custodian pinned.
+        assert_eq!(outs[0].applied_of, outs[1].applied_of, "survivors diverged");
+        assert_eq!(outs[0].applied_of[0], 30);
+        assert_eq!(outs[0].applied_of[1], 30);
     }
 
     #[test]

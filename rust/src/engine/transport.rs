@@ -32,12 +32,13 @@ use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::engine::gossip::Rumor;
 use crate::engine::p2p::PeerMsg;
+use crate::util::rng::Rng;
 
 /// Hard ceiling on one frame's body (tag + payload), bytes. A frame
 /// declaring more than this is rejected before any allocation — a
@@ -78,6 +79,14 @@ pub struct Welcome {
     pub flush: u64,
     /// Gossip shortcut TTL.
     pub ttl: u32,
+    /// Failure-detector suspect threshold in µs of beat silence.
+    /// `0` (with `confirm_us == 0`) means the membership plane is off
+    /// cluster-wide — seed and joiners must agree on detection timing,
+    /// so it rides the same one-place workload handshake as everything
+    /// else.
+    pub suspect_us: u64,
+    /// Suspect → confirmed-dead threshold in µs (`0` = membership off).
+    pub confirm_us: u64,
 }
 
 /// One wire message. `Peer` embeds the engines' protocol unchanged;
@@ -96,6 +105,15 @@ pub enum Frame {
     Welcome(Welcome),
     /// Bootstrap: the full roster `(id, listen addr)`, seed included.
     Peers { peers: Vec<(u32, String)> },
+    /// Membership: `from`'s failure detector moved `peer` to *suspect*
+    /// (beat silence past the suspect threshold). Informational —
+    /// receivers surface it in the monitor, they don't act on it.
+    Suspect { from: u32, peer: u32 },
+    /// Membership: `from`'s failure detector confirmed `peer` dead.
+    /// Receivers adopt the verdict (idempotent; a live peer's next
+    /// beat resurrects it), so one node's timers converge the whole
+    /// cluster's view instead of n detectors racing independently.
+    Confirm { from: u32, peer: u32 },
 }
 
 // ---------------------------------------------------------------------------
@@ -140,6 +158,8 @@ const TAG_STEP: u8 = 6;
 const TAG_JOIN: u8 = 7;
 const TAG_WELCOME: u8 = 8;
 const TAG_PEERS: u8 = 9;
+const TAG_SUSPECT: u8 = 10;
+const TAG_CONFIRM: u8 = 11;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -230,6 +250,8 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut body, w.fanout);
             put_u64(&mut body, w.flush);
             put_u32(&mut body, w.ttl);
+            put_u64(&mut body, w.suspect_us);
+            put_u64(&mut body, w.confirm_us);
         }
         Frame::Peers { peers } => {
             body.push(TAG_PEERS);
@@ -238,6 +260,16 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put_u32(&mut body, *id);
                 put_str(&mut body, addr);
             }
+        }
+        Frame::Suspect { from, peer } => {
+            body.push(TAG_SUSPECT);
+            put_u32(&mut body, *from);
+            put_u32(&mut body, *peer);
+        }
+        Frame::Confirm { from, peer } => {
+            body.push(TAG_CONFIRM);
+            put_u32(&mut body, *from);
+            put_u32(&mut body, *peer);
         }
     }
     debug_assert!(body.len() <= MAX_FRAME, "frame body exceeds MAX_FRAME");
@@ -261,10 +293,13 @@ pub fn wire_len(frame: &Frame) -> usize {
         Frame::Peer(PeerMsg::Repair { store, .. }) => 1 + 8 + rumors_len(store),
         Frame::Step { .. } => 1 + 4 + 8 + 8,
         Frame::Join { addr } => 1 + 4 + addr.len(),
-        Frame::Welcome(w) => 1 + 4 + 4 + 8 + 8 + 4 + 4 + (4 + w.method.len()) + 4 + 8 + 4,
+        Frame::Welcome(w) => {
+            1 + 4 + 4 + 8 + 8 + 4 + 4 + (4 + w.method.len()) + 4 + 8 + 4 + 8 + 8
+        }
         Frame::Peers { peers } => {
             1 + 4 + peers.iter().map(|(_, a)| 8 + a.len()).sum::<usize>()
         }
+        Frame::Suspect { .. } | Frame::Confirm { .. } => 1 + 8,
     };
     4 + body
 }
@@ -365,6 +400,8 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
             fanout: rd.u32()?,
             flush: rd.u64()?,
             ttl: rd.u32()?,
+            suspect_us: rd.u64()?,
+            confirm_us: rd.u64()?,
         }),
         TAG_PEERS => {
             let n = rd.u32()? as usize;
@@ -379,6 +416,8 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
             }
             Frame::Peers { peers }
         }
+        TAG_SUSPECT => Frame::Suspect { from: rd.u32()?, peer: rd.u32()? },
+        TAG_CONFIRM => Frame::Confirm { from: rd.u32()?, peer: rd.u32()? },
         other => return Err(WireError::UnknownTag(other)),
     };
     rd.finish(frame)
@@ -443,6 +482,13 @@ pub trait Transport {
     fn try_recv(&mut self) -> Option<Frame>;
     /// Next inbound frame, waiting up to `timeout`.
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Frame>;
+    /// Tear down per-peer resources (writer thread, queue) for a peer
+    /// the membership plane confirmed dead; subsequent sends to it
+    /// return `false`. Default: nothing to tear down.
+    fn evict_peer(&mut self, _peer: usize) {}
+    /// Undo [`evict_peer`](Self::evict_peer) after a false-positive
+    /// confirmation (the "dead" peer spoke again). Default: no-op.
+    fn revive_peer(&mut self, _peer: usize) {}
 }
 
 /// In-process transport over `mpsc` channels — the same carrier the sim
@@ -548,6 +594,11 @@ pub struct TcpTransport {
     stop: Arc<AtomicBool>,
     bytes_out: Arc<AtomicU64>,
     bytes_in: Arc<AtomicU64>,
+    send_fail: Arc<AtomicU64>,
+    /// Roster addresses, kept so a false-positive eviction can be
+    /// undone by spawning a fresh writer to the same peer.
+    peer_addrs: Vec<Option<String>>,
+    evicted: Vec<Arc<AtomicBool>>,
     reconnect_min: Duration,
     reconnect_max: Duration,
 }
@@ -635,19 +686,32 @@ fn reader_loop(
     }
 }
 
+/// Everything one writer thread needs; bundled so eviction state and
+/// failure accounting travel with the connection it owns.
+struct WriterCtx {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    /// Raised by [`Transport::evict_peer`]: the peer is confirmed dead,
+    /// stop reconnecting and abandon (but count) whatever is queued.
+    evicted: Arc<AtomicBool>,
+    bytes_out: Arc<AtomicU64>,
+    /// Frames abandoned without delivery (eviction teardown, sends to
+    /// an already-evicted peer).
+    send_fail: Arc<AtomicU64>,
+    min_backoff: Duration,
+    max_backoff: Duration,
+}
+
 /// One writer: own the outbound connection to `addr`, (re)connect with
 /// exponential backoff, resend the frame that was in flight when a
 /// connection died. After stop, each frame gets a bounded number of
 /// connect attempts before being dropped loudly, so shutdown cannot
-/// hang on a peer that already exited.
-fn writer_loop(
-    addr: String,
-    rx: Receiver<WCmd>,
-    stop: Arc<AtomicBool>,
-    bytes_out: Arc<AtomicU64>,
-    min_backoff: Duration,
-    max_backoff: Duration,
-) {
+/// hang on a peer that already exited. A peer the membership plane
+/// evicted gets no reconnect attempts at all: the in-flight frame and
+/// anything behind it are counted into `send_fail` instead of spinning
+/// in backoff forever against a socket nobody will ever bind again.
+fn writer_loop(ctx: WriterCtx, rx: Receiver<WCmd>) {
+    let WriterCtx { addr, stop, evicted, bytes_out, send_fail, min_backoff, max_backoff } = ctx;
     let mut conn: Option<TcpStream> = None;
     let mut backoff = min_backoff;
     loop {
@@ -665,6 +729,14 @@ fn writer_loop(
                         backoff = min_backoff;
                     }
                     Err(_) => {
+                        if evicted.load(Ordering::Relaxed) {
+                            crate::log_warn!(
+                                "transport: abandoning {}-byte frame for {addr} (peer evicted)",
+                                bytes.len()
+                            );
+                            send_fail.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
                         if stop.load(Ordering::Relaxed) {
                             attempts_while_stopped += 1;
                             if attempts_while_stopped >= 3 {
@@ -752,6 +824,9 @@ impl TcpTransport {
             stop,
             bytes_out: Arc::new(AtomicU64::new(0)),
             bytes_in,
+            send_fail: Arc::new(AtomicU64::new(0)),
+            peer_addrs: (0..n).map(|_| None).collect(),
+            evicted: (0..n).map(|_| Arc::new(AtomicBool::new(false))).collect(),
             reconnect_min: TransportConfig::default().reconnect_min,
             reconnect_max: TransportConfig::default().reconnect_max,
         })
@@ -781,16 +856,25 @@ impl TcpTransport {
             }
             assert!(peer < self.n, "roster id {peer} out of range");
             assert!(self.writers[peer].is_none(), "duplicate roster id {peer}");
-            let (tx, rx) = mpsc::channel();
-            let addr = addr.clone();
-            let stop = Arc::clone(&self.stop);
-            let bytes_out = Arc::clone(&self.bytes_out);
-            let (min_b, max_b) = (self.reconnect_min, self.reconnect_max);
-            self.writer_handles.push(std::thread::spawn(move || {
-                writer_loop(addr, rx, stop, bytes_out, min_b, max_b)
-            }));
-            self.writers[peer] = Some(tx);
+            self.peer_addrs[peer] = Some(addr.clone());
+            self.spawn_writer(peer);
         }
+    }
+
+    /// Start a writer thread for `peer` (roster address must be known).
+    fn spawn_writer(&mut self, peer: usize) {
+        let (tx, rx) = mpsc::channel();
+        let ctx = WriterCtx {
+            addr: self.peer_addrs[peer].clone().expect("no address for peer"),
+            stop: Arc::clone(&self.stop),
+            evicted: Arc::clone(&self.evicted[peer]),
+            bytes_out: Arc::clone(&self.bytes_out),
+            send_fail: Arc::clone(&self.send_fail),
+            min_backoff: self.reconnect_min,
+            max_backoff: self.reconnect_max,
+        };
+        self.writer_handles.push(std::thread::spawn(move || writer_loop(ctx, rx)));
+        self.writers[peer] = Some(tx);
     }
 
     /// Total payload bytes successfully written to peers.
@@ -801,6 +885,13 @@ impl TcpTransport {
     /// Total payload bytes decoded off accepted connections.
     pub fn bytes_in(&self) -> u64 {
         self.bytes_in.load(Ordering::Relaxed)
+    }
+
+    /// Frames abandoned without delivery: queued frames counted by a
+    /// writer torn down via [`Transport::evict_peer`], plus sends
+    /// attempted against an already-evicted peer.
+    pub fn send_fail(&self) -> u64 {
+        self.send_fail.load(Ordering::Relaxed)
     }
 }
 
@@ -819,7 +910,12 @@ impl Transport for TcpTransport {
         }
         match &self.writers[to] {
             Some(tx) => tx.send(WCmd::Frame(encode(&frame))).is_ok(),
-            None => false,
+            None => {
+                if self.evicted[to].load(Ordering::Relaxed) {
+                    self.send_fail.fetch_add(1, Ordering::Relaxed);
+                }
+                false
+            }
         }
     }
 
@@ -829,6 +925,32 @@ impl Transport for TcpTransport {
 
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Frame> {
         self.inbox.recv_timeout(timeout).ok()
+    }
+
+    fn evict_peer(&mut self, peer: usize) {
+        if peer >= self.n || peer == self.me || self.evicted[peer].load(Ordering::Relaxed) {
+            return;
+        }
+        self.evicted[peer].store(true, Ordering::Relaxed);
+        // Dropping the sender ends the writer once its queue drains;
+        // the evicted flag makes a writer stuck in reconnect backoff
+        // abandon (and count) its frames instead of spinning forever.
+        self.writers[peer] = None;
+    }
+
+    fn revive_peer(&mut self, peer: usize) {
+        if peer >= self.n
+            || peer == self.me
+            || self.writers[peer].is_some()
+            || !self.evicted[peer].load(Ordering::Relaxed)
+            || self.peer_addrs[peer].is_none()
+        {
+            return;
+        }
+        // The old writer keeps the old (raised) flag and finishes dying;
+        // the replacement starts from a fresh one.
+        self.evicted[peer] = Arc::new(AtomicBool::new(false));
+        self.spawn_writer(peer);
     }
 }
 
@@ -849,6 +971,284 @@ impl Drop for TcpTransport {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`FaultyTransport`] (`[fault]` config section and
+/// `actor node --fault-*` flags). Probabilities are per send and drawn
+/// from one seeded RNG in send order, so a given seed over a given
+/// send sequence injects exactly the same faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Fault RNG seed.
+    pub seed: u64,
+    /// P(first delivery attempt is lost). The frame is re-delivered
+    /// after [`retry`](Self::retry): the decorator models a lossy wire
+    /// *under* the at-least-once contract, exactly like a TCP writer
+    /// resending the in-flight frame after a reconnect — loss shows up
+    /// as latency, never as silent message death.
+    pub drop_p: f64,
+    /// P(frame delivered twice, back to back).
+    pub dup_p: f64,
+    /// P(frame held back for a uniform delay in `[0, delay_max]`).
+    pub delay_p: f64,
+    /// Ceiling for injected delivery delay.
+    pub delay_max: Duration,
+    /// Simulated retransmission latency for dropped first attempts.
+    pub retry: Duration,
+    /// P(frame held just long enough to land behind later sends to the
+    /// same peer — per-peer FIFO deliberately violated).
+    pub reorder_p: f64,
+    /// One-directional partitions `(from, to)`: while active, frames
+    /// from `from` to `to` are held until the partition heals — or
+    /// discarded outright if it never does.
+    pub partitions: Vec<(usize, usize)>,
+    /// Partitions heal this long after transport creation. `None`
+    /// means they never heal and partitioned frames are really lost
+    /// (survivable only if the membership plane repairs around them).
+    pub heal_after: Option<Duration>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0x5EED_FA17,
+            drop_p: 0.0,
+            dup_p: 0.0,
+            delay_p: 0.0,
+            delay_max: Duration::from_millis(20),
+            retry: Duration::from_millis(30),
+            reorder_p: 0.0,
+            partitions: Vec::new(),
+            heal_after: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when every knob is at its do-nothing value.
+    pub fn is_noop(&self) -> bool {
+        self.drop_p == 0.0
+            && self.dup_p == 0.0
+            && self.delay_p == 0.0
+            && self.reorder_p == 0.0
+            && self.partitions.is_empty()
+    }
+}
+
+/// Counters for the faults actually injected.
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    /// First delivery attempts lost (re-delivered after `retry`).
+    pub dropped: u64,
+    /// Frames delivered twice.
+    pub duplicated: u64,
+    /// Frames held for an injected delay.
+    pub delayed: u64,
+    /// Frames held to land behind later sends.
+    pub reordered: u64,
+    /// Frames caught by an active partition.
+    pub partitioned: u64,
+}
+
+/// How long a reordered frame is held; enough for the sends right
+/// behind it to overtake it at localhost/in-process latencies.
+const REORDER_HOLD: Duration = Duration::from_millis(2);
+
+/// Floor on fault-queue poll waits inside `recv_timeout`.
+const MIN_FAULT_POLL: Duration = Duration::from_micros(200);
+
+struct FaultState {
+    rng: Rng,
+    /// Outbound frames awaiting their release `(when, to, frame)`.
+    /// Unsorted — volumes are tiny and the pump scans linearly.
+    queue: Vec<(Instant, usize, Frame)>,
+    stats: FaultStats,
+}
+
+/// A [`Transport`] decorator that makes the wire hostile on purpose:
+/// seeded drop/duplicate/delay/reorder plus one-directional partitions
+/// per peer-pair, all on the egress path. Held frames are released by
+/// the pump that runs on every transport call — the node loop polls
+/// its inbox constantly, so release latency tracks the injected delay.
+///
+/// `drop` respects the at-least-once delivery contract (a lost attempt
+/// is retransmitted, as the TCP writer would after a reconnect); only
+/// a partition that never heals genuinely destroys frames.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    cfg: FaultConfig,
+    t0: Instant,
+    state: Mutex<FaultState>,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    /// Wrap `inner`; partitions (if any) heal relative to this call.
+    pub fn new(inner: T, cfg: FaultConfig) -> FaultyTransport<T> {
+        let rng = Rng::new(cfg.seed);
+        FaultyTransport {
+            inner,
+            cfg,
+            t0: Instant::now(),
+            state: Mutex::new(FaultState { rng, queue: Vec::new(), stats: FaultStats::default() }),
+        }
+    }
+
+    /// The wrapped transport (for carrier-specific counters).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// Faults injected so far.
+    pub fn stats(&self) -> FaultStats {
+        self.state.lock().unwrap().stats.clone()
+    }
+
+    /// Release every held frame whose time has come.
+    fn pump(&self) {
+        let due: Vec<(usize, Frame)> = {
+            let mut st = self.state.lock().unwrap();
+            let now = Instant::now();
+            let mut due = Vec::new();
+            let mut i = 0;
+            while i < st.queue.len() {
+                if st.queue[i].0 <= now {
+                    let (_, to, f) = st.queue.swap_remove(i);
+                    due.push((to, f));
+                } else {
+                    i += 1;
+                }
+            }
+            due
+        };
+        for (to, f) in due {
+            let _ = self.inner.send(to, f);
+        }
+    }
+
+    fn next_release(&self) -> Option<Instant> {
+        self.state.lock().unwrap().queue.iter().map(|e| e.0).min()
+    }
+
+    /// Deliver everything still held, due or not — shutdown must not
+    /// lose frames the contract says are merely late.
+    fn flush_pending(&self) {
+        let held: Vec<(usize, Frame)> = {
+            let mut st = self.state.lock().unwrap();
+            st.queue.drain(..).map(|(_, to, f)| (to, f)).collect()
+        };
+        for (to, f) in held {
+            let _ = self.inner.send(to, f);
+        }
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn me(&self) -> usize {
+        self.inner.me()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn send(&self, to: usize, frame: Frame) -> bool {
+        self.pump();
+        if to == self.inner.me() {
+            // Self-sends loop back in-process; no wire to be hostile on.
+            return self.inner.send(to, frame);
+        }
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        if self.cfg.partitions.contains(&(self.inner.me(), to)) {
+            match self.cfg.heal_after {
+                Some(heal) if now < self.t0 + heal => {
+                    st.stats.partitioned += 1;
+                    st.queue.push((self.t0 + heal, to, frame));
+                    return true;
+                }
+                None => {
+                    st.stats.partitioned += 1;
+                    return true; // never heals: really lost
+                }
+                _ => {} // healed; deliver normally
+            }
+        }
+        let roll = st.rng.next_f32() as f64;
+        let c = &self.cfg;
+        if roll < c.drop_p {
+            st.stats.dropped += 1;
+            st.queue.push((now + c.retry, to, frame));
+            true
+        } else if roll < c.drop_p + c.dup_p {
+            st.stats.duplicated += 1;
+            drop(st);
+            let delivered = self.inner.send(to, frame.clone());
+            let _ = self.inner.send(to, frame);
+            delivered
+        } else if roll < c.drop_p + c.dup_p + c.delay_p {
+            let d = c.delay_max.mul_f64(st.rng.next_f32() as f64);
+            st.stats.delayed += 1;
+            st.queue.push((now + d, to, frame));
+            true
+        } else if roll < c.drop_p + c.dup_p + c.delay_p + c.reorder_p {
+            st.stats.reordered += 1;
+            st.queue.push((now + REORDER_HOLD, to, frame));
+            true
+        } else {
+            drop(st);
+            self.inner.send(to, frame)
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<Frame> {
+        self.pump();
+        self.inner.try_recv()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<Frame> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump();
+            if let Some(f) = self.inner.try_recv() {
+                return Some(f);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            // Wake for whichever comes first: the caller's deadline or
+            // the next held frame falling due.
+            let mut wait = deadline - now;
+            if let Some(next) = self.next_release() {
+                wait = wait.min(next.saturating_duration_since(now)).max(MIN_FAULT_POLL);
+            }
+            if let Some(f) = self.inner.recv_timeout(wait) {
+                self.pump();
+                return Some(f);
+            }
+        }
+    }
+
+    fn evict_peer(&mut self, peer: usize) {
+        // Held frames for an evicted peer would only be abandoned by
+        // the real writer anyway; shed them here.
+        self.state.lock().unwrap().queue.retain(|(_, to, _)| *to != peer);
+        self.inner.evict_peer(peer);
+    }
+
+    fn revive_peer(&mut self, peer: usize) {
+        self.inner.revive_peer(peer);
+    }
+}
+
+impl<T: Transport> Drop for FaultyTransport<T> {
+    fn drop(&mut self) {
+        self.flush_pending();
     }
 }
 
@@ -885,7 +1285,6 @@ impl Default for FrameBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
 
     fn hex(bytes: &[u8]) -> String {
         bytes.iter().map(|b| format!("{b:02x}")).collect()
@@ -926,6 +1325,15 @@ mod tests {
         );
     }
 
+    #[test]
+    fn known_answer_suspect_and_confirm() {
+        // len=9 | tag | from | peer, all LE
+        let s = Frame::Suspect { from: 2, peer: 5 };
+        assert_eq!(hex(&encode(&s)), "090000000a0200000005000000");
+        let c = Frame::Confirm { from: 1, peer: 4 };
+        assert_eq!(hex(&encode(&c)), "090000000b0100000004000000");
+    }
+
     // -- seeded frame generator (mirrored in tools/verify_wire_port.py) --
 
     const METHODS: [&str; 5] = ["asp", "bsp", "ssp:4", "pssp:3:2", "pquorum:6:4:80"];
@@ -957,7 +1365,7 @@ mod tests {
     }
 
     fn gen_frame(rng: &mut Rng) -> Frame {
-        match rng.next_below(9) {
+        match rng.next_below(11) {
             0 => Frame::Peer(PeerMsg::Delta { delta: gen_delta(rng) }),
             1 => Frame::Peer(PeerMsg::Gossip { rumors: gen_rumors(rng) }),
             2 => Frame::Peer(PeerMsg::Done {
@@ -990,14 +1398,24 @@ mod tests {
                 fanout: rng.next_below(8) as u32,
                 flush: rng.next_below(8) + 1,
                 ttl: rng.next_below(16) as u32,
+                suspect_us: rng.next_below(1 << 30),
+                confirm_us: rng.next_below(1 << 30),
             }),
-            _ => {
+            8 => {
                 let n = rng.next_below(4) as usize;
                 let peers = (0..n)
                     .map(|_| (rng.next_below(64) as u32, gen_addr(rng)))
                     .collect();
                 Frame::Peers { peers }
             }
+            9 => Frame::Suspect {
+                from: rng.next_below(64) as u32,
+                peer: rng.next_below(64) as u32,
+            },
+            _ => Frame::Confirm {
+                from: rng.next_below(64) as u32,
+                peer: rng.next_below(64) as u32,
+            },
         }
     }
 
@@ -1089,7 +1507,7 @@ mod tests {
 
     /// Pinned by tools/verify_wire_port.py — regenerate there if the
     /// format changes on purpose.
-    const CROSS_DIGEST: u64 = 0x1499_61E4_06FF_0717;
+    const CROSS_DIGEST: u64 = 0x9C37_C247_788D_5437;
 
     // -- transports --
 
@@ -1160,6 +1578,104 @@ mod tests {
         let mut b = TcpTransport::with_listener(1, 2, TcpListener::bind(addr).unwrap()).unwrap();
         match b.recv_timeout(Duration::from_secs(5)) {
             Some(Frame::Step { from: 0, step: 3, beat: 1 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tcp_evict_peer_stops_reconnect_spin_and_counts_send_fail() {
+        // Writer aimed at a port nobody will ever bind: without
+        // eviction it would backoff-reconnect forever (the satellite
+        // bug); with it, the in-flight frame is abandoned and counted.
+        let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = reserved.local_addr().unwrap();
+        drop(reserved);
+        let mut a = TcpTransport::bind(0, 2, "127.0.0.1:0").unwrap();
+        a.set_backoff(Duration::from_millis(1), Duration::from_millis(5));
+        a.connect_peers(&[(1usize, addr.to_string())]);
+        assert!(a.send(1, Frame::Step { from: 0, step: 1, beat: 1 }));
+        std::thread::sleep(Duration::from_millis(20)); // let the writer start spinning
+        a.evict_peer(1);
+        let t0 = Instant::now();
+        while a.send_fail() == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(a.send_fail(), 1, "in-flight frame must be counted, not spun on");
+        assert!(!a.send(1, Frame::Step { from: 0, step: 2, beat: 2 }));
+        assert_eq!(a.send_fail(), 2, "sends to an evicted peer count as failures");
+    }
+
+    // -- fault injection --
+
+    fn faulty_pair(cfg: FaultConfig) -> (FaultyTransport<ChannelTransport>, ChannelTransport) {
+        let mut cluster = ChannelTransport::cluster(2);
+        let b = cluster.pop().unwrap();
+        let a = cluster.pop().unwrap();
+        (FaultyTransport::new(a, cfg), b)
+    }
+
+    #[test]
+    fn faulty_transport_drop_is_redelivery_not_loss() {
+        let cfg = FaultConfig {
+            drop_p: 1.0,
+            retry: Duration::from_millis(10),
+            ..FaultConfig::default()
+        };
+        let (mut a, mut b) = faulty_pair(cfg);
+        assert!(a.send(1, Frame::Step { from: 0, step: 1, beat: 1 }));
+        assert!(b.try_recv().is_none(), "first attempt must be lost");
+        // a's own inbox poll pumps the retransmission once retry elapses.
+        assert!(a.recv_timeout(Duration::from_millis(100)).is_none());
+        match b.recv_timeout(Duration::from_secs(1)) {
+            Some(Frame::Step { from: 0, step: 1, beat: 1 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(b.try_recv().is_none(), "retransmit happens exactly once");
+        assert_eq!(a.stats().dropped, 1);
+    }
+
+    #[test]
+    fn faulty_transport_duplicates_and_partition_heals() {
+        let cfg = FaultConfig { dup_p: 1.0, ..FaultConfig::default() };
+        let (a, mut b) = faulty_pair(cfg);
+        assert!(a.send(1, Frame::Step { from: 0, step: 7, beat: 1 }));
+        for _ in 0..2 {
+            match b.recv_timeout(Duration::from_secs(1)) {
+                Some(Frame::Step { from: 0, step: 7, beat: 1 }) => {}
+                other => panic!("unexpected: {other:?}"),
+            }
+        }
+        assert_eq!(a.stats().duplicated, 1);
+
+        let cfg = FaultConfig {
+            partitions: vec![(0, 1)],
+            heal_after: Some(Duration::from_millis(30)),
+            ..FaultConfig::default()
+        };
+        let (mut a, mut b) = faulty_pair(cfg);
+        assert!(a.send(1, Frame::Step { from: 0, step: 3, beat: 1 }));
+        assert!(b.try_recv().is_none(), "partition holds the frame");
+        assert!(a.recv_timeout(Duration::from_millis(120)).is_none());
+        match b.recv_timeout(Duration::from_secs(1)) {
+            Some(Frame::Step { from: 0, step: 3, beat: 1 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(a.stats().partitioned, 1);
+    }
+
+    #[test]
+    fn faulty_transport_flushes_held_frames_on_drop() {
+        let cfg = FaultConfig {
+            delay_p: 1.0,
+            delay_max: Duration::from_secs(60),
+            ..FaultConfig::default()
+        };
+        let (a, mut b) = faulty_pair(cfg);
+        assert!(a.send(1, Frame::Step { from: 0, step: 9, beat: 1 }));
+        assert!(b.try_recv().is_none());
+        drop(a); // shutdown may not turn "late" into "lost"
+        match b.recv_timeout(Duration::from_secs(1)) {
+            Some(Frame::Step { from: 0, step: 9, beat: 1 }) => {}
             other => panic!("unexpected: {other:?}"),
         }
     }

@@ -14,6 +14,13 @@
 //! originations, dropped == 0 on both rows — the cross-transport
 //! equivalence `tests/transport_cluster.rs` gates on), with TCP paying
 //! wall-clock and byte overhead for crossing a real socket.
+//!
+//! Two robustness rows ride along: `chan+crash` crash-stops one node
+//! mid-run with the membership plane on (survivors must confirm it
+//! dead, custody-repair its rumors, and still drop nothing), and
+//! `chan+faulty` wraps every transport in a seeded [`FaultyTransport`]
+//! (drops/dups/delays/reordering) — the at-least-once wire contract
+//! must keep the applied counts identical to the clean channel run.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -21,8 +28,11 @@ use std::time::Duration;
 
 use crate::barrier::Method;
 use crate::engine::gossip::GossipConfig;
+use crate::engine::membership::MembershipConfig;
 use crate::engine::node::{run_node, NodeOutcome, Workload};
-use crate::engine::transport::{ChannelTransport, TcpTransport};
+use crate::engine::transport::{
+    ChannelTransport, FaultConfig, FaultyTransport, TcpTransport,
+};
 use crate::engine::GradFn;
 use crate::exp::{ExpOpts, Report};
 use crate::util::rng::Rng;
@@ -49,6 +59,54 @@ fn run_channel(wl: &Workload) -> CarrierRun {
         let cfg = wl.node_config(id);
         let g = grad();
         handles.push(std::thread::spawn(move || run_node(&cfg, &mut tr, g, None)));
+    }
+    let outcomes = handles.into_iter().map(|h| h.join().expect("node")).collect();
+    CarrierRun { outcomes, wall_secs: t0.elapsed().as_secs_f64(), bytes_out: 0 }
+}
+
+/// Channel cluster with one node crash-stopping mid-run (membership on
+/// in `wl`): survivors must confirm the victim dead and custody-repair
+/// its rumors instead of stalling to `drain_timeout`.
+fn run_channel_crash(wl: &Workload, victim: usize, at: u64) -> CarrierRun {
+    let t0 = std::time::Instant::now();
+    let transports = ChannelTransport::cluster(wl.n);
+    let mut handles = Vec::new();
+    for (id, mut tr) in transports.into_iter().enumerate() {
+        let mut cfg = wl.node_config(id);
+        if id == victim {
+            cfg.crash_at = Some(at);
+        }
+        let g = grad();
+        handles.push(std::thread::spawn(move || run_node(&cfg, &mut tr, g, None)));
+    }
+    let outcomes = handles.into_iter().map(|h| h.join().expect("node")).collect();
+    CarrierRun { outcomes, wall_secs: t0.elapsed().as_secs_f64(), bytes_out: 0 }
+}
+
+/// Channel cluster with every transport wrapped in a seeded
+/// [`FaultyTransport`] (drops retransmit, dups, delays, reordering):
+/// the at-least-once contract must leave the outcome untouched.
+fn run_channel_faulty(wl: &Workload, fault_seed: u64) -> CarrierRun {
+    let t0 = std::time::Instant::now();
+    let transports = ChannelTransport::cluster(wl.n);
+    let mut handles = Vec::new();
+    for (id, tr) in transports.into_iter().enumerate() {
+        let cfg = wl.node_config(id);
+        let fc = FaultConfig {
+            seed: fault_seed.wrapping_mul(0x9E37_79B9).wrapping_add(id as u64),
+            drop_p: 0.1,
+            dup_p: 0.1,
+            delay_p: 0.15,
+            delay_max: Duration::from_millis(5),
+            retry: Duration::from_millis(10),
+            reorder_p: 0.05,
+            ..FaultConfig::default()
+        };
+        let g = grad();
+        handles.push(std::thread::spawn(move || {
+            let mut faulty = FaultyTransport::new(tr, fc);
+            run_node(&cfg, &mut faulty, g, None)
+        }));
     }
     let outcomes = handles.into_iter().map(|h| h.join().expect("node")).collect();
     CarrierRun { outcomes, wall_secs: t0.elapsed().as_secs_f64(), bytes_out: 0 }
@@ -122,6 +180,7 @@ pub fn ext_transport(opts: &ExpOpts) -> Report {
         method: Method::Pssp { sample: 2, staleness: opts.staleness.min(4) },
         gossip: GossipConfig { fanout: 2, flush_every: 1, ttl: 4 },
         drain_timeout: Duration::from_secs(20),
+        membership: None,
     };
     let mut r = Report::new(
         "ext_transport",
@@ -135,6 +194,20 @@ pub fn ext_transport(opts: &ExpOpts) -> Report {
     let tcp = run_tcp(&wl);
     r.row(carrier_row("channel", &wl, &channel));
     r.row(carrier_row("tcp", &wl, &tcp));
+
+    // Robustness rows: same workload over channels, once with a
+    // mid-run crash (membership plane on) and once over a faulty wire.
+    let mut crash_wl = wl.clone();
+    crash_wl.membership = Some(MembershipConfig {
+        suspect_after: 80_000,
+        confirm_after: 80_000,
+    });
+    let victim = n - 1;
+    let crash = run_channel_crash(&crash_wl, victim, steps / 2);
+    r.row(carrier_row("chan+crash", &crash_wl, &crash));
+    let faulty = run_channel_faulty(&wl, opts.seed);
+    r.row(carrier_row("chan+faulty", &wl, &faulty));
+
     let agree = (0..n).all(|i| channel.outcomes[i].applied_of == tcp.outcomes[i].applied_of);
     r.note(format!(
         "per-origin applied counts {} across carriers (n={n}, {steps} steps, \
@@ -143,6 +216,44 @@ pub fn ext_transport(opts: &ExpOpts) -> Report {
         wl.method,
         wl.seed,
     ));
-    r.note("dropped must be 0 on both rows: the drain owes exactly-once delivery");
+    r.note("dropped must be 0 on every row: the drain owes exactly-once delivery");
+    // In-scenario gates (the CI cluster-chaos job runs this experiment):
+    // a recovery or delivery regression fails the job, not just a note.
+    let survivors_ok = (0..n).filter(|&i| i != victim).all(|i| {
+        let o = &crash.outcomes[i];
+        o.report.dropped_deltas == 0
+            && o.report.confirmed_dead >= 1
+            && o.report.departed.contains(&victim)
+    });
+    assert!(
+        survivors_ok,
+        "chan+crash: survivors failed to confirm + repair the crash of node {victim}"
+    );
+    assert!(
+        crash.wall_secs < crash_wl.drain_timeout.as_secs_f64() / 2.0,
+        "chan+crash: {:.2}s wall suggests a stall toward the drain timeout",
+        crash.wall_secs
+    );
+    r.note(format!(
+        "chan+crash: node {victim} killed at step {} (no Done, no handoff); \
+         survivors {} — confirmed it dead via heartbeat timeout and custody-\
+         repaired its rumors in {:.2}s, far under the {}s drain timeout",
+        steps / 2,
+        if survivors_ok { "RECOVERED" } else { "FAILED TO RECOVER (bug!)" },
+        crash.wall_secs,
+        crash_wl.drain_timeout.as_secs(),
+    ));
+    let faulty_agree =
+        (0..n).all(|i| faulty.outcomes[i].applied_of == channel.outcomes[i].applied_of);
+    assert!(
+        faulty_agree,
+        "chan+faulty: a hostile wire changed the dissemination outcome"
+    );
+    r.note(format!(
+        "chan+faulty: seeded drop/dup/delay/reorder injection on every link; \
+         per-origin applied counts {} the clean channel run — at-least-once \
+         retransmission + rumor-id dedup give exactly-once application",
+        if faulty_agree { "MATCH" } else { "DIVERGE FROM (bug!)" },
+    ));
     r
 }

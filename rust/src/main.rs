@@ -8,12 +8,15 @@ use std::sync::Arc;
 
 use actor_psp::barrier::Method;
 use actor_psp::cli::{Args, USAGE};
-use actor_psp::config::{parse_departure, parse_kill_shard, Config};
+use actor_psp::config::{parse_departure, parse_kill_shard, parse_partitions, Config};
 use actor_psp::engine::gossip::GossipConfig;
+use actor_psp::engine::membership::MembershipConfig;
 use actor_psp::engine::node::{self, Monitor, Workload};
 use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::paramserver::{self, PsConfig};
-use actor_psp::engine::transport::{TcpTransport, TransportConfig};
+use actor_psp::engine::transport::{
+    FaultConfig, FaultyTransport, TcpTransport, TransportConfig,
+};
 use actor_psp::exp::{self, ExpOpts};
 use actor_psp::model::linear::{minibatch_grad_fn, Dataset};
 use actor_psp::runtime::{Manifest, Runtime};
@@ -470,14 +473,116 @@ fn transport_flags(args: &Args) -> Result<TransportConfig> {
     Ok(tcfg)
 }
 
+/// Membership flags for the deployed seed: `[membership]` config
+/// section first (default: enabled, same thresholds as the p2p engine),
+/// CLI overrides. Joiners never pass these — detection timing reaches
+/// them inside the Welcome, so the cluster agrees from one place.
+fn membership_flags(args: &Args) -> Result<Option<MembershipConfig>> {
+    let mut mem = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.membership_config()?,
+        None => Some(MembershipConfig::default()),
+    };
+    if args.switch("no-membership") {
+        return Ok(None);
+    }
+    let suspect = args.parse_flag::<f64>("suspect-ms")?;
+    let confirm = args.parse_flag::<f64>("confirm-ms")?;
+    if suspect.is_some() || confirm.is_some() {
+        let Some(mut m) = mem else {
+            bail!(
+                "--suspect-ms/--confirm-ms have no effect while the \
+                 config file sets [membership] enabled = false"
+            );
+        };
+        if let Some(v) = suspect {
+            if v <= 0.0 {
+                bail!("--suspect-ms must be positive");
+            }
+            m.suspect_after = (v * 1000.0) as u64;
+        }
+        if let Some(v) = confirm {
+            if v <= 0.0 {
+                bail!("--confirm-ms must be positive");
+            }
+            m.confirm_after = (v * 1000.0) as u64;
+        }
+        mem = Some(m);
+    }
+    Ok(mem)
+}
+
+/// Fault-injection flags: `[fault]` config section first, `--fault-*`
+/// overrides — any one of them enables the decorator when the section
+/// is absent. Faults are per-process: each node wraps only its own
+/// transport, so asymmetric chaos is expressible.
+fn fault_flags(args: &Args) -> Result<Option<FaultConfig>> {
+    let mut fc = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.fault_config()?,
+        None => None,
+    };
+    let prob = |name: &str| -> Result<Option<f64>> {
+        match args.parse_flag::<f64>(name)? {
+            Some(v) if !(0.0..=1.0).contains(&v) => {
+                bail!("--{name} must be a probability in [0, 1]")
+            }
+            v => Ok(v),
+        }
+    };
+    let ms = |name: &str| -> Result<Option<std::time::Duration>> {
+        match args.parse_flag::<f64>(name)? {
+            Some(v) if v < 0.0 => bail!("--{name} must be non-negative"),
+            Some(v) => Ok(Some(std::time::Duration::from_secs_f64(v / 1000.0))),
+            None => Ok(None),
+        }
+    };
+    if let Some(v) = prob("fault-drop")? {
+        fc.get_or_insert_with(FaultConfig::default).drop_p = v;
+    }
+    if let Some(v) = prob("fault-dup")? {
+        fc.get_or_insert_with(FaultConfig::default).dup_p = v;
+    }
+    if let Some(v) = prob("fault-delay")? {
+        fc.get_or_insert_with(FaultConfig::default).delay_p = v;
+    }
+    if let Some(v) = prob("fault-reorder")? {
+        fc.get_or_insert_with(FaultConfig::default).reorder_p = v;
+    }
+    if let Some(v) = ms("fault-delay-ms")? {
+        fc.get_or_insert_with(FaultConfig::default).delay_max = v;
+    }
+    if let Some(v) = ms("fault-retry-ms")? {
+        fc.get_or_insert_with(FaultConfig::default).retry = v;
+    }
+    if let Some(v) = ms("fault-heal-ms")? {
+        fc.get_or_insert_with(FaultConfig::default).heal_after = Some(v);
+    }
+    if let Some(v) = args.parse_flag::<u64>("fault-seed")? {
+        fc.get_or_insert_with(FaultConfig::default).seed = v;
+    }
+    if let Some(s) = args.get("fault-partition") {
+        fc.get_or_insert_with(FaultConfig::default).partitions = parse_partitions(s)?;
+    }
+    Ok(fc)
+}
+
+const FAULT_FLAGS: &[&str] = &[
+    "fault-drop", "fault-dup", "fault-delay", "fault-delay-ms",
+    "fault-retry-ms", "fault-reorder", "fault-partition", "fault-heal-ms",
+    "fault-seed",
+];
+
 /// Seed a real multi-process cluster: bind, accept `n-1` joiners, hand
 /// each the workload, then run as node 0 over TCP.
 fn cmd_node(args: &Args) -> Result<()> {
-    args.check_known(&[
+    let mut known = vec![
         "config", "n", "listen", "monitor", "linger", "steps", "dim", "lr",
-        "seed", "method", "fanout", "flush", "ttl", "drain-secs",
-    ])?;
+        "seed", "method", "fanout", "flush", "ttl", "drain-secs", "step-ms",
+        "suspect-ms", "confirm-ms", "no-membership",
+    ];
+    known.extend_from_slice(FAULT_FLAGS);
+    args.check_known(&known)?;
     let tcfg = transport_flags(args)?;
+    let fault = fault_flags(args)?;
     let n: usize = args.flag_or("n", 3)?;
     if n < 1 {
         bail!("--n must be at least 1");
@@ -487,6 +592,10 @@ fn cmd_node(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --method '{m}'"))?,
         None => Method::Pssp { sample: 2, staleness: 2 },
     };
+    let step_ms: f64 = args.flag_or("step-ms", 0.0)?;
+    if step_ms < 0.0 {
+        bail!("--step-ms must be non-negative");
+    }
     let wl = Workload {
         n,
         steps: args.flag_or("steps", 30)?,
@@ -502,31 +611,51 @@ fn cmd_node(args: &Args) -> Result<()> {
         drain_timeout: std::time::Duration::from_secs_f64(
             args.flag_or("drain-secs", 10.0)?,
         ),
+        membership: membership_flags(args)?,
     };
     let listener = std::net::TcpListener::bind(&tcfg.listen)?;
     let seed_addr = listener.local_addr()?.to_string();
     println!(
         "node 0 (seed): {} workers x {} steps, d={} under {}; listening on \
-         {seed_addr}, waiting for {} joiner(s)",
+         {seed_addr}, waiting for {} joiner(s); membership {}",
         wl.n,
         wl.steps,
         wl.dim,
         wl.method,
         n - 1,
+        match &wl.membership {
+            Some(m) => format!(
+                "on (suspect {}ms, confirm {}ms)",
+                m.suspect_after / 1000,
+                m.confirm_after / 1000
+            ),
+            None => "off".to_string(),
+        },
     );
     let roster = node::seed_bootstrap(&listener, &wl, &seed_addr)?;
-    run_deployed(0, &wl, listener, roster, &tcfg)
+    run_deployed(
+        0,
+        &wl,
+        listener,
+        roster,
+        &tcfg,
+        fault,
+        std::time::Duration::from_secs_f64(step_ms / 1000.0),
+    )
 }
 
 /// Join a cluster: `actor join <seed host:port>`. Everything about the
 /// workload arrives in the seed's Welcome.
 fn cmd_join(args: &Args) -> Result<()> {
-    args.check_known(&["config", "listen", "monitor", "linger", "drain-secs"])?;
+    let mut known = vec!["config", "listen", "monitor", "linger", "drain-secs"];
+    known.extend_from_slice(FAULT_FLAGS);
+    args.check_known(&known)?;
     let seed_addr = args
         .positionals
         .first()
         .ok_or_else(|| anyhow::anyhow!("actor join needs the seed's host:port"))?;
     let tcfg = transport_flags(args)?;
+    let fault = fault_flags(args)?;
     let listener = std::net::TcpListener::bind(&tcfg.listen)?;
     let my_addr = listener.local_addr()?.to_string();
     let drain =
@@ -541,10 +670,23 @@ fn cmd_join(args: &Args) -> Result<()> {
         anyhow::anyhow!("seed sent unparseable method '{}'", welcome.method)
     })?;
     println!(
-        "node {}: joined a cluster of {} ({} steps, d={} under {})",
-        welcome.id, wl.n, wl.steps, wl.dim, wl.method,
+        "node {}: joined a cluster of {} ({} steps, d={} under {}; membership {})",
+        welcome.id,
+        wl.n,
+        wl.steps,
+        wl.dim,
+        wl.method,
+        if wl.membership.is_some() { "on" } else { "off" },
     );
-    run_deployed(welcome.id as usize, &wl, listener, roster, &tcfg)
+    run_deployed(
+        welcome.id as usize,
+        &wl,
+        listener,
+        roster,
+        &tcfg,
+        fault,
+        std::time::Duration::ZERO,
+    )
 }
 
 /// The deployed run itself, common to seed and joiners: TCP transport
@@ -557,6 +699,8 @@ fn run_deployed(
     listener: std::net::TcpListener,
     roster: Vec<(usize, String)>,
     tcfg: &TransportConfig,
+    fault: Option<FaultConfig>,
+    step_pad: std::time::Duration,
 ) -> Result<()> {
     let monitor = match &tcfg.monitor {
         Some(addr) => {
@@ -576,9 +720,37 @@ fn run_deployed(
     let w_true = data.w_true.clone();
     let grad = minibatch_grad_fn(Arc::clone(&data), 32);
 
-    let cfg = wl.node_config(id);
+    let mut cfg = wl.node_config(id);
+    cfg.step_pad = step_pad;
     let init_err = l2_dist(&vec![0.0; wl.dim], &w_true);
-    let out = node::run_node(&cfg, &mut transport, grad, monitor.as_ref());
+    // Both arms consume the transport: it drops (joining writer threads
+    // and flushing their queues) before the linger, which only exists
+    // to keep the monitor scrapeable.
+    let (out, bytes_out, bytes_in, send_fail) = match fault {
+        Some(fc) => {
+            println!(
+                "node {id}: fault injection on — drop {} dup {} delay {} \
+                 reorder {} partitions {:?} heal {:?}",
+                fc.drop_p, fc.dup_p, fc.delay_p, fc.reorder_p, fc.partitions,
+                fc.heal_after,
+            );
+            let mut faulty = FaultyTransport::new(transport, fc);
+            let out = node::run_node(&cfg, &mut faulty, grad, monitor.as_ref());
+            let s = faulty.stats();
+            println!(
+                "node {id}: injected — {} dropped(retx), {} dup, {} delayed, \
+                 {} reordered, {} partitioned",
+                s.dropped, s.duplicated, s.delayed, s.reordered, s.partitioned,
+            );
+            let inner = faulty.inner();
+            (out, inner.bytes_out(), inner.bytes_in(), inner.send_fail())
+        }
+        None => {
+            let mut tr = transport;
+            let out = node::run_node(&cfg, &mut tr, grad, monitor.as_ref());
+            (out, tr.bytes_out(), tr.bytes_in(), tr.send_fail())
+        }
+    };
     let r = &out.report;
     println!(
         "node {id}: done — applied per origin {:?} ({} rumors, {} dups, {} copies)",
@@ -594,12 +766,20 @@ fn run_deployed(
         r.discarded_msgs,
         r.drain_polls,
     );
+    if r.confirmed_dead > 0 || r.repair_msgs > 0 {
+        println!(
+            "node {id}: membership — {} death(s) confirmed, departed {:?}, \
+             {} repair msg(s), {} repaired rumor(s), {} abandoned send(s)",
+            r.confirmed_dead, r.departed, r.repair_msgs, r.repaired_rumors,
+            send_fail,
+        );
+    }
     println!(
         "node {id}: error {init_err:.4} -> {:.4}  wall {:.3}s  wire {} B out / {} B in",
         l2_dist(&r.model, &w_true),
         r.wall_secs,
-        transport.bytes_out(),
-        transport.bytes_in(),
+        bytes_out,
+        bytes_in,
     );
     if tcfg.linger_secs > 0.0 {
         println!(
@@ -610,7 +790,6 @@ fn run_deployed(
     }
     let dropped = r.dropped_deltas;
     drop(monitor);
-    drop(transport); // joins writer/reader threads, flushing queued frames
     if dropped > 0 {
         bail!("node {id} dropped {dropped} delta(s) — dissemination incomplete");
     }

@@ -30,6 +30,7 @@ fn workload(steps: u64, flush_every: u64, method: Method) -> Workload {
         method,
         gossip: GossipConfig { fanout: 2, flush_every, ttl: 4 },
         drain_timeout: Duration::from_secs(20),
+        membership: None,
     }
 }
 

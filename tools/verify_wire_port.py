@@ -96,13 +96,16 @@ TAG_STEP = 6
 TAG_JOIN = 7
 TAG_WELCOME = 8
 TAG_PEERS = 9
+TAG_SUSPECT = 10
+TAG_CONFIRM = 11
 
 MAX_FRAME = 64 << 20
 
 # Frames are plain tuples: ("delta", [f...]), ("gossip", [rumor...]),
 # ("done", from, rumors), ("leave", from, rumors),
 # ("repair", origin, rumors, [rumor...]), ("step", from, step, beat),
-# ("join", addr), ("welcome", dict), ("peers", [(id, addr)...]).
+# ("join", addr), ("welcome", dict), ("peers", [(id, addr)...]),
+# ("suspect", from, peer), ("confirm", from, peer).
 # A rumor is (origin, seq, ttl, [f...]).
 
 
@@ -166,11 +169,17 @@ def encode(frame):
             + p_u32(w["fanout"])
             + p_u64(w["flush"])
             + p_u32(w["ttl"])
+            + p_u64(w["suspect_us"])
+            + p_u64(w["confirm_us"])
         )
     elif kind == "peers":
         body = bytes([TAG_PEERS]) + p_u32(len(frame[1]))
         for pid, addr in frame[1]:
             body += p_u32(pid) + p_str(addr)
+    elif kind == "suspect":
+        body = bytes([TAG_SUSPECT]) + p_u32(frame[1]) + p_u32(frame[2])
+    elif kind == "confirm":
+        body = bytes([TAG_CONFIRM]) + p_u32(frame[1]) + p_u32(frame[2])
     else:
         raise ValueError(kind)
     assert len(body) <= MAX_FRAME
@@ -256,11 +265,17 @@ def decode(data):
                 "fanout": rd.u32(),
                 "flush": rd.u64(),
                 "ttl": rd.u32(),
+                "suspect_us": rd.u64(),
+                "confirm_us": rd.u64(),
             },
         )
     elif tag == TAG_PEERS:
         n = rd.u32()
         frame = ("peers", [(rd.u32(), rd.string()) for _ in range(n)])
+    elif tag == TAG_SUSPECT:
+        frame = ("suspect", rd.u32(), rd.u32())
+    elif tag == TAG_CONFIRM:
+        frame = ("confirm", rd.u32(), rd.u32())
     else:
         raise ValueError(f"unknown tag {tag}")
     if rd.off != len(rd.buf):
@@ -299,7 +314,7 @@ def gen_addr(rng):
 
 
 def gen_frame(rng):
-    k = rng.next_below(9)
+    k = rng.next_below(11)
     if k == 0:
         return ("delta", gen_delta(rng))
     if k == 1:
@@ -328,9 +343,18 @@ def gen_frame(rng):
                 "fanout": rng.next_below(8),
                 "flush": rng.next_below(8) + 1,
                 "ttl": rng.next_below(16),
+                "suspect_us": rng.next_below(1 << 30),
+                "confirm_us": rng.next_below(1 << 30),
             },
         )
-    return ("peers", [(rng.next_below(64), gen_addr(rng)) for _ in range(rng.next_below(4))])
+    if k == 8:
+        return (
+            "peers",
+            [(rng.next_below(64), gen_addr(rng)) for _ in range(rng.next_below(4))],
+        )
+    if k == 9:
+        return ("suspect", rng.next_below(64), rng.next_below(64))
+    return ("confirm", rng.next_below(64), rng.next_below(64))
 
 
 # ---------------------------------------------------------------------------
@@ -353,7 +377,9 @@ def known_answers():
         encode(("step", 1, 5, 9)).hex()
         == "15000000060100000005000000000000000900000000000000"
     )
-    print("known-answer vectors   OK (3 vectors)")
+    assert encode(("suspect", 2, 5)).hex() == "090000000a0200000005000000"
+    assert encode(("confirm", 1, 4)).hex() == "090000000b0100000004000000"
+    print("known-answer vectors   OK (5 vectors)")
 
 
 def round_trips():
@@ -411,7 +437,7 @@ def cross_digest():
 
 
 # Must equal transport.rs tests::CROSS_DIGEST.
-EXPECTED_DIGEST = 0x149961E406FF0717
+EXPECTED_DIGEST = 0x9C37C247788D5437
 
 
 def main():
