@@ -91,6 +91,24 @@ def main():
         )
         if rep["dropped_deltas"] != 0 or rep["missing_rumors"] != 0:
             sys.exit(f"monitor :{port}: lost updates — report {rep}")
+        bar = doc.get("barrier")
+        if bar is not None:
+            # -1 encodes ASP's unbounded staleness (u64::MAX) — JSON
+            # numbers could not carry the sentinel.
+            theta = [("inf" if t == -1 else int(t)) for t in bar["eff_staleness"]]
+            print(
+                f"monitor :{port} barrier: method={bar['method']} "
+                f"adaptive={bar['adaptive']} waits={bar['barrier_waits']} "
+                f"stalls={bar['stall_ticks']} eff_theta={theta} "
+                f"eff_beta={[int(b) for b in bar['eff_sample']]}"
+            )
+            if not bar["adaptive"]:
+                base = theta[0] if theta else None
+                if any(t != base for t in theta):
+                    sys.exit(
+                        f"monitor :{port}: adaptation is off but effective "
+                        f"staleness diverges across workers: {theta}"
+                    )
         if applied is None:
             applied = doc["applied_of"]
         elif doc["applied_of"] != applied:

@@ -18,6 +18,12 @@
 //! That composition is expressed by [`Probabilistic`], mirroring the
 //! paper's claim that sampling composes with *any* existing barrier.
 //!
+//! Execution layers do not evaluate these predicates by hand: they go
+//! through [`policy::BarrierPolicy`], the single admission core (which
+//! is also where DSSP-style online adaptation of θ/β lives). The
+//! centralised-oracle decision path is [`decide_with_oracle`], used as
+//! the cross-layer equivalence oracle in tests.
+//!
 //! The generalisation lattice (paper §6.1) is tested as properties in
 //! `barrier::tests` and `rust/tests/barrier_properties.rs`:
 //!
@@ -27,12 +33,14 @@
 
 mod asp;
 mod bsp;
+pub mod policy;
 mod probabilistic;
 mod quorum;
 mod ssp;
 
 pub use asp::Asp;
 pub use bsp::Bsp;
+pub use policy::{AdaptiveConfig, BarrierPolicy, BarrierStats};
 pub use probabilistic::Probabilistic;
 pub use quorum::PQuorum;
 pub use ssp::Ssp;

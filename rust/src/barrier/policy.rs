@@ -1,0 +1,721 @@
+//! The one barrier-decision core every execution layer consults.
+//!
+//! Before this module existed, four layers each re-implemented admission
+//! by hand (the simulator, the parameter server, the in-process p2p
+//! engine and the deployed node) — all of them different spellings of
+//! the same window predicate `my_step − min(view) ≤ θ`. [`BarrierPolicy`]
+//! centralises that arithmetic behind two entry points:
+//!
+//! * [`BarrierPolicy::admit_min`] — for ∀-window methods
+//!   ([`BarrierControl::min_view_sufficient`]), which only need the
+//!   minimum of the observed view. Layers that can stream a min (the
+//!   simulator's step tracker, the coordinator) stay O(1) per decision.
+//! * [`BarrierPolicy::admit_view`] — for quorum-style methods that need
+//!   the materialised sample; delegates to the live
+//!   [`BarrierControl::can_advance`].
+//!
+//! The layers keep their own *view acquisition* (oracle tables, sampled
+//! trackers, overlay gossip) — the paper's point is exactly that the
+//! decision composes with any view source — but the decision itself now
+//! has a single owner, pinned against [`super::decide_with_oracle`] by
+//! the cross-layer equivalence suite in `rust/tests/barrier_properties.rs`.
+//!
+//! # Online adaptation (DSSP-style)
+//!
+//! Because every admission flows through the policy, it is also the one
+//! place that can *observe* the barrier: per-crossing wait time, per-step
+//! compute time, and the view-lag distribution. With an
+//! [`AdaptiveConfig`] attached, the policy retunes its **effective**
+//! staleness θ and sample size β online, following Dynamic SSP (Zhao et
+//! al. 2019): when a large fraction of wall-clock time is spent blocked
+//! at the barrier (flash-crowd stragglers), loosen; when waits are
+//! cheap, tighten back toward fresh synchronisation. Decisions are
+//! per-node and purely local — no consensus machinery, the same argument
+//! the paper makes for fully-distributed PSP — and draw **no**
+//! randomness, so an attached-but-never-fed controller (or
+//! `adaptive = None`) leaves every RNG stream and golden trajectory
+//! bit-identical.
+//!
+//! Which knobs move is method-dependent (ROADMAP item 3a):
+//!
+//! | method   | θ adapts | β adapts |
+//! |----------|----------|----------|
+//! | SSP      | yes      | —        |
+//! | pSSP     | yes      | yes (when θ saturates) |
+//! | pQuorum  | no (θ is part of the quorum predicate) | yes |
+//! | BSP/ASP/pBSP | no — the method *is* its bound | no |
+//!
+//! Loosening grows θ multiplicatively (flash crowds need a fast
+//! response) and only then sheds β (observe fewer peers, cutting control
+//! traffic in the storm); tightening decays θ and then grows β back for
+//! better tail coverage. All moves clamp to the configured bounds.
+//!
+//! Two triggers drive the controller, because a crossing-gated window
+//! alone is frozen exactly when it most needs to move — a blocked node
+//! stops crossing, so its window stops filling:
+//!
+//! 1. **Crossing window**: every `window` completed crossings, compare
+//!    the blocked fraction of wall-clock against `loosen_above` /
+//!    `tighten_below`.
+//! 2. **Stall streak**: `window` *consecutive failed admissions* (the
+//!    node is parked at the barrier, rechecking) are one immediate
+//!    loosen — the ramp tracks the straggler gap while blocked, at the
+//!    recheck/poll cadence every engine already has.
+
+use super::{BarrierControl, Method, ViewRequirement};
+
+/// Bounds and cadence for the online controller. Attach one to a
+/// [`BarrierPolicy`] via [`BarrierPolicy::with_adaptive`] to enable
+/// adaptation; `None` keeps the policy bit-identical to the static
+/// method it wraps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Barrier crossings per adaptation round: the controller looks at
+    /// the wait/compute ratio over this many completed steps, then
+    /// decides. Doubles as the stall-streak length — this many
+    /// *consecutive failed admissions* loosen immediately, so a blocked
+    /// node keeps adapting while it cannot cross. Small windows react
+    /// faster to flash crowds; large ones smooth diurnal noise.
+    pub window: u32,
+    /// Fraction of window wall-clock spent blocked above which the
+    /// policy loosens (θ up, then β down).
+    pub loosen_above: f64,
+    /// Fraction below which it tightens (θ down, then β up).
+    pub tighten_below: f64,
+    pub min_staleness: u64,
+    pub max_staleness: u64,
+    pub min_sample: usize,
+    pub max_sample: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            window: 8,
+            loosen_above: 0.20,
+            tighten_below: 0.05,
+            min_staleness: 0,
+            max_staleness: 64,
+            min_sample: 1,
+            max_sample: 64,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Clamp the bounds into a usable shape: `min ≤ max`, a sample of at
+    /// least 1 (β = 0 would silently become ASP), a window of at least 1.
+    pub fn normalized(mut self) -> AdaptiveConfig {
+        self.window = self.window.max(1);
+        self.min_sample = self.min_sample.max(1);
+        self.max_staleness = self.max_staleness.max(self.min_staleness);
+        self.max_sample = self.max_sample.max(self.min_sample);
+        self
+    }
+}
+
+/// Lifetime barrier observations, kept by every policy (adaptive or
+/// not). `barrier_waits`/`stall_ticks` are the unified counters all
+/// engines now report: a *wait* is a crossing that blocked at least
+/// once, a *stall tick* is one failed admission evaluation (the
+/// event-driven simulator parks global-view nodes instead of polling,
+/// so its ticks count park episodes; the polling engines count polls).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BarrierStats {
+    /// Completed barrier crossings observed via `record_crossing`.
+    pub crossings: u64,
+    /// Crossings that blocked (wait > 0) before passing.
+    pub barrier_waits: u64,
+    /// Failed admission evaluations observed via `record_decision`.
+    pub stall_ticks: u64,
+    /// Seconds spent blocked at the barrier, summed over crossings.
+    pub wait_secs: f64,
+    /// Seconds spent computing, summed over crossings.
+    pub busy_secs: f64,
+    /// View-lag distribution (my_step − min observed view) over all
+    /// recorded decisions: running sum, count and max.
+    pub lag_sum: u64,
+    pub lag_count: u64,
+    pub lag_max: u64,
+}
+
+impl BarrierStats {
+    /// Mean view lag over every recorded decision (0 when none).
+    pub fn mean_lag(&self) -> f64 {
+        if self.lag_count == 0 {
+            0.0
+        } else {
+            self.lag_sum as f64 / self.lag_count as f64
+        }
+    }
+}
+
+/// The per-window accumulator + knob-selection state of the controller.
+#[derive(Debug, Clone, Copy)]
+struct AdaptiveState {
+    cfg: AdaptiveConfig,
+    theta_adapts: bool,
+    beta_adapts: bool,
+    win_crossings: u32,
+    win_wait: f64,
+    win_busy: f64,
+    /// Consecutive failed admissions since the last pass — the
+    /// *while-blocked* loosening trigger (see [`BarrierPolicy::record_decision`]).
+    win_fails: u32,
+    retunes: u64,
+}
+
+/// A live barrier-decision handle: the configured [`Method`], its built
+/// [`BarrierControl`], the effective (possibly adapted) θ/β, and the
+/// observation window. See the module docs for the full story.
+pub struct BarrierPolicy {
+    base: Method,
+    control: Box<dyn BarrierControl>,
+    eff_staleness: u64,
+    eff_sample: usize,
+    adaptive: Option<AdaptiveState>,
+    stats: BarrierStats,
+}
+
+impl std::fmt::Debug for BarrierPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BarrierPolicy")
+            .field("base", &self.base)
+            .field("eff_staleness", &self.eff_staleness)
+            .field("eff_sample", &self.eff_sample)
+            .field("adaptive", &self.adaptive.is_some())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl Clone for BarrierPolicy {
+    fn clone(&self) -> Self {
+        BarrierPolicy {
+            base: self.base,
+            control: self.base.build(),
+            eff_staleness: self.eff_staleness,
+            eff_sample: self.eff_sample,
+            adaptive: self.adaptive,
+            stats: self.stats,
+        }
+    }
+}
+
+impl BarrierPolicy {
+    /// A static policy: replays the wrapped method's decisions
+    /// bit-identically and only keeps counters.
+    pub fn new(method: Method) -> BarrierPolicy {
+        BarrierPolicy::with_adaptive(method, None)
+    }
+
+    /// A policy with an optional online controller. `None` == `new`.
+    pub fn with_adaptive(
+        method: Method,
+        adaptive: Option<AdaptiveConfig>,
+    ) -> BarrierPolicy {
+        let control = method.build();
+        let eff_staleness = control.staleness();
+        let eff_sample = match control.view() {
+            ViewRequirement::Sample(beta) => beta,
+            _ => 0,
+        };
+        let (theta_adapts, beta_adapts) = match method {
+            Method::Ssp { .. } => (true, false),
+            Method::Pssp { .. } => (true, true),
+            Method::Pquorum { .. } => (false, true),
+            Method::Bsp | Method::Asp | Method::Pbsp { .. } => (false, false),
+        };
+        let adaptive = adaptive
+            .filter(|_| theta_adapts || beta_adapts)
+            .map(|cfg| AdaptiveState {
+                cfg: cfg.normalized(),
+                theta_adapts,
+                beta_adapts,
+                win_crossings: 0,
+                win_wait: 0.0,
+                win_busy: 0.0,
+                win_fails: 0,
+                retunes: 0,
+            });
+        let mut policy = BarrierPolicy {
+            base: method,
+            control,
+            eff_staleness,
+            eff_sample,
+            adaptive,
+            stats: BarrierStats::default(),
+        };
+        // Start inside the configured bounds so the first window does not
+        // have to walk a far-out-of-range starting point home.
+        if let Some(st) = policy.adaptive {
+            if st.theta_adapts {
+                policy.eff_staleness = policy
+                    .eff_staleness
+                    .clamp(st.cfg.min_staleness, st.cfg.max_staleness);
+            }
+            if st.beta_adapts {
+                policy.eff_sample =
+                    policy.eff_sample.clamp(st.cfg.min_sample, st.cfg.max_sample);
+            }
+        }
+        policy
+    }
+
+    /// The method this policy was configured with.
+    pub fn base(&self) -> Method {
+        self.base
+    }
+
+    /// The method currently in force: the base with the adapted
+    /// effective θ/β substituted in. Equal to `base()` while adaptation
+    /// is off or has not moved anything.
+    pub fn effective(&self) -> Method {
+        match self.base {
+            Method::Ssp { .. } => Method::Ssp { staleness: self.eff_staleness },
+            Method::Pbsp { .. } => Method::Pbsp { sample: self.eff_sample },
+            Method::Pssp { .. } => Method::Pssp {
+                sample: self.eff_sample,
+                staleness: self.eff_staleness,
+            },
+            Method::Pquorum { staleness, quorum_pct, .. } => Method::Pquorum {
+                sample: self.eff_sample,
+                staleness,
+                quorum_pct,
+            },
+            m => m,
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive.is_some()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.control.name()
+    }
+
+    /// The view to acquire for the next decision — with the *effective*
+    /// sample size for the PSP family.
+    pub fn view(&self) -> ViewRequirement {
+        match self.control.view() {
+            ViewRequirement::Sample(_) => ViewRequirement::Sample(self.eff_sample),
+            v => v,
+        }
+    }
+
+    /// The effective staleness bound (θ for SSP-like, 0 for BSP-like,
+    /// `u64::MAX` for ASP).
+    pub fn staleness(&self) -> u64 {
+        self.eff_staleness
+    }
+
+    /// The effective sample size β (0 for global/no-view methods).
+    pub fn sample_size(&self) -> usize {
+        self.eff_sample
+    }
+
+    pub fn min_view_sufficient(&self) -> bool {
+        self.control.min_view_sufficient()
+    }
+
+    /// ∀-window admission from a streamed view minimum. `None` means the
+    /// view was empty (β = 0, or every peer departed) — an empty view
+    /// never blocks, exactly as `can_advance(_, &[])` never blocks.
+    ///
+    /// This is the one spelling of the predicate the whole system uses:
+    /// `my_step − min ≤ θ` in saturating arithmetic. It is value-equal
+    /// to every legacy inline form (`min + θ ≥ my_step`,
+    /// `(step+1) − sⱼ ≤ θ` over all j, ...) — pinned by the equivalence
+    /// suite — and overflow-safe where `min + θ` was not.
+    pub fn admit_min(&self, my_step: u64, min_view: Option<u64>) -> bool {
+        match min_view {
+            None => true,
+            Some(m) => my_step.saturating_sub(m) <= self.eff_staleness,
+        }
+    }
+
+    /// Admission over a materialised view. ∀-window methods reduce to
+    /// [`Self::admit_min`] (same decision, same effective θ);
+    /// quorum-style methods delegate to the live control's
+    /// `can_advance`, which owns the quorum-fraction predicate.
+    pub fn admit_view(&self, my_step: u64, view: &[u64]) -> bool {
+        if view.is_empty() {
+            return true;
+        }
+        if self.control.min_view_sufficient() {
+            self.admit_min(my_step, view.iter().min().copied())
+        } else {
+            self.control.can_advance(my_step, view)
+        }
+    }
+
+    /// Record one admission evaluation: whether it passed, and the
+    /// observed view lag (`my_step − min(view)`, `None` when the method
+    /// needed no view). Failed evaluations are the `stall_ticks` counter.
+    pub fn record_decision(&mut self, passed: bool, lag: Option<u64>) {
+        if !passed {
+            self.stats.stall_ticks += 1;
+        }
+        if let Some(l) = lag {
+            self.stats.lag_sum += l;
+            self.stats.lag_count += 1;
+            self.stats.lag_max = self.stats.lag_max.max(l);
+        }
+        // Loosen *while* blocked: `window` consecutive failed admissions
+        // mean the bound is too tight right now. A purely crossing-gated
+        // controller is frozen exactly when it most needs to move — a
+        // blocked node stops crossing, so its window stops filling — but
+        // failed admissions keep ticking at the recheck/poll cadence and
+        // are just as observable locally.
+        let Some(st) = self.adaptive.as_mut() else { return };
+        if passed {
+            st.win_fails = 0;
+        } else {
+            st.win_fails += 1;
+            if st.win_fails >= st.cfg.window {
+                st.win_fails = 0;
+                st.retunes += 1;
+                self.loosen();
+            }
+        }
+    }
+
+    /// Record a completed barrier crossing: `wait_secs` blocked at the
+    /// barrier (0 when admitted first try) and `busy_secs` of compute
+    /// for the step. Drives the adaptation window; retunes at window
+    /// boundaries when a controller is attached. Never draws randomness.
+    pub fn record_crossing(&mut self, wait_secs: f64, busy_secs: f64) {
+        self.stats.crossings += 1;
+        if wait_secs > 0.0 {
+            self.stats.barrier_waits += 1;
+        }
+        self.stats.wait_secs += wait_secs;
+        self.stats.busy_secs += busy_secs;
+        let Some(st) = self.adaptive.as_mut() else { return };
+        st.win_crossings += 1;
+        st.win_wait += wait_secs.max(0.0);
+        st.win_busy += busy_secs.max(0.0);
+        if st.win_crossings >= st.cfg.window {
+            self.retune();
+        }
+    }
+
+    /// Lifetime observation counters.
+    pub fn stats(&self) -> &BarrierStats {
+        &self.stats
+    }
+
+    /// How many adaptation rounds have fired (0 when static).
+    pub fn retunes(&self) -> u64 {
+        self.adaptive.map_or(0, |st| st.retunes)
+    }
+
+    /// One DSSP-style controller step over the finished window.
+    fn retune(&mut self) {
+        let Some(st) = self.adaptive.as_mut() else { return };
+        let total = st.win_wait + st.win_busy;
+        let frac = if total > 0.0 { st.win_wait / total } else { 0.0 };
+        let cfg = st.cfg;
+        st.win_crossings = 0;
+        st.win_wait = 0.0;
+        st.win_busy = 0.0;
+        st.retunes += 1;
+        if frac > cfg.loosen_above {
+            self.loosen();
+        } else if frac < cfg.tighten_below {
+            self.tighten();
+        }
+    }
+
+    /// Waits dominate: a straggler storm. Open the window fast
+    /// (multiplicative growth), and once θ is pegged, observe fewer
+    /// peers — each probe of a storm costs messages and is likely to
+    /// hit a straggler anyway.
+    fn loosen(&mut self) {
+        let Some(st) = self.adaptive.as_ref() else { return };
+        let (cfg, theta_adapts, beta_adapts) =
+            (st.cfg, st.theta_adapts, st.beta_adapts);
+        if theta_adapts && self.eff_staleness < cfg.max_staleness {
+            let grown = self.eff_staleness + 1 + self.eff_staleness / 2;
+            self.eff_staleness = grown.min(cfg.max_staleness);
+        } else if beta_adapts && self.eff_sample > cfg.min_sample {
+            self.eff_sample -= 1;
+        }
+    }
+
+    /// Waits are cheap: claw freshness back. Decay θ (gentler than the
+    /// growth — AIMD), then widen the sample again for better
+    /// straggler-tail coverage.
+    fn tighten(&mut self) {
+        let Some(st) = self.adaptive.as_ref() else { return };
+        let (cfg, theta_adapts, beta_adapts) =
+            (st.cfg, st.theta_adapts, st.beta_adapts);
+        if theta_adapts && self.eff_staleness > cfg.min_staleness {
+            let cut = 1 + self.eff_staleness / 4;
+            self.eff_staleness =
+                self.eff_staleness.saturating_sub(cut).max(cfg.min_staleness);
+        } else if beta_adapts && self.eff_sample < cfg.max_sample {
+            self.eff_sample += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decide_with_oracle;
+    use super::*;
+    use crate::testing::property;
+
+    #[test]
+    fn static_policy_matches_legacy_predicates() {
+        // Every inline form the engines used to hand-roll, against the
+        // policy's one spelling.
+        let ssp = BarrierPolicy::new(Method::Ssp { staleness: 4 });
+        for (my, min) in [(0u64, 0u64), (5, 1), (6, 1), (9, 5), (10, 5), (3, 7)] {
+            // paramserver coordinator / sim tracker form: min + θ >= my
+            assert_eq!(ssp.admit_min(my, Some(min)), min + 4 >= my, "{my} {min}");
+            // p2p worker form: my.saturating_sub(s) <= θ for the min peer
+            assert_eq!(
+                ssp.admit_min(my, Some(min)),
+                my.saturating_sub(min) <= 4,
+            );
+        }
+        let bsp = BarrierPolicy::new(Method::Bsp);
+        assert!(bsp.admit_min(3, Some(3)));
+        assert!(!bsp.admit_min(3, Some(2)));
+        let asp = BarrierPolicy::new(Method::Asp);
+        assert!(asp.admit_min(u64::MAX, Some(0)));
+        // Empty views never block, for any method.
+        assert!(bsp.admit_min(10, None));
+        assert!(bsp.admit_view(10, &[]));
+    }
+
+    #[test]
+    fn admit_view_matches_decide_with_oracle_for_all_six_methods() {
+        // The policy must agree with the centralised oracle decision for
+        // any view the oracle could have sampled.
+        property("policy == decide_with_oracle", 300, |g| {
+            let methods = [
+                Method::Bsp,
+                Method::Asp,
+                Method::Ssp { staleness: g.u64_in(0, 6) },
+                Method::Pbsp { sample: g.usize_in(1, 16) },
+                Method::Pssp { sample: g.usize_in(1, 16), staleness: g.u64_in(0, 6) },
+                Method::Pquorum {
+                    sample: g.usize_in(1, 16),
+                    staleness: g.u64_in(0, 6),
+                    quorum_pct: g.u64_in(0, 100) as u8,
+                },
+            ];
+            let method = *g.choose(&methods);
+            let n = g.usize_in(1, 48);
+            let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 12)).collect();
+            let my = g.u64_in(0, 12);
+            let policy = BarrierPolicy::new(method);
+            let control = method.build();
+            // Drive both deciders over the same sampled view.
+            let mut rng = g.rng();
+            let mut scratch = Vec::new();
+            let oracle =
+                decide_with_oracle(&*control, my, &steps, &mut rng, &mut scratch);
+            // Re-draw the identical sample for the policy side.
+            let mut rng2 = g.rng();
+            let mine = match policy.view() {
+                ViewRequirement::None => policy.admit_view(my, &[]),
+                ViewRequirement::Global => policy.admit_view(my, &steps),
+                ViewRequirement::Sample(beta) => {
+                    let mut idx = Vec::new();
+                    rng2.sample_into(steps.len(), beta, &mut idx);
+                    let view: Vec<u64> =
+                        idx.iter().map(|&i| steps[i]).collect();
+                    policy.admit_view(my, &view)
+                }
+            };
+            assert_eq!(mine, oracle, "{method:?} my={my} steps={steps:?}");
+        });
+    }
+
+    #[test]
+    fn quorum_boundary_follows_the_trait_not_integer_pct_arithmetic() {
+        // 4-of-5 at 80%: exactly on the quorum — the float predicate
+        // (with its 1e-12 slack) admits. This is the canonical decision
+        // node.rs used to approximate with integer-percent arithmetic.
+        let p = BarrierPolicy::new(Method::Pquorum {
+            sample: 5,
+            staleness: 0,
+            quorum_pct: 80,
+        });
+        assert!(p.admit_view(3, &[3, 3, 3, 3, 0]));
+        assert!(!p.admit_view(3, &[3, 3, 3, 0, 0]));
+        assert!(!p.min_view_sufficient());
+    }
+
+    #[test]
+    fn static_policy_never_moves_and_counts_faithfully() {
+        let mut p = BarrierPolicy::new(Method::Pssp { sample: 10, staleness: 4 });
+        for _ in 0..100 {
+            p.record_decision(false, Some(7));
+            p.record_decision(true, Some(2));
+            p.record_crossing(3.0, 1.0); // waits dominate — would loosen
+        }
+        assert_eq!(p.effective(), p.base());
+        assert_eq!(p.retunes(), 0);
+        assert_eq!(p.stats().crossings, 100);
+        assert_eq!(p.stats().barrier_waits, 100);
+        assert_eq!(p.stats().stall_ticks, 100);
+        assert_eq!(p.stats().lag_max, 7);
+        assert_eq!(p.stats().lag_count, 200);
+        // Waits with zero duration are crossings, not barrier_waits.
+        p.record_crossing(0.0, 1.0);
+        assert_eq!(p.stats().crossings, 101);
+        assert_eq!(p.stats().barrier_waits, 100);
+    }
+
+    #[test]
+    fn adaptive_pssp_loosens_then_tightens_within_bounds() {
+        let cfg = AdaptiveConfig {
+            window: 4,
+            max_staleness: 16,
+            min_sample: 2,
+            max_sample: 12,
+            ..AdaptiveConfig::default()
+        };
+        let mut p = BarrierPolicy::with_adaptive(
+            Method::Pssp { sample: 10, staleness: 2 },
+            Some(cfg),
+        );
+        // Storm: waits dominate every window → θ grows to its cap, then
+        // β starts shedding.
+        for _ in 0..200 {
+            p.record_crossing(5.0, 1.0);
+        }
+        assert_eq!(p.staleness(), 16, "θ should peg at max under a storm");
+        assert_eq!(p.sample_size(), 2, "β should shed once θ is pegged");
+        assert!(p.retunes() >= 2);
+        match p.effective() {
+            Method::Pssp { sample, staleness } => {
+                assert_eq!((sample, staleness), (2, 16));
+            }
+            m => panic!("effective method changed shape: {m:?}"),
+        }
+        // Calm: waits vanish → θ decays home, β recovers to its cap.
+        for _ in 0..400 {
+            p.record_crossing(0.0, 1.0);
+        }
+        assert_eq!(p.staleness(), 0);
+        assert_eq!(p.sample_size(), 12);
+        // The view advertises the *effective* β.
+        assert_eq!(p.view(), ViewRequirement::Sample(12));
+    }
+
+    #[test]
+    fn consecutive_failed_admissions_loosen_while_blocked() {
+        // A blocked node stops crossing, so the crossing window freezes —
+        // the stall path must still move θ. `window` consecutive failed
+        // admissions are one loosen; any pass resets the streak.
+        let cfg = AdaptiveConfig {
+            window: 4,
+            max_staleness: 512,
+            ..AdaptiveConfig::default()
+        };
+        let mut p = BarrierPolicy::with_adaptive(
+            Method::Pssp { sample: 10, staleness: 4 },
+            Some(cfg),
+        );
+        // Three fails then a pass: streak broken, nothing moves.
+        for _ in 0..3 {
+            p.record_decision(false, Some(9));
+        }
+        p.record_decision(true, Some(0));
+        assert_eq!(p.staleness(), 4);
+        assert_eq!(p.retunes(), 0);
+        // Four consecutive fails: one loosen (4 → 4 + 1 + 4/2 = 7).
+        for _ in 0..4 {
+            p.record_decision(false, Some(9));
+        }
+        assert_eq!(p.staleness(), 7);
+        assert_eq!(p.retunes(), 1);
+        // Stay blocked: the ramp keeps tracking the gap, capped at max.
+        for _ in 0..4000 {
+            p.record_decision(false, Some(9));
+        }
+        assert_eq!(p.staleness(), 512);
+        assert_eq!(p.stats().stall_ticks, 3 + 4 + 4000);
+    }
+
+    #[test]
+    fn adaptation_moves_theta_only_for_ssp_and_beta_only_for_pquorum() {
+        let cfg = AdaptiveConfig { window: 2, ..AdaptiveConfig::default() };
+        let mut ssp = BarrierPolicy::with_adaptive(
+            Method::Ssp { staleness: 1 },
+            Some(cfg),
+        );
+        let mut quorum = BarrierPolicy::with_adaptive(
+            Method::Pquorum { sample: 10, staleness: 4, quorum_pct: 80 },
+            Some(cfg),
+        );
+        for _ in 0..50 {
+            ssp.record_crossing(5.0, 1.0);
+            quorum.record_crossing(5.0, 1.0);
+        }
+        assert!(ssp.staleness() > 1);
+        assert_eq!(ssp.sample_size(), 0, "SSP has no sample to adapt");
+        assert_eq!(quorum.staleness(), 4, "quorum θ is part of its predicate");
+        assert!(quorum.sample_size() < 10, "quorum sheds β under a storm");
+        match quorum.effective() {
+            Method::Pquorum { staleness, quorum_pct, .. } => {
+                assert_eq!((staleness, quorum_pct), (4, 80));
+            }
+            m => panic!("effective method changed shape: {m:?}"),
+        }
+    }
+
+    #[test]
+    fn bsp_asp_pbsp_never_adapt_even_when_asked() {
+        for m in [Method::Bsp, Method::Asp, Method::Pbsp { sample: 5 }] {
+            let mut p = BarrierPolicy::with_adaptive(
+                m,
+                Some(AdaptiveConfig { window: 1, ..AdaptiveConfig::default() }),
+            );
+            assert!(!p.is_adaptive(), "{m:?} has no adaptable knobs");
+            for _ in 0..20 {
+                p.record_crossing(9.0, 1.0);
+            }
+            assert_eq!(p.effective(), m);
+        }
+    }
+
+    #[test]
+    fn normalized_config_repairs_degenerate_bounds() {
+        let cfg = AdaptiveConfig {
+            window: 0,
+            min_sample: 0,
+            max_sample: 0,
+            min_staleness: 9,
+            max_staleness: 3,
+            ..AdaptiveConfig::default()
+        }
+        .normalized();
+        assert_eq!(cfg.window, 1);
+        assert_eq!(cfg.min_sample, 1);
+        assert!(cfg.max_sample >= cfg.min_sample);
+        assert!(cfg.max_staleness >= cfg.min_staleness);
+    }
+
+    #[test]
+    fn prop_admit_min_equals_all_peer_window_form() {
+        // The p2p engine's legacy ∀-peer spelling reduces to the min
+        // spelling: every peer passes iff the slowest one does.
+        property("∀-peer window == min window", 200, |g| {
+            let theta = g.u64_in(0, 8);
+            let p = BarrierPolicy::new(Method::Pssp { sample: 3, staleness: theta });
+            let n = g.usize_in(1, 32);
+            let view: Vec<u64> = (0..n).map(|_| g.u64_in(0, 20)).collect();
+            let my = g.u64_in(0, 20);
+            let all_form = view.iter().all(|&s| my.saturating_sub(s) <= theta);
+            assert_eq!(p.admit_min(my, view.iter().min().copied()), all_form);
+            assert_eq!(p.admit_view(my, &view), all_form);
+        });
+    }
+}

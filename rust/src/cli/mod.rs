@@ -100,12 +100,14 @@ USAGE:
   actor exp <id|all> [--nodes N] [--duration S] [--seed N] [--sample B]
             [--staleness T] [--out DIR] [--quick] [--jobs J] [--config FILE]
       Regenerate a paper table/figure. ids: table1 fig1a..fig1e fig2a..fig2c
-      fig3 fig4 fig5, or 'all'. Sweep grids fan out over J worker threads
-      (default: one per core; reports are identical for every J).
+      fig3 fig4 fig5, or 'all'. Extensions (beyond the paper): abl_*
+      ext_churn ext_loss ext_shards ext_p2p ext_crash ext_chaos
+      ext_transport ext_adaptive. Sweep grids fan out over J worker
+      threads (default: one per core; reports are identical for every J).
 
   actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
             [--crash-rate F] [--detect S] [--shard-crash-rate F]
-            [--shard-rehome S] [--shards K] [--config FILE]
+            [--shard-rehome S] [--shards K] [--adaptive ...] [--config FILE]
       One simulated cluster run; prints the progress/error/message summary.
       M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q
       --crash-rate adds F crash-stops/s (victims keep poisoning samples
@@ -116,7 +118,8 @@ USAGE:
 
   actor ps [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
            [--seed N] [--shards K] [--push-batch B] [--schedule-blocks NB]
-           [--replication R] [--vnodes V] [--kill-shard K:A] [--config FILE]
+           [--replication R] [--vnodes V] [--kill-shard K:A] [--adaptive ...]
+           [--config FILE]
       Run the live sharded parameter-server engine (real threads, pure-Rust
       linear SGD): K model shards, gradients accumulated for B steps and
       scattered as one batched push per touched shard. --replication streams
@@ -128,7 +131,7 @@ USAGE:
   actor p2p [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
             [--seed N] [--fanout F] [--flush B] [--ttl T] [--full-mesh]
             [--crash W:S] [--leave W:S] [--suspect-ms F] [--confirm-ms F]
-            [--no-membership] [--config FILE]
+            [--no-membership] [--adaptive ...] [--config FILE]
       Run the fully-distributed p2p engine (real threads, replicated
       model, overlay-sampled barriers). Deltas travel the gossip plane:
       F overlay-sampled shortcuts + the ring successor per forward, B
@@ -149,7 +152,7 @@ USAGE:
              [--fault-drop P] [--fault-dup P] [--fault-delay P]
              [--fault-delay-ms F] [--fault-retry-ms F] [--fault-reorder P]
              [--fault-partition A:B,..] [--fault-heal-ms F] [--fault-seed N]
-             [--config FILE]
+             [--adaptive ...] [--config FILE]
       Seed a real multi-process cluster (deployment plane). Binds the
       listen address, accepts N-1 `actor join` processes, assigns ids in
       connect order, ships each the full workload, then runs as node 0:
@@ -175,12 +178,25 @@ USAGE:
       [fault].
 
   actor join <seed HOST:PORT> [--listen HOST:PORT] [--monitor HOST:PORT]
-             [--linger S] [--drain-secs S] [--fault-*...] [--config FILE]
+             [--linger S] [--drain-secs S] [--fault-*...] [--adaptive ...]
+             [--config FILE]
       Join a seeded cluster: binds its own listener (default port 0 =
       OS-assigned), announces it to the seed, and receives its id plus
       the whole workload — a cluster is configured in exactly one place
       (membership timing included, via the Welcome). --fault-* flags
-      inject faults on this process's wire only.
+      inject faults on this process's wire only; --adaptive is likewise
+      per-process — adaptation is a local decision and never rides the
+      Welcome.
+
+  Adaptive barriers (sim, ps, p2p, node, join): --adaptive turns on the
+  DSSP-style online controller — each node watches its own barrier wait
+  fraction over a sliding window and retunes the staleness bound θ
+  (ssp/pssp) and sample size β (pssp/pquorum) inside configured bounds;
+  bsp/asp/pbsp have no tunable knob and stay static. Tuning flags (each
+  implies --adaptive): --adaptive-window N (crossings per decision, 8),
+  --adaptive-max-staleness T (64), --adaptive-max-sample B (64). Config
+  file: [barrier] adaptive = true plus adaptive_* keys. With adaptation
+  off, every engine replays bit-identically to previous releases.
 
   actor train [--config tiny|small|mid] [--steps N] [--lr F] [--seed N]
               [--workers N] [--method M] [--accum B] [--artifacts DIR]

@@ -34,7 +34,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::barrier::Method;
+use crate::barrier::{AdaptiveConfig, Method};
 use crate::engine::gossip::GossipConfig;
 use crate::engine::membership::MembershipConfig;
 use crate::engine::p2p::{Departure, Dissemination, P2pConfig};
@@ -176,6 +176,60 @@ impl Config {
         }
     }
 
+    /// Online barrier adaptation (DSSP-style) from the `[barrier]`
+    /// section. `None` — the default — keeps every engine bit-identical
+    /// to its static knobs. All tuning keys are optional:
+    ///
+    /// ```toml
+    /// [barrier]
+    /// method = "pssp:10:4"
+    /// adaptive = true
+    /// adaptive_window = 8           # barrier crossings per retune
+    /// adaptive_loosen_above = 0.2   # blocked-time fraction -> loosen
+    /// adaptive_tighten_below = 0.05 # blocked-time fraction -> tighten
+    /// adaptive_min_staleness = 0
+    /// adaptive_max_staleness = 64
+    /// adaptive_min_sample = 1
+    /// adaptive_max_sample = 64
+    /// ```
+    pub fn barrier_adaptive(&self) -> Result<Option<AdaptiveConfig>> {
+        let enabled = match self.get("barrier", "adaptive") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("[barrier] adaptive must be a bool"))?,
+        };
+        if !enabled {
+            return Ok(None);
+        }
+        let d = AdaptiveConfig::default();
+        let frac = |key: &str, default: f64| -> Result<f64> {
+            let v = self.f64_or("barrier", key, default)?;
+            if !(0.0..=1.0).contains(&v) {
+                bail!("[barrier] {key} must be a fraction in [0, 1]");
+            }
+            Ok(v)
+        };
+        Ok(Some(
+            AdaptiveConfig {
+                window: self
+                    .usize_or("barrier", "adaptive_window", d.window as usize)?
+                    as u32,
+                loosen_above: frac("adaptive_loosen_above", d.loosen_above)?,
+                tighten_below: frac("adaptive_tighten_below", d.tighten_below)?,
+                min_staleness: self
+                    .usize_or("barrier", "adaptive_min_staleness", d.min_staleness as usize)?
+                    as u64,
+                max_staleness: self
+                    .usize_or("barrier", "adaptive_max_staleness", d.max_staleness as usize)?
+                    as u64,
+                min_sample: self.usize_or("barrier", "adaptive_min_sample", d.min_sample)?,
+                max_sample: self.usize_or("barrier", "adaptive_max_sample", d.max_sample)?,
+            }
+            .normalized(),
+        ))
+    }
+
     /// Build the live sharded parameter-server engine configuration from
     /// the `[ps]` section (all keys optional) plus `[barrier] method`:
     ///
@@ -225,6 +279,7 @@ impl Config {
             vnodes: self.usize_or("ps", "vnodes", d.vnodes)?,
             kill_shard,
             schedule_blocks,
+            adaptive: self.barrier_adaptive()?,
             ..d
         })
     }
@@ -298,6 +353,7 @@ impl Config {
             dissemination,
             membership: self.membership_config()?,
             churn,
+            adaptive: self.barrier_adaptive()?,
             ..d
         })
     }
@@ -391,6 +447,10 @@ impl Config {
             n_shards: self.usize_or("churn", "shards", d.n_shards)?.max(1),
             sample_interval: self.f64_or("cluster", "sample_interval", d.sample_interval)?,
             sgd,
+            // Time-varying load is a scenario knob (set programmatically
+            // by experiments); launch files only toggle adaptation.
+            load_profile: None,
+            adaptive: self.barrier_adaptive()?,
         })
     }
 
@@ -799,6 +859,54 @@ kill_shard = "2:3"
         let c = Config::parse("[ps]\nkill_shard = 3").unwrap();
         assert!(c.ps_config().is_err());
         assert!(parse_kill_shard("a:1").is_err());
+    }
+
+    #[test]
+    fn barrier_adaptive_keys_build_adaptive_config() {
+        // Absent or false: adaptation off everywhere.
+        assert!(Config::parse("").unwrap().barrier_adaptive().unwrap().is_none());
+        let c = Config::parse("[barrier]\nadaptive = false").unwrap();
+        assert!(c.barrier_adaptive().unwrap().is_none());
+        assert!(c.ps_config().unwrap().adaptive.is_none());
+        assert!(c.p2p_config().unwrap().adaptive.is_none());
+        assert!(c.cluster_config().unwrap().adaptive.is_none());
+        // Enabled with tuning keys, flowing into every engine config.
+        let src = r#"
+[barrier]
+method = "pssp:10:4"
+adaptive = true
+adaptive_window = 4
+adaptive_loosen_above = 0.3
+adaptive_tighten_below = 0.1
+adaptive_max_staleness = 32
+adaptive_max_sample = 16
+"#;
+        let c = Config::parse(src).unwrap();
+        let a = c.barrier_adaptive().unwrap().expect("enabled");
+        assert_eq!(a.window, 4);
+        assert_eq!(a.loosen_above, 0.3);
+        assert_eq!(a.tighten_below, 0.1);
+        assert_eq!(a.max_staleness, 32);
+        assert_eq!(a.max_sample, 16);
+        assert_eq!(a.min_staleness, AdaptiveConfig::default().min_staleness);
+        assert_eq!(c.ps_config().unwrap().adaptive, Some(a));
+        assert_eq!(c.p2p_config().unwrap().adaptive, Some(a));
+        assert_eq!(c.cluster_config().unwrap().adaptive, Some(a));
+        assert!(c.cluster_config().unwrap().load_profile.is_none());
+        // Bad values are rejected loudly, and degenerate bounds are
+        // normalized rather than silently inverted.
+        let c = Config::parse("[barrier]\nadaptive = 3").unwrap();
+        assert!(c.barrier_adaptive().is_err());
+        let c = Config::parse("[barrier]\nadaptive = true\nadaptive_loosen_above = 1.5")
+            .unwrap();
+        assert!(c.barrier_adaptive().is_err());
+        let c = Config::parse(
+            "[barrier]\nadaptive = true\nadaptive_min_sample = 0\nadaptive_max_staleness = 0\nadaptive_min_staleness = 3",
+        )
+        .unwrap();
+        let a = c.barrier_adaptive().unwrap().unwrap();
+        assert_eq!(a.min_sample, 1);
+        assert!(a.max_staleness >= a.min_staleness);
     }
 
     #[test]

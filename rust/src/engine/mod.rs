@@ -144,4 +144,41 @@ pub struct EngineReport {
     /// successor list). Setup-time replica seeding is free; only
     /// failure-driven transfers count.
     pub handoff_bytes: u64,
+    // -- unified barrier counters (every engine, via BarrierPolicy) --
+    /// Barrier crossings that blocked at least once before passing,
+    /// summed over workers. Same semantics in every engine and in
+    /// [`crate::sim::SimResult::barrier_waits`].
+    pub barrier_waits: u64,
+    /// Failed admission evaluations (poll attempts that did not pass),
+    /// summed over workers.
+    pub stall_ticks: u64,
+    /// Per-worker *effective* staleness bound after online adaptation —
+    /// equal to the configured θ everywhere when adaptation is off
+    /// (`u64::MAX` for ASP). Indexed by worker id.
+    pub eff_staleness: Vec<u64>,
+    /// Per-worker effective sample size β (0 for global/no-view methods).
+    pub eff_sample: Vec<u64>,
+}
+
+/// One worker's barrier-policy outcome, in the shape the engines fold
+/// into [`EngineReport`]: lifetime counters plus the final effective
+/// θ/β. Built from the worker's [`crate::barrier::BarrierPolicy`] right
+/// before its thread returns.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BarrierOut {
+    pub waits: u64,
+    pub ticks: u64,
+    pub eff_staleness: u64,
+    pub eff_sample: u64,
+}
+
+impl BarrierOut {
+    pub fn of(policy: &crate::barrier::BarrierPolicy) -> BarrierOut {
+        BarrierOut {
+            waits: policy.stats().barrier_waits,
+            ticks: policy.stats().stall_ticks,
+            eff_staleness: policy.staleness(),
+            eff_sample: policy.sample_size() as u64,
+        }
+    }
 }

@@ -50,7 +50,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::barrier::Method;
+use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
 use crate::engine::gossip::{GossipConfig, GossipNode};
 use crate::engine::membership::{evict_from_view, FailureDetector, MembershipConfig, PeerState};
 use crate::engine::p2p::{PeerMsg, MIN_DRAIN_POLL};
@@ -106,6 +106,12 @@ pub struct NodeConfig {
     /// repair. Test/experiment hook; a real deployment crashes by
     /// dying.
     pub crash_at: Option<u64>,
+    /// Online barrier adaptation (DSSP-style). Deliberately **not** part
+    /// of [`Workload`]/`Welcome`: adaptation is a per-node-local policy
+    /// (each node retunes its own θ/β from its own wait history), so a
+    /// joiner opts in with its own flag and the wire format is
+    /// untouched. `None` = static knobs, legacy decisions exactly.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 /// Cluster-wide workload as the seed node knows it — everything a
@@ -162,6 +168,7 @@ impl Workload {
             membership: self.membership.clone(),
             step_pad: Duration::ZERO,
             crash_at: None,
+            adaptive: None,
         }
     }
 
@@ -419,6 +426,49 @@ pub fn status_json(
                 ("wall_secs", Json::Num(report.wall_secs)),
             ]),
         ),
+        (
+            "barrier",
+            obj(vec![
+                ("method", Json::Str(format!("{}", cfg.method))),
+                (
+                    "adaptive",
+                    Json::Bool(
+                        BarrierPolicy::with_adaptive(cfg.method, cfg.adaptive)
+                            .is_adaptive(),
+                    ),
+                ),
+                ("barrier_waits", Json::Num(report.barrier_waits as f64)),
+                ("stall_ticks", Json::Num(report.stall_ticks as f64)),
+                // ASP's unbounded staleness (u64::MAX) is encoded as -1:
+                // JSON numbers are f64 and would mangle the sentinel.
+                (
+                    "eff_staleness",
+                    Json::Arr(
+                        report
+                            .eff_staleness
+                            .iter()
+                            .map(|&s| {
+                                if s == u64::MAX {
+                                    Json::Num(-1.0)
+                                } else {
+                                    Json::Num(s as f64)
+                                }
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "eff_sample",
+                    Json::Arr(
+                        report
+                            .eff_sample
+                            .iter()
+                            .map(|&b| Json::Num(b as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
     ];
     if let Some(ms) = membership {
         doc.push((
@@ -457,6 +507,11 @@ struct NodeState {
     me: usize,
     n: usize,
     gossip: GossipNode,
+    /// The single admission authority for this node. With adaptation
+    /// off its decisions are value-identical to the legacy inline
+    /// per-method match (and the quorum fraction follows the barrier
+    /// trait's real-valued predicate, not integer-percent arithmetic).
+    policy: BarrierPolicy,
     ring: Ring,
     w: Vec<f32>,
     /// Last known completed-step count per peer (fed by `Step` frames).
@@ -798,42 +853,33 @@ impl NodeState {
     }
 
     /// Can this node start computing step `my_step`? Returns the pass
-    /// verdict and the overlay routing messages the sample cost.
-    fn barrier_pass(&mut self, my_step: u64, method: &Method, rng: &mut Rng) -> (bool, u64) {
-        let min_all = || (0..self.n).filter(|&j| j != self.me).map(|j| self.view(j)).min();
-        match method {
-            Method::Asp => (true, 0),
-            Method::Bsp => (min_all().map_or(true, |m| m >= my_step), 0),
-            Method::Ssp { staleness } => {
-                (min_all().map_or(true, |m| my_step.saturating_sub(m) <= *staleness), 0)
+    /// verdict and the overlay routing messages the sample cost. The
+    /// decision itself is the policy's; this method only gathers the
+    /// view — full step table for global methods, an overlay sample for
+    /// the probabilistic family.
+    fn barrier_pass(&mut self, my_step: u64, rng: &mut Rng) -> (bool, u64) {
+        let (pass, lag, msgs) = match self.policy.view() {
+            ViewRequirement::None => (true, None, 0),
+            ViewRequirement::Global => {
+                let steps: Vec<u64> = (0..self.n)
+                    .filter(|&j| j != self.me)
+                    .map(|j| self.view(j))
+                    .collect();
+                let lag =
+                    steps.iter().min().map(|&m| my_step.saturating_sub(m));
+                (self.policy.admit_view(my_step, &steps), lag, 0)
             }
-            Method::Pbsp { sample } => {
-                let (peers, msgs) = self.ring.sample_nodes(self.me, *sample, rng);
-                let pass = peers.iter().map(|&j| self.view(j)).min().map_or(true, |m| m >= my_step);
-                (pass, msgs)
+            ViewRequirement::Sample(beta) => {
+                let (peers, msgs) = self.ring.sample_nodes(self.me, beta, rng);
+                let steps: Vec<u64> =
+                    peers.iter().map(|&j| self.view(j)).collect();
+                let lag =
+                    steps.iter().min().map(|&m| my_step.saturating_sub(m));
+                (self.policy.admit_view(my_step, &steps), lag, msgs)
             }
-            Method::Pssp { sample, staleness } => {
-                let (peers, msgs) = self.ring.sample_nodes(self.me, *sample, rng);
-                let pass = peers
-                    .iter()
-                    .map(|&j| self.view(j))
-                    .min()
-                    .map_or(true, |m| my_step.saturating_sub(m) <= *staleness);
-                (pass, msgs)
-            }
-            Method::Pquorum { sample, staleness, quorum_pct } => {
-                let (peers, msgs) = self.ring.sample_nodes(self.me, *sample, rng);
-                if peers.is_empty() {
-                    return (true, msgs);
-                }
-                let within = peers
-                    .iter()
-                    .filter(|&&j| my_step.saturating_sub(self.view(j)) <= *staleness)
-                    .count();
-                let pass = within * 100 >= peers.len() * *quorum_pct as usize;
-                (pass, msgs)
-            }
-        }
+        };
+        self.policy.record_decision(pass, lag);
+        (pass, msgs)
     }
 }
 
@@ -870,6 +916,7 @@ pub fn run_node<T: Transport>(
         me,
         n,
         gossip,
+        policy: BarrierPolicy::with_adaptive(cfg.method, cfg.adaptive),
         ring: Ring::with_nodes(n, cfg.seed),
         w: vec![0.0; cfg.dim],
         steps_done: vec![0; n],
@@ -916,6 +963,11 @@ pub fn run_node<T: Transport>(
     beat += 1;
     broadcast_step(&mut st, transport, 0, beat);
     let mut last_announce = Instant::now();
+    // Wait/busy bookkeeping for the policy's adaptation window: the
+    // barrier for a step opens at its first admission check and closes
+    // at the pass; everything since the previous pass is compute.
+    let mut iter_started = Instant::now();
+    let mut barrier_entered: Option<Instant> = None;
 
     while step < cfg.steps {
         if cfg.crash_at == Some(step) {
@@ -941,7 +993,8 @@ pub fn run_node<T: Transport>(
         // confirmed with the dead origin's final flush still queued
         // would broadcast an undercounted Repair.
         st.membership_tick(transport, false);
-        let (pass, sample_msgs) = st.barrier_pass(step, &cfg.method, &mut rng);
+        let entered = *barrier_entered.get_or_insert_with(Instant::now);
+        let (pass, sample_msgs) = st.barrier_pass(step, &mut rng);
         st.control_msgs += sample_msgs;
         if !pass {
             if let Some(f) = transport.recv_timeout(Duration::from_millis(2)) {
@@ -958,6 +1011,12 @@ pub fn run_node<T: Transport>(
             }
             continue;
         }
+        st.policy.record_crossing(
+            entered.elapsed().as_secs_f64(),
+            entered.duration_since(iter_started).as_secs_f64(),
+        );
+        barrier_entered = None;
+        iter_started = Instant::now();
 
         if !cfg.step_pad.is_zero() {
             // Synthetic compute: pins run duration for the chaos demos.
@@ -1104,6 +1163,10 @@ fn interim_report(st: &NodeState, t0: Instant, drain_polls: u64) -> EngineReport
         confirmed_dead: st.confirmed_dead,
         repair_msgs: st.repair_msgs,
         repaired_rumors: st.repaired_rumors,
+        barrier_waits: st.policy.stats().barrier_waits,
+        stall_ticks: st.policy.stats().stall_ticks,
+        eff_staleness: vec![st.policy.staleness()],
+        eff_sample: vec![st.policy.sample_size() as u64],
         // Everyone no longer in our overlay view: graceful leavers and
         // confirmed-dead peers alike.
         departed: (0..st.n).filter(|&j| st.ring.ring_id_of(j).is_none()).collect(),

@@ -56,10 +56,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::actor::System;
-use crate::barrier::{Method, ViewRequirement};
+use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
 use crate::engine::gossip::{GossipConfig, GossipNode, Rumor};
 use crate::engine::membership::{self, FailureDetector, MembershipConfig};
-use crate::engine::{EngineReport, GradFn};
+use crate::engine::{BarrierOut, EngineReport, GradFn};
 use crate::log_warn;
 use crate::overlay::Ring;
 use crate::util::rng::Rng;
@@ -145,6 +145,11 @@ pub struct P2pConfig {
     pub membership: Option<MembershipConfig>,
     /// Scripted mid-run departures (at most one per worker is honoured).
     pub churn: Vec<Departure>,
+    /// Online barrier adaptation (DSSP-style). `None` = static knobs;
+    /// the policy then replays the legacy admission decisions exactly.
+    /// Each worker adapts its own θ/β locally — no consensus round,
+    /// which is the point: it composes with "no global state anywhere".
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for P2pConfig {
@@ -161,6 +166,7 @@ impl Default for P2pConfig {
             drain_timeout: Duration::from_secs(30),
             membership: Some(MembershipConfig::default()),
             churn: Vec::new(),
+            adaptive: None,
         }
     }
 }
@@ -181,6 +187,7 @@ struct WorkerOut {
     repaired_rumors: u64,
     drain_polls: u64,
     departed: bool,
+    barrier: BarrierOut,
 }
 
 #[inline]
@@ -199,7 +206,6 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
          parameter-server engine (paper §4.1: only ASP/PSP work in case 4)",
         barrier.name()
     );
-    let staleness = barrier.staleness();
     let start = Instant::now();
     let sys = System::new();
     let n = cfg.n_workers;
@@ -254,8 +260,14 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
             let addrs = Arc::clone(&addrs);
             let mut w = init_w.clone();
             let cfg = cfg.clone();
-            let view_req = cfg.method.build().view();
             sys.spawn::<(), _, _>(&format!("p2p-{i}"), move |_mb| {
+                // The single admission authority for this worker. With
+                // `adaptive: None` its decisions are value-identical to
+                // the legacy inline per-peer lag check (and it makes the
+                // quorum fraction actually bind for pQuorum, which the
+                // old inline ∀-window silently ignored).
+                let mut policy =
+                    BarrierPolicy::with_adaptive(cfg.method, cfg.adaptive);
                 // Three independent streams so gradient seeds stay a pure
                 // function of (engine seed, worker, step) no matter how
                 // many barrier polls or gossip relays interleave.
@@ -545,6 +557,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 let mut departed = false;
 
                 for step in 0..cfg.steps_per_worker {
+                    let step_t0 = Instant::now();
                     if let Some(dep) = &my_departure {
                         if step >= dep.at_step {
                             departed = true;
@@ -647,20 +660,29 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     // fully-distributed barrier: sample the overlay view
                     // (evicted nodes are invisible, so a dead straggler
                     // stops poisoning samples the moment it is confirmed)
+                    let entered = Instant::now();
                     loop {
-                        let pass = match view_req {
-                            ViewRequirement::None => true,
+                        // Re-read the view each attempt: under adaptation
+                        // β can change between polls of the same crossing.
+                        let (pass, lag) = match policy.view() {
+                            ViewRequirement::None => (true, None),
                             ViewRequirement::Sample(beta) => {
                                 let (peers, hops) =
                                     view.sample_nodes(i, beta, &mut ctrl_rng);
                                 control_msgs += hops + 2 * peers.len() as u64;
-                                peers.iter().all(|&p| {
-                                    let sp = steps[p].load(Ordering::Acquire);
-                                    (step + 1).saturating_sub(sp) <= staleness
-                                })
+                                let sampled: Vec<u64> = peers
+                                    .iter()
+                                    .map(|&p| steps[p].load(Ordering::Acquire))
+                                    .collect();
+                                let lag = sampled
+                                    .iter()
+                                    .min()
+                                    .map(|&m| (step + 1).saturating_sub(m));
+                                (policy.admit_view(step + 1, &sampled), lag)
                             }
                             ViewRequirement::Global => unreachable!(),
                         };
+                        policy.record_decision(pass, lag);
                         if pass {
                             break;
                         }
@@ -673,6 +695,10 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                         membership_tick!();
                         std::thread::sleep(cfg.poll);
                     }
+                    policy.record_crossing(
+                        entered.elapsed().as_secs_f64(),
+                        entered.duration_since(step_t0).as_secs_f64(),
+                    );
                 }
 
                 let mut dropped_deltas = 0u64;
@@ -865,6 +891,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     repaired_rumors,
                     drain_polls,
                     departed,
+                    barrier: BarrierOut::of(&policy),
                 }
             })
         })
@@ -888,6 +915,10 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         report.repair_msgs += out.repair_msgs;
         report.repaired_rumors += out.repaired_rumors;
         report.drain_polls += out.drain_polls;
+        report.barrier_waits += out.barrier.waits;
+        report.stall_ticks += out.barrier.ticks;
+        report.eff_staleness.push(out.barrier.eff_staleness);
+        report.eff_sample.push(out.barrier.eff_sample);
         if out.departed {
             report.departed.push(i);
         }

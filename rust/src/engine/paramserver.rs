@@ -55,9 +55,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::actor::{Address, System};
-use crate::barrier::{Method, ViewRequirement};
+use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
 use crate::engine::membership::{FailureDetector, MembershipConfig};
-use crate::engine::{EngineError, EngineReport, GradFn};
+use crate::engine::{BarrierOut, EngineError, EngineReport, GradFn};
 use crate::overlay::{node_ring_id, Ring};
 use crate::sampling::StepTracker;
 use crate::util::rng::Rng;
@@ -115,8 +115,13 @@ pub enum ShardMsg {
 pub enum CoordMsg {
     /// Worker reports that it advanced to `step`.
     Report { node: u32, step: u64 },
-    /// Global-view barrier check: may a worker at `step` advance?
-    Barrier { step: u64, reply: Sender<bool> },
+    /// Global-view barrier read: the tracked global minimum step, or
+    /// `None` when a shard is lost (the barrier must release so
+    /// survivors can observe the dead route and abort). The admission
+    /// *decision* happens at the worker, through its
+    /// [`crate::barrier::BarrierPolicy`] — the coordinator only serves
+    /// the view, which is what lets each worker tune its own θ locally.
+    MinStep { reply: Sender<Option<u64>> },
     /// Centralised sampling primitive: min step over β sampled peers.
     SampleMin { node: u32, beta: usize, reply: Sender<Option<u64>> },
     /// Worker observed shard `shard`'s routed actor go silent (failed
@@ -183,6 +188,10 @@ pub struct PsConfig {
     /// batch. Requires `replication ≥ 1` and `n_shards ≥ 2` (a replica
     /// must exist to inherit the block).
     pub kill_shard: Option<(usize, u64)>,
+    /// Online barrier adaptation (DSSP-style). `None` = static knobs;
+    /// the policy then replays the legacy admission decisions exactly.
+    /// Each worker adapts its own θ/β locally — no consensus round.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for PsConfig {
@@ -202,6 +211,7 @@ impl Default for PsConfig {
             replication: 0,
             vnodes: 0,
             kill_shard: None,
+            adaptive: None,
         }
     }
 }
@@ -336,6 +346,8 @@ struct WorkerDone {
     steps_done: u64,
     /// Set when the worker aborted on a [`SHARD_LOST`] route.
     lost_shard: Option<usize>,
+    /// Barrier-policy outcome: wait/stall counters + final effective θ/β.
+    barrier: BarrierOut,
 }
 
 /// Coordinator-side failover state: the routing table plus the
@@ -527,8 +539,7 @@ pub fn try_run(
     let start = Instant::now();
     let sys = System::new();
     let method = cfg.method;
-    let barrier = method.build();
-    let staleness = barrier.staleness();
+    let adaptive = cfg.adaptive;
     let lr = cfg.lr;
     let n = cfg.n_workers;
     let seed = cfg.seed;
@@ -697,14 +708,18 @@ pub fn try_run(
                     reports += 1;
                     tracker.advance_to(node as usize, step);
                 }
-                CoordMsg::Barrier { step, reply } => {
+                CoordMsg::MinStep { reply } => {
                     // A lost shard means aborted workers will never report
-                    // again: release the barrier so survivors advance to
-                    // their next pull, observe the dead route, and abort
-                    // with a partial report instead of polling forever.
-                    let pass = fo.route.contains(&SHARD_LOST)
-                        || tracker.min_step() + staleness >= step;
-                    let _ = reply.send(pass);
+                    // again: reply `None` so the worker's policy releases
+                    // the barrier, the survivor advances to its next pull,
+                    // observes the dead route, and aborts with a partial
+                    // report instead of polling forever.
+                    let m = if fo.route.contains(&SHARD_LOST) {
+                        None
+                    } else {
+                        Some(tracker.min_step())
+                    };
+                    let _ = reply.send(m);
                 }
                 CoordMsg::SampleMin { node, beta, reply } => {
                     // Same release-on-loss rule: `None` reads as "pass".
@@ -734,7 +749,6 @@ pub fn try_run(
     });
 
     // ---- workers ----
-    let view = method.build().view();
     let workers: Vec<_> = (0..n)
         .map(|i| {
             let shard_addrs = peers.clone();
@@ -753,6 +767,10 @@ pub fn try_run(
             let schedule_blocks = cfg.schedule_blocks;
             sys.spawn::<(), WorkerDone, _>(&format!("ps-worker-{i}"), move |_mb| {
                 let mut rng = Rng::new(wseed);
+                // The single admission authority for this worker. With
+                // `adaptive: None` its decisions are value-identical to
+                // the legacy inline `min + θ >= step + 1` checks.
+                let mut policy = BarrierPolicy::with_adaptive(method, adaptive);
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
                 // Local copy of the shard -> primary routing table,
@@ -765,6 +783,7 @@ pub fn try_run(
                 let mut touched = vec![false; n_shards];
                 let mut pending: u64 = 0;
                 for step in 0..steps {
+                    let step_t0 = Instant::now();
                     // pull: gather every shard's block through one
                     // channel, re-routing around dead primaries
                     let mut need = vec![true; n_shards];
@@ -812,6 +831,7 @@ pub fn try_run(
                                         update_msgs,
                                         steps_done: step,
                                         lost_shard: None,
+                                        barrier: BarrierOut::of(&policy),
                                     };
                                 }
                                 Refresh::Lost(ls) => {
@@ -824,6 +844,7 @@ pub fn try_run(
                                         update_msgs,
                                         steps_done: step,
                                         lost_shard: Some(ls),
+                                        barrier: BarrierOut::of(&policy),
                                     };
                                 }
                             }
@@ -942,23 +963,32 @@ pub fn try_run(
                     if step + 1 == steps {
                         break;
                     }
+                    let entered = Instant::now();
                     loop {
-                        let pass = match view {
-                            ViewRequirement::None => true,
+                        // Re-read the view each attempt: under adaptation
+                        // β can change between polls of the same crossing.
+                        let (pass, lag) = match policy.view() {
+                            ViewRequirement::None => (true, None),
                             ViewRequirement::Global => {
                                 let (tx, rx) = channel();
                                 control_msgs += 2;
-                                if !coord_addr
-                                    .send(CoordMsg::Barrier { step: step + 1, reply: tx })
-                                {
+                                if !coord_addr.send(CoordMsg::MinStep { reply: tx }) {
                                     return WorkerDone {
                                         control_msgs,
                                         update_msgs,
                                         steps_done: step + 1,
                                         lost_shard: None,
+                                        barrier: BarrierOut::of(&policy),
                                     };
                                 }
-                                rx.recv().unwrap_or(true)
+                                match rx.recv() {
+                                    // `None` = shard lost: release.
+                                    Ok(Some(min)) => (
+                                        policy.admit_min(step + 1, Some(min)),
+                                        Some((step + 1).saturating_sub(min)),
+                                    ),
+                                    _ => (true, None),
+                                }
                             }
                             ViewRequirement::Sample(beta) => {
                                 let (tx, rx) = channel();
@@ -973,25 +1003,36 @@ pub fn try_run(
                                         update_msgs,
                                         steps_done: step + 1,
                                         lost_shard: None,
+                                        barrier: BarrierOut::of(&policy),
                                     };
                                 }
                                 match rx.recv() {
-                                    Ok(Some(min)) => min + staleness >= step + 1,
-                                    _ => true,
+                                    // Empty sample / lost shard: release.
+                                    Ok(Some(min)) => (
+                                        policy.admit_min(step + 1, Some(min)),
+                                        Some((step + 1).saturating_sub(min)),
+                                    ),
+                                    _ => (true, None),
                                 }
                             }
                         };
+                        policy.record_decision(pass, lag);
                         if pass {
                             break;
                         }
                         std::thread::sleep(poll);
                     }
+                    policy.record_crossing(
+                        entered.elapsed().as_secs_f64(),
+                        entered.duration_since(step_t0).as_secs_f64(),
+                    );
                 }
                 WorkerDone {
                     control_msgs,
                     update_msgs,
                     steps_done: steps,
                     lost_shard: None,
+                    barrier: BarrierOut::of(&policy),
                 }
             })
         })
@@ -1002,6 +1043,10 @@ pub fn try_run(
     let mut update_msgs = 0;
     let mut worker_steps = Vec::with_capacity(n);
     let mut lost_reports: Vec<usize> = Vec::new();
+    let mut barrier_waits = 0u64;
+    let mut stall_ticks = 0u64;
+    let mut eff_staleness = Vec::with_capacity(n);
+    let mut eff_sample = Vec::with_capacity(n);
     for wkr in workers {
         let (addr, handle) = wkr.into_parts();
         drop(addr);
@@ -1009,6 +1054,10 @@ pub fn try_run(
         control_msgs += done.control_msgs;
         update_msgs += done.update_msgs;
         worker_steps.push(done.steps_done);
+        barrier_waits += done.barrier.waits;
+        stall_ticks += done.barrier.ticks;
+        eff_staleness.push(done.barrier.eff_staleness);
+        eff_sample.push(done.barrier.eff_sample);
         if let Some(s) = done.lost_shard {
             lost_reports.push(s);
         }
@@ -1093,6 +1142,10 @@ pub fn try_run(
         replica_pulls: dones.iter().map(|d| d.replica_pulls).sum(),
         handoff_bytes: dones.iter().map(|d| d.handoff_bytes).sum(),
         discarded_msgs: dones.iter().map(|d| d.discarded).sum(),
+        barrier_waits,
+        stall_ticks,
+        eff_staleness,
+        eff_sample,
         ..EngineReport::default()
     };
     if lost.is_empty() {

@@ -1,0 +1,277 @@
+//! `ext_adaptive` — the adaptive barrier controller against every static
+//! bound it could have been (ROADMAP item 3a, DSSP-style).
+//!
+//! Two time-varying load regimes, neither of which a *fixed* staleness
+//! bound can be right for:
+//!
+//! * **flash crowd** — 30% of the nodes run 6× slower for the middle
+//!   60% of the run, then recover. A tight θ throttles the whole
+//!   cluster against the crowd; a loose θ gives the steady phases away.
+//!   The adaptive pSSP starts tight (θ=4), ramps θ up *while its nodes
+//!   are blocked* (the stall-streak trigger — a blocked node stops
+//!   crossing, so a purely crossing-gated window would freeze exactly
+//!   when it must move), and decays home once the crowd clears.
+//! * **diurnal** — per-node phase-shifted sinusoidal load. Reported for
+//!   shape (no assertion): the swing is smooth enough that a well-chosen
+//!   static bound is competitive, which is itself the point — adaptation
+//!   pays where the load *changes regime*, not where it breathes.
+//!
+//! The scenario races every arm to a target normalised SGD error and
+//! asserts, in the function body (so the CI smoke job enforces it
+//! through the release binary), that under the flash crowd the adaptive
+//! arm reaches the target strictly before **every** static θ — including
+//! θ=32, the bound an oracle would have picked for the crowd itself.
+
+use crate::barrier::{AdaptiveConfig, Method};
+use crate::exp::{par_map, ExpOpts, Report};
+use crate::sim::{ClusterConfig, LoadProfile, SgdConfig, SimResult, Simulator};
+
+/// Normalised-error finish line every arm races to.
+const TARGET_ERR: f64 = 0.015;
+
+/// Static θ grid the adaptive arm must beat under the flash crowd.
+const STATIC_THETAS: [u64; 4] = [0, 2, 8, 32];
+
+/// β shared by every pSSP arm (static and adaptive base).
+const BETA: usize = 10;
+
+/// One experiment arm: a label, a method, and an optional controller.
+#[derive(Clone, Copy)]
+struct Arm {
+    label: &'static str,
+    method: Method,
+    adaptive: Option<AdaptiveConfig>,
+}
+
+fn arms() -> Vec<Arm> {
+    let mut v: Vec<Arm> = STATIC_THETAS
+        .iter()
+        .map(|&theta| Arm {
+            label: match theta {
+                0 => "pssp:10:0",
+                2 => "pssp:10:2",
+                8 => "pssp:10:8",
+                _ => "pssp:10:32",
+            },
+            method: Method::Pssp { sample: BETA, staleness: theta },
+            adaptive: None,
+        })
+        .collect();
+    v.push(Arm {
+        label: "adaptive",
+        method: Method::Pssp { sample: BETA, staleness: 4 },
+        // window=4: react within ~1s of recheck backoff while blocked.
+        // max_staleness=512: let θ track a 6× crowd gap without pegging.
+        adaptive: Some(AdaptiveConfig {
+            window: 4,
+            max_staleness: 512,
+            ..AdaptiveConfig::default()
+        }),
+    });
+    v
+}
+
+/// Cluster for one arm. The scenario pins its own n/duration/lr (tuned
+/// so the target error lands *mid-crowd* — reachable only by whoever
+/// keeps throughput up through the storm) instead of `eff_nodes`; only
+/// `--quick` switches the scale.
+fn cluster(opts: &ExpOpts, profile: LoadProfile, arm: &Arm) -> ClusterConfig {
+    let (n, dur, lr) = scale(opts);
+    ClusterConfig {
+        n_nodes: n,
+        duration: dur,
+        seed: opts.seed,
+        mean_iter_time: 0.25,
+        sample_interval: 1.0,
+        sgd: Some(SgdConfig {
+            dim: 128,
+            batch: 16,
+            pool: 1024,
+            noise: 0.1,
+            lr,
+            ..SgdConfig::default()
+        }),
+        load_profile: Some(profile),
+        adaptive: arm.adaptive,
+        ..ClusterConfig::default()
+    }
+}
+
+/// (n_nodes, duration, per-round lr) for the current scale.
+fn scale(opts: &ExpOpts) -> (usize, f64, f32) {
+    if opts.quick {
+        (100, 40.0, 0.09)
+    } else {
+        (150, 60.0, 0.06)
+    }
+}
+
+fn flash_crowd(dur: f64) -> LoadProfile {
+    LoadProfile::FlashCrowd {
+        fraction: 0.3,
+        slowdown: 6.0,
+        start: 0.15 * dur,
+        duration: 0.60 * dur,
+    }
+}
+
+fn diurnal(dur: f64) -> LoadProfile {
+    LoadProfile::Diurnal { amplitude: 0.8, period: dur / 2.0 }
+}
+
+/// First simulated second at which the arm's error reached the target.
+fn t_to_target(r: &SimResult) -> Option<f64> {
+    r.error_timeline
+        .iter()
+        .find(|&&(_, e)| e <= TARGET_ERR)
+        .map(|&(t, _)| t)
+}
+
+/// Mean effective θ/β over the adaptation timeline (the *trajectory*
+/// mean, not the endpoint — shows how far the controller actually moved).
+fn mean_effective(r: &SimResult) -> (f64, f64) {
+    if r.adapt_timeline.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = r.adapt_timeline.len() as f64;
+    let (ts, bs) = r
+        .adapt_timeline
+        .iter()
+        .fold((0.0, 0.0), |(a, b), &(_, th, be)| (a + th, b + be));
+    (ts / n, bs / n)
+}
+
+pub fn ext_adaptive(opts: &ExpOpts) -> Report {
+    let (n, dur, lr) = scale(opts);
+    let mut rep = Report::new(
+        "ext_adaptive",
+        "adaptive pSSP vs every static θ under flash-crowd and diurnal load",
+        &[
+            "scenario", "method", "advances", "waits", "stalls", "retunes",
+            "eff_theta", "eff_beta", "final_err", "t_to_target",
+        ],
+    );
+    let scenarios: [(&str, LoadProfile); 2] =
+        [("flash_crowd", flash_crowd(dur)), ("diurnal", diurnal(dur))];
+    for (name, profile) in scenarios {
+        let results = par_map(opts.eff_jobs(), arms(), |arm| {
+            (arm, Simulator::new(cluster(opts, profile, &arm), arm.method).run())
+        });
+        let mut t_static: Vec<(&str, Option<f64>)> = Vec::new();
+        let mut t_adaptive: Option<f64> = None;
+        for (arm, r) in &results {
+            let tt = t_to_target(r);
+            if arm.adaptive.is_some() {
+                t_adaptive = tt;
+            } else {
+                t_static.push((arm.label, tt));
+            }
+            let (eff_t, eff_b) = mean_effective(r);
+            rep.row(vec![
+                name.into(),
+                arm.label.into(),
+                r.total_advances.into(),
+                r.barrier_waits.into(),
+                r.stall_ticks.into(),
+                r.retunes.into(),
+                eff_t.into(),
+                eff_b.into(),
+                r.final_error().unwrap_or(f64::NAN).into(),
+                tt.unwrap_or(f64::NAN).into(),
+            ]);
+        }
+        if name == "flash_crowd" {
+            // The acceptance bar: adaptive reaches the target, and does
+            // so strictly before every static bound (a static that never
+            // gets there at all loses by definition). Enforced here in
+            // the body so `actor exp ext_adaptive --quick` in CI fails
+            // on a regression even without the test harness.
+            let ta = t_adaptive.unwrap_or_else(|| {
+                panic!(
+                    "flash_crowd: adaptive never reached err<={TARGET_ERR} \
+                     (n={n} dur={dur} lr={lr})"
+                )
+            });
+            for (label, ts) in &t_static {
+                assert!(
+                    ts.map_or(true, |t| ta < t),
+                    "flash_crowd: adaptive t={ta:.2}s not strictly better \
+                     than {label} t={ts:?}"
+                );
+            }
+        }
+    }
+    rep.note(format!(
+        "acceptance (asserted in-body): under flash_crowd the adaptive arm \
+         hits err<={TARGET_ERR} strictly before every static theta \
+         ({STATIC_THETAS:?}); a static that never reaches it counts as a loss"
+    ));
+    rep.note(
+        "flash crowd = 30% of nodes 6x slower for the middle 60% of the \
+         run; the stall-streak trigger ramps theta while blocked nodes \
+         cannot cross, then the crossing window decays it home",
+    );
+    rep.note(
+        "diurnal is reported for shape only: smooth per-node load swings \
+         favour a well-chosen static bound — adaptation pays at regime \
+         changes, not steady breathing",
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::Cell;
+
+    fn num(c: &Cell) -> f64 {
+        match c {
+            Cell::Num(n) => *n,
+            Cell::Int(i) => *i as f64,
+            _ => panic!("expected numeric cell"),
+        }
+    }
+
+    fn s(c: &Cell) -> &str {
+        match c {
+            Cell::Str(s) => s,
+            _ => panic!("expected string cell"),
+        }
+    }
+
+    #[test]
+    fn adaptive_beats_every_static_theta_under_flash_crowd() {
+        // The body of ext_adaptive asserts the race result; the test
+        // re-checks the emitted table so a refactor cannot silently drop
+        // the in-body assertions, and pins the mechanism (retunes fired,
+        // θ actually moved).
+        let opts = ExpOpts { quick: true, seed: 42, ..ExpOpts::default() };
+        let rep = ext_adaptive(&opts);
+        assert_eq!(rep.rows.len(), 2 * 5, "2 scenarios x 5 arms");
+        let flash: Vec<_> =
+            rep.rows.iter().filter(|r| s(&r[0]) == "flash_crowd").collect();
+        let adaptive = flash
+            .iter()
+            .find(|r| s(&r[1]) == "adaptive")
+            .expect("adaptive row");
+        let ta = num(&adaptive[9]);
+        assert!(ta.is_finite(), "adaptive must reach the target");
+        for row in &flash {
+            if s(&row[1]) == "adaptive" {
+                continue;
+            }
+            let ts = num(&row[9]);
+            assert!(
+                ts.is_nan() || ta < ts,
+                "{} t={ts} vs adaptive t={ta}",
+                s(&row[1])
+            );
+            assert_eq!(num(&row[5]), 0.0, "static arms never retune");
+        }
+        assert!(num(&adaptive[5]) > 0.0, "controller never fired");
+        assert!(
+            num(&adaptive[6]) > 4.0,
+            "mean effective theta should exceed the base under the crowd"
+        );
+    }
+}

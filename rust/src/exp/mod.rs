@@ -16,6 +16,7 @@
 //! `rust/tests/figures.rs`, and EXPERIMENTS.md records one full run.
 
 pub mod ablation;
+pub mod adaptive;
 pub mod chaos;
 pub mod crash_churn;
 pub mod fig1;
@@ -290,6 +291,7 @@ pub const ALL: &[&str] = &[
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
     "ext_shards", "ext_p2p", "ext_crash", "ext_chaos", "ext_transport",
+    "ext_adaptive",
 ];
 
 /// Run one experiment by id.
@@ -317,6 +319,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "ext_crash" => vec![crash_churn::ext_crash(opts)],
         "ext_chaos" => vec![chaos::ext_chaos(opts)],
         "ext_transport" => vec![transport::ext_transport(opts)],
+        "ext_adaptive" => vec![adaptive::ext_adaptive(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use std::sync::Arc;
 
-use actor_psp::barrier::Method;
+use actor_psp::barrier::{AdaptiveConfig, Method};
 use actor_psp::cli::{Args, USAGE};
 use actor_psp::config::{parse_departure, parse_kill_shard, parse_partitions, Config};
 use actor_psp::engine::gossip::GossipConfig;
@@ -33,7 +33,10 @@ fn main() {
         print!("{USAGE}");
         return;
     }
-    let args = match Args::parse(argv, &["quick", "sgd", "full-mesh", "no-membership"]) {
+    let args = match Args::parse(
+        argv,
+        &["quick", "sgd", "full-mesh", "no-membership", "adaptive"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -101,10 +104,12 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    args.check_known(&[
+    let mut known = vec![
         "method", "nodes", "duration", "seed", "sgd", "config", "quick",
         "crash-rate", "detect", "shard-crash-rate", "shard-rehome", "shards",
-    ])?;
+    ];
+    known.extend_from_slice(ADAPTIVE_FLAGS);
+    args.check_known(&known)?;
     // config file first, CLI flags override
     let mut cluster = match args.get("config") {
         Some(path) => Config::load(std::path::Path::new(path))?.cluster_config()?,
@@ -150,6 +155,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(n) = args.parse_flag::<usize>("shards")? {
         cluster.n_shards = n.max(1);
     }
+    cluster.adaptive = adaptive_flags(args)?;
+    let adaptive_on = cluster.adaptive.is_some();
 
     println!(
         "simulating {} nodes for {:.0}s under {method} (seed {})",
@@ -176,6 +183,18 @@ fn cmd_sim(args: &Args) -> Result<()> {
         r.events,
         r.events as f64 / r.wall_secs.max(1e-9) / 1e6,
     );
+    if adaptive_on {
+        let (theta, beta) = r
+            .adapt_timeline
+            .last()
+            .map(|&(_, t, b)| (t, b))
+            .unwrap_or((0.0, 0.0));
+        println!(
+            "barrier: {} wait(s), {} stall tick(s), {} retune(s); final mean \
+             effective θ {theta:.1} β {beta:.1}",
+            r.barrier_waits, r.stall_ticks, r.retunes,
+        );
+    }
     if r.crashes > 0 {
         println!(
             "churn: {} crash-stop(s) (detect latency {:.2}s), {} departure(s) total",
@@ -199,10 +218,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
 /// Run the live sharded parameter-server engine on the pure-Rust linear
 /// SGD workload and print the progress/message/throughput summary.
 fn cmd_ps(args: &Args) -> Result<()> {
-    args.check_known(&[
+    let mut known = vec![
         "config", "workers", "steps", "method", "dim", "lr", "seed", "shards",
         "push-batch", "schedule-blocks", "replication", "vnodes", "kill-shard",
-    ])?;
+    ];
+    known.extend_from_slice(ADAPTIVE_FLAGS);
+    args.check_known(&known)?;
     // config file first, CLI flags override
     let mut cfg = match args.get("config") {
         Some(path) => Config::load(std::path::Path::new(path))?.ps_config()?,
@@ -245,6 +266,7 @@ fn cmd_ps(args: &Args) -> Result<()> {
     if let Some(s) = args.get("kill-shard") {
         cfg.kill_shard = Some(parse_kill_shard(s)?);
     }
+    cfg.adaptive = adaptive_flags(args)?;
 
     let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
     let rows = (cfg.dim * 8).clamp(256, 4096);
@@ -284,6 +306,12 @@ fn cmd_ps(args: &Args) -> Result<()> {
         init_err,
         l2_dist(&r.model, &w_true),
     );
+    if cfg.adaptive.is_some() {
+        println!(
+            "barrier: {} wait(s), {} stall tick(s); effective θ {:?} β {:?}",
+            r.barrier_waits, r.stall_ticks, r.eff_staleness, r.eff_sample,
+        );
+    }
     if r.confirmed_dead > 0 || r.replica_pulls > 0 || r.handoff_bytes > 0 {
         println!(
             "durability: {} shard death(s) confirmed, {} replica-served \
@@ -307,11 +335,13 @@ fn cmd_ps(args: &Args) -> Result<()> {
 /// delta dissemination (or the legacy full mesh with --full-mesh), and
 /// per-worker overlay-sampled barriers.
 fn cmd_p2p(args: &Args) -> Result<()> {
-    args.check_known(&[
+    let mut known = vec![
         "config", "workers", "steps", "method", "dim", "lr", "seed", "fanout",
         "flush", "ttl", "full-mesh", "crash", "leave", "suspect-ms",
         "confirm-ms", "no-membership",
-    ])?;
+    ];
+    known.extend_from_slice(ADAPTIVE_FLAGS);
+    args.check_known(&known)?;
     // config file first, CLI flags override
     let mut cfg = match args.get("config") {
         Some(path) => Config::load(std::path::Path::new(path))?.p2p_config()?,
@@ -398,6 +428,7 @@ fn cmd_p2p(args: &Args) -> Result<()> {
     if let Some(s) = args.get("leave") {
         cfg.churn.push(parse_departure(s, true)?);
     }
+    cfg.adaptive = adaptive_flags(args)?;
 
     let mut rng = Rng::new(cfg.seed ^ 0xD157);
     let rows = (cfg.dim * 8).clamp(256, 4096);
@@ -440,6 +471,12 @@ fn cmd_p2p(args: &Args) -> Result<()> {
             "membership: departed {:?}; {} death confirmation(s), {} repair \
              msg(s), {} rumor(s) repaired",
             r.departed, r.confirmed_dead, r.repair_msgs, r.repaired_rumors,
+        );
+    }
+    if cfg.adaptive.is_some() {
+        println!(
+            "barrier: {} wait(s), {} stall tick(s); effective θ {:?} β {:?}",
+            r.barrier_waits, r.stall_ticks, r.eff_staleness, r.eff_sample,
         );
     }
     println!(
@@ -565,6 +602,37 @@ fn fault_flags(args: &Args) -> Result<Option<FaultConfig>> {
     Ok(fc)
 }
 
+/// Adaptive-barrier flags: `[barrier] adaptive = true` in the config
+/// file first, CLI overrides. `--adaptive` switches the DSSP-style
+/// controller on with defaults; any `--adaptive-*` value flag both
+/// enables and tunes it. Deliberately **per-node-local**: joiners pass
+/// their own flags — adaptation never rides the Welcome, because each
+/// node retunes from the stragglers *it* observes.
+fn adaptive_flags(args: &Args) -> Result<Option<AdaptiveConfig>> {
+    let mut ac = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.barrier_adaptive()?,
+        None => None,
+    };
+    if args.switch("adaptive") {
+        ac.get_or_insert_with(AdaptiveConfig::default);
+    }
+    if let Some(v) = args.parse_flag::<u32>("adaptive-window")? {
+        ac.get_or_insert_with(AdaptiveConfig::default).window = v;
+    }
+    if let Some(v) = args.parse_flag::<u64>("adaptive-max-staleness")? {
+        ac.get_or_insert_with(AdaptiveConfig::default).max_staleness = v;
+    }
+    if let Some(v) = args.parse_flag::<usize>("adaptive-max-sample")? {
+        ac.get_or_insert_with(AdaptiveConfig::default).max_sample = v;
+    }
+    Ok(ac.map(|a| a.normalized()))
+}
+
+const ADAPTIVE_FLAGS: &[&str] = &[
+    "adaptive", "adaptive-window", "adaptive-max-staleness",
+    "adaptive-max-sample",
+];
+
 const FAULT_FLAGS: &[&str] = &[
     "fault-drop", "fault-dup", "fault-delay", "fault-delay-ms",
     "fault-retry-ms", "fault-reorder", "fault-partition", "fault-heal-ms",
@@ -580,9 +648,11 @@ fn cmd_node(args: &Args) -> Result<()> {
         "suspect-ms", "confirm-ms", "no-membership",
     ];
     known.extend_from_slice(FAULT_FLAGS);
+    known.extend_from_slice(ADAPTIVE_FLAGS);
     args.check_known(&known)?;
     let tcfg = transport_flags(args)?;
     let fault = fault_flags(args)?;
+    let adaptive = adaptive_flags(args)?;
     let n: usize = args.flag_or("n", 3)?;
     if n < 1 {
         bail!("--n must be at least 1");
@@ -640,6 +710,7 @@ fn cmd_node(args: &Args) -> Result<()> {
         roster,
         &tcfg,
         fault,
+        adaptive,
         std::time::Duration::from_secs_f64(step_ms / 1000.0),
     )
 }
@@ -649,6 +720,7 @@ fn cmd_node(args: &Args) -> Result<()> {
 fn cmd_join(args: &Args) -> Result<()> {
     let mut known = vec!["config", "listen", "monitor", "linger", "drain-secs"];
     known.extend_from_slice(FAULT_FLAGS);
+    known.extend_from_slice(ADAPTIVE_FLAGS);
     args.check_known(&known)?;
     let seed_addr = args
         .positionals
@@ -656,6 +728,7 @@ fn cmd_join(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("actor join needs the seed's host:port"))?;
     let tcfg = transport_flags(args)?;
     let fault = fault_flags(args)?;
+    let adaptive = adaptive_flags(args)?;
     let listener = std::net::TcpListener::bind(&tcfg.listen)?;
     let my_addr = listener.local_addr()?.to_string();
     let drain =
@@ -685,6 +758,7 @@ fn cmd_join(args: &Args) -> Result<()> {
         roster,
         &tcfg,
         fault,
+        adaptive,
         std::time::Duration::ZERO,
     )
 }
@@ -700,6 +774,7 @@ fn run_deployed(
     roster: Vec<(usize, String)>,
     tcfg: &TransportConfig,
     fault: Option<FaultConfig>,
+    adaptive: Option<AdaptiveConfig>,
     step_pad: std::time::Duration,
 ) -> Result<()> {
     let monitor = match &tcfg.monitor {
@@ -722,6 +797,13 @@ fn run_deployed(
 
     let mut cfg = wl.node_config(id);
     cfg.step_pad = step_pad;
+    cfg.adaptive = adaptive;
+    if let Some(a) = &cfg.adaptive {
+        println!(
+            "node {id}: adaptive barrier on (window {}, θ ≤ {}, β ≤ {})",
+            a.window, a.max_staleness, a.max_sample,
+        );
+    }
     let init_err = l2_dist(&vec![0.0; wl.dim], &w_true);
     // Both arms consume the transport: it drops (joining writer threads
     // and flushing their queues) before the linger, which only exists
@@ -772,6 +854,13 @@ fn run_deployed(
              {} repair msg(s), {} repaired rumor(s), {} abandoned send(s)",
             r.confirmed_dead, r.departed, r.repair_msgs, r.repaired_rumors,
             send_fail,
+        );
+    }
+    if cfg.adaptive.is_some() {
+        println!(
+            "node {id}: barrier — {} wait(s), {} stall tick(s); effective \
+             θ {:?} β {:?}",
+            r.barrier_waits, r.stall_ticks, r.eff_staleness, r.eff_sample,
         );
     }
     println!(

@@ -49,6 +49,18 @@
 //! dataset (generated from a ground-truth parameter vector). The server
 //! applies updates on arrival. This reproduces the paper's Fig 1d/2b
 //! error metric: `‖w_server − w_true‖₂` normalised by its initial value.
+//!
+//! ## Time-varying load + adaptive barriers
+//!
+//! Admission flows through [`crate::barrier::BarrierPolicy`] — the same
+//! decision core the live engines consult. With
+//! [`ClusterConfig::adaptive`] set, every node gets its *own* policy and
+//! the DSSP-style controller retunes its effective θ/β online from the
+//! observed wait/compute ratio; [`ClusterConfig::load_profile`] supplies
+//! the time-varying heterogeneity (flash-crowd straggler bursts, diurnal
+//! load) that makes any fixed θ wrong somewhere. Both knobs are `None`
+//! by default, draw **no** randomness when off, and leave the seeded
+//! golden trajectories bit-identical.
 
 mod events;
 mod snapshots;
@@ -56,7 +68,7 @@ mod snapshots;
 pub use events::{Event, EventKind, EventQueue, EventScheduler, HeapQueue};
 pub use snapshots::{SnapshotStore, NO_VERSION};
 
-use crate::barrier::{BarrierControl, Method, ViewRequirement};
+use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
 use crate::model::linear::{Dataset, LinearModel};
 use crate::sampling::StepTracker;
 use crate::util::rng::Rng;
@@ -115,6 +127,45 @@ pub struct ChurnConfig {
 pub struct StragglerConfig {
     pub fraction: f64,
     pub slowdown: f64,
+}
+
+/// Time-varying heterogeneity (`exp ext_adaptive`): a deterministic
+/// multiplier on a node's mean iteration time, evaluated at the moment
+/// each iteration *starts*. Pure function of `(node, t)` — no RNG draws,
+/// so `None` replays pre-existing seeded trajectories bit-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadProfile {
+    /// The first `⌊fraction·n_nodes⌋` nodes (the [`StragglerConfig`]
+    /// convention) run `slowdown`× slower during `[start, start+duration)`
+    /// — a flash crowd of stragglers appearing and disappearing mid-run,
+    /// the regime where any *fixed* staleness bound is wrong twice.
+    FlashCrowd { fraction: f64, slowdown: f64, start: f64, duration: f64 },
+    /// Smooth sinusoidal load: `mean × (1 + amplitude·sin(2π(t/period +
+    /// phase)))`, phase-shifted per node so the cluster breathes unevenly.
+    Diurnal { amplitude: f64, period: f64 },
+}
+
+impl LoadProfile {
+    /// Multiplier for node `node` (of an initial population `n`) at time
+    /// `t`. Clamped below so pathological amplitudes stay positive.
+    pub fn factor(&self, node: usize, n: usize, t: f64) -> f64 {
+        let f = match *self {
+            LoadProfile::FlashCrowd { fraction, slowdown, start, duration } => {
+                let in_crowd = (node as f64) < fraction * n as f64;
+                if in_crowd && t >= start && t < start + duration {
+                    slowdown
+                } else {
+                    1.0
+                }
+            }
+            LoadProfile::Diurnal { amplitude, period } => {
+                let phase = node as f64 / n.max(1) as f64;
+                1.0 + amplitude
+                    * (std::f64::consts::TAU * (t / period + phase)).sin()
+            }
+        };
+        f.max(0.05)
+    }
 }
 
 /// Real-SGD workload attached to the simulation (Fig 1d/1e/2b).
@@ -203,6 +254,15 @@ pub struct ClusterConfig {
     /// Record timelines every this many simulated seconds.
     pub sample_interval: f64,
     pub sgd: Option<SgdConfig>,
+    /// Deterministic time-varying load (flash crowds, diurnal swings).
+    /// `None` (the default) is bit-identical to the pre-profile code.
+    pub load_profile: Option<LoadProfile>,
+    /// DSSP-style online adaptation of the barrier's effective θ/β: each
+    /// node gets its own [`BarrierPolicy`] and retunes locally from its
+    /// observed wait/compute ratio. `None` (the default) keeps one shared
+    /// static policy — decisions and RNG stream bit-identical to the
+    /// pre-adaptive code.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -225,6 +285,8 @@ impl Default for ClusterConfig {
             n_shards: 1,
             sample_interval: 5.0,
             sgd: None,
+            load_profile: None,
+            adaptive: None,
         }
     }
 }
@@ -263,6 +325,19 @@ pub struct SimResult {
     /// enumeration-order change in victim selection is caught instead of
     /// silently shifting every seeded figure.
     pub churn_victims: Vec<u32>,
+    /// Barrier crossings that blocked at least once (unified counter —
+    /// same semantics as [`crate::engine::EngineReport::barrier_waits`]).
+    pub barrier_waits: u64,
+    /// Failed admission evaluations. The event-driven simulator parks
+    /// global-view nodes rather than polling, so for BSP/SSP this counts
+    /// park episodes; sampled methods count failed re-check attempts.
+    pub stall_ticks: u64,
+    /// Adaptation rounds fired across all per-node controllers (0 when
+    /// [`ClusterConfig::adaptive`] is off).
+    pub retunes: u64,
+    /// (time, mean effective θ, mean effective β) over active nodes —
+    /// recorded on timeline ticks, only when adaptation is on.
+    pub adapt_timeline: Vec<(f64, f64, f64)>,
     /// Host wall-clock seconds spent simulating (perf metric).
     pub wall_secs: f64,
 }
@@ -301,6 +376,72 @@ struct NodeState {
     batch_seed: u64,
     /// Update messages in flight to the server (schedules outstanding).
     pending: u32,
+    /// When the in-flight iteration started (barrier observation only —
+    /// maintained unconditionally, consumed by the policy's stats).
+    iter_started: f64,
+    /// When the node finished computing and reached the barrier.
+    barrier_entered: f64,
+}
+
+/// The run's barrier-decision handles: one shared static policy (every
+/// node decides identically; counters aggregate), or one policy per node
+/// when the adaptive controller is on — adaptation is per-node and
+/// local, the paper's fully-distributed argument.
+enum Policies {
+    Shared(BarrierPolicy),
+    PerNode { method: Method, cfg: AdaptiveConfig, nodes: Vec<BarrierPolicy> },
+}
+
+impl Policies {
+    fn new(method: Method, adaptive: Option<AdaptiveConfig>, n: usize) -> Policies {
+        match adaptive {
+            // Per-node policies only when the method actually has a knob
+            // to move (SSP/pSSP/pQuorum); BSP/ASP/pBSP stay shared.
+            Some(cfg)
+                if BarrierPolicy::with_adaptive(method, Some(cfg))
+                    .is_adaptive() =>
+            {
+                let nodes = (0..n)
+                    .map(|_| BarrierPolicy::with_adaptive(method, Some(cfg)))
+                    .collect();
+                Policies::PerNode { method, cfg, nodes }
+            }
+            _ => Policies::Shared(BarrierPolicy::new(method)),
+        }
+    }
+
+    fn of(&mut self, node: usize) -> &mut BarrierPolicy {
+        match self {
+            Policies::Shared(p) => p,
+            Policies::PerNode { nodes, .. } => &mut nodes[node],
+        }
+    }
+
+    /// A node joined: give it a fresh controller (starting from the base
+    /// method, not a neighbour's adapted state — it has no observations).
+    fn joined(&mut self) {
+        if let Policies::PerNode { method, cfg, nodes } = self {
+            nodes.push(BarrierPolicy::with_adaptive(*method, Some(*cfg)));
+        }
+    }
+
+    /// Lifetime (barrier_waits, stall_ticks, retunes) over all policies.
+    fn totals(&self) -> (u64, u64, u64) {
+        match self {
+            Policies::Shared(p) => {
+                (p.stats().barrier_waits, p.stats().stall_ticks, p.retunes())
+            }
+            Policies::PerNode { nodes, .. } => {
+                nodes.iter().fold((0, 0, 0), |(w, s, r), p| {
+                    (
+                        w + p.stats().barrier_waits,
+                        s + p.stats().stall_ticks,
+                        r + p.retunes(),
+                    )
+                })
+            }
+        }
+    }
 }
 
 /// Schedule `kind` at `t` unless it lies beyond the horizon — such events
@@ -324,12 +465,20 @@ fn schedule<Q: EventScheduler>(queue: &mut Q, horizon: f64, t: f64, kind: EventK
 pub struct Simulator {
     cfg: ClusterConfig,
     method: Method,
-    barrier: Box<dyn BarrierControl>,
 }
 
 impl Simulator {
     pub fn new(cfg: ClusterConfig, method: Method) -> Simulator {
-        Simulator { barrier: method.build(), cfg, method }
+        Simulator { cfg, method }
+    }
+
+    /// Mean iteration time for `node` starting an iteration at `t`: the
+    /// node's drawn base mean, scaled by the load profile when one is on.
+    fn iter_mean(&self, node: usize, t: f64, base: f64) -> f64 {
+        match self.cfg.load_profile {
+            None => base,
+            Some(p) => base * p.factor(node, self.cfg.n_nodes, t),
+        }
     }
 
     /// Run the simulation to the configured horizon on the calendar
@@ -379,9 +528,14 @@ impl Simulator {
                     version: NO_VERSION,
                     batch_seed: 0,
                     pending: 0,
+                    iter_started: 0.0,
+                    barrier_entered: 0.0,
                 }
             })
             .collect();
+
+        // Barrier-decision handles (shared static, or per-node adaptive).
+        let mut policies = Policies::new(self.method, cfg.adaptive, cfg.n_nodes);
 
         // Kick off: every node starts computing step 0 at t=0.
         for (i, node) in nodes.iter_mut().enumerate() {
@@ -389,7 +543,8 @@ impl Simulator {
                 node.version = s.store.pin_head();
                 node.batch_seed = rng.next_u64();
             }
-            let d = cfg.iter_dist.sample(node.mean_iter, &mut rng);
+            let mean = self.iter_mean(i, 0.0, node.mean_iter);
+            let d = cfg.iter_dist.sample(mean, &mut rng);
             schedule(&mut queue, horizon, d, EventKind::ComputeDone { node: i });
         }
         // Timeline sampling ticks.
@@ -443,9 +598,11 @@ impl Simulator {
         let mut churn_victims: Vec<u32> = Vec::new();
         let mut updates_timeline = Vec::new();
         let mut error_timeline = Vec::new();
+        let mut adapt_timeline = Vec::new();
 
-        let staleness = self.barrier.staleness();
-        let is_global = matches!(self.barrier.view(), ViewRequirement::Global);
+        // Adaptation moves θ/β, never the view *shape* — safe to latch.
+        let is_global =
+            matches!(self.method.build().view(), ViewRequirement::Global);
 
         while let Some(ev) = queue.pop() {
             if ev.time > cfg.duration {
@@ -488,11 +645,13 @@ impl Simulator {
                     if is_global {
                         control_msgs += 1;
                     }
+                    // Reaching the barrier: wait time is measured from here.
+                    nodes[node].barrier_entered = t;
                     // Barrier decision.
                     self.try_advance(
                         node, t, &mut nodes, &mut tracker, &mut rng, &mut scratch,
                         &mut view, &mut queue, &mut blocked_global, &mut control_msgs,
-                        &mut total_advances, &mut sgd, staleness,
+                        &mut total_advances, &mut sgd, &mut policies,
                     );
                 }
                 EventKind::Recheck { node, step } => {
@@ -504,7 +663,7 @@ impl Simulator {
                     self.try_advance(
                         node, t, &mut nodes, &mut tracker, &mut rng, &mut scratch,
                         &mut view, &mut queue, &mut blocked_global, &mut control_msgs,
-                        &mut total_advances, &mut sgd, staleness,
+                        &mut total_advances, &mut sgd, &mut policies,
                     );
                 }
                 EventKind::UpdateArrive { node } => {
@@ -525,6 +684,21 @@ impl Simulator {
                     if let Some(s) = sgd.as_ref() {
                         error_timeline.push((t, s.normalised_error()));
                     }
+                    if let Policies::PerNode { nodes: pols, .. } = &policies {
+                        let mut active = 0u64;
+                        let (mut tsum, mut bsum) = (0.0f64, 0.0f64);
+                        for (i, p) in pols.iter().enumerate() {
+                            if tracker.is_active(i) {
+                                active += 1;
+                                tsum += p.staleness() as f64;
+                                bsum += p.sample_size() as f64;
+                            }
+                        }
+                        if active > 0 {
+                            let n = active as f64;
+                            adapt_timeline.push((t, tsum / n, bsum / n));
+                        }
+                    }
                 }
                 EventKind::Join => {
                     let id = tracker.join();
@@ -540,8 +714,12 @@ impl Simulator {
                         version,
                         batch_seed: rng.next_u64(),
                         pending: 0,
+                        iter_started: t,
+                        barrier_entered: t,
                     });
-                    let d = cfg.iter_dist.sample(nodes[id].mean_iter, &mut rng);
+                    policies.joined();
+                    let mean = self.iter_mean(id, t, nodes[id].mean_iter);
+                    let d = cfg.iter_dist.sample(mean, &mut rng);
                     let done = EventKind::ComputeDone { node: id };
                     schedule(&mut queue, horizon, t + d, done);
                     if let Some(churn) = cfg.churn {
@@ -644,7 +822,7 @@ impl Simulator {
                     self.advance_now(
                         node, t, &mut nodes, &mut tracker, &mut rng, &mut queue,
                         &mut blocked_global, &mut total_advances, &mut sgd,
-                        &mut control_msgs,
+                        &mut control_msgs, &mut policies,
                     );
                 }
             }
@@ -654,6 +832,7 @@ impl Simulator {
             .filter(|&i| tracker.is_active(i))
             .map(|i| tracker.step_of(i))
             .collect();
+        let (barrier_waits, stall_ticks, retunes) = policies.totals();
         SimResult {
             method: self.method,
             final_steps,
@@ -668,12 +847,21 @@ impl Simulator {
             shard_crashes,
             shard_stalls,
             churn_victims,
+            barrier_waits,
+            stall_ticks,
+            retunes,
+            adapt_timeline,
             wall_secs: start.elapsed().as_secs_f64(),
         }
     }
 
     /// Evaluate the barrier for `node` (at barrier after finishing its
     /// step) and either advance it or park it (blocked map / recheck).
+    ///
+    /// The decision arithmetic lives in the node's [`BarrierPolicy`] —
+    /// this layer only *acquires the view* (streamed tracker minimum, or
+    /// a materialised sample for quorum methods) and feeds the outcome
+    /// back for the wait/lag statistics window.
     #[allow(clippy::too_many_arguments)]
     fn try_advance<Q: EventScheduler>(
         &self,
@@ -689,36 +877,51 @@ impl Simulator {
         control_msgs: &mut u64,
         total_advances: &mut u64,
         sgd: &mut Option<SgdState>,
-        staleness: u64,
+        policies: &mut Policies,
     ) {
         let my_step = tracker.step_of(node);
-        let pass = match self.barrier.view() {
-            ViewRequirement::None => true,
-            ViewRequirement::Global => tracker.min_step() + staleness >= my_step,
+        let pol = policies.of(node);
+        let view_req = pol.view();
+        let (pass, lag) = match view_req {
+            ViewRequirement::None => (true, None),
+            ViewRequirement::Global => {
+                let min = tracker.min_step();
+                (pol.admit_min(my_step, Some(min)),
+                    Some(my_step.saturating_sub(min)))
+            }
             ViewRequirement::Sample(beta) => {
                 *control_msgs += 2 * beta as u64; // query + reply per peer
-                if self.barrier.min_view_sufficient() {
+                if pol.min_view_sufficient() {
                     match tracker.sample_min(node, beta, rng, scratch) {
-                        None => true, // no peers observable => ASP semantics
-                        Some(min) => min + staleness >= my_step,
+                        // no peers observable => ASP semantics
+                        None => (true, None),
+                        Some(min) => (pol.admit_min(my_step, Some(min)),
+                            Some(my_step.saturating_sub(min))),
                     }
                 } else {
                     // quorum-style predicates need the full sampled view
                     tracker.sample_steps(node, beta, rng, scratch, view);
-                    self.barrier.can_advance(my_step, view)
+                    let lag = view
+                        .iter()
+                        .min()
+                        .map(|&m| my_step.saturating_sub(m));
+                    (pol.admit_view(my_step, view), lag)
                 }
             }
         };
+        pol.record_decision(pass, lag);
+        let staleness = pol.staleness();
         if pass {
             self.advance_now(
                 node, t, nodes, tracker, rng, queue, blocked_global,
-                total_advances, sgd, control_msgs,
+                total_advances, sgd, control_msgs, policies,
             );
         } else {
             nodes[node].status = Status::Blocked;
-            match self.barrier.view() {
+            match view_req {
                 ViewRequirement::Global => {
-                    // Release when global min reaches my_step - θ.
+                    // Release when global min reaches my_step - θ (the
+                    // *effective* θ this node blocked under).
                     let threshold = my_step.saturating_sub(staleness);
                     blocked_global.entry(threshold).or_default().push(node as u32);
                 }
@@ -749,16 +952,25 @@ impl Simulator {
         total_advances: &mut u64,
         sgd: &mut Option<SgdState>,
         control_msgs: &mut u64,
+        policies: &mut Policies,
     ) {
         *total_advances += 1;
+        // Feed the crossing into the policy's observation window: how
+        // long this step computed vs how long it waited at the barrier.
+        // Draws no randomness — the RNG stream below is untouched.
+        let wait = (t - nodes[node].barrier_entered).max(0.0);
+        let busy = (nodes[node].barrier_entered - nodes[node].iter_started).max(0.0);
+        policies.of(node).record_crossing(wait, busy);
         nodes[node].status = Status::Computing;
+        nodes[node].iter_started = t;
         // Pin a fresh snapshot version for the next iteration (O(1); the
         // pre-refactor code cloned the full model here).
         if let Some(s) = sgd.as_mut() {
             nodes[node].version = s.store.repin(nodes[node].version);
             nodes[node].batch_seed = rng.next_u64();
         }
-        let d = self.cfg.iter_dist.sample(nodes[node].mean_iter, rng);
+        let mean = self.iter_mean(node, t, nodes[node].mean_iter);
+        let d = self.cfg.iter_dist.sample(mean, rng);
         schedule(queue, self.cfg.duration, t + d, EventKind::ComputeDone { node });
         if let Some(new_min) = tracker.advance(node) {
             // A rising minimum is broadcast to blocked nodes; count one
@@ -1142,6 +1354,119 @@ mod tests {
         assert_eq!(a.final_steps, b.final_steps);
         assert_eq!(a.update_msgs, b.update_msgs);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn barrier_wait_counters_track_blocking() {
+        // ASP never blocks; BSP in a heterogeneous cluster must.
+        let asp = run(tiny_cfg(40, 26), Method::Asp);
+        assert_eq!(asp.barrier_waits, 0);
+        assert_eq!(asp.stall_ticks, 0);
+        let bsp = run(tiny_cfg(40, 26), Method::Bsp);
+        assert!(bsp.barrier_waits > 0, "BSP never waited?");
+        assert!(bsp.stall_ticks > 0);
+        let pssp = run(tiny_cfg(40, 26), Method::Pssp { sample: 8, staleness: 1 });
+        assert!(pssp.barrier_waits > 0, "tight pSSP never waited?");
+        // Sampled methods re-check: ticks can exceed wait episodes.
+        assert!(pssp.stall_ticks >= pssp.barrier_waits);
+        // Static runs never retune and record no adaptation timeline.
+        assert_eq!(bsp.retunes, 0);
+        assert!(bsp.adapt_timeline.is_empty());
+    }
+
+    #[test]
+    fn adaptive_off_and_knobless_methods_replay_the_legacy_trajectory() {
+        // `adaptive: None` is the default — and attaching a controller to
+        // a method with no adaptable knobs (pBSP) must also change
+        // nothing: both fall back to the shared static policy.
+        let m = Method::Pbsp { sample: 5 };
+        let a = run(tiny_cfg(40, 27), m);
+        let b = run(
+            ClusterConfig {
+                adaptive: Some(AdaptiveConfig::default()),
+                ..tiny_cfg(40, 27)
+            },
+            m,
+        );
+        assert_eq!(a.final_steps, b.final_steps);
+        assert_eq!(a.update_msgs, b.update_msgs);
+        assert_eq!(a.control_msgs, b.control_msgs);
+        assert_eq!(a.events, b.events);
+        assert_eq!(b.retunes, 0);
+    }
+
+    #[test]
+    fn load_profile_none_replays_and_flash_crowd_slows_progress() {
+        let m = Method::Bsp;
+        let clean = run(tiny_cfg(40, 28), m);
+        let with_field = run(
+            ClusterConfig { load_profile: None, ..tiny_cfg(40, 28) },
+            m,
+        );
+        assert_eq!(clean.final_steps, with_field.final_steps);
+        assert_eq!(clean.events, with_field.events);
+        // A mid-run flash crowd must cost BSP progress.
+        let crowd = run(
+            ClusterConfig {
+                load_profile: Some(LoadProfile::FlashCrowd {
+                    fraction: 0.1,
+                    slowdown: 6.0,
+                    start: 5.0,
+                    duration: 10.0,
+                }),
+                ..tiny_cfg(40, 28)
+            },
+            m,
+        );
+        assert!(
+            crowd.mean_progress() < clean.mean_progress(),
+            "flash crowd should slow BSP: {} !< {}",
+            crowd.mean_progress(),
+            clean.mean_progress()
+        );
+    }
+
+    #[test]
+    fn adaptive_pssp_retunes_and_is_deterministic() {
+        let mk = || ClusterConfig {
+            load_profile: Some(LoadProfile::FlashCrowd {
+                fraction: 0.15,
+                slowdown: 8.0,
+                start: 4.0,
+                duration: 8.0,
+            }),
+            adaptive: Some(AdaptiveConfig { window: 4, ..AdaptiveConfig::default() }),
+            ..tiny_cfg(40, 29)
+        };
+        let m = Method::Pssp { sample: 8, staleness: 1 };
+        let a = run(mk(), m);
+        assert!(a.retunes > 0, "controller never fired");
+        assert!(!a.adapt_timeline.is_empty());
+        // The flash crowd must push mean effective θ above the base at
+        // some point of the run.
+        let max_theta = a
+            .adapt_timeline
+            .iter()
+            .map(|&(_, th, _)| th)
+            .fold(0.0f64, f64::max);
+        assert!(max_theta > 1.0, "θ never loosened past base 1: {max_theta}");
+        let b = run(mk(), m);
+        assert_eq!(a.final_steps, b.final_steps);
+        assert_eq!(a.retunes, b.retunes);
+        assert_eq!(a.adapt_timeline, b.adapt_timeline);
+    }
+
+    #[test]
+    fn diurnal_profile_factor_is_bounded_and_phase_shifted() {
+        let p = LoadProfile::Diurnal { amplitude: 0.8, period: 20.0 };
+        for node in [0usize, 13, 99] {
+            for t in [0.0, 3.0, 11.5, 19.0, 40.0] {
+                let f = p.factor(node, 100, t);
+                assert!((0.05..=1.8).contains(&f), "factor {f} out of range");
+            }
+        }
+        // Different nodes see different phases at the same instant.
+        assert_ne!(p.factor(10, 100, 7.0), p.factor(60, 100, 7.0));
     }
 
     #[test]

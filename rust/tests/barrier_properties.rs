@@ -131,6 +131,99 @@ fn prop_determinism_across_time_dists() {
 }
 
 #[test]
+fn prop_every_layer_admission_spelling_agrees_with_the_policy() {
+    // PR 9 deleted four inline admission reimplementations (simulator
+    // tracker, parameter-server coordinator, p2p worker, deployed node).
+    // This pins that each deleted spelling was — and stays — value-equal
+    // to the one BarrierPolicy core, for all six methods, against the
+    // centralised oracle decision.
+    use actor_psp::barrier::{decide_with_oracle, BarrierPolicy, ViewRequirement};
+    property("all legacy admission spellings == policy == oracle", 400, |g| {
+        let methods = [
+            Method::Bsp,
+            Method::Asp,
+            Method::Ssp { staleness: g.u64_in(0, 6) },
+            Method::Pbsp { sample: g.usize_in(1, 12) },
+            Method::Pssp { sample: g.usize_in(1, 12), staleness: g.u64_in(0, 6) },
+            Method::Pquorum {
+                sample: g.usize_in(1, 12),
+                staleness: g.u64_in(0, 6),
+                quorum_pct: g.u64_in(0, 100) as u8,
+            },
+        ];
+        let method = *g.choose(&methods);
+        let n = g.usize_in(1, 40);
+        let steps: Vec<u64> = (0..n).map(|_| g.u64_in(0, 15)).collect();
+        let my = g.u64_in(0, 15);
+        let policy = BarrierPolicy::new(method);
+        let control = method.build();
+        let mut scratch = Vec::new();
+        let oracle = {
+            let mut rng = g.rng();
+            decide_with_oracle(&*control, my, &steps, &mut rng, &mut scratch)
+        };
+        // Re-draw the identical sample for the policy + legacy sides.
+        let view: Vec<u64> = match policy.view() {
+            ViewRequirement::None => Vec::new(),
+            ViewRequirement::Global => steps.clone(),
+            ViewRequirement::Sample(beta) => {
+                let mut rng = g.rng();
+                let mut idx = Vec::new();
+                rng.sample_into(steps.len(), beta, &mut idx);
+                idx.iter().map(|&i| steps[i]).collect()
+            }
+        };
+        let mine = policy.admit_view(my, &view);
+        assert_eq!(mine, oracle, "{method:?} my={my} view={view:?}");
+        if policy.min_view_sufficient() && !view.is_empty() {
+            let min = *view.iter().min().unwrap();
+            let theta = policy.staleness();
+            // simulator tracker / ps coordinator form: min + θ >= my
+            // (overflow-prone — the policy's saturating form is the fix,
+            // value-equal on every reachable input)
+            assert_eq!(mine, min.saturating_add(theta) >= my);
+            // p2p worker ∀-peer form: every sampled peer within the window
+            assert_eq!(
+                mine,
+                view.iter().all(|&s| my.saturating_sub(s) <= theta)
+            );
+            // deployed-node streamed-min form
+            assert_eq!(mine, policy.admit_min(my, Some(min)));
+        }
+    });
+}
+
+#[test]
+fn prop_p2p_window_is_anchored_at_the_completed_step() {
+    // Regression pin for the p2p engine's historical off-by-one: a
+    // worker that has just *finished* step `step` crosses the barrier
+    // for `step + 1`, so the window predicate must be
+    // `(step + 1).saturating_sub(peer) <= θ` — anchoring at `step`
+    // admits one step too eagerly whenever the slowest sampled peer is
+    // exactly θ+1 behind the next step.
+    use actor_psp::barrier::BarrierPolicy;
+    property("p2p lag form anchored at step+1", 200, |g| {
+        let theta = g.u64_in(0, 6);
+        let policy =
+            BarrierPolicy::new(Method::Pssp { sample: 4, staleness: theta });
+        let n = g.usize_in(1, 24);
+        // step >= θ so the boundary peer below is genuinely θ+1 behind
+        // (no saturation masking the gap).
+        let step = theta + g.u64_in(0, 15);
+        let view: Vec<u64> = (0..n).map(|_| g.u64_in(0, 17)).collect();
+        let correct =
+            view.iter().all(|&s| (step + 1).saturating_sub(s) <= theta);
+        assert_eq!(policy.admit_view(step + 1, &view), correct);
+        // The boundary that exposed the bug: one peer exactly θ+1 behind
+        // the *next* step must block, even though it is only θ behind
+        // the completed one.
+        let boundary = step - theta;
+        assert!(!policy.admit_view(step + 1, &[boundary]));
+        assert!(policy.admit_view(step + 1, &[boundary + 1]));
+    });
+}
+
+#[test]
 fn prop_churn_preserves_invariants() {
     property("churn: active set consistent, progress continues", 10, |g| {
         let n = g.usize_in(5, 40);

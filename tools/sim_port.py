@@ -98,6 +98,16 @@ class Rng:
                 break
         return -mean * math.log(1.0 - u)
 
+    def normal(self):
+        # Box–Muller, mirrors util::rng::Rng::normal (2 next_f64 draws).
+        while True:
+            u1 = self.next_f64()
+            if u1 > 1e-300:
+                u2 = self.next_f64()
+                return math.sqrt(-2.0 * math.log(u1)) * math.cos(
+                    2.0 * math.pi * u2
+                )
+
     def sample_into(self, n, k, out):
         # Robert Floyd's algorithm — mirrors util::rng::Rng::sample_into.
         out.clear()
@@ -113,6 +123,207 @@ class Rng:
 
 
 NOT_ACTIVE = object()
+NO_VERSION = U64MAX
+
+
+class FlashCrowd:
+    """Port of sim::LoadProfile::FlashCrowd (pure function, no RNG)."""
+
+    def __init__(self, fraction, slowdown, start, duration):
+        self.fraction = fraction
+        self.slowdown = slowdown
+        self.start = start
+        self.duration = duration
+
+    def factor(self, node, n, t):
+        in_crowd = node < self.fraction * n
+        f = (
+            self.slowdown
+            if in_crowd and self.start <= t < self.start + self.duration
+            else 1.0
+        )
+        return max(f, 0.05)
+
+
+class Diurnal:
+    """Port of sim::LoadProfile::Diurnal."""
+
+    def __init__(self, amplitude, period):
+        self.amplitude = amplitude
+        self.period = period
+
+    def factor(self, node, n, t):
+        phase = node / max(n, 1)
+        f = 1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * (t / self.period + phase)
+        )
+        return max(f, 0.05)
+
+
+class AdaptiveCfg:
+    """Port of barrier::AdaptiveConfig (already-normalized values)."""
+
+    def __init__(self, window=8, loosen_above=0.20, tighten_below=0.05,
+                 min_staleness=0, max_staleness=64, min_sample=1,
+                 max_sample=64):
+        self.window = max(window, 1)
+        self.loosen_above = loosen_above
+        self.tighten_below = tighten_below
+        self.min_staleness = min_staleness
+        self.max_staleness = max(max_staleness, min_staleness)
+        self.min_sample = max(min_sample, 1)
+        self.max_sample = max(max_sample, self.min_sample)
+
+
+class Policy:
+    """Port of barrier::BarrierPolicy for the simulator's method family
+    (min-view-sufficient predicates; no pquorum — the goldens and the
+    ext_adaptive scenario never touch it). All controller arithmetic is
+    integer/f64 exactly as in Rust, so adapted trajectories replay
+    bit-identically too."""
+
+    def __init__(self, method, adaptive=None):
+        self.view = method.view
+        self.eff_staleness = (
+            U64MAX if method.view == "none" else method.staleness
+        )
+        self.eff_sample = method.beta if method.view == "sample" else 0
+        name = method.name.split(":")[0]
+        theta = name in ("ssp", "pssp")
+        beta = name in ("pssp", "pquorum")
+        self.theta_adapts, self.beta_adapts = theta, beta
+        self.adaptive = adaptive if (theta or beta) else None
+        if self.adaptive is not None:
+            a = self.adaptive
+            if theta:
+                self.eff_staleness = min(
+                    max(self.eff_staleness, a.min_staleness), a.max_staleness
+                )
+            if beta:
+                self.eff_sample = min(
+                    max(self.eff_sample, a.min_sample), a.max_sample
+                )
+        self.win_crossings = 0
+        self.win_wait = 0.0
+        self.win_busy = 0.0
+        self.win_fails = 0
+        self.retunes = 0
+        self.crossings = 0
+        self.barrier_waits = 0
+        self.stall_ticks = 0
+
+    def admit_min(self, my_step, min_view):
+        if min_view is None:
+            return True
+        return max(my_step - min_view, 0) <= self.eff_staleness
+
+    def record_decision(self, passed):
+        if not passed:
+            self.stall_ticks += 1
+        if self.adaptive is None:
+            return
+        if passed:
+            self.win_fails = 0
+        else:
+            # Loosen *while* blocked: `window` consecutive failed
+            # admissions mean the bound is too tight right now — a
+            # crossing-gated controller would be frozen exactly when it
+            # most needs to move.
+            self.win_fails += 1
+            if self.win_fails >= self.adaptive.window:
+                self.win_fails = 0
+                self.retunes += 1
+                self._loosen()
+
+    def record_crossing(self, wait, busy):
+        self.crossings += 1
+        if wait > 0.0:
+            self.barrier_waits += 1
+        if self.adaptive is None:
+            return
+        self.win_crossings += 1
+        self.win_wait += max(wait, 0.0)
+        self.win_busy += max(busy, 0.0)
+        if self.win_crossings >= self.adaptive.window:
+            self._retune()
+
+    def _retune(self):
+        a = self.adaptive
+        total = self.win_wait + self.win_busy
+        frac = self.win_wait / total if total > 0.0 else 0.0
+        self.win_crossings = 0
+        self.win_wait = 0.0
+        self.win_busy = 0.0
+        self.retunes += 1
+        if frac > a.loosen_above:
+            self._loosen()
+        elif frac < a.tighten_below:
+            self._tighten()
+
+    def _loosen(self):
+        a = self.adaptive
+        if self.theta_adapts and self.eff_staleness < a.max_staleness:
+            grown = self.eff_staleness + 1 + self.eff_staleness // 2
+            self.eff_staleness = min(grown, a.max_staleness)
+        elif self.beta_adapts and self.eff_sample > a.min_sample:
+            self.eff_sample -= 1
+
+    def _tighten(self):
+        a = self.adaptive
+        if self.theta_adapts and self.eff_staleness > a.min_staleness:
+            cut = 1 + self.eff_staleness // 4
+            self.eff_staleness = max(
+                self.eff_staleness - cut, a.min_staleness
+            )
+        elif self.beta_adapts and self.eff_sample < a.max_sample:
+            self.eff_sample += 1
+
+
+class Sgd:
+    """Port of sim::SgdState. Rust runs the model in f32; this port runs
+    IEEE doubles (same RNG draws, same minibatch row picks, same event
+    interleaving — only rounding differs), so error timelines agree to a
+    few decimal places rather than bit-for-bit. Barrier trajectories are
+    unaffected: admission never reads the model."""
+
+    def __init__(self, scfg, n_nodes, rng):
+        import numpy as np
+        self.np = np
+        dim, pool = scfg["dim"], scfg["pool"]
+        noise = scfg["noise"]
+        w_true = np.array([rng.normal() for _ in range(dim)])
+        x = np.empty((pool, dim))
+        for r in range(pool):
+            for c in range(dim):
+                x[r, c] = rng.normal()
+        y = x @ w_true + noise * np.array(
+            [rng.normal() for _ in range(pool)]
+        )
+        self.x, self.y, self.w_true = x, y, w_true
+        self.dim, self.batch = dim, scfg["batch"]
+        self.lr = scfg["lr"] / max(n_nodes, 1)
+        # Exact-history stand-in for the SnapshotStore: version == index.
+        self.history = [np.zeros(dim)]
+        self.init_error = float(np.linalg.norm(w_true))
+
+    def pin_head(self):
+        return len(self.history) - 1
+
+    def apply_update(self, version, batch_seed):
+        np = self.np
+        w = self.history[version]
+        rng = Rng(batch_seed)
+        rows = [rng.next_below(len(self.y)) for _ in range(max(self.batch, 1))]
+        xb = self.x[rows]
+        resid = xb @ w - self.y[rows]
+        g = resid @ xb / max(self.batch, 1)
+        self.history.append(self.history[-1] - self.lr * g)
+
+    def normalised_error(self):
+        np = self.np
+        return float(
+            np.linalg.norm(self.history[-1] - self.w_true) / self.init_error
+        )
 
 
 class StepTracker:
@@ -265,11 +476,46 @@ class Cfg:
         self.shard_rehome_secs = kw.get("shard_rehome_secs", 0.5)
         self.n_shards = kw.get("n_shards", 1)
         self.sample_interval = kw.get("sample_interval", 5.0)
+        self.stragglers = kw.get("stragglers")  # (fraction, slowdown)
+        # dict(dim=, batch=, pool=, noise=, lr=) or None
+        self.sgd = kw.get("sgd")
+        self.load_profile = kw.get("load_profile")  # FlashCrowd | Diurnal
+        self.adaptive = kw.get("adaptive")          # AdaptiveCfg or None
+
+    def iter_mean(self, node, t, base):
+        if self.load_profile is None:
+            return base
+        return base * self.load_profile.factor(node, self.n_nodes, t)
+
+
+class Policies:
+    """Port of sim::Policies: per-node adaptive controllers when the
+    method has a knob, one shared static handle otherwise."""
+
+    def __init__(self, method, adaptive, n):
+        probe = Policy(method, adaptive)
+        if probe.adaptive is not None:
+            self.method, self.cfg = method, adaptive
+            self.nodes = [Policy(method, adaptive) for _ in range(n)]
+            self.shared = None
+        else:
+            self.nodes = None
+            self.shared = Policy(method)
+
+    def of(self, node):
+        return self.shared if self.nodes is None else self.nodes[node]
+
+    def joined(self):
+        if self.nodes is not None:
+            self.nodes.append(Policy(self.method, self.cfg))
+
+    def all(self):
+        return [self.shared] if self.nodes is None else self.nodes
 
 
 def run(cfg, method):
-    """Port of Simulator::run_with for configs without SGD/stragglers,
-    Exponential iteration times (the golden configurations)."""
+    """Port of Simulator::run_with (Exponential iteration times; the
+    golden configurations plus the PR 9 SGD/load-profile/adaptive paths)."""
     horizon = cfg.duration
     rng = Rng(cfg.seed)
     heap = []
@@ -288,19 +534,36 @@ def run(cfg, method):
     tracker = StepTracker(cfg.n_nodes)
     scratch = []
 
+    sgd = Sgd(cfg.sgd, cfg.n_nodes, rng) if cfg.sgd is not None else None
+
     mean_iter = []
     status = []
     pending = []
-    for _ in range(cfg.n_nodes):
+    version = []
+    batch_seed = []
+    iter_started = []
+    barrier_entered = []
+    for i in range(cfg.n_nodes):
         mean = cfg.mean_iter_time * rng.uniform(
             1.0 - cfg.speed_jitter, 1.0 + cfg.speed_jitter
         )
+        if cfg.stragglers is not None and i < cfg.stragglers[0] * cfg.n_nodes:
+            mean *= cfg.stragglers[1]
         mean_iter.append(mean)
         status.append(COMPUTING)
         pending.append(0)
+        version.append(NO_VERSION)
+        batch_seed.append(0)
+        iter_started.append(0.0)
+        barrier_entered.append(0.0)
+
+    policies = Policies(method, cfg.adaptive, cfg.n_nodes)
 
     for i in range(cfg.n_nodes):
-        d = rng.exponential(mean_iter[i])
+        if sgd is not None:
+            version[i] = sgd.pin_head()
+            batch_seed[i] = rng.next_u64()
+        d = rng.exponential(cfg.iter_mean(i, 0.0, mean_iter[i]))
         schedule(d, COMPUTE_DONE, i)
     tick = cfg.sample_interval
     while tick <= cfg.duration + 1e-9:
@@ -329,8 +592,9 @@ def run(cfg, method):
     shards_down = 0
     stall_until = 0.0
     churn_victims = []
+    error_timeline = []
+    adapt_timeline = []
     is_global = method.view == "global"
-    staleness = method.staleness
 
     def release_blocked(new_min, t):
         released = 0
@@ -345,8 +609,15 @@ def run(cfg, method):
 
     def advance_now(node, t):
         stats["total_advances"] += 1
+        wait = max(t - barrier_entered[node], 0.0)
+        busy = max(barrier_entered[node] - iter_started[node], 0.0)
+        policies.of(node).record_crossing(wait, busy)
         status[node] = COMPUTING
-        d = rng.exponential(mean_iter[node])
+        iter_started[node] = t
+        if sgd is not None:
+            version[node] = sgd.pin_head()
+            batch_seed[node] = rng.next_u64()
+        d = rng.exponential(cfg.iter_mean(node, t, mean_iter[node]))
         schedule(t + d, COMPUTE_DONE, node)
         new_min = tracker.advance(node)
         if new_min is not None:
@@ -354,20 +625,23 @@ def run(cfg, method):
 
     def try_advance(node, t):
         my_step = tracker.step_of(node)
-        if method.view == "none":
+        pol = policies.of(node)
+        if pol.view == "none":
             ok = True
-        elif method.view == "global":
-            ok = tracker.min_step() + staleness >= my_step
+        elif pol.view == "global":
+            ok = pol.admit_min(my_step, tracker.min_step())
         else:
-            stats["control_msgs"] += 2 * method.beta
-            m = tracker.sample_min(node, method.beta, rng, scratch)
-            ok = True if m is None else m + staleness >= my_step
+            beta = pol.eff_sample
+            stats["control_msgs"] += 2 * beta
+            m = tracker.sample_min(node, beta, rng, scratch)
+            ok = True if m is None else pol.admit_min(my_step, m)
+        pol.record_decision(ok)
         if ok:
             advance_now(node, t)
         else:
             status[node] = BLOCKED
-            if method.view == "global":
-                thr = max(my_step - staleness, 0)
+            if pol.view == "global":
+                thr = max(my_step - pol.eff_staleness, 0)
                 blocked_global.setdefault(thr, []).append(node)
             else:
                 back = cfg.recheck_interval * rng.uniform(0.5, 1.5)
@@ -399,6 +673,7 @@ def run(cfg, method):
                     pending[node] += 1
             if is_global:
                 stats["control_msgs"] += 1
+            barrier_entered[node] = t
             try_advance(node, t)
         elif kind == RECHECK:
             node, step = payload
@@ -406,9 +681,27 @@ def run(cfg, method):
                 continue
             try_advance(node, t)
         elif kind == UPDATE_ARRIVE:
-            pending[payload] -= 1
+            node = payload
+            pending[node] -= 1
+            if sgd is not None:
+                if version[node] != NO_VERSION:
+                    sgd.apply_update(version[node], batch_seed[node])
+                if status[node] == GONE and pending[node] == 0:
+                    version[node] = NO_VERSION
         elif kind == SAMPLE_TL:
-            pass
+            if sgd is not None:
+                error_timeline.append((t, sgd.normalised_error()))
+            if policies.nodes is not None:
+                tsum = bsum = active = 0
+                for i, p in enumerate(policies.nodes):
+                    if tracker.is_active(i):
+                        active += 1
+                        tsum += p.eff_staleness
+                        bsum += p.eff_sample
+                if active > 0:
+                    adapt_timeline.append(
+                        (t, tsum / active, bsum / active)
+                    )
         elif kind == JOIN:
             nid = tracker.join()
             mi = cfg.mean_iter_time * rng.uniform(
@@ -417,8 +710,12 @@ def run(cfg, method):
             mean_iter.append(mi)
             status.append(COMPUTING)
             pending.append(0)
-            rng.next_u64()   # batch_seed draw (unconditional in Rust)
-            d = rng.exponential(mean_iter[nid])
+            version.append(sgd.pin_head() if sgd is not None else NO_VERSION)
+            batch_seed.append(rng.next_u64())  # unconditional in Rust
+            iter_started.append(t)
+            barrier_entered.append(t)
+            policies.joined()
+            d = rng.exponential(cfg.iter_mean(nid, t, mean_iter[nid]))
             schedule(t + d, COMPUTE_DONE, nid)
             if cfg.churn is not None:
                 schedule(t + rng.exponential(1.0 / cfg.churn[0]), JOIN)
@@ -429,6 +726,8 @@ def run(cfg, method):
                 if status[victim] != GONE:
                     churn_victims.append(victim)
                     status[victim] = GONE
+                    if sgd is not None and pending[victim] == 0:
+                        version[victim] = NO_VERSION
                     new_min = tracker.leave(victim)
                     if new_min is not None:
                         release_blocked(new_min, t)
@@ -448,6 +747,9 @@ def run(cfg, method):
         elif kind == CONFIRM_DEAD:
             node = payload
             if tracker.is_active(node):
+                if sgd is not None and pending[node] == 0 \
+                        and version[node] != NO_VERSION:
+                    version[node] = NO_VERSION
                 new_min = tracker.leave(node)
                 if new_min is not None:
                     release_blocked(new_min, t)
@@ -473,6 +775,7 @@ def run(cfg, method):
         for i in range(len(status))
         if tracker.is_active(i)
     ]
+    pols = policies.all()
     return {
         "final_steps": final_steps,
         "update_msgs": stats["update_msgs"],
@@ -486,6 +789,11 @@ def run(cfg, method):
         "mean_progress": (
             sum(final_steps) / len(final_steps) if final_steps else 0.0
         ),
+        "error_timeline": error_timeline,
+        "adapt_timeline": adapt_timeline,
+        "barrier_waits": sum(p.barrier_waits for p in pols),
+        "stall_ticks": sum(p.stall_ticks for p in pols),
+        "retunes": sum(p.retunes for p in pols),
     }
 
 
