@@ -109,6 +109,13 @@ def main():
                         f"monitor :{port}: adaptation is off but effective "
                         f"staleness diverges across workers: {theta}"
                     )
+        comp = doc.get("compress")
+        if comp is not None and comp["mode"] != "dense":
+            print(
+                f"monitor :{port} compress: mode={comp['mode']} "
+                f"payload_bytes={int(comp['payload_bytes'])} "
+                f"fed_back_mass={comp['fed_back_mass']:.3f}"
+            )
         if applied is None:
             applied = doc["applied_of"]
         elif doc["applied_of"] != applied:

@@ -21,6 +21,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use actor_psp::barrier::Method;
+use actor_psp::engine::delta::CompressConfig;
 use actor_psp::engine::paramserver::ShardLayout;
 use actor_psp::model::linear::{Dataset, LinearModel};
 use actor_psp::sim::{ChurnConfig, ClusterConfig, SgdConfig, SimResult, Simulator};
@@ -236,6 +237,53 @@ fn main() {
         ]);
     }
 
+    // Delta-payload compression: the sim plane's bytes/update headline.
+    // Same seed means the same event trajectory (encoding never touches
+    // event timing), so the dense/top-k payload-byte ratio IS the
+    // per-update wire saving. Hardware-independent, gated below like
+    // the vnode and calendar ratios (runs in smoke mode too).
+    let compress_ratio;
+    {
+        let dim = 1024;
+        let mk = |compress| ClusterConfig {
+            n_nodes: 100,
+            duration: 10.0,
+            seed: 42,
+            sgd: Some(SgdConfig { dim, ..SgdConfig::default() }),
+            compress,
+            ..ClusterConfig::default()
+        };
+        let m = Method::Pssp { sample: 10, staleness: 4 };
+        let (dense, _) =
+            bench_once("sim n=100 10s + sgd d=1024 (dense payloads)", || {
+                Simulator::new(mk(Some(CompressConfig::default())), m).run()
+            });
+        let (topk, _) =
+            bench_once("sim n=100 10s + sgd d=1024 (top-k 64)", || {
+                Simulator::new(mk(CompressConfig::parse("topk", 64, "i8")), m)
+                    .run()
+            });
+        assert_eq!(
+            dense.update_msgs, topk.update_msgs,
+            "compression must not change the event trajectory"
+        );
+        let per = |r: &SimResult| {
+            r.payload_bytes as f64 / r.update_msgs.max(1) as f64
+        };
+        compress_ratio = per(&dense) / per(&topk).max(1e-9);
+        println!(
+            "    -> payload bytes/update d={dim}: dense {:.0}B, top-k 64 \
+             {:.0}B ({compress_ratio:.2}x smaller)",
+            per(&dense),
+            per(&topk)
+        );
+        suite.record("compress_bytes", &[
+            ("bytes_ratio", compress_ratio),
+            ("dense_bytes_per_update", per(&dense)),
+            ("topk_bytes_per_update", per(&topk)),
+        ]);
+    }
+
     // The inner gradient kernel on its own (full mode only).
     if !opts.smoke {
         let mut rng = Rng::new(3);
@@ -285,6 +333,20 @@ fn main() {
             eprintln!(
                 "vnode placement only improved push-traffic balance \
                  {vnode_improvement:.2}x (floor 3.0x) — placement regression"
+            );
+            std::process::exit(1);
+        }
+        // Also a ratio: top-k 64 of d=1024 must keep the wire at least
+        // 4x lighter per update than dense payloads (the PR's
+        // approximate-communication acceptance bar).
+        println!(
+            "gate compressed payload bytes/update: {compress_ratio:.2}x \
+             (floor 4.00x)"
+        );
+        if compress_ratio < 4.0 {
+            eprintln!(
+                "top-k payloads only {compress_ratio:.2}x smaller than dense \
+                 (floor 4.0x) — delta codec regression"
             );
             std::process::exit(1);
         }

@@ -102,12 +102,14 @@ USAGE:
       Regenerate a paper table/figure. ids: table1 fig1a..fig1e fig2a..fig2c
       fig3 fig4 fig5, or 'all'. Extensions (beyond the paper): abl_*
       ext_churn ext_loss ext_shards ext_p2p ext_crash ext_chaos
-      ext_transport ext_adaptive. Sweep grids fan out over J worker
-      threads (default: one per core; reports are identical for every J).
+      ext_transport ext_adaptive ext_compress. Sweep grids fan out over J
+      worker threads (default: one per core; reports are identical for
+      every J).
 
   actor sim --method M [--nodes N] [--duration S] [--seed N] [--sgd]
             [--crash-rate F] [--detect S] [--shard-crash-rate F]
-            [--shard-rehome S] [--shards K] [--adaptive ...] [--config FILE]
+            [--shard-rehome S] [--shards K] [--compress ...] [--adaptive ...]
+            [--config FILE]
       One simulated cluster run; prints the progress/error/message summary.
       M: bsp | ssp[:t] | asp | pbsp[:b] | pssp[:b[:t]] | pquorum:b:t:q
       --crash-rate adds F crash-stops/s (victims keep poisoning samples
@@ -118,8 +120,8 @@ USAGE:
 
   actor ps [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
            [--seed N] [--shards K] [--push-batch B] [--schedule-blocks NB]
-           [--replication R] [--vnodes V] [--kill-shard K:A] [--adaptive ...]
-           [--config FILE]
+           [--replication R] [--vnodes V] [--kill-shard K:A] [--compress ...]
+           [--adaptive ...] [--config FILE]
       Run the live sharded parameter-server engine (real threads, pure-Rust
       linear SGD): K model shards, gradients accumulated for B steps and
       scattered as one batched push per touched shard. --replication streams
@@ -131,7 +133,7 @@ USAGE:
   actor p2p [--workers N] [--steps N] [--method M] [--dim D] [--lr F]
             [--seed N] [--fanout F] [--flush B] [--ttl T] [--full-mesh]
             [--crash W:S] [--leave W:S] [--suspect-ms F] [--confirm-ms F]
-            [--no-membership] [--adaptive ...] [--config FILE]
+            [--no-membership] [--compress ...] [--adaptive ...] [--config FILE]
       Run the fully-distributed p2p engine (real threads, replicated
       model, overlay-sampled barriers). Deltas travel the gossip plane:
       F overlay-sampled shortcuts + the ring successor per forward, B
@@ -152,7 +154,7 @@ USAGE:
              [--fault-drop P] [--fault-dup P] [--fault-delay P]
              [--fault-delay-ms F] [--fault-retry-ms F] [--fault-reorder P]
              [--fault-partition A:B,..] [--fault-heal-ms F] [--fault-seed N]
-             [--adaptive ...] [--config FILE]
+             [--compress ...] [--adaptive ...] [--config FILE]
       Seed a real multi-process cluster (deployment plane). Binds the
       listen address, accepts N-1 `actor join` processes, assigns ids in
       connect order, ships each the full workload, then runs as node 0:
@@ -187,6 +189,16 @@ USAGE:
       inject faults on this process's wire only; --adaptive is likewise
       per-process — adaptation is a local decision and never rides the
       Welcome.
+
+  Delta compression (sim, ps, p2p, node): --compress dense|topk|quant
+  picks the update payload codec — topk ships the k largest-magnitude
+  coordinates as (index, value) pairs (--top-k K, default 32), quant
+  ships the full vector at reduced precision (--quant i8|f16|i4,
+  default i8; --quant alone implies --compress quant). Truncated mass
+  is fed back into the next update (error feedback), so lossy modes
+  still converge. Joiners inherit the codec from the seed's Welcome.
+  Config file: [compress] mode/top_k/quant. With compression off (the
+  default), every engine replays bit-identically to previous releases.
 
   Adaptive barriers (sim, ps, p2p, node, join): --adaptive turns on the
   DSSP-style online controller — each node watches its own barrier wait

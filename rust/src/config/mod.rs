@@ -35,6 +35,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::barrier::{AdaptiveConfig, Method};
+use crate::engine::delta::CompressConfig;
 use crate::engine::gossip::GossipConfig;
 use crate::engine::membership::MembershipConfig;
 use crate::engine::p2p::{Departure, Dissemination, P2pConfig};
@@ -230,6 +231,46 @@ impl Config {
         ))
     }
 
+    /// Delta-payload compression from the `[compress]` section, shared
+    /// by every plane: simulator SGD updates, parameter-server pushes,
+    /// and p2p / deployed-node gossip originations. `None` when the
+    /// section is absent — exact dense payloads everywhere, bit-identical
+    /// to the pre-compression code. All keys optional:
+    ///
+    /// ```toml
+    /// [compress]
+    /// mode = "topk"   # dense | topk | quant
+    /// top_k = 32      # coordinates kept per delta (topk mode)
+    /// quant = "i4"    # i8 | f16 | i4 (quant mode)
+    /// ```
+    pub fn compress_config(&self) -> Result<Option<CompressConfig>> {
+        if !self.has_section("compress") {
+            return Ok(None);
+        }
+        let d = CompressConfig::default();
+        let mode = match self.get("compress", "mode") {
+            None => "dense",
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("[compress] mode must be a string"))?,
+        };
+        let quant = match self.get("compress", "quant") {
+            None => "i8",
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("[compress] quant must be a string"))?,
+        };
+        let top_k = self.usize_or("compress", "top_k", d.top_k)?;
+        CompressConfig::parse(mode, top_k, quant)
+            .ok_or_else(|| {
+                anyhow!(
+                    "[compress] bad mode '{mode}' / quant '{quant}' \
+                     (mode: dense|topk|quant; quant: i8|f16|i4)"
+                )
+            })
+            .map(Some)
+    }
+
     /// Build the live sharded parameter-server engine configuration from
     /// the `[ps]` section (all keys optional) plus `[barrier] method`:
     ///
@@ -280,6 +321,7 @@ impl Config {
             kill_shard,
             schedule_blocks,
             adaptive: self.barrier_adaptive()?,
+            compress: self.compress_config()?.unwrap_or_default(),
             ..d
         })
     }
@@ -354,6 +396,7 @@ impl Config {
             membership: self.membership_config()?,
             churn,
             adaptive: self.barrier_adaptive()?,
+            compress: self.compress_config()?.unwrap_or_default(),
             ..d
         })
     }
@@ -447,6 +490,7 @@ impl Config {
             n_shards: self.usize_or("churn", "shards", d.n_shards)?.max(1),
             sample_interval: self.f64_or("cluster", "sample_interval", d.sample_interval)?,
             sgd,
+            compress: self.compress_config()?,
             // Time-varying load is a scenario knob (set programmatically
             // by experiments); launch files only toggle adaptation.
             load_profile: None,
@@ -907,6 +951,35 @@ adaptive_max_sample = 16
         let a = c.barrier_adaptive().unwrap().unwrap();
         assert_eq!(a.min_sample, 1);
         assert!(a.max_staleness >= a.min_staleness);
+    }
+
+    #[test]
+    fn compress_section_flows_into_every_plane() {
+        // Absent section: dense payloads, no accounting, everywhere.
+        let c = Config::parse("").unwrap();
+        assert!(c.compress_config().unwrap().is_none());
+        assert!(c.cluster_config().unwrap().compress.is_none());
+        assert!(c.ps_config().unwrap().compress.is_dense());
+        assert!(c.p2p_config().unwrap().compress.is_dense());
+        let c = Config::parse("[compress]\nmode = \"topk\"\ntop_k = 12\n").unwrap();
+        let cc = c.compress_config().unwrap().expect("section present");
+        assert_eq!(cc, CompressConfig::parse("topk", 12, "i8").unwrap());
+        assert_eq!(c.ps_config().unwrap().compress, cc);
+        assert_eq!(c.p2p_config().unwrap().compress, cc);
+        assert_eq!(c.cluster_config().unwrap().compress, Some(cc));
+        // quant picks the quantizer; an empty section means dense mode
+        // (exact payloads, byte accounting on).
+        let c = Config::parse("[compress]\nmode = \"quant\"\nquant = \"i4\"").unwrap();
+        assert_eq!(c.compress_config().unwrap().unwrap().mode_str(), "qi4");
+        let c = Config::parse("[compress]\n").unwrap();
+        assert!(c.compress_config().unwrap().unwrap().is_dense());
+        // Bad values are rejected loudly.
+        let c = Config::parse("[compress]\nmode = \"zstd\"").unwrap();
+        assert!(c.compress_config().is_err());
+        let c = Config::parse("[compress]\nmode = \"quant\"\nquant = \"i2\"").unwrap();
+        assert!(c.compress_config().is_err());
+        let c = Config::parse("[compress]\nmode = 3").unwrap();
+        assert!(c.compress_config().is_err());
     }
 
     #[test]

@@ -28,8 +28,7 @@
 //! round-based harness to prove the exactly-once/no-loss property under
 //! churn.
 
-use std::sync::Arc;
-
+use super::delta::DeltaPayload;
 use crate::overlay::Ring;
 use crate::util::rng::Rng;
 
@@ -56,8 +55,9 @@ impl Default for GossipConfig {
     }
 }
 
-/// One disseminated model delta. The payload is shared (`Arc`) so
-/// fan-out copies cost a pointer, not a `dim`-float clone.
+/// One disseminated model delta. The payload's bulk is shared (`Arc`
+/// inside [`DeltaPayload`]) so fan-out copies cost a pointer, not a
+/// `dim`-float clone.
 #[derive(Debug, Clone)]
 pub struct Rumor {
     /// Worker that produced the delta.
@@ -66,8 +66,9 @@ pub struct Rumor {
     pub seq: u32,
     /// Remaining shortcut hops.
     pub ttl: u32,
-    /// Summed delta to apply additively: `w += delta`.
-    pub delta: Arc<[f32]>,
+    /// Summed delta to apply additively: `w += delta` — dense or
+    /// compressed, in whatever form the origin's encoder produced.
+    pub delta: DeltaPayload,
 }
 
 /// Growable bitset over sequence numbers (dense per-origin seqs).
@@ -163,7 +164,7 @@ impl GossipNode {
     ///
     /// The buffered TTL is `cfg.ttl + 1` so the origin's own send does
     /// not consume shortcut budget; first receivers see `cfg.ttl`.
-    pub fn originate(&mut self, delta: Arc<[f32]>, cfg: &GossipConfig) -> u32 {
+    pub fn originate(&mut self, delta: DeltaPayload, cfg: &GossipConfig) -> u32 {
         let seq = self.next_seq;
         self.next_seq += 1;
         let origin = self.id as u32;
@@ -285,8 +286,8 @@ impl GossipNode {
 mod tests {
     use super::*;
 
-    fn arc(v: &[f32]) -> Arc<[f32]> {
-        v.to_vec().into()
+    fn arc(v: &[f32]) -> DeltaPayload {
+        DeltaPayload::dense(v.to_vec())
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! artifact ([`crate::runtime`]); the gradient source is a plugged-in
 //! closure ([`GradFn`]) so examples can choose.
 
+pub mod delta;
 pub mod gossip;
 pub mod mapreduce;
 pub mod membership;
@@ -158,6 +159,17 @@ pub struct EngineReport {
     pub eff_staleness: Vec<u64>,
     /// Per-worker effective sample size β (0 for global/no-view methods).
     pub eff_sample: Vec<u64>,
+    // -- compression plane (delta payloads; see [`delta`]) --
+    /// Payload mode every origin encoded with (`"dense"` when
+    /// compression is off).
+    pub compress_mode: &'static str,
+    /// Delta-payload bytes originated across all workers (wire form,
+    /// before framing) — the numerator of the bytes/step headline the
+    /// `ext_compress` ablation races.
+    pub payload_bytes: u64,
+    /// L1 mass the error-feedback accumulators re-injected (0 in dense
+    /// mode — nothing is ever dropped).
+    pub fed_back_mass: f64,
 }
 
 /// One worker's barrier-policy outcome, in the shape the engines fold

@@ -51,6 +51,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
+use crate::engine::delta::{CompressConfig, DeltaEncoder};
 use crate::engine::gossip::{GossipConfig, GossipNode};
 use crate::engine::membership::{evict_from_view, FailureDetector, MembershipConfig, PeerState};
 use crate::engine::p2p::{PeerMsg, MIN_DRAIN_POLL};
@@ -87,6 +88,10 @@ pub struct NodeConfig {
     pub method: Method,
     /// Gossip dissemination knobs.
     pub gossip: GossipConfig,
+    /// Delta-payload compression for this node's originations. Rides
+    /// the `Welcome` frame so every member encodes identically;
+    /// `Dense` keeps the legacy uncompressed path bit-for-bit.
+    pub compress: CompressConfig,
     /// Shutdown-drain safety net, after which unreceived rumors are
     /// counted as dropped and reported loudly.
     pub drain_timeout: Duration,
@@ -125,6 +130,9 @@ pub struct Workload {
     pub seed: u64,
     pub method: Method,
     pub gossip: GossipConfig,
+    /// Delta-payload compression; rides the `Welcome` frame (mode tag +
+    /// top-k) so the whole cluster encodes originations the same way.
+    pub compress: CompressConfig,
     pub drain_timeout: Duration,
     /// Crash-fault detection thresholds; rides the `Welcome` frame so
     /// seed and joiners agree on detection timing from one place.
@@ -150,6 +158,8 @@ impl Workload {
             ttl: self.gossip.ttl,
             suspect_us: self.membership.as_ref().map_or(0, |m| m.suspect_after),
             confirm_us: self.membership.as_ref().map_or(0, |m| m.confirm_after),
+            compress: self.compress.mode_tag(),
+            top_k: self.compress.top_k as u32,
         }
     }
 
@@ -164,6 +174,7 @@ impl Workload {
             seed: self.seed,
             method: self.method,
             gossip: self.gossip.clone(),
+            compress: self.compress,
             drain_timeout: self.drain_timeout,
             membership: self.membership.clone(),
             step_pad: Duration::ZERO,
@@ -173,8 +184,9 @@ impl Workload {
     }
 
     /// Rebuild a workload from a received `Welcome` (joiner side).
-    /// `None` when the method string does not parse — a version-skewed
-    /// seed, which the joiner must refuse rather than guess around.
+    /// `None` when the method string or the compression tag does not
+    /// parse — a version-skewed seed, which the joiner must refuse
+    /// rather than guess around.
     pub fn from_welcome(w: &Welcome, drain_timeout: Duration) -> Option<Workload> {
         Some(Workload {
             n: w.n as usize,
@@ -188,6 +200,7 @@ impl Workload {
                 flush_every: w.flush,
                 ttl: w.ttl,
             },
+            compress: CompressConfig::from_tag(w.compress, w.top_k as usize)?,
             drain_timeout,
             membership: if w.suspect_us == 0 || w.confirm_us == 0 {
                 None
@@ -469,6 +482,14 @@ pub fn status_json(
                 ),
             ]),
         ),
+        (
+            "compress",
+            obj(vec![
+                ("mode", Json::Str(report.compress_mode.to_string())),
+                ("payload_bytes", Json::Num(report.payload_bytes as f64)),
+                ("fed_back_mass", Json::Num(report.fed_back_mass)),
+            ]),
+        ),
     ];
     if let Some(ms) = membership {
         doc.push((
@@ -542,14 +563,10 @@ struct NodeState {
     /// to `detect_every` so the timer sweep is not a per-frame cost.
     next_detect: u64,
     detect_every: u64,
+    /// Turns this node's dense pending deltas into wire payloads; in
+    /// `Dense` mode the output is bit-identical to the legacy path.
+    encoder: DeltaEncoder,
     t0: Instant,
-}
-
-fn axpy(w: &mut [f32], delta: &[f32]) {
-    debug_assert_eq!(w.len(), delta.len(), "delta dimension mismatch");
-    for (wi, di) in w.iter_mut().zip(delta) {
-        *wi += di;
-    }
 }
 
 impl NodeState {
@@ -562,9 +579,9 @@ impl NodeState {
         match frame {
             Frame::Peer(PeerMsg::Gossip { rumors }) => {
                 let w = &mut self.w;
-                self.gossip.receive(rumors, |r| axpy(w, &r.delta));
+                self.gossip.receive(rumors, |r| r.delta.apply_into(w));
             }
-            Frame::Peer(PeerMsg::Delta { delta }) => axpy(&mut self.w, &delta),
+            Frame::Peer(PeerMsg::Delta { delta }) => delta.apply_into(&mut self.w),
             Frame::Peer(PeerMsg::Done { from, rumors }) => {
                 let from = from as usize;
                 self.expected[from] = Some(rumors);
@@ -610,7 +627,7 @@ impl NodeState {
                 let repaired = &mut self.repaired_rumors;
                 self.gossip.receive(store, |r| {
                     *repaired += 1;
-                    axpy(w, &r.delta);
+                    r.delta.apply_into(w);
                 });
             }
             Frame::Step { from, step, beat } => {
@@ -943,6 +960,7 @@ pub fn run_node<T: Transport>(
             .membership
             .as_ref()
             .map_or(u64::MAX, |mc| (mc.suspect_after / 4).clamp(1, 50_000)),
+        encoder: DeltaEncoder::new(cfg.compress, cfg.dim),
         t0,
     };
     let gcfg = cfg.gossip.clone();
@@ -1033,7 +1051,8 @@ pub fn run_node<T: Transport>(
 
         if step % flush_every == 0 || step == cfg.steps {
             let delta = std::mem::replace(&mut pending, vec![0.0; cfg.dim]);
-            st.gossip.originate(delta.into(), &gcfg);
+            let payload = st.encoder.encode(delta);
+            st.gossip.originate(payload, &gcfg);
             st.flush_gossip(&gcfg, &mut rng, transport);
         }
         beat += 1;
@@ -1167,6 +1186,9 @@ fn interim_report(st: &NodeState, t0: Instant, drain_polls: u64) -> EngineReport
         stall_ticks: st.policy.stats().stall_ticks,
         eff_staleness: vec![st.policy.staleness()],
         eff_sample: vec![st.policy.sample_size() as u64],
+        compress_mode: st.encoder.config().mode_str(),
+        payload_bytes: st.encoder.payload_bytes,
+        fed_back_mass: st.encoder.fed_back_mass,
         // Everyone no longer in our overlay view: graceful leavers and
         // confirmed-dead peers alike.
         departed: (0..st.n).filter(|&j| st.ring.ring_id_of(j).is_none()).collect(),
@@ -1189,6 +1211,7 @@ mod tests {
             seed: 42,
             method,
             gossip: GossipConfig { fanout: 2, flush_every: 1, ttl: 4 },
+            compress: CompressConfig::default(),
             drain_timeout: Duration::from_secs(10),
             membership: None,
         }
@@ -1282,6 +1305,38 @@ mod tests {
         let mc = mback.membership.expect("membership survives the round trip");
         assert_eq!(mc.suspect_after, 250_000);
         assert_eq!(mc.confirm_after, 125_000);
+        // Compression rides the Welcome as (tag, top_k); an unknown tag
+        // is a version-skewed seed and must be refused, not guessed.
+        let mut cwl = wl.clone();
+        cwl.compress = CompressConfig::parse("topk", 12, "i8").expect("valid mode");
+        let cw = cwl.welcome(2);
+        assert_eq!((cw.compress, cw.top_k), (1, 12));
+        let cback = Workload::from_welcome(&cw, cwl.drain_timeout).expect("parses");
+        assert_eq!(cback.compress, cwl.compress);
+        assert!(
+            Workload::from_welcome(&Welcome { compress: 9, ..cw }, cwl.drain_timeout).is_none()
+        );
+    }
+
+    #[test]
+    fn compressed_cluster_drains_cleanly_and_cuts_payload_bytes() {
+        // Same workload, dense vs top-k originations: the compressed run
+        // must still drain with zero losses, report its mode and the
+        // error-feedback mass, and ship ≥4× fewer payload bytes.
+        let mut dense = test_workload(3, 12, Method::Pssp { sample: 2, staleness: 2 });
+        dense.dim = 32;
+        let mut topk = dense.clone();
+        topk.compress = CompressConfig::parse("topk", 2, "i8").expect("valid mode");
+        let d: u64 = run_cluster(&dense).iter().map(|o| o.report.payload_bytes).sum();
+        let outs = run_cluster(&topk);
+        let c: u64 = outs.iter().map(|o| o.report.payload_bytes).sum();
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.report.dropped_deltas, 0, "node {i} dropped deltas");
+            assert_eq!(o.report.compress_mode, "topk", "node {i} mislabeled its mode");
+            assert!(o.report.fed_back_mass > 0.0, "node {i} never carried a residual");
+        }
+        assert!(d > 0 && c > 0, "payload accounting never ran (dense {d}, topk {c})");
+        assert!(c * 4 <= d, "top-k payload bytes {c} are not >=4x under dense {d}");
     }
 
     #[test]

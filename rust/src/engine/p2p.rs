@@ -57,6 +57,7 @@ use std::time::{Duration, Instant};
 
 use crate::actor::System;
 use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
+use crate::engine::delta::{CompressConfig, DeltaEncoder, DeltaPayload};
 use crate::engine::gossip::{GossipConfig, GossipNode, Rumor};
 use crate::engine::membership::{self, FailureDetector, MembershipConfig};
 use crate::engine::{BarrierOut, EngineReport, GradFn};
@@ -75,7 +76,9 @@ pub(crate) const MIN_DRAIN_POLL: Duration = Duration::from_millis(1);
 #[derive(Debug, Clone)]
 pub enum PeerMsg {
     /// Full-mesh mode: a model delta from a peer, apply `w += delta`.
-    Delta { delta: Vec<f32> },
+    /// Dense or compressed, in whatever form the origin's
+    /// [`DeltaEncoder`] produced.
+    Delta { delta: DeltaPayload },
     /// Gossip mode: one physical message — every rumor queued for this
     /// link since the sender's last flush (or a repair-plane store
     /// re-send; receivers dedup, so the two are interchangeable).
@@ -150,6 +153,11 @@ pub struct P2pConfig {
     /// Each worker adapts its own θ/β locally — no consensus round,
     /// which is the point: it composes with "no global state anywhere".
     pub adaptive: Option<AdaptiveConfig>,
+    /// Delta-payload compression ([`crate::engine::delta`]). The
+    /// default (`dense`) is bit-identical to the uncompressed engine;
+    /// lossy modes ship smaller payloads and carry the dropped mass in
+    /// each origin's error-feedback residual.
+    pub compress: CompressConfig,
 }
 
 impl Default for P2pConfig {
@@ -167,6 +175,7 @@ impl Default for P2pConfig {
             membership: Some(MembershipConfig::default()),
             churn: Vec::new(),
             adaptive: None,
+            compress: CompressConfig::default(),
         }
     }
 }
@@ -188,6 +197,8 @@ struct WorkerOut {
     drain_polls: u64,
     departed: bool,
     barrier: BarrierOut,
+    payload_bytes: u64,
+    fed_back_mass: f64,
 }
 
 #[inline]
@@ -301,6 +312,11 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 // Origin-side delta compaction buffer (gossip mode).
                 let mut pending = vec![0.0f32; cfg.dim];
                 let mut pending_steps = 0u64;
+                // Every origination funnels through this encoder: dense
+                // mode passes the buffer through untouched; lossy modes
+                // sparsify/quantize and keep the dropped mass as the
+                // error-feedback residual for the next origination.
+                let mut encoder = DeltaEncoder::new(cfg.compress, cfg.dim);
 
                 // This worker's evolving overlay view: the launch ring
                 // minus evicted (departed or confirmed-dead) nodes.
@@ -479,12 +495,12 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                 macro_rules! process {
                     ($msg:expr) => {
                         match $msg {
-                            PeerMsg::Delta { delta } => add_delta(&mut w, &delta),
+                            PeerMsg::Delta { delta } => delta.apply_into(&mut w),
                             PeerMsg::Gossip { rumors } => {
                                 let node = gnode.as_mut().expect(
                                     "gossip message on a full-mesh plane",
                                 );
-                                node.receive(rumors, |r| add_delta(&mut w, &r.delta));
+                                node.receive(rumors, |r| r.delta.apply_into(&mut w));
                             }
                             PeerMsg::Done { from, rumors } => {
                                 let from = from as usize;
@@ -545,7 +561,7 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                                 if let Some(node) = gnode.as_mut() {
                                     node.receive(store, |r| {
                                         repaired_rumors += 1;
-                                        add_delta(&mut w, &r.delta);
+                                        r.delta.apply_into(&mut w);
                                     });
                                 }
                             }
@@ -572,11 +588,10 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                                     (gnode.as_mut(), gossip_cfg.as_ref())
                                 {
                                     if pending_steps > 0 {
-                                        let payload: Arc<[f32]> = std::mem::replace(
+                                        let payload = encoder.encode(std::mem::replace(
                                             &mut pending,
                                             vec![0.0; cfg.dim],
-                                        )
-                                        .into();
+                                        ));
                                         pending_steps = 0;
                                         node.originate(payload, gc);
                                     }
@@ -629,12 +644,15 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             // push the delta to all peers (model plane); a
                             // send fails only into a departed peer's
                             // dropped mailbox, and a departed peer applies
-                            // no further updates anyway
+                            // no further updates anyway. One encode per
+                            // step; every peer gets the same payload (the
+                            // local replica keeps the exact delta).
+                            let payload = encoder.encode(delta);
                             for (j, addr) in addrs.iter().enumerate() {
                                 if j != i {
                                     update_msgs += 1;
                                     let _ = addr
-                                        .send(PeerMsg::Delta { delta: delta.clone() });
+                                        .send(PeerMsg::Delta { delta: payload.clone() });
                                 }
                             }
                         }
@@ -643,9 +661,10 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                             pending_steps += 1;
                             let last = step + 1 == cfg.steps_per_worker;
                             if pending_steps >= gc.flush_every || last {
-                                let payload: Arc<[f32]> =
-                                    std::mem::replace(&mut pending, vec![0.0; cfg.dim])
-                                        .into();
+                                let payload = encoder.encode(std::mem::replace(
+                                    &mut pending,
+                                    vec![0.0; cfg.dim],
+                                ));
                                 pending_steps = 0;
                                 gnode.as_mut().unwrap().originate(payload, gc);
                             }
@@ -892,12 +911,15 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
                     drain_polls,
                     departed,
                     barrier: BarrierOut::of(&policy),
+                    payload_bytes: encoder.payload_bytes,
+                    fed_back_mass: encoder.fed_back_mass,
                 }
             })
         })
         .collect();
 
     let mut report = EngineReport::default();
+    report.compress_mode = cfg.compress.mode_str();
     let mut replicas: Vec<Vec<f32>> = Vec::with_capacity(n);
     for (i, wk) in workers.into_iter().enumerate() {
         let (addr, handle) = wk.into_parts();
@@ -915,6 +937,8 @@ pub fn run(cfg: &P2pConfig, init_w: Vec<f32>, grad_fn: GradFn) -> EngineReport {
         report.repair_msgs += out.repair_msgs;
         report.repaired_rumors += out.repaired_rumors;
         report.drain_polls += out.drain_polls;
+        report.payload_bytes += out.payload_bytes;
+        report.fed_back_mass += out.fed_back_mass;
         report.barrier_waits += out.barrier.waits;
         report.stall_ticks += out.barrier.ticks;
         report.eff_staleness.push(out.barrier.eff_staleness);
@@ -1123,6 +1147,44 @@ mod tests {
             "drain stalled: {}s",
             r.wall_secs
         );
+    }
+
+    #[test]
+    fn topk_compression_cuts_payload_bytes_and_still_converges() {
+        let base = P2pConfig {
+            n_workers: 6,
+            steps_per_worker: 12,
+            method: Method::Pssp { sample: 2, staleness: 2 },
+            dim: 24,
+            lr: 0.02,
+            seed: 11,
+            ..P2pConfig::default()
+        };
+        let topk = P2pConfig {
+            compress: CompressConfig::parse("topk", 3, "i8").unwrap(),
+            ..base.clone()
+        };
+        let (grad, w_true) = linear_grad_fn(24, 13);
+        let d = run(&base, vec![0.0; 24], grad.clone());
+        let c = run(&topk, vec![0.0; 24], grad);
+        assert_eq!(d.compress_mode, "dense");
+        assert_eq!(c.compress_mode, "topk");
+        // Dense never touches the residual; top-k must have fed back.
+        assert_eq!(d.fed_back_mass, 0.0);
+        assert!(c.fed_back_mass > 0.0);
+        // k=3 of 24 coords: 33-byte payloads vs 101-byte dense.
+        assert!(d.payload_bytes > 0);
+        assert!(
+            2 * c.payload_bytes < d.payload_bytes,
+            "top-k did not compress: {} vs dense {}",
+            c.payload_bytes,
+            d.payload_bytes
+        );
+        // Error feedback keeps the compressed run training.
+        let init = l2_dist(&vec![0.0; 24], &w_true);
+        let err = l2_dist(&c.model, &w_true);
+        assert!(err < init, "compressed p2p diverged: {init} -> {err}");
+        assert_eq!(c.dropped_deltas, 0);
     }
 
     #[test]

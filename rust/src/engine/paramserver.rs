@@ -56,6 +56,7 @@ use std::time::{Duration, Instant};
 
 use crate::actor::{Address, System};
 use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
+use crate::engine::delta::{CompressConfig, DeltaEncoder, DeltaPayload};
 use crate::engine::membership::{FailureDetector, MembershipConfig};
 use crate::engine::{BarrierOut, EngineError, EngineReport, GradFn};
 use crate::overlay::{node_ring_id, Ring};
@@ -85,14 +86,19 @@ pub enum ShardMsg {
     /// any worker traffic (FIFO) so primaries can forward replica
     /// streams and promoted actors can bulk-install.
     Init { peers: Vec<Address<ShardMsg>> },
-    /// Batched gradient for shard `shard`'s block (values in owned-index
-    /// order); the primary applies `w[j] -= lr * grad[j]`, forwards the
-    /// batch to its replicas, then acknowledges.
-    Push { shard: usize, grad: Vec<f32>, ack: Sender<PushAck> },
-    /// Replica stream: an applied batch forwarded by the primary. The
-    /// replica applies it and then drops `ack` unsent — disconnecting
-    /// the worker's flush channel only after the apply.
-    Replicate { shard: usize, grad: Vec<f32>, ack: Sender<PushAck> },
+    /// Batched model delta for shard `shard`'s block (values in
+    /// owned-index order, already `-lr`-scaled at the worker, possibly
+    /// sparsified/quantized per [`CompressConfig`]); the primary applies
+    /// it, forwards the *same payload* to its replicas, then
+    /// acknowledges. Dense payloads replay the legacy `w -= lr * grad`
+    /// arithmetic bit-for-bit.
+    Push { shard: usize, delta: DeltaPayload, ack: Sender<PushAck> },
+    /// Replica stream: an applied payload forwarded by the primary. The
+    /// replica applies the identical payload — so replica blocks stay
+    /// bitwise-equal to the primary even under lossy encodings — and
+    /// then drops `ack` unsent, disconnecting the worker's flush
+    /// channel only after the apply.
+    Replicate { shard: usize, delta: DeltaPayload, ack: Sender<PushAck> },
     /// Bulk handoff: adopt `block` as the current state of `shard`.
     Install { shard: usize, block: Vec<f32> },
     /// Become (or stay) primary for `shard`: forward future batches to
@@ -192,6 +198,11 @@ pub struct PsConfig {
     /// the policy then replays the legacy admission decisions exactly.
     /// Each worker adapts its own θ/β locally — no consensus round.
     pub adaptive: Option<AdaptiveConfig>,
+    /// Delta-payload compression for worker pushes. Replicas receive
+    /// the identical payload the primary applied, so the bitwise
+    /// replica invariant holds in every mode; `Dense` (the default) is
+    /// bit-identical to the legacy uncompressed path.
+    pub compress: CompressConfig,
 }
 
 impl Default for PsConfig {
@@ -212,6 +223,7 @@ impl Default for PsConfig {
             vnodes: 0,
             kill_shard: None,
             adaptive: None,
+            compress: CompressConfig::default(),
         }
     }
 }
@@ -348,6 +360,32 @@ struct WorkerDone {
     lost_shard: Option<usize>,
     /// Barrier-policy outcome: wait/stall counters + final effective θ/β.
     barrier: BarrierOut,
+    /// Payload bytes this worker's pushes shipped (wire form).
+    payload_bytes: u64,
+    /// L1 mass its error-feedback accumulators re-injected.
+    fed_back_mass: f64,
+}
+
+/// Assemble a worker's final accounting. Every return path — including
+/// the mid-flush abort paths — must go through here so the barrier and
+/// compression counters are never silently zeroed.
+fn worker_done(
+    control_msgs: u64,
+    update_msgs: u64,
+    steps_done: u64,
+    lost_shard: Option<usize>,
+    policy: &BarrierPolicy,
+    encoders: &[DeltaEncoder],
+) -> WorkerDone {
+    WorkerDone {
+        control_msgs,
+        update_msgs,
+        steps_done,
+        lost_shard,
+        barrier: BarrierOut::of(policy),
+        payload_bytes: encoders.iter().map(|e| e.payload_bytes).sum(),
+        fed_back_mass: encoders.iter().map(|e| e.fed_back_mass).sum(),
+    }
 }
 
 /// Coordinator-side failover state: the routing table plus the
@@ -546,6 +584,7 @@ pub fn try_run(
     let n_shards = cfg.n_shards.clamp(1, cfg.dim.max(1));
     let push_batch = cfg.push_batch.max(1);
     let replication = cfg.replication.min(n_shards.saturating_sub(1));
+    let compress = cfg.compress;
     let layout = Arc::new(ShardLayout::new(cfg.dim, n_shards, cfg.vnodes));
     if cfg.kill_shard.is_some() && (replication == 0 || n_shards < 2) {
         // No replica exists to inherit the victim's block: the kill will
@@ -584,7 +623,7 @@ pub fn try_run(
                     for msg in buf.drain(..) {
                         match msg {
                             ShardMsg::Init { peers: p } => peers = p,
-                            ShardMsg::Push { shard, grad, ack } => {
+                            ShardMsg::Push { shard, delta, ack } => {
                                 if !primary_of[shard] {
                                     // Stale route: neither apply nor ack —
                                     // the worker re-resolves and retries.
@@ -594,16 +633,17 @@ pub fn try_run(
                                 let w = blocks[shard]
                                     .as_mut()
                                     .expect("primary holds its block");
-                                for (wi, gi) in w.iter_mut().zip(&grad) {
-                                    *wi -= lr * gi;
-                                }
+                                delta.apply_into(w);
                                 applied += 1;
                                 // Replicate BEFORE acking: an acked batch
-                                // is on every addressed replica's queue.
+                                // is on every addressed replica's queue —
+                                // and it is the same payload the primary
+                                // applied, so replicas stay bitwise-equal
+                                // even under lossy encodings.
                                 for &t in &forward[shard] {
                                     peers[t].send(ShardMsg::Replicate {
                                         shard,
-                                        grad: grad.clone(),
+                                        delta: delta.clone(),
                                         ack: ack.clone(),
                                     });
                                 }
@@ -617,12 +657,10 @@ pub fn try_run(
                                     }
                                 }
                             }
-                            ShardMsg::Replicate { shard, grad, ack } => {
+                            ShardMsg::Replicate { shard, delta, ack } => {
                                 match blocks[shard].as_mut() {
                                     Some(w) => {
-                                        for (wi, gi) in w.iter_mut().zip(&grad) {
-                                            *wi -= lr * gi;
-                                        }
+                                        delta.apply_into(w);
                                         replica_applied += 1;
                                     }
                                     None => discarded += 1,
@@ -771,6 +809,11 @@ pub fn try_run(
                 // `adaptive: None` its decisions are value-identical to
                 // the legacy inline `min + θ >= step + 1` checks.
                 let mut policy = BarrierPolicy::with_adaptive(method, adaptive);
+                // One payload encoder per shard: error-feedback residuals
+                // live per block, so they follow the placement exactly.
+                let mut encoders: Vec<DeltaEncoder> = (0..n_shards)
+                    .map(|s| DeltaEncoder::new(compress, layout.owned[s].len()))
+                    .collect();
                 let mut control_msgs = 0u64;
                 let mut update_msgs = 0u64;
                 // Local copy of the shard -> primary routing table,
@@ -826,26 +869,20 @@ pub fn try_run(
                             ) {
                                 Refresh::Ok => {}
                                 Refresh::Shutdown => {
-                                    return WorkerDone {
-                                        control_msgs,
-                                        update_msgs,
-                                        steps_done: step,
-                                        lost_shard: None,
-                                        barrier: BarrierOut::of(&policy),
-                                    };
+                                    return worker_done(
+                                        control_msgs, update_msgs, step, None,
+                                        &policy, &encoders,
+                                    );
                                 }
                                 Refresh::Lost(ls) => {
                                     eprintln!(
                                         "ps-worker-{i}: shard {ls} lost — \
                                          aborting at step {step}/{steps}"
                                     );
-                                    return WorkerDone {
-                                        control_msgs,
-                                        update_msgs,
-                                        steps_done: step,
-                                        lost_shard: Some(ls),
-                                        barrier: BarrierOut::of(&policy),
-                                    };
+                                    return worker_done(
+                                        control_msgs, update_msgs, step, Some(ls),
+                                        &policy, &encoders,
+                                    );
                                 }
                             }
                         }
@@ -881,18 +918,25 @@ pub fn try_run(
                     // disconnect additionally waits for the replica
                     // applies (the quiescence barrier).
                     if pending == push_batch as u64 || step + 1 == steps {
-                        let mut flush: Vec<(usize, Vec<f32>)> = Vec::new();
+                        let mut flush: Vec<(usize, DeltaPayload)> = Vec::new();
                         for s in 0..n_shards {
                             if !touched[s] {
                                 continue;
                             }
-                            let grad: Vec<f32> =
-                                layout.owned[s].iter().map(|&j| acc[j]).collect();
+                            // The push carries the *delta* (already
+                            // `-lr`-scaled): dense mode then replays the
+                            // legacy `w -= lr * grad` bit-for-bit (IEEE
+                            // `x + (-y) == x - y`), and lossy modes drop
+                            // or round update mass, never raw gradients.
+                            let delta: Vec<f32> = layout.owned[s]
+                                .iter()
+                                .map(|&j| -(lr * acc[j]))
+                                .collect();
                             for &j in &layout.owned[s] {
                                 acc[j] = 0.0;
                             }
                             touched[s] = false;
-                            flush.push((s, grad));
+                            flush.push((s, encoders[s].encode(delta)));
                         }
                         let mut attempts = 0usize;
                         while !flush.is_empty() {
@@ -902,10 +946,10 @@ pub fn try_run(
                                 "ps-worker-{i}: push never converged on live shards"
                             );
                             let (ack_tx, ack_rx) = channel();
-                            for (s, grad) in &flush {
+                            for (s, delta) in &flush {
                                 shard_addrs[routes[*s]].send(ShardMsg::Push {
                                     shard: *s,
-                                    grad: grad.clone(),
+                                    delta: delta.clone(),
                                     ack: ack_tx.clone(),
                                 });
                             }
@@ -929,24 +973,20 @@ pub fn try_run(
                                 ) {
                                     Refresh::Ok => {}
                                     Refresh::Shutdown => {
-                                        return WorkerDone {
-                                            control_msgs,
-                                            update_msgs,
-                                            steps_done: step,
-                                            lost_shard: None,
-                                        };
+                                        return worker_done(
+                                            control_msgs, update_msgs, step, None,
+                                            &policy, &encoders,
+                                        );
                                     }
                                     Refresh::Lost(ls) => {
                                         eprintln!(
                                             "ps-worker-{i}: shard {ls} lost — \
                                              aborting at step {step}/{steps}"
                                         );
-                                        return WorkerDone {
-                                            control_msgs,
-                                            update_msgs,
-                                            steps_done: step,
-                                            lost_shard: Some(ls),
-                                        };
+                                        return worker_done(
+                                            control_msgs, update_msgs, step, Some(ls),
+                                            &policy, &encoders,
+                                        );
                                     }
                                 }
                             }
@@ -973,13 +1013,10 @@ pub fn try_run(
                                 let (tx, rx) = channel();
                                 control_msgs += 2;
                                 if !coord_addr.send(CoordMsg::MinStep { reply: tx }) {
-                                    return WorkerDone {
-                                        control_msgs,
-                                        update_msgs,
-                                        steps_done: step + 1,
-                                        lost_shard: None,
-                                        barrier: BarrierOut::of(&policy),
-                                    };
+                                    return worker_done(
+                                        control_msgs, update_msgs, step + 1, None,
+                                        &policy, &encoders,
+                                    );
                                 }
                                 match rx.recv() {
                                     // `None` = shard lost: release.
@@ -998,13 +1035,10 @@ pub fn try_run(
                                     beta,
                                     reply: tx,
                                 }) {
-                                    return WorkerDone {
-                                        control_msgs,
-                                        update_msgs,
-                                        steps_done: step + 1,
-                                        lost_shard: None,
-                                        barrier: BarrierOut::of(&policy),
-                                    };
+                                    return worker_done(
+                                        control_msgs, update_msgs, step + 1, None,
+                                        &policy, &encoders,
+                                    );
                                 }
                                 match rx.recv() {
                                     // Empty sample / lost shard: release.
@@ -1027,13 +1061,7 @@ pub fn try_run(
                         entered.duration_since(step_t0).as_secs_f64(),
                     );
                 }
-                WorkerDone {
-                    control_msgs,
-                    update_msgs,
-                    steps_done: steps,
-                    lost_shard: None,
-                    barrier: BarrierOut::of(&policy),
-                }
+                worker_done(control_msgs, update_msgs, steps, None, &policy, &encoders)
             })
         })
         .collect();
@@ -1047,6 +1075,8 @@ pub fn try_run(
     let mut stall_ticks = 0u64;
     let mut eff_staleness = Vec::with_capacity(n);
     let mut eff_sample = Vec::with_capacity(n);
+    let mut payload_bytes = 0u64;
+    let mut fed_back_mass = 0.0f64;
     for wkr in workers {
         let (addr, handle) = wkr.into_parts();
         drop(addr);
@@ -1058,6 +1088,8 @@ pub fn try_run(
         stall_ticks += done.barrier.ticks;
         eff_staleness.push(done.barrier.eff_staleness);
         eff_sample.push(done.barrier.eff_sample);
+        payload_bytes += done.payload_bytes;
+        fed_back_mass += done.fed_back_mass;
         if let Some(s) = done.lost_shard {
             lost_reports.push(s);
         }
@@ -1146,6 +1178,9 @@ pub fn try_run(
         stall_ticks,
         eff_staleness,
         eff_sample,
+        compress_mode: cfg.compress.mode_str(),
+        payload_bytes,
+        fed_back_mass,
         ..EngineReport::default()
     };
     if lost.is_empty() {
@@ -1503,6 +1538,79 @@ mod tests {
             assert_eq!(r.handoff_bytes, 0, "fault-free run shipped handoffs");
             assert_eq!(r.replica_pulls, 0, "fault-free run read a replica");
         }
+    }
+
+    #[test]
+    fn topk_compression_cuts_push_bytes_and_keeps_replicas_identical() {
+        // Same workload, dense vs compressed pushes. Replication is on,
+        // so the bitwise replica == primary assertion inside `run`
+        // doubles as the decode-once / forward-identical check. The
+        // compressed runs must ack every logical push, ship ≥4× fewer
+        // payload bytes (top-k and int4), and still move the model
+        // toward the analytic update sum.
+        let base = PsConfig {
+            n_workers: 4,
+            steps_per_worker: 24,
+            method: Method::Ssp { staleness: 2 },
+            dim: 256,
+            lr: 0.05,
+            seed: 101,
+            n_shards: 2,
+            replication: 1,
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(base.dim);
+        let expected = expected_seed_only_model(&base, &grad);
+        let init = l2_dist(&vec![0.0; base.dim], &expected);
+        let dense = run(&base, vec![0.0; base.dim], grad.clone());
+        assert_eq!(dense.compress_mode, "dense");
+        assert_eq!(dense.fed_back_mass, 0.0, "dense mode fed mass back");
+        assert!(dense.payload_bytes > 0, "payload accounting never ran");
+        for (mode, top_k, quant) in [("topk", 14, "i8"), ("quant", 14, "i4")] {
+            let cfg = PsConfig {
+                compress: CompressConfig::parse(mode, top_k, quant).expect("valid mode"),
+                ..base.clone()
+            };
+            let r = run(&cfg, vec![0.0; cfg.dim], grad.clone());
+            let label = r.compress_mode;
+            assert_eq!(r.update_msgs, dense.update_msgs, "{label}: lost pushes");
+            assert!(r.fed_back_mass > 0.0, "{label}: no error feedback");
+            assert!(
+                r.payload_bytes * 4 <= dense.payload_bytes,
+                "{label}: {} bytes is not >=4x under dense {}",
+                r.payload_bytes,
+                dense.payload_bytes,
+            );
+            let err = l2_dist(&r.model, &expected);
+            assert!(err < init, "{label}: did not move toward the update sum");
+        }
+    }
+
+    #[test]
+    fn compressed_pushes_survive_a_killed_shard_actor() {
+        // The chaos bar under compression: the retry path re-sends the
+        // stored payload (never re-encodes), so a kill must not disturb
+        // the error-feedback stream — every logical push acked once.
+        let cfg = PsConfig {
+            n_workers: 3,
+            steps_per_worker: 8,
+            method: Method::Ssp { staleness: 2 },
+            dim: 64,
+            lr: 0.05,
+            seed: 111,
+            n_shards: 4,
+            replication: 2,
+            kill_shard: Some((1, 3)),
+            compress: CompressConfig::parse("quant", 8, "i4").expect("valid mode"),
+            ..PsConfig::default()
+        };
+        let grad = seed_only_grad_fn(cfg.dim);
+        let r = run(&cfg, vec![0.0; cfg.dim], grad);
+        assert_eq!(r.update_msgs, 3 * 8 * 4);
+        assert_eq!(r.confirmed_dead, 1);
+        assert!(r.handoff_bytes > 0);
+        assert_eq!(r.compress_mode, "qi4");
+        assert!(r.payload_bytes > 0);
     }
 
     #[test]

@@ -36,6 +36,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::engine::delta::DeltaPayload;
 use crate::engine::gossip::Rumor;
 use crate::engine::p2p::PeerMsg;
 use crate::util::rng::Rng;
@@ -87,6 +88,13 @@ pub struct Welcome {
     pub suspect_us: u64,
     /// Suspect → confirmed-dead threshold in µs (`0` = membership off).
     pub confirm_us: u64,
+    /// Delta-payload compression mode tag
+    /// ([`crate::engine::delta::CompressConfig::mode_tag`]; `0` = dense).
+    /// Rides the handshake so every origin in the cluster encodes its
+    /// payloads identically.
+    pub compress: u8,
+    /// Coordinates kept per delta when `compress` selects top-k.
+    pub top_k: u32,
 }
 
 /// One wire message. `Peer` embeds the engines' protocol unchanged;
@@ -178,18 +186,11 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(s.as_bytes());
 }
 
-fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
-    put_u32(out, xs.len() as u32);
-    for &x in xs {
-        put_f32(out, x);
-    }
-}
-
 fn put_rumor(out: &mut Vec<u8>, r: &Rumor) {
     put_u32(out, r.origin);
     put_u32(out, r.seq);
     put_u32(out, r.ttl);
-    put_f32s(out, &r.delta);
+    r.delta.encode_into(out);
 }
 
 fn put_rumors(out: &mut Vec<u8>, rs: &[Rumor]) {
@@ -206,7 +207,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
     match frame {
         Frame::Peer(PeerMsg::Delta { delta }) => {
             body.push(TAG_DELTA);
-            put_f32s(&mut body, delta);
+            delta.encode_into(&mut body);
         }
         Frame::Peer(PeerMsg::Gossip { rumors }) => {
             body.push(TAG_GOSSIP);
@@ -252,6 +253,8 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut body, w.ttl);
             put_u64(&mut body, w.suspect_us);
             put_u64(&mut body, w.confirm_us);
+            body.push(w.compress);
+            put_u32(&mut body, w.top_k);
         }
         Frame::Peers { peers } => {
             body.push(TAG_PEERS);
@@ -284,17 +287,17 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
 /// without encoding — writers use it for bandwidth accounting.
 pub fn wire_len(frame: &Frame) -> usize {
     fn rumors_len(rs: &[Rumor]) -> usize {
-        4 + rs.iter().map(|r| 16 + 4 * r.delta.len()).sum::<usize>()
+        4 + rs.iter().map(|r| 12 + r.delta.wire_len()).sum::<usize>()
     }
     let body = match frame {
-        Frame::Peer(PeerMsg::Delta { delta }) => 1 + 4 + 4 * delta.len(),
+        Frame::Peer(PeerMsg::Delta { delta }) => 1 + delta.wire_len(),
         Frame::Peer(PeerMsg::Gossip { rumors }) => 1 + rumors_len(rumors),
         Frame::Peer(PeerMsg::Done { .. }) | Frame::Peer(PeerMsg::Leave { .. }) => 1 + 8,
         Frame::Peer(PeerMsg::Repair { store, .. }) => 1 + 8 + rumors_len(store),
         Frame::Step { .. } => 1 + 4 + 8 + 8,
         Frame::Join { addr } => 1 + 4 + addr.len(),
         Frame::Welcome(w) => {
-            1 + 4 + 4 + 8 + 8 + 4 + 4 + (4 + w.method.len()) + 4 + 8 + 4 + 8 + 8
+            1 + 4 + 4 + 8 + 8 + 4 + 4 + (4 + w.method.len()) + 4 + 8 + 4 + 8 + 8 + 1 + 4
         }
         Frame::Peers { peers } => {
             1 + 4 + peers.iter().map(|(_, a)| 8 + a.len()).sum::<usize>()
@@ -320,6 +323,10 @@ impl<'a> Rd<'a> {
         Ok(s)
     }
 
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
     fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -332,34 +339,37 @@ impl<'a> Rd<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
-        let n = self.u32()? as usize;
-        // A count that can't fit in the remaining bytes is a truncation,
-        // caught here before we reserve anything on its behalf.
-        if self.buf.len() - self.off < 4 * n {
-            return Err(WireError::Truncated);
-        }
-        (0..n).map(|_| self.f32()).collect()
-    }
-
     fn string(&mut self) -> Result<String, WireError> {
         let n = self.u32()? as usize;
         let raw = self.take(n)?;
         String::from_utf8(raw.to_vec()).map_err(|_| WireError::BadUtf8)
     }
 
+    /// One delta payload off the shared sub-codec. Anything
+    /// [`DeltaPayload::decode_from`] rejects — truncation, an unknown
+    /// payload tag, a length that outruns the body, non-canonical
+    /// sparse/packed forms — surfaces as `Truncated`: the body length
+    /// already matched the frame, so a bad payload *is* a short read.
+    fn payload(&mut self) -> Result<DeltaPayload, WireError> {
+        let (p, used) = DeltaPayload::decode_from(&self.buf[self.off..])
+            .ok_or(WireError::Truncated)?;
+        self.off += used;
+        Ok(p)
+    }
+
     fn rumor(&mut self) -> Result<Rumor, WireError> {
         let origin = self.u32()?;
         let seq = self.u32()?;
         let ttl = self.u32()?;
-        let delta: Arc<[f32]> = self.f32s()?.into();
+        let delta = self.payload()?;
         Ok(Rumor { origin, seq, ttl, delta })
     }
 
     fn rumors(&mut self) -> Result<Vec<Rumor>, WireError> {
         let n = self.u32()? as usize;
-        // Each rumor is at least 16 bytes; reject impossible counts.
-        if (self.buf.len() - self.off) / 16 < n {
+        // Each rumor is at least 17 bytes (12-byte header + the smallest
+        // payload, tag + length); reject impossible counts.
+        if (self.buf.len() - self.off) / 17 < n {
             return Err(WireError::Truncated);
         }
         (0..n).map(|_| self.rumor()).collect()
@@ -378,7 +388,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
     let (&tag, rest) = body.split_first().ok_or(WireError::Truncated)?;
     let mut rd = Rd { buf: rest, off: 0 };
     let frame = match tag {
-        TAG_DELTA => Frame::Peer(PeerMsg::Delta { delta: rd.f32s()? }),
+        TAG_DELTA => Frame::Peer(PeerMsg::Delta { delta: rd.payload()? }),
         TAG_GOSSIP => Frame::Peer(PeerMsg::Gossip { rumors: rd.rumors()? }),
         TAG_DONE => Frame::Peer(PeerMsg::Done { from: rd.u32()?, rumors: rd.u32()? }),
         TAG_LEAVE => Frame::Peer(PeerMsg::Leave { from: rd.u32()?, rumors: rd.u32()? }),
@@ -402,6 +412,8 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
             ttl: rd.u32()?,
             suspect_us: rd.u64()?,
             confirm_us: rd.u64()?,
+            compress: rd.u8()?,
+            top_k: rd.u32()?,
         }),
         TAG_PEERS => {
             let n = rd.u32()? as usize;
@@ -497,8 +509,13 @@ pub trait Transport {
 /// against [`TcpTransport`].
 pub struct ChannelTransport {
     me: usize,
-    peers: Vec<Sender<Frame>>,
-    inbox: Receiver<Frame>,
+    /// Frames travel with their wire-equivalent size so the receiver
+    /// can account `bytes_in` without re-measuring (self-sends ride as
+    /// size 0 — they never touch a wire, mirroring [`TcpTransport`]).
+    peers: Vec<Sender<(u64, Frame)>>,
+    inbox: Receiver<(u64, Frame)>,
+    bytes_out: AtomicU64,
+    bytes_in: u64,
 }
 
 impl ChannelTransport {
@@ -507,8 +524,27 @@ impl ChannelTransport {
         let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| mpsc::channel()).unzip();
         rxs.into_iter()
             .enumerate()
-            .map(|(me, inbox)| ChannelTransport { me, peers: txs.clone(), inbox })
+            .map(|(me, inbox)| ChannelTransport {
+                me,
+                peers: txs.clone(),
+                inbox,
+                bytes_out: AtomicU64::new(0),
+                bytes_in: 0,
+            })
             .collect()
+    }
+
+    /// Wire-equivalent bytes queued to peers: what each frame *would*
+    /// cost encoded ([`wire_len`]), self-sends excluded — the same
+    /// semantics as [`TcpTransport::bytes_out`], so channel-vs-TCP
+    /// comparisons (`exp ext_transport`) race bytes, not just counts.
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+
+    /// Wire-equivalent bytes received from peers (self-sends excluded).
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
     }
 }
 
@@ -522,15 +558,24 @@ impl Transport for ChannelTransport {
     }
 
     fn send(&self, to: usize, frame: Frame) -> bool {
-        self.peers[to].send(frame).is_ok()
+        let sz = if to == self.me { 0 } else { wire_len(&frame) as u64 };
+        let ok = self.peers[to].send((sz, frame)).is_ok();
+        if ok {
+            self.bytes_out.fetch_add(sz, Ordering::Relaxed);
+        }
+        ok
     }
 
     fn try_recv(&mut self) -> Option<Frame> {
-        self.inbox.try_recv().ok()
+        let (sz, f) = self.inbox.try_recv().ok()?;
+        self.bytes_in += sz;
+        Some(f)
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Option<Frame> {
-        self.inbox.recv_timeout(timeout).ok()
+        let (sz, f) = self.inbox.recv_timeout(timeout).ok()?;
+        self.bytes_in += sz;
+        Some(f)
     }
 }
 
@@ -1291,7 +1336,7 @@ mod tests {
     }
 
     fn rumor(origin: u32, seq: u32, ttl: u32, delta: &[f32]) -> Rumor {
-        Rumor { origin, seq, ttl, delta: delta.to_vec().into() }
+        Rumor { origin, seq, ttl, delta: DeltaPayload::dense(delta.to_vec()) }
     }
 
     // -- known-answer vectors (mirrored in tools/verify_wire_port.py) --
@@ -1307,13 +1352,40 @@ mod tests {
     fn known_answer_gossip() {
         let f = Frame::Peer(PeerMsg::Gossip { rumors: vec![rumor(1, 2, 3, &[1.0, -2.5])] });
         let bytes = encode(&f);
-        // split for readability: len | tag | count | origin seq ttl dim | f32s
+        // split for readability:
+        // len | tag | count | origin seq ttl | ptag=0 (dense) dim | f32s
         assert_eq!(
-            hex(&bytes[..25]),
-            "1d000000020100000001000000020000000300000002000000",
+            hex(&bytes[..26]),
+            "1e00000002010000000100000002000000030000000002000000",
         );
-        assert_eq!(hex(&bytes[25..]), "0000803f000020c0");
-        assert_eq!(bytes.len(), 33);
+        assert_eq!(hex(&bytes[26..]), "0000803f000020c0");
+        assert_eq!(bytes.len(), 34);
+    }
+
+    #[test]
+    fn known_answer_gossip_topk() {
+        // A compressed rumor: top-k payload (ptag=1) inside a Gossip
+        // frame — the new-payload known answer the Python port mirrors.
+        let f = Frame::Peer(PeerMsg::Gossip {
+            rumors: vec![Rumor {
+                origin: 1,
+                seq: 2,
+                ttl: 3,
+                delta: DeltaPayload::TopK {
+                    dim: 8,
+                    idx: vec![1, 5].into(),
+                    val: vec![0.5, -0.25].into(),
+                },
+            }],
+        });
+        let bytes = encode(&f);
+        // len | tag | count | origin seq ttl | ptag=1 dim k | idx | vals
+        assert_eq!(
+            hex(&bytes[..30]),
+            "2a0000000201000000010000000200000003000000010800000002000000",
+        );
+        assert_eq!(hex(&bytes[30..]), "01000000050000000000003f000080be");
+        assert_eq!(bytes.len(), 42);
     }
 
     #[test]
@@ -1347,11 +1419,52 @@ mod tests {
         (0..dim).map(|_| gen_f32(rng)).collect()
     }
 
+    /// One payload in any of the five wire forms. Draw order is part of
+    /// the cross-language contract (mirrored in verify_wire_port.py).
+    fn gen_payload(rng: &mut Rng) -> DeltaPayload {
+        use crate::engine::delta::f32_to_f16_bits;
+        match rng.next_below(5) {
+            0 => DeltaPayload::dense(gen_delta(rng)),
+            1 => {
+                let dim = rng.next_below(6) as u32 + 1;
+                let idx: Vec<u32> =
+                    (0..dim).filter(|_| rng.next_below(2) == 1).collect();
+                let val: Vec<f32> =
+                    (0..idx.len()).map(|_| gen_f32(rng)).collect();
+                DeltaPayload::TopK { dim, idx: idx.into(), val: val.into() }
+            }
+            2 => {
+                let n = rng.next_below(5);
+                let scale = gen_f32(rng);
+                let codes: Vec<i8> = (0..n)
+                    .map(|_| (rng.next_below(255) as i64 - 127) as i8)
+                    .collect();
+                DeltaPayload::QuantI8 { scale, codes: codes.into() }
+            }
+            3 => {
+                let n = rng.next_below(5);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| f32_to_f16_bits(gen_f32(rng))).collect();
+                DeltaPayload::QuantF16 { codes: codes.into() }
+            }
+            _ => {
+                let n = rng.next_below(5) as u32;
+                let scale = gen_f32(rng);
+                let mut packed = vec![0u8; (n as usize).div_ceil(2)];
+                for i in 0..n as usize {
+                    let nib = ((rng.next_below(15) as i64 - 7) as u8) & 0x0f;
+                    packed[i / 2] |= if i % 2 == 0 { nib } else { nib << 4 };
+                }
+                DeltaPayload::QuantI4 { n, scale, packed: packed.into() }
+            }
+        }
+    }
+
     fn gen_rumor(rng: &mut Rng) -> Rumor {
         let origin = rng.next_below(64) as u32;
         let seq = rng.next_below(100) as u32;
         let ttl = rng.next_below(8) as u32;
-        let delta: Arc<[f32]> = gen_delta(rng).into();
+        let delta = gen_payload(rng);
         Rumor { origin, seq, ttl, delta }
     }
 
@@ -1366,7 +1479,7 @@ mod tests {
 
     fn gen_frame(rng: &mut Rng) -> Frame {
         match rng.next_below(11) {
-            0 => Frame::Peer(PeerMsg::Delta { delta: gen_delta(rng) }),
+            0 => Frame::Peer(PeerMsg::Delta { delta: gen_payload(rng) }),
             1 => Frame::Peer(PeerMsg::Gossip { rumors: gen_rumors(rng) }),
             2 => Frame::Peer(PeerMsg::Done {
                 from: rng.next_below(64) as u32,
@@ -1400,6 +1513,8 @@ mod tests {
                 ttl: rng.next_below(16) as u32,
                 suspect_us: rng.next_below(1 << 30),
                 confirm_us: rng.next_below(1 << 30),
+                compress: rng.next_below(5) as u8,
+                top_k: rng.next_below(64) as u32 + 1,
             }),
             8 => {
                 let n = rng.next_below(4) as usize;
@@ -1507,7 +1622,60 @@ mod tests {
 
     /// Pinned by tools/verify_wire_port.py — regenerate there if the
     /// format changes on purpose.
-    const CROSS_DIGEST: u64 = 0x9C37_C247_788D_5437;
+    const CROSS_DIGEST: u64 = 0x3D6F_C12A_51DA_4566;
+
+    #[test]
+    fn encoder_digest_is_pinned() {
+        use crate::engine::delta::{CompressConfig, DeltaEncoder};
+        // The companion digest pins the *encoder arithmetic*, not just
+        // the byte layout: 20 seeded runs (4 per mode), three encodes
+        // each through ONE DeltaEncoder so the error-feedback residual
+        // feeds forward, hashing every payload's wire bytes plus the
+        // exact f32 bit pattern of the residual after each encode.
+        // tools/verify_wire_port.py re-runs the same cases through a
+        // from-scratch Python port of the encoder (top-k selection,
+        // quantizer rounding, residual fold) and must land here too.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let fnv = |h: &mut u64, bytes: &[u8]| {
+            for &byte in bytes {
+                *h = (*h ^ byte as u64).wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        const MODES: [(&str, &str); 5] = [
+            ("dense", "i8"),
+            ("topk", "i8"),
+            ("quant", "i8"),
+            ("quant", "f16"),
+            ("quant", "i4"),
+        ];
+        for case in 0..20u64 {
+            let seed = (0xE4C0_0000u64.wrapping_add(case)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut rng = Rng::new(seed);
+            let dim = rng.next_below(7) as usize + 1;
+            let top_k = rng.next_below(dim as u64) as usize + 1;
+            let (mode, quant) = MODES[case as usize % 5];
+            let cfg = CompressConfig::parse(mode, top_k, quant).unwrap();
+            let mut enc = DeltaEncoder::new(cfg, dim);
+            for _ in 0..3 {
+                let delta: Vec<f32> = (0..dim).map(|_| gen_f32(&mut rng)).collect();
+                let payload = enc.encode(delta);
+                let mut buf = Vec::new();
+                payload.encode_into(&mut buf);
+                fnv(&mut h, &buf);
+                for &r in enc.residual() {
+                    fnv(&mut h, &r.to_bits().to_le_bytes());
+                }
+            }
+        }
+        assert_eq!(
+            h, ENCODER_DIGEST,
+            "encoder arithmetic drifted from the pinned digest"
+        );
+    }
+
+    /// Pinned by tools/verify_wire_port.py — regenerate there if the
+    /// encoder semantics change on purpose.
+    const ENCODER_DIGEST: u64 = 0xE83D_0241_0A8D_751F;
 
     // -- transports --
 
@@ -1525,6 +1693,21 @@ mod tests {
             other => panic!("unexpected: {other:?}"),
         }
         assert!(cluster[0].try_recv().is_none());
+    }
+
+    #[test]
+    fn channel_transport_counts_wire_equivalent_bytes() {
+        let mut cluster = ChannelTransport::cluster(2);
+        let f = Frame::Step { from: 0, step: 4, beat: 1 };
+        let len = wire_len(&f) as u64;
+        assert!(cluster[0].send(1, f));
+        // Self-sends never touch a wire: free, like TcpTransport's.
+        assert!(cluster[0].send(0, Frame::Step { from: 0, step: 1, beat: 1 }));
+        assert_eq!(cluster[0].bytes_out(), len);
+        assert!(cluster[1].recv_timeout(Duration::from_secs(1)).is_some());
+        assert_eq!(cluster[1].bytes_in(), len);
+        assert!(cluster[0].try_recv().is_some());
+        assert_eq!(cluster[0].bytes_in(), 0);
     }
 
     #[test]
@@ -1547,7 +1730,7 @@ mod tests {
             Some(Frame::Peer(PeerMsg::Gossip { rumors })) => {
                 assert_eq!(rumors.len(), 1);
                 assert_eq!(rumors[0].origin, 0);
-                assert_eq!(&rumors[0].delta[..], &[0.5, -0.5]);
+                assert_eq!(rumors[0].delta.dense_slice().unwrap(), &[0.5, -0.5]);
             }
             other => panic!("unexpected: {other:?}"),
         }

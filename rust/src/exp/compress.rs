@@ -1,0 +1,253 @@
+//! `ext_compress` — the delta-payload codec across both live engine
+//! planes: dense wire bytes vs top-k sparsification and quantization
+//! (ROADMAP item 4, approximate communication).
+//!
+//! Every update in the system is a [`DeltaPayload`]; this sweep runs the
+//! same workload through the gossip plane (p2p engine) and the sharded
+//! parameter server with each codec and reports what the wire actually
+//! carried. The acceptance bar lives in the function body (so the CI
+//! smoke job enforces it through the release binary): **top-k and int4
+//! cut payload bytes ≥4× per update while landing at a final error
+//! matched to the dense run** — error feedback keeps the truncated mass
+//! in play, so lossy codecs trade wire bytes for a slightly longer
+//! tail, not for a worse model.
+//!
+//! qi8/qf16 are reported for shape only: int8 lands just *under* 4×
+//! (4·dim+5 → dim+9 bytes, ≈3.9× at these dims — exactly why the int4
+//! codec exists) and f16 is the gentle ~2× option.
+//!
+//! [`DeltaPayload`]: crate::engine::delta::DeltaPayload
+
+use std::sync::Arc;
+
+use crate::barrier::Method;
+use crate::engine::delta::CompressConfig;
+use crate::engine::p2p::{self, P2pConfig};
+use crate::engine::paramserver::{self, PsConfig};
+use crate::engine::EngineReport;
+use crate::exp::{ExpOpts, Report};
+use crate::model::linear::{minibatch_grad_fn, Dataset};
+use crate::util::rng::Rng;
+use crate::util::stats::l2_dist;
+
+/// Codecs that must clear the ≥4× bytes bar at matched error.
+const ASSERTED: [&str; 2] = ["topk", "qi4"];
+
+/// Slack allowed between a lossy arm's final normalised error and the
+/// dense arm's: error feedback converges to the same neighbourhood, but
+/// the truncated tail lags by a few steps' worth of residual.
+const ERR_SLACK: f64 = 0.2;
+
+/// (dim, steps_per_worker, top_k) for the current scale. k is chosen so
+/// the *per-shard* top-k payload (block = dim / n_shards) still clears
+/// 4×: with 2 shards, k of dim/2 coords costs 9 + 8k bytes against the
+/// dense block's 5 + 2·dim.
+fn scale(opts: &ExpOpts) -> (usize, u64, usize) {
+    if opts.quick {
+        (128, 24, 6)
+    } else {
+        (256, 48, 12)
+    }
+}
+
+fn arms(top_k: usize) -> Vec<(&'static str, CompressConfig)> {
+    vec![
+        ("dense", CompressConfig::default()),
+        ("topk", CompressConfig::parse("topk", top_k, "i8").expect("topk")),
+        ("qi8", CompressConfig::parse("quant", top_k, "i8").expect("qi8")),
+        ("qf16", CompressConfig::parse("quant", top_k, "f16").expect("qf16")),
+        ("qi4", CompressConfig::parse("quant", top_k, "i4").expect("qi4")),
+    ]
+}
+
+/// One row + the acceptance assertions, shared by both planes.
+fn record(
+    rep: &mut Report,
+    plane: &str,
+    label: &str,
+    r: &EngineReport,
+    dense: &EngineReport,
+    dense_err: f64,
+    norm_err: f64,
+) {
+    assert_eq!(r.compress_mode, label, "{plane}: codec label mismatch");
+    let ratio = dense.payload_bytes as f64 / r.payload_bytes.max(1) as f64;
+    if label == "dense" {
+        assert_eq!(r.fed_back_mass, 0.0, "{plane}: dense fed mass back");
+        assert!(r.payload_bytes > 0, "{plane}: byte accounting never ran");
+    } else {
+        assert!(r.fed_back_mass > 0.0, "{plane}/{label}: no error feedback");
+    }
+    if ASSERTED.contains(&label) {
+        // The acceptance bar: ≥4× fewer payload bytes per update, at a
+        // final error matched to dense (within the residual-tail slack).
+        assert!(
+            r.payload_bytes * 4 <= dense.payload_bytes,
+            "{plane}/{label}: {} bytes is not >=4x under dense {}",
+            r.payload_bytes,
+            dense.payload_bytes,
+        );
+        assert!(
+            norm_err <= dense_err + ERR_SLACK,
+            "{plane}/{label}: final error {norm_err:.3} not matched to \
+             dense {dense_err:.3}"
+        );
+        assert!(norm_err < 1.0, "{plane}/{label}: worse than the zero model");
+    }
+    rep.row(vec![
+        plane.into(),
+        label.into(),
+        r.update_msgs.into(),
+        r.payload_bytes.into(),
+        (r.payload_bytes as f64 / r.update_msgs.max(1) as f64).into(),
+        ratio.into(),
+        r.fed_back_mass.into(),
+        norm_err.into(),
+        r.wall_secs.into(),
+    ]);
+}
+
+pub fn ext_compress(opts: &ExpOpts) -> Report {
+    let (dim, steps, top_k) = scale(opts);
+    let mut rep = Report::new(
+        "ext_compress",
+        "delta-payload codecs on the gossip and parameter-server planes",
+        &[
+            "plane", "mode", "upd_msgs", "payload_B", "B_per_upd",
+            "vs_dense", "fed_back", "norm_err", "wall_s",
+        ],
+    );
+    let mut rng = Rng::new(opts.seed ^ 0xC0DE);
+    let data = Arc::new(Dataset::synthetic(1024, dim, 0.05, &mut rng));
+    let w_true = data.w_true.clone();
+    let init = l2_dist(&vec![0.0; dim], &w_true);
+
+    // Gossip plane: every origination is one payload; rumors forward the
+    // encoded form unchanged, so bytes/update is the codec's wire cost.
+    let p2p_base = P2pConfig {
+        n_workers: 4,
+        steps_per_worker: steps,
+        method: Method::Pssp { sample: 2, staleness: 2 },
+        lr: 0.05,
+        dim,
+        seed: opts.seed,
+        ..P2pConfig::default()
+    };
+    let p2p_runs: Vec<(&str, EngineReport)> = arms(top_k)
+        .into_iter()
+        .map(|(label, compress)| {
+            let cfg = P2pConfig { compress, ..p2p_base.clone() };
+            let grad = minibatch_grad_fn(Arc::clone(&data), 32);
+            (label, p2p::run(&cfg, vec![0.0; dim], grad))
+        })
+        .collect();
+    let dense = &p2p_runs[0].1;
+    let dense_err = l2_dist(&dense.model, &w_true) / init;
+    for (label, r) in &p2p_runs {
+        let norm_err = l2_dist(&r.model, &w_true) / init;
+        record(&mut rep, "gossip", label, r, dense, dense_err, norm_err);
+    }
+
+    // Parameter-server plane: one payload per touched shard per push, so
+    // the codec works on dim/n_shards-sized blocks — the stress case for
+    // top-k's fixed header.
+    let ps_base = PsConfig {
+        n_workers: 4,
+        steps_per_worker: steps,
+        method: Method::Ssp { staleness: 2 },
+        lr: 0.05,
+        dim,
+        seed: opts.seed,
+        n_shards: 2,
+        replication: 1,
+        ..PsConfig::default()
+    };
+    let ps_runs: Vec<(&str, EngineReport)> = arms(top_k)
+        .into_iter()
+        .map(|(label, compress)| {
+            let cfg = PsConfig { compress, ..ps_base.clone() };
+            let grad = minibatch_grad_fn(Arc::clone(&data), 32);
+            (label, paramserver::run(&cfg, vec![0.0; dim], grad))
+        })
+        .collect();
+    let dense = &ps_runs[0].1;
+    let dense_err = l2_dist(&dense.model, &w_true) / init;
+    for (label, r) in &ps_runs {
+        // Compression must never cost an acknowledged push.
+        assert_eq!(r.update_msgs, dense.update_msgs, "ps/{label}: lost pushes");
+        let norm_err = l2_dist(&r.model, &w_true) / init;
+        record(&mut rep, "paramserver", label, r, dense, dense_err, norm_err);
+    }
+
+    rep.note(format!(
+        "acceptance (asserted in-body): topk and qi4 ship >=4x fewer \
+         payload bytes per update than dense on BOTH planes and land \
+         within {ERR_SLACK} normalised error of the dense run; lossy \
+         arms must feed truncated mass back (fed_back > 0)"
+    ));
+    rep.note(
+        "qi8 sits just under 4x by construction (4*dim+5 -> dim+9 bytes) \
+         and qf16 is ~2x — reported for shape, not asserted",
+    );
+    rep.note(format!(
+        "workload: d={dim}, 4 workers x {steps} steps, top_k={top_k}; \
+         the ps plane encodes per-shard blocks (2 shards), the gossip \
+         plane whole-model deltas"
+    ));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::Cell;
+
+    fn num(c: &Cell) -> f64 {
+        match c {
+            Cell::Num(n) => *n,
+            Cell::Int(i) => *i as f64,
+            _ => panic!("expected numeric cell"),
+        }
+    }
+
+    fn s(c: &Cell) -> &str {
+        match c {
+            Cell::Str(s) => s,
+            _ => panic!("expected string cell"),
+        }
+    }
+
+    #[test]
+    fn compression_sweep_holds_the_4x_bar_on_both_planes() {
+        // The body of ext_compress asserts the bytes and matched-error
+        // bars; the test re-checks the emitted table so a refactor
+        // cannot silently drop the in-body assertions.
+        let opts = ExpOpts { quick: true, seed: 42, ..ExpOpts::default() };
+        let rep = ext_compress(&opts);
+        assert_eq!(rep.rows.len(), 2 * 5, "2 planes x 5 codecs");
+        for plane in ["gossip", "paramserver"] {
+            let rows: Vec<_> =
+                rep.rows.iter().filter(|r| s(&r[0]) == plane).collect();
+            let dense = rows.iter().find(|r| s(&r[1]) == "dense").unwrap();
+            for row in &rows {
+                match s(&row[1]) {
+                    "dense" => assert_eq!(num(&row[6]), 0.0),
+                    label => {
+                        assert!(num(&row[6]) > 0.0, "{plane}/{label}");
+                        if ASSERTED.contains(&label) {
+                            assert!(
+                                num(&row[5]) >= 4.0,
+                                "{plane}/{label}: ratio {}",
+                                num(&row[5])
+                            );
+                            assert!(
+                                num(&row[7]) <= num(&dense[7]) + ERR_SLACK,
+                                "{plane}/{label}: error not matched"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

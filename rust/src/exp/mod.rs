@@ -18,6 +18,7 @@
 pub mod ablation;
 pub mod adaptive;
 pub mod chaos;
+pub mod compress;
 pub mod crash_churn;
 pub mod fig1;
 pub mod fig2;
@@ -291,7 +292,7 @@ pub const ALL: &[&str] = &[
 pub const EXTENSIONS: &[&str] = &[
     "abl_beta_error", "abl_quorum", "abl_recheck", "ext_churn", "ext_loss",
     "ext_shards", "ext_p2p", "ext_crash", "ext_chaos", "ext_transport",
-    "ext_adaptive",
+    "ext_adaptive", "ext_compress",
 ];
 
 /// Run one experiment by id.
@@ -320,6 +321,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Report>> {
         "ext_chaos" => vec![chaos::ext_chaos(opts)],
         "ext_transport" => vec![transport::ext_transport(opts)],
         "ext_adaptive" => vec![adaptive::ext_adaptive(opts)],
+        "ext_compress" => vec![compress::ext_compress(opts)],
         "all" => {
             let mut all = Vec::new();
             for id in ALL {

@@ -27,6 +27,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::barrier::Method;
+use crate::engine::delta::CompressConfig;
 use crate::engine::gossip::GossipConfig;
 use crate::engine::membership::MembershipConfig;
 use crate::engine::node::{run_node, NodeOutcome, Workload};
@@ -181,6 +182,7 @@ pub fn ext_transport(opts: &ExpOpts) -> Report {
         gossip: GossipConfig { fanout: 2, flush_every: 1, ttl: 4 },
         drain_timeout: Duration::from_secs(20),
         membership: None,
+        compress: CompressConfig::default(),
     };
     let mut r = Report::new(
         "ext_transport",

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use actor_psp::barrier::{AdaptiveConfig, Method};
 use actor_psp::cli::{Args, USAGE};
 use actor_psp::config::{parse_departure, parse_kill_shard, parse_partitions, Config};
+use actor_psp::engine::delta::{CompressConfig, CompressMode};
 use actor_psp::engine::gossip::GossipConfig;
 use actor_psp::engine::membership::MembershipConfig;
 use actor_psp::engine::node::{self, Monitor, Workload};
@@ -108,6 +109,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         "method", "nodes", "duration", "seed", "sgd", "config", "quick",
         "crash-rate", "detect", "shard-crash-rate", "shard-rehome", "shards",
     ];
+    known.extend_from_slice(COMPRESS_FLAGS);
     known.extend_from_slice(ADAPTIVE_FLAGS);
     args.check_known(&known)?;
     // config file first, CLI flags override
@@ -155,6 +157,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(n) = args.parse_flag::<usize>("shards")? {
         cluster.n_shards = n.max(1);
     }
+    cluster.compress = compress_flags(args)?;
     cluster.adaptive = adaptive_flags(args)?;
     let adaptive_on = cluster.adaptive.is_some();
 
@@ -209,6 +212,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
             r.shard_crashes, r.shard_stalls,
         );
     }
+    if r.payload_bytes > 0 {
+        println!(
+            "compression: {} payload B ({:.1} B/update), fed-back mass {:.3}",
+            r.payload_bytes,
+            r.payload_bytes as f64 / r.update_msgs.max(1) as f64,
+            r.fed_back_mass,
+        );
+    }
     if let Some(e) = r.final_error() {
         println!("final normalised model error: {e:.4}");
     }
@@ -222,6 +233,7 @@ fn cmd_ps(args: &Args) -> Result<()> {
         "config", "workers", "steps", "method", "dim", "lr", "seed", "shards",
         "push-batch", "schedule-blocks", "replication", "vnodes", "kill-shard",
     ];
+    known.extend_from_slice(COMPRESS_FLAGS);
     known.extend_from_slice(ADAPTIVE_FLAGS);
     args.check_known(&known)?;
     // config file first, CLI flags override
@@ -265,6 +277,9 @@ fn cmd_ps(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get("kill-shard") {
         cfg.kill_shard = Some(parse_kill_shard(s)?);
+    }
+    if let Some(c) = compress_flags(args)? {
+        cfg.compress = c;
     }
     cfg.adaptive = adaptive_flags(args)?;
 
@@ -319,6 +334,15 @@ fn cmd_ps(args: &Args) -> Result<()> {
             r.confirmed_dead, r.replica_pulls, r.handoff_bytes,
         );
     }
+    if !cfg.compress.is_dense() {
+        println!(
+            "compression: {} — {} payload B ({:.1} B/push), fed-back mass {:.3}",
+            r.compress_mode,
+            r.payload_bytes,
+            r.payload_bytes as f64 / r.update_msgs.max(1) as f64,
+            r.fed_back_mass,
+        );
+    }
     println!(
         "wall {:.3}s  ({:.1}k worker-steps/s, {:.1}k pushes/s)",
         r.wall_secs,
@@ -340,6 +364,7 @@ fn cmd_p2p(args: &Args) -> Result<()> {
         "flush", "ttl", "full-mesh", "crash", "leave", "suspect-ms",
         "confirm-ms", "no-membership",
     ];
+    known.extend_from_slice(COMPRESS_FLAGS);
     known.extend_from_slice(ADAPTIVE_FLAGS);
     args.check_known(&known)?;
     // config file first, CLI flags override
@@ -428,6 +453,9 @@ fn cmd_p2p(args: &Args) -> Result<()> {
     if let Some(s) = args.get("leave") {
         cfg.churn.push(parse_departure(s, true)?);
     }
+    if let Some(c) = compress_flags(args)? {
+        cfg.compress = c;
+    }
     cfg.adaptive = adaptive_flags(args)?;
 
     let mut rng = Rng::new(cfg.seed ^ 0xD157);
@@ -477,6 +505,15 @@ fn cmd_p2p(args: &Args) -> Result<()> {
         println!(
             "barrier: {} wait(s), {} stall tick(s); effective θ {:?} β {:?}",
             r.barrier_waits, r.stall_ticks, r.eff_staleness, r.eff_sample,
+        );
+    }
+    if !cfg.compress.is_dense() {
+        println!(
+            "compression: {} — {} payload B ({:.1} B/update), fed-back mass {:.3}",
+            r.compress_mode,
+            r.payload_bytes,
+            r.payload_bytes as f64 / r.update_msgs.max(1) as f64,
+            r.fed_back_mass,
         );
     }
     println!(
@@ -628,6 +665,46 @@ fn adaptive_flags(args: &Args) -> Result<Option<AdaptiveConfig>> {
     Ok(ac.map(|a| a.normalized()))
 }
 
+/// Delta-compression flags: `[compress]` config section first, CLI
+/// overrides merged on top (`--compress dense|topk|quant`, `--top-k N`,
+/// `--quant i8|f16|i4`). `None` when neither file nor flags mention
+/// compression — the exact legacy payloads.
+fn compress_flags(args: &Args) -> Result<Option<CompressConfig>> {
+    let file = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?.compress_config()?,
+        None => None,
+    };
+    let mode = args.get("compress");
+    let top_k = args.parse_flag::<usize>("top-k")?;
+    let quant = args.get("quant");
+    if mode.is_none() && top_k.is_none() && quant.is_none() {
+        return Ok(file);
+    }
+    let base = file.unwrap_or_default();
+    let (base_mode, base_quant) = match base.mode {
+        CompressMode::Dense => ("dense", "i8"),
+        CompressMode::TopK => ("topk", "i8"),
+        CompressMode::QuantI8 => ("quant", "i8"),
+        CompressMode::QuantF16 => ("quant", "f16"),
+        CompressMode::QuantI4 => ("quant", "i4"),
+    };
+    // --quant alone is clearly asking for a quantized run.
+    let implied = if quant.is_some() && base_mode == "dense" { "quant" } else { base_mode };
+    CompressConfig::parse(
+        mode.unwrap_or(implied),
+        top_k.unwrap_or(base.top_k),
+        quant.unwrap_or(base_quant),
+    )
+    .ok_or_else(|| {
+        anyhow::anyhow!(
+            "bad --compress/--quant (mode: dense|topk|quant; quant: i8|f16|i4)"
+        )
+    })
+    .map(Some)
+}
+
+const COMPRESS_FLAGS: &[&str] = &["compress", "top-k", "quant"];
+
 const ADAPTIVE_FLAGS: &[&str] = &[
     "adaptive", "adaptive-window", "adaptive-max-staleness",
     "adaptive-max-sample",
@@ -647,6 +724,7 @@ fn cmd_node(args: &Args) -> Result<()> {
         "seed", "method", "fanout", "flush", "ttl", "drain-secs", "step-ms",
         "suspect-ms", "confirm-ms", "no-membership",
     ];
+    known.extend_from_slice(COMPRESS_FLAGS);
     known.extend_from_slice(FAULT_FLAGS);
     known.extend_from_slice(ADAPTIVE_FLAGS);
     args.check_known(&known)?;
@@ -682,6 +760,7 @@ fn cmd_node(args: &Args) -> Result<()> {
             args.flag_or("drain-secs", 10.0)?,
         ),
         membership: membership_flags(args)?,
+        compress: compress_flags(args)?.unwrap_or_default(),
     };
     let listener = std::net::TcpListener::bind(&tcfg.listen)?;
     let seed_addr = listener.local_addr()?.to_string();

@@ -69,6 +69,7 @@ pub use events::{Event, EventKind, EventQueue, EventScheduler, HeapQueue};
 pub use snapshots::{SnapshotStore, NO_VERSION};
 
 use crate::barrier::{AdaptiveConfig, BarrierPolicy, Method, ViewRequirement};
+use crate::engine::delta::{CompressConfig, DeltaEncoder};
 use crate::model::linear::{Dataset, LinearModel};
 use crate::sampling::StepTracker;
 use crate::util::rng::Rng;
@@ -254,6 +255,15 @@ pub struct ClusterConfig {
     /// Record timelines every this many simulated seconds.
     pub sample_interval: f64,
     pub sgd: Option<SgdConfig>,
+    /// Delta compression for SGD updates: every worker's pushed update
+    /// goes through a per-worker [`DeltaEncoder`] (error feedback
+    /// included) and the snapshot ring records the compressed payload.
+    /// `None` (the default) bypasses the encoder entirely — no RNG
+    /// draws, no arithmetic change, so the seeded golden trajectories
+    /// replay bit-identically. `Some` with `mode = "dense"` keeps the
+    /// arithmetic exact too (only byte accounting turns on), which is
+    /// what the `ext_compress` ablation uses as its baseline.
+    pub compress: Option<CompressConfig>,
     /// Deterministic time-varying load (flash crowds, diurnal swings).
     /// `None` (the default) is bit-identical to the pre-profile code.
     pub load_profile: Option<LoadProfile>,
@@ -285,6 +295,7 @@ impl Default for ClusterConfig {
             n_shards: 1,
             sample_interval: 5.0,
             sgd: None,
+            compress: None,
             load_profile: None,
             adaptive: None,
         }
@@ -338,6 +349,13 @@ pub struct SimResult {
     /// (time, mean effective θ, mean effective β) over active nodes —
     /// recorded on timeline ticks, only when adaptation is on.
     pub adapt_timeline: Vec<(f64, f64, f64)>,
+    /// Wire bytes of every SGD update payload shipped (summed over the
+    /// per-worker encoders) — 0 unless [`ClusterConfig::compress`] is
+    /// set. The bytes/step lever `ext_compress` measures.
+    pub payload_bytes: u64,
+    /// Total L1 mass the lossy encoders carried forward as error
+    /// feedback (0 for dense / compression off).
+    pub fed_back_mass: f64,
     /// Host wall-clock seconds spent simulating (perf metric).
     pub wall_secs: f64,
 }
@@ -508,7 +526,7 @@ impl Simulator {
         let mut sgd = cfg
             .sgd
             .as_ref()
-            .map(|s| SgdState::new(s, cfg.n_nodes, &mut rng));
+            .map(|s| SgdState::new(s, cfg.compress, cfg.n_nodes, &mut rng));
 
         // Per-node state.
         let mut nodes: Vec<NodeState> = (0..cfg.n_nodes)
@@ -705,7 +723,10 @@ impl Simulator {
                     let mean_iter = cfg.mean_iter_time
                         * rng.uniform(1.0 - cfg.speed_jitter, 1.0 + cfg.speed_jitter);
                     let version = match sgd.as_mut() {
-                        Some(s) => s.store.pin_head(),
+                        Some(s) => {
+                            s.joined();
+                            s.store.pin_head()
+                        }
                         None => NO_VERSION,
                     };
                     nodes.push(NodeState {
@@ -833,6 +854,13 @@ impl Simulator {
             .map(|i| tracker.step_of(i))
             .collect();
         let (barrier_waits, stall_ticks, retunes) = policies.totals();
+        let (payload_bytes, fed_back_mass) = match &sgd {
+            Some(s) => (
+                s.encoders.iter().map(|e| e.payload_bytes).sum(),
+                s.encoders.iter().map(|e| e.fed_back_mass).sum(),
+            ),
+            None => (0, 0.0),
+        };
         SimResult {
             method: self.method,
             final_steps,
@@ -851,6 +879,8 @@ impl Simulator {
             stall_ticks,
             retunes,
             adapt_timeline,
+            payload_bytes,
+            fed_back_mass,
             wall_secs: start.elapsed().as_secs_f64(),
         }
     }
@@ -1015,13 +1045,29 @@ struct SgdState {
     init_error: f64,
     lr: f32,
     batch: usize,
+    /// Per-worker payload encoders ([`ClusterConfig::compress`]); empty
+    /// when compression is off — updates then take the legacy dense
+    /// path untouched.
+    encoders: Vec<DeltaEncoder>,
+    compress: Option<CompressConfig>,
 }
 
 impl SgdState {
-    fn new(cfg: &SgdConfig, n_nodes: usize, rng: &mut Rng) -> SgdState {
+    fn new(
+        cfg: &SgdConfig,
+        compress: Option<CompressConfig>,
+        n_nodes: usize,
+        rng: &mut Rng,
+    ) -> SgdState {
         let data = Dataset::synthetic(cfg.pool, cfg.dim, cfg.noise, rng);
         let server_w = vec![0.0f32; cfg.dim];
         let init_error = crate::util::stats::l2_dist(&server_w, &data.w_true);
+        let encoders = match compress {
+            Some(c) => {
+                (0..n_nodes).map(|_| DeltaEncoder::new(c, cfg.dim)).collect()
+            }
+            None => Vec::new(),
+        };
         SgdState {
             model: LinearModel::new(cfg.dim),
             w_true: data.w_true.clone(),
@@ -1031,11 +1077,22 @@ impl SgdState {
             // per-update rate = per-round rate / P (see SgdConfig::lr)
             lr: cfg.lr / n_nodes.max(1) as f32,
             batch: cfg.batch,
+            encoders,
+            compress,
+        }
+    }
+
+    /// A node joined: give it a fresh encoder (empty residual — it has
+    /// shipped nothing yet).
+    fn joined(&mut self) {
+        if let Some(c) = self.compress {
+            self.encoders.push(DeltaEncoder::new(c, self.w_true.len()));
         }
     }
 
     /// Apply the update node `node` computed against its pinned snapshot
-    /// version — bit-identical to the pre-refactor cloned-snapshot path.
+    /// version — bit-identical to the pre-refactor cloned-snapshot path
+    /// when compression is off.
     fn apply_update(&mut self, node: usize, nodes: &[NodeState]) {
         let st = &nodes[node];
         if st.version == NO_VERSION {
@@ -1048,7 +1105,13 @@ impl SgdState {
         for (d, g) in delta.iter_mut().zip(grad) {
             *d = self.lr * g;
         }
-        self.store.apply_delta(delta);
+        match self.encoders.get_mut(node) {
+            Some(enc) => {
+                let payload = enc.encode(delta);
+                self.store.apply_payload(payload);
+            }
+            None => self.store.apply_delta(delta),
+        }
     }
 
     fn normalised_error(&self) -> f64 {
@@ -1213,6 +1276,59 @@ mod tests {
             r.error_timeline.iter().map(|&(_, e)| e.to_bits()).collect()
         };
         assert_eq!(bits(&tight), bits(&roomy), "spilled reads must be exact");
+    }
+
+    #[test]
+    fn compress_off_and_dense_mode_share_a_trajectory() {
+        // `compress: None` and an explicit dense-mode config differ only
+        // in byte accounting — the arithmetic (and hence the bitwise
+        // error trajectory) must be identical.
+        let mk = |compress| ClusterConfig {
+            sgd: Some(SgdConfig { dim: 60, ..SgdConfig::default() }),
+            compress,
+            ..tiny_cfg(25, 31)
+        };
+        let m = Method::Pssp { sample: 5, staleness: 2 };
+        let off = run(mk(None), m);
+        let dense = run(mk(Some(CompressConfig::default())), m);
+        assert_eq!(off.final_steps, dense.final_steps);
+        let bits = |r: &SimResult| -> Vec<u64> {
+            r.error_timeline.iter().map(|&(_, e)| e.to_bits()).collect()
+        };
+        assert_eq!(bits(&off), bits(&dense), "dense mode must stay exact");
+        assert_eq!(off.payload_bytes, 0);
+        assert!(dense.payload_bytes > 0, "dense mode still counts bytes");
+        assert_eq!(dense.fed_back_mass, 0.0);
+    }
+
+    #[test]
+    fn topk_compression_cuts_payload_bytes_4x_and_still_learns() {
+        let mk = |compress| ClusterConfig {
+            sgd: Some(SgdConfig { dim: 160, ..SgdConfig::default() }),
+            compress,
+            churn: Some(ChurnConfig {
+                join_rate: 0.3, // joins exercise encoder growth
+                leave_rate: 0.0,
+                crash_rate: 0.0,
+            }),
+            ..tiny_cfg(25, 32)
+        };
+        let m = Method::Pssp { sample: 5, staleness: 2 };
+        let dense = run(mk(Some(CompressConfig::default())), m);
+        let topk = run(mk(CompressConfig::parse("topk", 10, "i8")), m);
+        // Same seed, same event stream — only the payloads shrink.
+        assert_eq!(dense.update_msgs, topk.update_msgs);
+        assert!(topk.payload_bytes > 0);
+        assert!(
+            topk.payload_bytes * 4 <= dense.payload_bytes,
+            "top-k bytes {} not 4x under dense {}",
+            topk.payload_bytes,
+            dense.payload_bytes
+        );
+        assert!(topk.fed_back_mass > 0.0, "lossy mode never fed back");
+        let first = topk.error_timeline.first().unwrap().1;
+        let last = topk.error_timeline.last().unwrap().1;
+        assert!(last < first, "error should decrease: {first} -> {last}");
     }
 
     #[test]

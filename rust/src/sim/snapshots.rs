@@ -10,9 +10,13 @@
 //! **bit-exactly**:
 //!
 //! * `cur` — the live model at version `head`;
-//! * a bounded ring of the last `retain` update **deltas** (the store
-//!   takes ownership of the `lr·g` buffer the update already
-//!   materialises, so recording costs no extra copy);
+//! * a bounded ring of the last `retain` update **deltas**, stored as
+//!   [`DeltaPayload`]s: a compressed update is recorded in its wire
+//!   form (top-k / quantized — a fraction of `dim` resident floats),
+//!   while a dense update costs one copy into the payload's shared
+//!   buffer (the incoming `lr·g` buffer is recycled into the
+//!   [`SnapshotStore::take_buf`] pool, so steady-state allocation is
+//!   still zero);
 //! * materialised **checkpoints** every `CHECKPOINT_STRIDE` versions
 //!   inside the ring;
 //! * a **spill map** for pinned versions that fall off the ring (old
@@ -32,6 +36,8 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::engine::delta::DeltaPayload;
+
 /// Sentinel for "no version pinned".
 pub const NO_VERSION: u64 = u64::MAX;
 
@@ -44,8 +50,9 @@ pub struct SnapshotStore {
     /// Live model — version `head`.
     cur: Vec<f32>,
     head: u64,
-    /// `deltas[i]` transformed version `base + i` into `base + i + 1`.
-    deltas: VecDeque<Vec<f32>>,
+    /// `deltas[i]` transformed version `base + i` into `base + i + 1`
+    /// (by subtraction — [`DeltaPayload::sub_from`]).
+    deltas: VecDeque<DeltaPayload>,
     /// Oldest version reconstructable from the ring.
     base: u64,
     /// Materialised `(version, model)` checkpoints, ascending; the first
@@ -138,14 +145,26 @@ impl SnapshotStore {
         }
     }
 
-    /// Apply an update: `w[i] -= delta[i]` for every element, advancing
-    /// `head` by one and recording `delta` in the ring (taking ownership
-    /// — no copy).
-    pub fn apply_delta(&mut self, delta: Vec<f32>) {
+    /// Apply an exact dense update: `w[i] -= delta[i]` for every
+    /// element, advancing `head` by one and recording the delta in the
+    /// ring. Bit-identical to the pre-payload code; the spent buffer is
+    /// recycled into the [`SnapshotStore::take_buf`] pool.
+    pub fn apply_delta(&mut self, mut delta: Vec<f32>) {
         debug_assert_eq!(delta.len(), self.cur.len());
-        for (w, d) in self.cur.iter_mut().zip(&delta) {
-            *w -= d;
+        let payload = DeltaPayload::dense(&delta[..]);
+        if self.pool.len() < 8 {
+            delta.clear();
+            self.pool.push(delta);
         }
+        self.apply_payload(payload);
+    }
+
+    /// Apply an update in whatever payload form the origin shipped —
+    /// compressed payloads are recorded in the ring as-is (no
+    /// densification), so history memory shrinks with the wire bytes.
+    pub fn apply_payload(&mut self, delta: DeltaPayload) {
+        debug_assert_eq!(delta.dim(), self.cur.len());
+        delta.sub_from(&mut self.cur);
         self.head += 1;
         self.deltas.push_back(delta);
         if self.head % CHECKPOINT_STRIDE == 0 {
@@ -171,11 +190,7 @@ impl SnapshotStore {
                 self.spills += 1;
             }
             for _ in self.base..new_base {
-                let mut buf = self.deltas.pop_front().expect("delta ring underflow");
-                if self.pool.len() < 8 {
-                    buf.clear();
-                    self.pool.push(buf);
-                }
+                self.deltas.pop_front().expect("delta ring underflow");
             }
             self.checkpoints.pop_front();
             self.base = new_base;
@@ -189,9 +204,7 @@ impl SnapshotStore {
         let (cv, cw) = &self.checkpoints[ci];
         let mut w = cw.clone();
         for i in (cv - self.base)..(v - self.base) {
-            for (x, d) in w.iter_mut().zip(&self.deltas[i as usize]) {
-                *x -= d;
-            }
+            self.deltas[i as usize].sub_from(&mut w);
         }
         w
     }
@@ -217,9 +230,7 @@ impl SnapshotStore {
             // Forward-replay from the cache: consecutive reads advance a
             // few versions at a time, so this is the O(dim) common case.
             for i in (self.scratch_v - self.base)..(v - self.base) {
-                for (x, d) in self.scratch.iter_mut().zip(&self.deltas[i as usize]) {
-                    *x -= d;
-                }
+                self.deltas[i as usize].sub_from(&mut self.scratch);
             }
         } else {
             let w = self.rebuild(v);
@@ -311,6 +322,52 @@ mod tests {
             assert_eq!(&got, want, "version {v} diverged");
         }
         assert_eq!(store.head_slice(), oracle.versions.last().unwrap().as_slice());
+    }
+
+    /// Compressed payloads recorded via [`SnapshotStore::apply_payload`]
+    /// must replay exactly like subtracting their dense expansion — the
+    /// ring just stores fewer resident floats.
+    #[test]
+    fn compressed_payload_history_replays_bit_identically() {
+        let dim = 12;
+        let mut rng = Rng::new(0x5EED_5AFE);
+        let init: Vec<f32> = (0..dim).map(|_| rng.next_f32()).collect();
+        let mut store = SnapshotStore::new(init.clone(), 48);
+        let mut oracle = Oracle::new(init);
+        let mut pins: Vec<u64> = Vec::new();
+        for step in 0..300 {
+            if step % 5 == 0 {
+                pins.push(store.pin_head());
+            }
+            let d = random_delta(dim, &mut rng);
+            // Cycle the variants so forward replay crosses all of them.
+            let j = step % (dim - 1) + 1; // ascending with 0, in range
+            let p = match step % 3 {
+                0 => DeltaPayload::dense(d),
+                1 => DeltaPayload::TopK {
+                    dim: dim as u32,
+                    idx: vec![0, j as u32].into(),
+                    val: vec![d[0], d[j]].into(),
+                },
+                _ => DeltaPayload::QuantI8 {
+                    scale: 0.01,
+                    codes: d.iter().map(|&x| (x * 100.0) as i8).collect::<Vec<_>>().into(),
+                },
+            };
+            oracle.apply(&p.to_dense());
+            store.apply_payload(p);
+        }
+        let mut order = pins.clone();
+        rng.shuffle(&mut order);
+        for &v in &order {
+            assert_eq!(
+                store.get(v),
+                oracle.versions[v as usize].as_slice(),
+                "version {v} diverged"
+            );
+        }
+        assert_eq!(store.head_slice(), oracle.versions.last().unwrap().as_slice());
+        assert!(store.spill_count() > 0, "test never exercised the spill path");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use actor_psp::barrier::Method;
+use actor_psp::engine::delta::CompressConfig;
 use actor_psp::engine::gossip::GossipConfig;
 use actor_psp::engine::node::{run_node, NodeOutcome, Workload};
 use actor_psp::engine::transport::{ChannelTransport, FaultConfig, FaultStats, FaultyTransport};
@@ -33,6 +34,7 @@ fn workload(fanout: usize) -> Workload {
         gossip: GossipConfig { fanout, flush_every: 1, ttl: 4 },
         drain_timeout: Duration::from_secs(20),
         membership: None,
+        compress: CompressConfig::default(),
     }
 }
 

@@ -22,6 +22,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use actor_psp::barrier::Method;
+use actor_psp::engine::delta::DeltaPayload;
 use actor_psp::engine::gossip::{GossipConfig, GossipNode, Rumor};
 use actor_psp::engine::p2p::{self, Dissemination, P2pConfig};
 use actor_psp::engine::GradFn;
@@ -76,7 +77,7 @@ fn run_rounds(
         if round < origin_rounds {
             for (i, node) in nodes.iter_mut().enumerate() {
                 if live[i] {
-                    let payload: Arc<[f32]> = vec![i as f32 + 1.0].into();
+                    let payload = DeltaPayload::dense(vec![i as f32 + 1.0]);
                     let seq = node.originate(payload, cfg);
                     applies[i][i][seq as usize] += 1; // applied locally
                     originated[i] += 1;

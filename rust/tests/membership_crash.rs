@@ -28,6 +28,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use actor_psp::barrier::Method;
+use actor_psp::engine::delta::DeltaPayload;
 use actor_psp::engine::gossip::{GossipConfig, GossipNode, Rumor};
 use actor_psp::engine::membership::{Membership, MembershipConfig};
 use actor_psp::engine::p2p::{self, Departure, Dissemination, P2pConfig};
@@ -96,7 +97,7 @@ fn run_crash_rounds(
         if round < origin_rounds {
             for (i, node) in nodes.iter_mut().enumerate() {
                 if live[i] {
-                    let payload: Arc<[f32]> = vec![i as f32 + 1.0].into();
+                    let payload = DeltaPayload::dense(vec![i as f32 + 1.0]);
                     let seq = node.originate(payload, cfg);
                     applies[i][i][seq as usize] += 1; // applied locally
                     originated[i] += 1;

@@ -14,6 +14,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use actor_psp::barrier::Method;
+use actor_psp::engine::delta::CompressConfig;
 use actor_psp::engine::gossip::GossipConfig;
 use actor_psp::engine::node::{run_node, NodeOutcome, Workload};
 use actor_psp::engine::transport::{ChannelTransport, TcpTransport};
@@ -31,6 +32,7 @@ fn workload(steps: u64, flush_every: u64, method: Method) -> Workload {
         gossip: GossipConfig { fanout: 2, flush_every, ttl: 4 },
         drain_timeout: Duration::from_secs(20),
         membership: None,
+        compress: CompressConfig::default(),
     }
 }
 

@@ -9,25 +9,42 @@ same seeded frame generator:
 
   * util::rng::Rng           (xoshiro256++, splitmix64 seeding, Lemire)
   * engine::transport codec  (encode + decode for every frame tag)
+  * engine::delta payloads   (the shared sub-codec: dense / top-k /
+                              int8 / f16 / int4 wire forms, incl. the
+                              f32->f16 round-to-nearest-even cast)
   * the seeded `gen_frame`   (draw order mirrored from the Rust test)
 
-Three cross-checks pin the format:
+Four cross-checks pin the format:
 
   1. the known-answer hex vectors hardcoded in the Rust test;
   2. encode→decode→re-encode round-trips for 500 generated frames;
   3. an FNV-1a digest over the concatenated encodings of 40 seeded
      property cases — the same constant is hardcoded in the Rust test
      `cross_language_digest_is_pinned`, so both implementations must
-     produce identical bytes for identical seeds.
+     produce identical bytes for identical seeds;
+  4. a second FNV-1a digest over 20 seeded `DeltaEncoder` runs — payload
+     wire bytes plus the exact f32 bit pattern of the error-feedback
+     residual after every encode — pinned in the Rust test
+     `encoder_digest_is_pinned`, so the *encoder arithmetic* (top-k
+     selection, quantizer rounding, residual fold) is part of the
+     cross-language contract, not just the byte layout. The Python
+     `Encoder` below is checked against the same known-answer vectors
+     the delta.rs unit tests hardcode before the digest runs.
 
 f32 note: `Rng::next_f32` yields k * 2^-24 with k < 2^24, and the
 generator's only f32 arithmetic is `v * 2 - 1` = (k - 2^23) * 2^-23 —
 both exactly representable in f32 *and* f64, so emulating the f32 path
-with Python doubles and packing via struct '<f' is lossless.
+with Python doubles and packing via struct '<f' is lossless. The
+encoder mirror needs real f32 +/-/*//: each Rust op is emulated as the
+f64 op truncated back to f32 (`_f32(a + b)` etc.), which is bit-exact —
+for binary32 operands the double-rounding through binary64 is innocuous
+because 53 >= 2*24 + 2 (Figueroa's theorem), so the f64 result rounds
+to the same f32 the hardware op produces.
 
 Run: python3 tools/verify_wire_port.py
 """
 
+import math
 import struct
 
 MASK = (1 << 64) - 1
@@ -106,7 +123,10 @@ MAX_FRAME = 64 << 20
 # ("repair", origin, rumors, [rumor...]), ("step", from, step, beat),
 # ("join", addr), ("welcome", dict), ("peers", [(id, addr)...]),
 # ("suspect", from, peer), ("confirm", from, peer).
-# A rumor is (origin, seq, ttl, [f...]).
+# A rumor is (origin, seq, ttl, payload). A payload (the delta sub-codec
+# shared with engine/delta.rs) is ("dense", [f...]),
+# ("topk", dim, [idx...], [val...]), ("qi8", scale, [code...]),
+# ("qf16", [bits...]), or ("qi4", n, scale, packed_bytes).
 
 
 def p_u32(v):
@@ -130,9 +150,78 @@ def p_f32s(xs):
     return p_u32(len(xs)) + b"".join(p_f32(x) for x in xs)
 
 
+def p_u16(v):
+    return struct.pack("<H", v)
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+def round_shift(m, shift):
+    # m >> shift with round-to-nearest-even on the dropped bits.
+    base = m >> shift
+    dropped = m & ((1 << shift) - 1)
+    half = 1 << (shift - 1)
+    if dropped > half or (dropped == half and base & 1 == 1):
+        return base + 1
+    return base
+
+
+def f32_to_f16_bits(x):
+    # Mirror of engine::delta::f32_to_f16_bits (RNE, saturating).
+    bits = f32_bits(x)
+    sign = (bits >> 16) & 0x8000
+    exp = (bits >> 23) & 0xFF
+    mant = bits & 0x007FFFFF
+    if exp == 0xFF:
+        return sign | (0x7E00 if mant else 0x7BFF)
+    e = exp - 127 + 15
+    if e >= 0x1F:
+        return sign | 0x7BFF
+    if e <= 0:
+        shift = 14 - e
+        if shift > 24:
+            return sign
+        return sign | round_shift(mant | 0x00800000, shift)
+    out = (e << 10) | round_shift(mant, 13)
+    if out >= 0x7C00:
+        return sign | 0x7BFF
+    return sign | out
+
+
+def p_payload(p):
+    kind = p[0]
+    if kind == "dense":
+        return bytes([0]) + p_f32s(p[1])
+    if kind == "topk":
+        _, dim, idx, val = p
+        return (
+            bytes([1])
+            + p_u32(dim)
+            + p_u32(len(idx))
+            + b"".join(p_u32(i) for i in idx)
+            + b"".join(p_f32(v) for v in val)
+        )
+    if kind == "qi8":
+        _, scale, codes = p
+        return (
+            bytes([2])
+            + p_u32(len(codes))
+            + p_f32(scale)
+            + bytes((c & 0xFF) for c in codes)
+        )
+    if kind == "qf16":
+        return bytes([3]) + p_u32(len(p[1])) + b"".join(p_u16(c) for c in p[1])
+    if kind == "qi4":
+        _, n, scale, packed = p
+        return bytes([4]) + p_u32(n) + p_f32(scale) + bytes(packed)
+    raise ValueError(kind)
+
+
 def p_rumor(r):
     origin, seq, ttl, delta = r
-    return p_u32(origin) + p_u32(seq) + p_u32(ttl) + p_f32s(delta)
+    return p_u32(origin) + p_u32(seq) + p_u32(ttl) + p_payload(delta)
 
 
 def p_rumors(rs):
@@ -142,7 +231,7 @@ def p_rumors(rs):
 def encode(frame):
     kind = frame[0]
     if kind == "delta":
-        body = bytes([TAG_DELTA]) + p_f32s(frame[1])
+        body = bytes([TAG_DELTA]) + p_payload(frame[1])
     elif kind == "gossip":
         body = bytes([TAG_GOSSIP]) + p_rumors(frame[1])
     elif kind == "done":
@@ -171,6 +260,8 @@ def encode(frame):
             + p_u32(w["ttl"])
             + p_u64(w["suspect_us"])
             + p_u64(w["confirm_us"])
+            + bytes([w["compress"]])
+            + p_u32(w["top_k"])
         )
     elif kind == "peers":
         body = bytes([TAG_PEERS]) + p_u32(len(frame[1]))
@@ -217,12 +308,53 @@ class Rd:
         n = self.u32()
         return self.take(n).decode("utf-8")
 
+    def u16(self):
+        return struct.unpack("<H", self.take(2))[0]
+
+    def payload(self):
+        # Mirror of DeltaPayload::decode_from, including canonical-form
+        # rejection (unsorted/out-of-range top-k, dirty int4 nibble).
+        tag = self.take(1)[0]
+        if tag == 0:
+            return ("dense", self.f32s())
+        if tag == 1:
+            dim = self.u32()
+            k = self.u32()
+            if len(self.buf) - self.off < 8 * k:
+                raise ValueError("truncated")
+            idx = [self.u32() for _ in range(k)]
+            ascending = all(a < b for a, b in zip(idx, idx[1:]))
+            if not ascending or not all(i < dim for i in idx):
+                raise ValueError("non-canonical top-k")
+            val = [self.f32() for _ in range(k)]
+            return ("topk", dim, idx, val)
+        if tag == 2:
+            n = self.u32()
+            scale = self.f32()
+            codes = [b - 256 if b >= 128 else b for b in self.take(n)]
+            return ("qi8", scale, codes)
+        if tag == 3:
+            n = self.u32()
+            if len(self.buf) - self.off < 2 * n:
+                raise ValueError("truncated")
+            return ("qf16", [self.u16() for _ in range(n)])
+        if tag == 4:
+            n = self.u32()
+            scale = self.f32()
+            packed = self.take((n + 1) // 2)
+            if n % 2 == 1 and packed and packed[-1] >> 4 != 0:
+                raise ValueError("non-canonical int4")
+            return ("qi4", n, scale, packed)
+        raise ValueError(f"unknown payload tag {tag}")
+
     def rumor(self):
-        return (self.u32(), self.u32(), self.u32(), self.f32s())
+        return (self.u32(), self.u32(), self.u32(), self.payload())
 
     def rumors(self):
         n = self.u32()
-        if (len(self.buf) - self.off) // 16 < n:
+        # Each rumor is at least 17 bytes (12-byte header + the smallest
+        # payload, tag + length); reject impossible counts.
+        if (len(self.buf) - self.off) // 17 < n:
             raise ValueError("truncated")
         return [self.rumor() for _ in range(n)]
 
@@ -238,7 +370,7 @@ def decode(data):
     body = data[4:]
     tag, rd = body[0], Rd(body[1:])
     if tag == TAG_DELTA:
-        frame = ("delta", rd.f32s())
+        frame = ("delta", rd.payload())
     elif tag == TAG_GOSSIP:
         frame = ("gossip", rd.rumors())
     elif tag == TAG_DONE:
@@ -267,6 +399,8 @@ def decode(data):
                 "ttl": rd.u32(),
                 "suspect_us": rd.u64(),
                 "confirm_us": rd.u64(),
+                "compress": rd.take(1)[0],
+                "top_k": rd.u32(),
             },
         )
     elif tag == TAG_PEERS:
@@ -298,11 +432,39 @@ def gen_delta(rng):
     return [gen_f32(rng) for _ in range(rng.next_below(5))]
 
 
+def gen_payload(rng):
+    # One payload in any of the five wire forms; draw order is part of
+    # the cross-language contract (mirror of transport.rs gen_payload).
+    k = rng.next_below(5)
+    if k == 0:
+        return ("dense", gen_delta(rng))
+    if k == 1:
+        dim = rng.next_below(6) + 1
+        idx = [i for i in range(dim) if rng.next_below(2) == 1]
+        val = [gen_f32(rng) for _ in idx]
+        return ("topk", dim, idx, val)
+    if k == 2:
+        n = rng.next_below(5)
+        scale = gen_f32(rng)
+        codes = [rng.next_below(255) - 127 for _ in range(n)]
+        return ("qi8", scale, codes)
+    if k == 3:
+        n = rng.next_below(5)
+        return ("qf16", [f32_to_f16_bits(gen_f32(rng)) for _ in range(n)])
+    n = rng.next_below(5)
+    scale = gen_f32(rng)
+    packed = bytearray((n + 1) // 2)
+    for i in range(n):
+        nib = ((rng.next_below(15) - 7) & 0xFF) & 0x0F
+        packed[i // 2] |= nib if i % 2 == 0 else nib << 4
+    return ("qi4", n, scale, bytes(packed))
+
+
 def gen_rumor(rng):
     origin = rng.next_below(64)
     seq = rng.next_below(100)
     ttl = rng.next_below(8)
-    return (origin, seq, ttl, gen_delta(rng))
+    return (origin, seq, ttl, gen_payload(rng))
 
 
 def gen_rumors(rng):
@@ -316,7 +478,7 @@ def gen_addr(rng):
 def gen_frame(rng):
     k = rng.next_below(11)
     if k == 0:
-        return ("delta", gen_delta(rng))
+        return ("delta", gen_payload(rng))
     if k == 1:
         return ("gossip", gen_rumors(rng))
     if k == 2:
@@ -345,6 +507,8 @@ def gen_frame(rng):
                 "ttl": rng.next_below(16),
                 "suspect_us": rng.next_below(1 << 30),
                 "confirm_us": rng.next_below(1 << 30),
+                "compress": rng.next_below(5),
+                "top_k": rng.next_below(64) + 1,
             },
         )
     if k == 8:
@@ -355,6 +519,119 @@ def gen_frame(rng):
     if k == 9:
         return ("suspect", rng.next_below(64), rng.next_below(64))
     return ("confirm", rng.next_below(64), rng.next_below(64))
+
+
+# ---------------------------------------------------------------------------
+# Origin-side encoder (mirror of engine/delta.rs DeltaEncoder)
+# ---------------------------------------------------------------------------
+
+def _f32(x):
+    # One Rust f32 op = the f64 op truncated to f32 (see module docstring).
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def f16_bits_to_f32(h):
+    # Mirror of engine::delta::f16_bits_to_f32 (exact).
+    sign = (h & 0x8000) << 16
+    exp = (h >> 10) & 0x1F
+    mant = h & 0x03FF
+    if exp == 0x1F:
+        bits = sign | 0x7F800000 | (mant << 13)
+    elif exp != 0:
+        bits = sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    elif mant == 0:
+        bits = sign
+    else:
+        e = 127 - 15 + 1
+        m = mant
+        while m & 0x0400 == 0:
+            m <<= 1
+            e -= 1
+        bits = sign | (e << 23) | ((m & 0x03FF) << 13)
+    return struct.unpack("<f", struct.pack("<I", bits))[0]
+
+
+def _round_away(x):
+    # f32::round — round half away from zero. x is an exact f32 value,
+    # so x +/- 0.5 in f64 never double-rounds across an integer.
+    return math.floor(x + 0.5) if x >= 0.0 else math.ceil(x - 0.5)
+
+
+class Encoder:
+    """DeltaEncoder: lossy payloads with error feedback, f32-exact."""
+
+    def __init__(self, mode, top_k, dim):
+        self.mode = mode  # "dense" | "topk" | "qi8" | "qf16" | "qi4"
+        self.top_k = top_k
+        self.residual = [0.0] * dim
+        self.payload_bytes = 0
+        self.fed_back_mass = 0.0
+
+    def _fold(self, dense):
+        # residual.resize(dense.len(), 0.0); *v += r
+        if len(self.residual) < len(dense):
+            self.residual += [0.0] * (len(dense) - len(self.residual))
+        else:
+            del self.residual[len(dense):]
+        return [_f32(v + r) for v, r in zip(dense, self.residual)]
+
+    def _stash(self, rem):
+        self.fed_back_mass += sum(abs(x) for x in rem)
+        self.residual = rem
+
+    def _quant(self, dense, levels):
+        # Shared int8/int4 path: scale = max|v| / levels, round half
+        # away from zero, clamp, residual = v - scale*code.
+        m = 0.0
+        for v in dense:
+            m = max(m, abs(v))
+        scale = _f32(m / levels)
+        codes = [
+            0 if scale == 0.0
+            else int(max(-levels, min(levels, _round_away(_f32(v / scale)))))
+            for v in dense
+        ]
+        rem = [_f32(v - _f32(scale * c)) for v, c in zip(dense, codes)]
+        self._stash(rem)
+        return scale, codes
+
+    def encode(self, dense):
+        if self.mode == "dense":
+            payload = ("dense", dense)
+        elif self.mode == "topk":
+            folded = self._fold(dense)
+            dim = len(folded)
+            k = min(max(self.top_k, 1), max(dim, 1), dim)
+            order = sorted(range(dim), key=lambda i: (-abs(folded[i]), i))
+            idx = sorted(order[:k])
+            val = [folded[i] for i in idx]
+            rem = list(folded)
+            for i in idx:
+                rem[i] = 0.0
+            self._stash(rem)
+            payload = ("topk", dim, idx, val)
+        elif self.mode == "qi8":
+            scale, codes = self._quant(self._fold(dense), 127)
+            payload = ("qi8", scale, codes)
+        elif self.mode == "qf16":
+            folded = self._fold(dense)
+            codes = [f32_to_f16_bits(v) for v in folded]
+            rem = [
+                _f32(v - f16_bits_to_f32(c)) for v, c in zip(folded, codes)
+            ]
+            self._stash(rem)
+            payload = ("qf16", codes)
+        elif self.mode == "qi4":
+            scale, codes = self._quant(self._fold(dense), 7)
+            packed = bytearray((len(codes) + 1) // 2)
+            for i, c in enumerate(codes):
+                nib = c & 0x0F
+                packed[i // 2] |= nib if i % 2 == 0 else nib << 4
+            payload = ("qi4", len(codes), scale, bytes(packed))
+        else:
+            raise ValueError(self.mode)
+        self.payload_bytes += len(p_payload(payload))
+        return payload
 
 
 # ---------------------------------------------------------------------------
@@ -369,9 +646,17 @@ def fnv1a(data, h=0xCBF29CE484222325):
 
 def known_answers():
     assert encode(("done", 3, 7)).hex() == "09000000030300000007000000"
+    # dense payload (ptag 0) inside a Gossip frame
     assert (
-        encode(("gossip", [(1, 2, 3, [1.0, -2.5])])).hex()
-        == "1d0000000201000000010000000200000003000000020000000000803f000020c0"
+        encode(("gossip", [(1, 2, 3, ("dense", [1.0, -2.5]))])).hex()
+        == "1e00000002010000000100000002000000030000000002000000"
+        "0000803f000020c0"
+    )
+    # top-k payload (ptag 1): dim=8, idx [1,5], vals [0.5, -0.25]
+    assert (
+        encode(("gossip", [(1, 2, 3, ("topk", 8, [1, 5], [0.5, -0.25]))])).hex()
+        == "2a0000000201000000010000000200000003000000010800000002000000"
+        "01000000050000000000003f000080be"
     )
     assert (
         encode(("step", 1, 5, 9)).hex()
@@ -379,7 +664,7 @@ def known_answers():
     )
     assert encode(("suspect", 2, 5)).hex() == "090000000a0200000005000000"
     assert encode(("confirm", 1, 4)).hex() == "090000000b0100000004000000"
-    print("known-answer vectors   OK (5 vectors)")
+    print("known-answer vectors   OK (6 vectors)")
 
 
 def round_trips():
@@ -424,7 +709,89 @@ def malformed():
         raise AssertionError("impossible rumor count decoded")
     except ValueError:
         pass
+    # Non-canonical payloads: unsorted top-k indices and a dirty final
+    # high nibble on an odd-length int4 body must both be rejected.
+    bad_topk = (
+        bytes([TAG_DELTA, 1])
+        + p_u32(8)
+        + p_u32(2)
+        + p_u32(5)
+        + p_u32(1)
+        + p_f32(0.5)
+        + p_f32(0.25)
+    )
+    try:
+        decode(p_u32(len(bad_topk)) + bad_topk)
+        raise AssertionError("unsorted top-k decoded")
+    except ValueError:
+        pass
+    bad_i4 = bytes([TAG_DELTA, 4]) + p_u32(1) + p_f32(1.0) + bytes([0x50])
+    try:
+        decode(p_u32(len(bad_i4)) + bad_i4)
+        raise AssertionError("dirty int4 nibble decoded")
+    except ValueError:
+        pass
     print("malformed rejection    OK")
+
+
+def encoder_known_answers():
+    # The same vectors delta.rs hardcodes in its unit tests — the mirror
+    # must agree on selection, rounding, packing, AND the residual.
+    enc = Encoder("topk", 2, 4)
+    p = enc.encode([0.5, -2.5, 0.125, 3.0])
+    assert p == ("topk", 4, [1, 3], [-2.5, 3.0]), p
+    assert enc.residual == [0.5, 0.0, 0.125, 0.0], enc.residual
+    p2 = enc.encode([0.5, -2.0, 0.0, 0.25])
+    assert p2 == ("topk", 4, [0, 1], [1.0, -2.0]), p2
+
+    enc = Encoder("topk", 2, 4)
+    p = enc.encode([1.0, -1.0, 1.0, -1.0])
+    assert p[2] == [0, 1], "ties must break toward the lower index"
+
+    enc = Encoder("qi8", 0, 3)
+    p = enc.encode([1.0, -0.25, 0.0])
+    assert abs(p[1] - 1.0 / 127.0) < 1e-6
+    assert p[2] == [127, -32, 0], p
+    assert enc.residual[0] == 0.0
+    assert 0.0019 < enc.residual[1] < 0.0020, enc.residual
+
+    enc = Encoder("qi4", 0, 4)
+    p = enc.encode([0.7, -0.3, 0.0, 0.1])
+    assert p[1] == 4 and abs(p[2] - 0.1) < 1e-6
+    assert p[3] == bytes([0xD7, 0x10]), p
+    enc3 = Encoder("qi4", 0, 3)
+    q = enc3.encode([0.7, -0.3, 0.1])
+    assert q[1] == 3 and q[3] == bytes([0xD7, 0x01]), q
+    print("encoder known answers  OK (5 vectors)")
+
+
+ENCODER_MODES = [
+    ("dense", "dense"),
+    ("topk", "topk"),
+    ("qi8", "quant:i8"),
+    ("qf16", "quant:f16"),
+    ("qi4", "quant:i4"),
+]
+
+
+def encoder_digest():
+    # Mirror of transport.rs tests::encoder_digest_is_pinned: 20 seeded
+    # runs (4 per mode), three encodes each through ONE encoder so the
+    # residual feeds forward; digest the payload wire bytes and the f32
+    # bit pattern of the residual after every encode.
+    h = 0xCBF29CE484222325
+    for case in range(20):
+        seed = ((0xE4C0_0000 + case) * 0x9E3779B97F4A7C15) & MASK
+        rng = Rng(seed)
+        dim = rng.next_below(7) + 1
+        top_k = rng.next_below(dim) + 1
+        enc = Encoder(ENCODER_MODES[case % 5][0], top_k, dim)
+        for _ in range(3):
+            delta = [gen_f32(rng) for _ in range(dim)]
+            payload = enc.encode(delta)
+            h = fnv1a(p_payload(payload), h)
+            h = fnv1a(b"".join(p_f32(r) for r in enc.residual), h)
+    return h
 
 
 def cross_digest():
@@ -437,19 +804,31 @@ def cross_digest():
 
 
 # Must equal transport.rs tests::CROSS_DIGEST.
-EXPECTED_DIGEST = 0x9C37C247788D5437
+EXPECTED_DIGEST = 0x3D6FC12A51DA4566
+
+# Must equal transport.rs tests::ENCODER_DIGEST.
+EXPECTED_ENCODER_DIGEST = 0xE83D02410A8D751F
 
 
 def main():
     known_answers()
     round_trips()
     malformed()
+    encoder_known_answers()
     h = cross_digest()
     print(f"cross-language digest  0x{h:016X}")
     assert h == EXPECTED_DIGEST, (
         f"digest drifted: got 0x{h:016X}, pinned 0x{EXPECTED_DIGEST:016X} "
         "(update BOTH this constant and transport.rs tests::CROSS_DIGEST "
         "if the wire format changed on purpose)"
+    )
+    e = encoder_digest()
+    print(f"encoder digest         0x{e:016X}")
+    assert e == EXPECTED_ENCODER_DIGEST, (
+        f"encoder digest drifted: got 0x{e:016X}, pinned "
+        f"0x{EXPECTED_ENCODER_DIGEST:016X} (update BOTH this constant and "
+        "transport.rs tests::ENCODER_DIGEST if the encoder semantics "
+        "changed on purpose)"
     )
     print("all wire-port checks passed")
 
